@@ -1,0 +1,63 @@
+//! Sampler comparison on one corpus — the Fig-1 experiment in example
+//! form: partially collapsed (Algorithm 2) vs direct assignment vs
+//! subcluster split-merge vs fixed-K Pólya-urn LDA, under a shared
+//! wall-clock budget.
+//!
+//! ```text
+//! cargo run --release --example compare_samplers [-- budget_secs]
+//! ```
+
+use hdp_sparse::config::{HdpConfig, RunConfig};
+use hdp_sparse::coordinator::{train, LoopOptions};
+use hdp_sparse::corpus::registry;
+use hdp_sparse::hdp::{
+    da::DaSampler, pc::PcSampler, pclda::PcLdaSampler, ssm::SsmSampler, Trainer,
+};
+use hdp_sparse::metrics::TraceWriter;
+use std::sync::Arc;
+
+fn main() -> anyhow::Result<()> {
+    let budget: u64 = std::env::args()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(15);
+    let corpus = Arc::new(registry::load("small", 2020)?);
+    println!("corpus: {} | budget {}s per sampler\n", corpus.summary(), budget);
+    let cfg = HdpConfig { alpha: 0.1, beta: 0.01, gamma: 1.0, k_max: 200, init_topics: 1 };
+    let run = RunConfig {
+        iterations: usize::MAX / 2,
+        threads: 2,
+        seed: 7,
+        eval_every: 20,
+        time_budget_secs: budget,
+    };
+    let mut trainers: Vec<Box<dyn Trainer>> = vec![
+        Box::new(PcSampler::new(corpus.clone(), cfg, 2, 7)?),
+        Box::new(DaSampler::new(corpus.clone(), cfg, 7)?),
+        Box::new(SsmSampler::new(corpus.clone(), cfg, 7)?),
+        Box::new(PcLdaSampler::new(corpus.clone(), 50, cfg.alpha, cfg.beta, 2, 7)?),
+    ];
+    println!(
+        "{:<8} {:>9} {:>14} {:>8} {:>12}",
+        "sampler", "iters", "final_ll", "topics", "iters/sec"
+    );
+    for t in trainers.iter_mut() {
+        let mut trace = TraceWriter::in_memory();
+        let summary = train(t.as_mut(), &run, &mut trace, &LoopOptions::default())?;
+        println!(
+            "{:<8} {:>9} {:>14.1} {:>8} {:>12.2}",
+            t.name(),
+            summary.iterations,
+            summary.final_log_likelihood,
+            summary.final_active_topics,
+            summary.iterations as f64 / summary.elapsed_secs
+        );
+    }
+    println!(
+        "\npaper shape (Fig 1): the partially collapsed sampler completes the\n\
+         most iterations per second and stabilizes its topic count fastest;\n\
+         direct assignment mixes to a slightly better optimum per iteration\n\
+         but is sequential; subcluster split-merge grows topics one at a time."
+    );
+    Ok(())
+}

@@ -1,0 +1,63 @@
+//! Quickstart: train the paper's sparse parallel HDP sampler on a
+//! small synthetic corpus and print the discovered topics.
+//!
+//! ```text
+//! cargo run --release --example quickstart
+//! ```
+
+use hdp_sparse::config::{HdpConfig, RunConfig};
+use hdp_sparse::coordinator::{train, LoopOptions};
+use hdp_sparse::corpus::registry;
+use hdp_sparse::diagnostics::topics;
+use hdp_sparse::hdp::pc::PcSampler;
+use hdp_sparse::hdp::Trainer;
+use hdp_sparse::metrics::TraceWriter;
+use std::sync::Arc;
+
+fn main() -> anyhow::Result<()> {
+    // 1. A corpus. `registry::load` returns the cached synthetic analog
+    //    (or real UCI data when HDP_CORPUS_DIR provides it).
+    let corpus = Arc::new(registry::load("small", 2020)?);
+    println!("corpus: {}", corpus.summary());
+
+    // 2. The model: paper hyperparameters, truncation K* = 200.
+    let cfg = HdpConfig { alpha: 0.1, beta: 0.01, gamma: 1.0, k_max: 200, init_topics: 1 };
+    let mut sampler = PcSampler::new(corpus.clone(), cfg, 2, 42)?;
+
+    // 3. Train. The coordinator streams a CSV trace; stdout shows the
+    //    log-likelihood and active-topic trajectory.
+    let run = RunConfig {
+        iterations: 300,
+        threads: 2,
+        seed: 42,
+        eval_every: 50,
+        time_budget_secs: 0,
+    };
+    let mut trace = TraceWriter::in_memory();
+    let summary = train(
+        &mut sampler,
+        &run,
+        &mut trace,
+        &LoopOptions { verbose: true, eval_first: true },
+    )?;
+    println!(
+        "\ntrained {} iterations in {:.1}s ({:.0} tokens/s)",
+        summary.iterations, summary.elapsed_secs, summary.tokens_per_sec
+    );
+
+    // 4. Inspect the topics.
+    let rows = sampler.topic_word_rows();
+    let tops = topics::top_words(&rows, &corpus, 8, 50);
+    println!("\ntop topics (of {} active):", tops.len());
+    for t in tops.iter().take(10) {
+        println!(
+            "  topic {:>3} ({:>6} tokens): {}",
+            t.topic,
+            t.tokens,
+            t.top_words.join(" ")
+        );
+    }
+    // 5. Phase timing breakdown (where the iteration time goes).
+    println!("\nphase timers:\n{}", sampler.timers.summary());
+    Ok(())
+}

@@ -1,0 +1,100 @@
+"""AOT lowering: JAX/Pallas (L2/L1) → HLO text artifacts for the rust
+runtime.
+
+HLO *text* (not `.serialize()`d protos) is the interchange format: jax
+≥ 0.5 emits protos with 64-bit instruction ids which the `xla` crate's
+xla_extension 0.5.1 rejects; the text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md).
+
+Artifacts (shapes fixed at lowering time; the rust runtime tiles):
+
+- ``loglik_tile.hlo.txt``  — (K_T, V_T) f32 ×2 → f32 scalar (1-tuple)
+- ``zscore_tile.hlo.txt``  — (B, K) f32 ×2, (K,) f32, f32 → (B, K)
+- ``psi_stick.hlo.txt``    — (K,) f32 → (K,) f32
+- ``manifest.txt``         — one line per artifact: name + dims
+
+Run via ``make artifacts``; a no-op when outputs are newer than inputs.
+"""
+
+import argparse
+import pathlib
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .kernels.loglik import BLOCK_K, BLOCK_V
+from .kernels.zscore import BLOCK_B, BLOCK_KDIM
+
+# Artifact tile shapes. The loglik artifact covers one kernel grid of
+# 2×2 blocks per execute call. §Perf iteration 3 tried 4×4 blocks per
+# dispatch to amortize PJRT call overhead and measured ~4× WORSE
+# per-block cost (the interpret-mode grid loop scales superlinearly
+# and the 4 MiB staging buffers thrash L2 on this CPU), so 2×2 stands;
+# on a real TPU the grid executes on-chip and the tradeoff inverts —
+# revisit there. The Pallas BLOCK (VMEM working set) is fixed either
+# way.
+LOGLIK_TILE_K = BLOCK_K * 2  # 256
+LOGLIK_TILE_V = BLOCK_V * 2  # 1024
+ZSCORE_B = BLOCK_B * 2  # 256
+ZSCORE_K = BLOCK_KDIM  # 256
+PSI_K = 1024
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_artifacts():
+    """Lower every artifact; returns {name: (hlo_text, dims)}."""
+    f32 = jnp.float32
+    spec = jax.ShapeDtypeStruct
+    out = {}
+
+    tile = spec((LOGLIK_TILE_K, LOGLIK_TILE_V), f32)
+    out["loglik_tile"] = (
+        to_hlo_text(jax.jit(model.loglik_tile_fn).lower(tile, tile)),
+        [LOGLIK_TILE_K, LOGLIK_TILE_V],
+    )
+
+    bk = spec((ZSCORE_B, ZSCORE_K), f32)
+    psi = spec((ZSCORE_K,), f32)
+    alpha = spec((), f32)
+    out["zscore_tile"] = (
+        to_hlo_text(jax.jit(model.zscore_fn).lower(bk, bk, psi, alpha)),
+        [ZSCORE_B, ZSCORE_K],
+    )
+
+    sticks = spec((PSI_K,), f32)
+    out["psi_stick"] = (
+        to_hlo_text(jax.jit(model.psi_stick_fn).lower(sticks)),
+        [PSI_K],
+    )
+    return out
+
+
+def main():
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--out-dir", default="../artifacts")
+    args = parser.parse_args()
+    out_dir = pathlib.Path(args.out_dir)
+    out_dir.mkdir(parents=True, exist_ok=True)
+    artifacts = lower_artifacts()
+    manifest_lines = []
+    for name, (text, dims) in artifacts.items():
+        path = out_dir / f"{name}.hlo.txt"
+        path.write_text(text)
+        manifest_lines.append(f"{name} {' '.join(str(d) for d in dims)}")
+        print(f"wrote {path} ({len(text)} chars)")
+    (out_dir / "manifest.txt").write_text("\n".join(manifest_lines) + "\n")
+    print(f"wrote {out_dir / 'manifest.txt'}")
+
+
+if __name__ == "__main__":
+    main()

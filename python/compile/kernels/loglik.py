@@ -1,0 +1,76 @@
+"""L1 Pallas kernel: tiled `Σ n·log φ` reduction.
+
+The evaluation hot spot of the stack: the dense cross-check of the
+model log-likelihood (rust computes the same quantity sparsely; the
+XLA-compiled path validates it and serves the perplexity eval).
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): the (K, V) plane is cut
+into `BLOCK_K × BLOCK_V` f32 tiles sized for VMEM — two input buffers
+of 128×512×4 B = 256 KiB each plus the scalar accumulator, well under
+the ~16 MiB budget, with the lane dimension (512) a multiple of the
+VPU's 128-lane registers. The grid walks tiles; each grid step does a
+fused elementwise `where(n>0, n*log(max(φ,ε)), 0)` and a full-tile
+reduction on the VPU — there is no MXU work in this kernel, so the
+roofline is memory-bandwidth on HBM→VMEM streaming, which the
+double-buffered BlockSpec pipeline hides.
+
+Must run with interpret=True on this image (CPU PJRT cannot execute
+Mosaic custom-calls); the lowered HLO is what ships to rust.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import PHI_FLOOR
+
+# Tile shape: one grid step's VMEM working set.
+BLOCK_K = 128
+BLOCK_V = 512
+
+
+def _loglik_kernel(n_ref, phi_ref, acc_ref):
+    """One grid step: accumulate the tile's masked n·logφ sum."""
+    i = pl.program_id(0)
+    j = pl.program_id(1)
+    n = n_ref[...]
+    phi = phi_ref[...]
+    logp = jnp.log(jnp.maximum(phi, PHI_FLOOR))
+    # Mask both sides: n == 0 cells are padding; phi == 0 cells with
+    # n > 0 are PPU-vanished words the sweep skipped (see ref.py).
+    mask = jnp.logical_and(n > 0, phi > 0)
+    tile_sum = jnp.sum(jnp.where(mask, n * logp, 0.0), dtype=jnp.float32)
+
+    @pl.when(jnp.logical_and(i == 0, j == 0))
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += tile_sum
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def loglik(n, phi, *, interpret=True):
+    """`Σ n·log φ` over a (K, V) array pair via the tiled Pallas kernel.
+
+    K must be a multiple of BLOCK_K and V of BLOCK_V (the AOT wrapper
+    pads; rust feeds zero-padded tiles, and padding contributes 0 by
+    the `n > 0` mask).
+    """
+    k, v = n.shape
+    assert phi.shape == (k, v), (n.shape, phi.shape)
+    assert k % BLOCK_K == 0 and v % BLOCK_V == 0, (k, v)
+    grid = (k // BLOCK_K, v // BLOCK_V)
+    return pl.pallas_call(
+        _loglik_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((BLOCK_K, BLOCK_V), lambda i, j: (i, j)),
+            pl.BlockSpec((BLOCK_K, BLOCK_V), lambda i, j: (i, j)),
+        ],
+        # Scalar accumulator lives in one (1,1) block every step maps to.
+        out_specs=pl.BlockSpec((1, 1), lambda i, j: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((1, 1), jnp.float32),
+        interpret=interpret,
+    )(n, phi)[0, 0]

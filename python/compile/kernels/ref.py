@@ -1,0 +1,56 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+Every kernel in this package has a reference implementation here; pytest
+asserts `allclose` between the two across shape/dtype sweeps. These
+functions are also what the kernels' *semantics* are defined to be —
+if a kernel and its oracle disagree, the kernel is wrong.
+"""
+
+import jax.numpy as jnp
+
+# Floor used inside log() so that exact zeros in phi (integer PPU rows)
+# do not produce -inf where n is also zero. Where n > 0 the model
+# guarantees phi > 0 (the token was drawn from that row), so the floor
+# never distorts a contributing term.
+PHI_FLOOR = 1e-30
+
+
+def loglik_tile(n, phi):
+    """Σ_{k,v} n[k,v] * log(phi[k,v]) over one (K_t, V_t) tile.
+
+    `n` — nonnegative counts (f32), `phi` — probabilities (f32, may
+    contain exact zeros). Cells with `n > 0` but `phi == 0` contribute
+    0: under the integer Poisson-Pólya-urn Φ a word can transiently
+    vanish from every topic; the z sweep skips those tokens and the
+    likelihood accounting must skip them identically (see
+    rust/src/runtime/mod.rs::phi_loglik_sparse). Returns a f32 scalar.
+    """
+    logp = jnp.log(jnp.maximum(phi, PHI_FLOOR))
+    mask = jnp.logical_and(n > 0, phi > 0)
+    return jnp.sum(jnp.where(mask, n * logp, 0.0), dtype=jnp.float32)
+
+
+def zscore_tile(phi_cols, m_rows, psi, alpha):
+    """Normalized z-conditionals for a token batch (eq. 24, dense form).
+
+    phi_cols — f32[B, K]: φ_{k, v_t} for each token t's word type;
+    m_rows   — f32[B, K]: m^{-i}_{d_t, k} for each token's document;
+    psi      — f32[K]: global topic distribution;
+    alpha    — f32 scalar.
+
+    Returns f32[B, K] rows summing to 1 (rows with zero mass return 0).
+    """
+    w = phi_cols * (alpha * psi[None, :] + m_rows)
+    tot = jnp.sum(w, axis=1, keepdims=True)
+    return jnp.where(tot > 0, w / jnp.maximum(tot, PHI_FLOOR), 0.0)
+
+
+def psi_stick(sticks):
+    """Stick-breaking transform (eq. 19): Ψ_k = ς_k Π_{i<k} (1 − ς_i).
+
+    The last stick is expected to be 1 (the FGEM flag topic), which
+    makes the output an exact probability vector.
+    """
+    one = jnp.ones((1,), dtype=sticks.dtype)
+    remaining = jnp.cumprod(jnp.concatenate([one, 1.0 - sticks[:-1]]))
+    return sticks * remaining

@@ -1,0 +1,67 @@
+"""L1 Pallas kernel: dense z-conditional scoring for a token batch.
+
+Computes eq. (24) in dense form for B tokens at once:
+`p[t, k] ∝ φ[k, v_t]·(α·Ψ_k + m[d_t, k])`, rows normalized.
+
+This is the dense counterpart of the rust sampler's doubly sparse
+per-token draw: integration tests freeze a model state, score tokens
+through this artifact, and χ²-check the sparse sampler's empirical draw
+frequencies against these probabilities. It also powers the held-out
+perplexity eval.
+
+TPU mapping: the batch dimension is tiled in BLOCK_B rows; the full
+topic axis (K ≤ BLOCK_KDIM) stays resident per step so the row
+normalization is a single-lane reduction. Working set per step:
+2 × 128×256×4 B + 256×4 B ≈ 260 KiB — VMEM-friendly; all work is
+elementwise + row reductions on the VPU.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import PHI_FLOOR
+
+BLOCK_B = 128
+# The artifact's fixed topic-axis width; callers zero-pad K up to this.
+BLOCK_KDIM = 256
+
+
+def _zscore_kernel(phi_ref, m_ref, psi_ref, alpha_ref, out_ref):
+    phi = phi_ref[...]
+    m = m_ref[...]
+    psi = psi_ref[...]
+    alpha = alpha_ref[0]
+    w = phi * (alpha * psi[None, :] + m)
+    tot = jnp.sum(w, axis=1, keepdims=True)
+    out_ref[...] = jnp.where(tot > 0, w / jnp.maximum(tot, PHI_FLOOR), 0.0)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def zscore(phi_cols, m_rows, psi, alpha, *, interpret=True):
+    """Normalized z-conditionals for a (B, K) batch.
+
+    B must be a multiple of BLOCK_B; K must equal BLOCK_KDIM (pad with
+    zero φ columns — they get zero probability).
+    """
+    b, k = phi_cols.shape
+    assert m_rows.shape == (b, k)
+    assert psi.shape == (k,)
+    assert b % BLOCK_B == 0 and k == BLOCK_KDIM, (b, k)
+    alpha_arr = jnp.asarray(alpha, jnp.float32).reshape(1)
+    grid = (b // BLOCK_B,)
+    return pl.pallas_call(
+        _zscore_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((BLOCK_B, k), lambda i: (i, 0)),
+            pl.BlockSpec((BLOCK_B, k), lambda i: (i, 0)),
+            pl.BlockSpec((k,), lambda i: (0,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((BLOCK_B, k), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, k), jnp.float32),
+        interpret=interpret,
+    )(phi_cols, m_rows, psi, alpha_arr)

@@ -1,0 +1,43 @@
+"""L2: the JAX evaluation graph of the HDP topic model.
+
+The training-time contribution of the paper (the sparse parallel Gibbs
+sampler) is integer bookkeeping and lives in rust; what belongs at the
+XLA layer is the model's *dense numeric evaluation*: log-likelihood of
+the sufficient statistics under sampled parameters, dense z-conditional
+scoring, and the stick-breaking construction of Ψ. Each function here
+composes the L1 Pallas kernels and is AOT-lowered once by `aot.py`;
+python never runs at training time.
+"""
+
+import jax.numpy as jnp
+
+from .kernels import loglik as loglik_kernel
+from .kernels import zscore as zscore_kernel
+from .kernels import ref
+
+
+def loglik_tile_fn(n, phi):
+    """One (BLOCK_K·t, BLOCK_V·t)-shaped tile pair → f32 scalar.
+
+    The rust runtime streams zero-padded (n, Φ) tiles through this; the
+    total model log-likelihood is the sum over tiles (padding is masked
+    inside the kernel by `n > 0`).
+    """
+    return (loglik_kernel.loglik(n, phi),)
+
+
+def zscore_fn(phi_cols, m_rows, psi, alpha):
+    """Token-batch z-conditional probabilities (B, K) → (B, K)."""
+    return (zscore_kernel.zscore(phi_cols, m_rows, psi, alpha),)
+
+
+def psi_stick_fn(sticks):
+    """Stick-breaking Ψ from Beta draws (pure jnp — no kernel needed:
+    a K-length scan is far below kernel-worthy arithmetic intensity)."""
+    return (ref.psi_stick(sticks),)
+
+
+def perplexity_fn(logprob_sum, token_count):
+    """exp(−Σ log p / N) — trivial, folded into the loglik artifact's
+    consumers on the rust side; kept for the python eval path."""
+    return (jnp.exp(-logprob_sum / jnp.maximum(token_count, 1.0)),)

@@ -1,0 +1,75 @@
+"""AOT artifact tests: lowering succeeds, manifests match the declared
+shapes, the HLO text is parseable interchange (ENTRY + tuple root), and
+golden values exist for the rust runtime cross-check."""
+
+import pathlib
+import re
+
+import numpy as np
+import jax.numpy as jnp
+
+from compile import aot, model
+from compile.kernels import ref
+
+
+class TestLowering:
+    def test_all_artifacts_lower(self):
+        arts = aot.lower_artifacts()
+        assert set(arts) == {"loglik_tile", "zscore_tile", "psi_stick"}
+        for name, (text, dims) in arts.items():
+            assert "ENTRY" in text, name
+            assert "->" in text, name
+            assert all(d > 0 for d in dims), name
+
+    def test_hlo_text_has_tuple_root(self):
+        arts = aot.lower_artifacts()
+        for name, (text, _) in arts.items():
+            # return_tuple=True → root computation returns a tuple type
+            assert re.search(r"->\s*\(", text), f"{name} root is not a tuple"
+
+    def test_loglik_artifact_shapes(self):
+        (text, dims) = aot.lower_artifacts()["loglik_tile"]
+        k, v = dims
+        assert f"f32[{k},{v}]" in text
+
+    def test_no_custom_calls(self):
+        # interpret=True must lower to plain HLO: a Mosaic custom-call
+        # would be unloadable by the CPU PJRT runtime.
+        arts = aot.lower_artifacts()
+        for name, (text, _) in arts.items():
+            assert "custom-call" not in text.lower(), name
+
+
+class TestGoldenValues:
+    """The exact inputs/outputs the rust integration test replays.
+
+    `golden_loglik` writes a deterministic tile and its expected sum
+    next to the artifacts so `cargo test` can execute the compiled HLO
+    on identical data and compare numbers (see rust/tests/runtime.rs).
+    """
+
+    def test_loglik_golden(self, tmp_path):
+        k, v = aot.LOGLIK_TILE_K, aot.LOGLIK_TILE_V
+        n = np.zeros((k, v), np.float32)
+        phi = np.zeros((k, v), np.float32)
+        # deterministic pattern: diagonal stripes
+        for i in range(0, k):
+            n[i, (i * 7) % v] = (i % 5) + 1
+            phi[i, (i * 7) % v] = 0.25
+            phi[i, (i * 11 + 1) % v] = 0.75
+        want = float(ref.loglik_tile(jnp.asarray(n), jnp.asarray(phi)))
+        got = float(model.loglik_tile_fn(jnp.asarray(n), jnp.asarray(phi))[0])
+        np.testing.assert_allclose(got, want, rtol=1e-5)
+        # the value the rust test must reproduce from the same pattern
+        expected = sum(
+            ((i % 5) + 1) * np.log(0.25) for i in range(k) if (i % 5) + 1 > 0
+        )
+        np.testing.assert_allclose(want, expected, rtol=1e-5)
+
+    def test_psi_stick_golden(self):
+        sticks = np.full(aot.PSI_K, 0.5, np.float32)
+        sticks[-1] = 1.0
+        psi = np.asarray(model.psi_stick_fn(jnp.asarray(sticks))[0])
+        np.testing.assert_allclose(psi[0], 0.5, rtol=1e-6)
+        np.testing.assert_allclose(psi[1], 0.25, rtol=1e-6)
+        np.testing.assert_allclose(psi.sum(), 1.0, rtol=1e-4)

@@ -1,0 +1,154 @@
+"""Kernel-vs-oracle correctness: the CORE numeric signal of the L1
+layer. Pallas kernels (interpret mode) must match the pure-jnp refs to
+float32 tolerance across shapes and data regimes, including hypothesis
+sweeps over random inputs."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from compile.kernels import ref
+from compile.kernels.loglik import BLOCK_K, BLOCK_V, loglik
+from compile.kernels.zscore import BLOCK_B, BLOCK_KDIM, zscore
+
+
+def _random_counts_phi(rng, k, v, sparsity=0.9):
+    """Sparse integer counts + a row-normalized phi with exact zeros."""
+    n = rng.poisson(2.0, size=(k, v)).astype(np.float32)
+    n[rng.random((k, v)) < sparsity] = 0.0
+    phi = rng.random((k, v)).astype(np.float32)
+    phi[rng.random((k, v)) < sparsity] = 0.0
+    # ensure phi > 0 wherever n > 0 (model invariant)
+    phi = np.where(n > 0, np.maximum(phi, 1e-3), phi)
+    rowsum = phi.sum(axis=1, keepdims=True)
+    phi = np.where(rowsum > 0, phi / np.maximum(rowsum, 1e-30), 0.0)
+    return n, phi.astype(np.float32)
+
+
+class TestLoglik:
+    def test_matches_ref_single_block(self):
+        rng = np.random.default_rng(0)
+        n, phi = _random_counts_phi(rng, BLOCK_K, BLOCK_V)
+        got = loglik(jnp.asarray(n), jnp.asarray(phi))
+        want = ref.loglik_tile(jnp.asarray(n), jnp.asarray(phi))
+        np.testing.assert_allclose(got, want, rtol=1e-5)
+
+    def test_matches_ref_multi_block_grid(self):
+        rng = np.random.default_rng(1)
+        n, phi = _random_counts_phi(rng, BLOCK_K * 3, BLOCK_V * 2)
+        got = loglik(jnp.asarray(n), jnp.asarray(phi))
+        want = ref.loglik_tile(jnp.asarray(n), jnp.asarray(phi))
+        np.testing.assert_allclose(got, want, rtol=1e-5)
+
+    def test_zero_counts_give_zero(self):
+        z = jnp.zeros((BLOCK_K, BLOCK_V), jnp.float32)
+        assert float(loglik(z, z)) == 0.0
+
+    def test_zero_phi_masked_where_n_zero(self):
+        # phi exactly 0 where n is 0 must not produce NaN/-inf.
+        n = jnp.zeros((BLOCK_K, BLOCK_V), jnp.float32).at[0, 0].set(3.0)
+        phi = jnp.zeros((BLOCK_K, BLOCK_V), jnp.float32).at[0, 0].set(1.0)
+        got = float(loglik(n, phi))
+        assert got == 0.0  # 3 * log(1) = 0
+        assert np.isfinite(got)
+
+    def test_known_value(self):
+        n = jnp.zeros((BLOCK_K, BLOCK_V), jnp.float32).at[2, 5].set(4.0)
+        phi = jnp.zeros((BLOCK_K, BLOCK_V), jnp.float32).at[2, 5].set(0.25)
+        np.testing.assert_allclose(
+            float(loglik(n, phi)), 4.0 * np.log(0.25), rtol=1e-6
+        )
+
+    @settings(max_examples=20, deadline=None)
+    @given(
+        seed=st.integers(0, 2**31 - 1),
+        kb=st.integers(1, 2),
+        vb=st.integers(1, 2),
+        sparsity=st.floats(0.0, 0.99),
+    )
+    def test_hypothesis_sweep(self, seed, kb, vb, sparsity):
+        rng = np.random.default_rng(seed)
+        n, phi = _random_counts_phi(rng, BLOCK_K * kb, BLOCK_V * vb, sparsity)
+        got = loglik(jnp.asarray(n), jnp.asarray(phi))
+        want = ref.loglik_tile(jnp.asarray(n), jnp.asarray(phi))
+        np.testing.assert_allclose(got, want, rtol=2e-5, atol=1e-4)
+
+
+class TestZscore:
+    def _inputs(self, rng, b=BLOCK_B, k=BLOCK_KDIM):
+        phi_cols = rng.random((b, k)).astype(np.float32)
+        phi_cols[rng.random((b, k)) < 0.8] = 0.0
+        m_rows = rng.poisson(1.0, size=(b, k)).astype(np.float32)
+        m_rows[rng.random((b, k)) < 0.9] = 0.0
+        psi = rng.dirichlet(np.ones(k)).astype(np.float32)
+        return phi_cols, m_rows, psi
+
+    def test_matches_ref(self):
+        rng = np.random.default_rng(2)
+        phi_cols, m_rows, psi = self._inputs(rng)
+        got = zscore(
+            jnp.asarray(phi_cols), jnp.asarray(m_rows), jnp.asarray(psi), 0.7
+        )
+        want = ref.zscore_tile(
+            jnp.asarray(phi_cols), jnp.asarray(m_rows), jnp.asarray(psi), 0.7
+        )
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-7)
+
+    def test_rows_normalized(self):
+        rng = np.random.default_rng(3)
+        phi_cols, m_rows, psi = self._inputs(rng, b=BLOCK_B * 2)
+        got = np.asarray(
+            zscore(jnp.asarray(phi_cols), jnp.asarray(m_rows), jnp.asarray(psi), 0.5)
+        )
+        sums = got.sum(axis=1)
+        live = (phi_cols * (0.5 * psi[None, :] + m_rows)).sum(axis=1) > 0
+        np.testing.assert_allclose(sums[live], 1.0, rtol=1e-5)
+        np.testing.assert_allclose(sums[~live], 0.0, atol=1e-7)
+
+    def test_matches_eq24_by_hand(self):
+        # Single live token row with two nonzero topics.
+        b, k = BLOCK_B, BLOCK_KDIM
+        phi_cols = np.zeros((b, k), np.float32)
+        m_rows = np.zeros((b, k), np.float32)
+        psi = np.zeros(k, np.float32)
+        psi[0], psi[1] = 0.6, 0.4
+        phi_cols[0, 0], phi_cols[0, 1] = 0.2, 0.5
+        m_rows[0, 1] = 2.0
+        alpha = 1.5
+        w0 = 0.2 * (alpha * 0.6 + 0.0)
+        w1 = 0.5 * (alpha * 0.4 + 2.0)
+        got = np.asarray(
+            zscore(jnp.asarray(phi_cols), jnp.asarray(m_rows), jnp.asarray(psi), alpha)
+        )
+        np.testing.assert_allclose(got[0, 0], w0 / (w0 + w1), rtol=1e-5)
+        np.testing.assert_allclose(got[0, 1], w1 / (w0 + w1), rtol=1e-5)
+
+    @settings(max_examples=15, deadline=None)
+    @given(seed=st.integers(0, 2**31 - 1), alpha=st.floats(0.01, 10.0))
+    def test_hypothesis_sweep(self, seed, alpha):
+        rng = np.random.default_rng(seed)
+        phi_cols, m_rows, psi = self._inputs(rng)
+        got = zscore(
+            jnp.asarray(phi_cols), jnp.asarray(m_rows), jnp.asarray(psi), alpha
+        )
+        want = ref.zscore_tile(
+            jnp.asarray(phi_cols), jnp.asarray(m_rows), jnp.asarray(psi), alpha
+        )
+        np.testing.assert_allclose(got, want, rtol=2e-5, atol=1e-6)
+
+
+class TestPsiStick:
+    def test_simplex_when_last_stick_one(self):
+        rng = np.random.default_rng(4)
+        sticks = rng.beta(1.0, 2.0, size=64).astype(np.float32)
+        sticks[-1] = 1.0
+        psi = np.asarray(ref.psi_stick(jnp.asarray(sticks)))
+        np.testing.assert_allclose(psi.sum(), 1.0, rtol=1e-5)
+        assert (psi >= 0).all()
+
+    def test_matches_sequential_definition(self):
+        sticks = jnp.asarray([0.5, 0.25, 1.0], jnp.float32)
+        psi = np.asarray(ref.psi_stick(sticks))
+        np.testing.assert_allclose(psi, [0.5, 0.125, 0.375], rtol=1e-6)

@@ -1,0 +1,40 @@
+//! Bench: Walker alias tables — build cost and O(1) draws vs linear
+//! categorical scan (the §2.5 bucket-(a) design choice).
+
+mod common;
+
+use hdp_sparse::alias::AliasTable;
+use hdp_sparse::benchkit::Bench;
+use hdp_sparse::rng::{dist, Pcg64};
+
+fn main() {
+    let mut bench = Bench::new("alias");
+    for &k in &[16usize, 256, 4096] {
+        let mut rng = Pcg64::new(k as u64);
+        let weights: Vec<f64> = (0..k).map(|_| rng.f64() + 1e-3).collect();
+        bench.run(&format!("build_k{k}"), Some(k as f64), || {
+            AliasTable::new(&weights)
+        });
+        let table = AliasTable::new(&weights);
+        let mut r1 = Pcg64::new(1);
+        bench.run(&format!("alias_draw_k{k}"), Some(1.0), || {
+            table.sample(&mut r1)
+        });
+        let mut r2 = Pcg64::new(2);
+        bench.run(&format!("linear_scan_draw_k{k}"), Some(1.0), || {
+            dist::categorical(&mut r2, &weights)
+        });
+        // Amortized: build + N draws for the per-iteration reuse count a
+        // word type sees on AP (~50 tokens/word/iteration).
+        let mut r3 = Pcg64::new(3);
+        bench.run(&format!("build_plus_50_draws_k{k}"), Some(50.0), || {
+            let t = AliasTable::new(&weights);
+            let mut acc = 0usize;
+            for _ in 0..50 {
+                acc += t.sample(&mut r3);
+            }
+            acc
+        });
+    }
+    bench.write_csv(std::path::Path::new("results/bench_alias.csv")).ok();
+}

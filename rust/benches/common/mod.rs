@@ -1,0 +1,29 @@
+//! Shared bench fixtures.
+
+use hdp_sparse::config::HdpConfig;
+use hdp_sparse::corpus::synthetic::HdpCorpusSpec;
+use hdp_sparse::corpus::Corpus;
+use std::sync::Arc;
+
+/// A mid-size structured corpus (~120k tokens) usable by every bench
+/// without multi-minute setup.
+pub fn bench_corpus() -> Arc<Corpus> {
+    let (c, _) = HdpCorpusSpec {
+        vocab: 5000,
+        topics: 60,
+        gamma: 6.0,
+        alpha: 0.8,
+        topic_beta: 0.015,
+        docs: 1200,
+        mean_doc_len: 100.0,
+        len_sigma: 0.5,
+        min_doc_len: 10,
+    }
+    .generate(2024);
+    Arc::new(c)
+}
+
+/// Paper hyperparameters with a given truncation.
+pub fn paper_cfg(k_max: usize) -> HdpConfig {
+    HdpConfig { alpha: 0.1, beta: 0.01, gamma: 1.0, k_max, init_topics: 1 }
+}

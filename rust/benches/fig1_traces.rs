@@ -1,0 +1,70 @@
+//! Bench: Fig 1(i) — per-iteration wall-clock as the topic count
+//! grows: flat for the partially collapsed sampler, increasing for the
+//! subcluster split-merge baseline.
+
+mod common;
+
+use hdp_sparse::benchkit::fmt_time;
+use hdp_sparse::corpus::synthetic::HdpCorpusSpec;
+use hdp_sparse::hdp::{pc::PcSampler, ssm::SsmSampler, Trainer};
+use std::sync::Arc;
+use std::time::Instant;
+
+fn main() {
+    // Smaller corpus than common::bench_corpus so SSM's dense sweep
+    // completes enough iterations to show its slope.
+    let (c, _) = HdpCorpusSpec {
+        vocab: 3000,
+        topics: 40,
+        gamma: 5.0,
+        alpha: 0.8,
+        topic_beta: 0.015,
+        docs: 400,
+        mean_doc_len: 80.0,
+        len_sigma: 0.4,
+        min_doc_len: 10,
+    }
+    .generate(7);
+    let corpus = Arc::new(c);
+    println!("== bench group: fig1_traces (per-iteration cost vs topic growth) ==");
+    println!("{:>6} {:>14} {:>8}   {:>14} {:>8}", "iter", "pc_time", "pc_K", "ssm_time", "ssm_K");
+    let mut pc = PcSampler::new(corpus.clone(), common::paper_cfg(500), 1, 5).unwrap();
+    let mut ssm = SsmSampler::new(corpus, common::paper_cfg(500), 5).unwrap();
+    let mut rows = Vec::new();
+    for it in 1..=30 {
+        let t0 = Instant::now();
+        pc.step().unwrap();
+        let pc_t = t0.elapsed().as_secs_f64();
+        let t0 = Instant::now();
+        ssm.step().unwrap();
+        let ssm_t = t0.elapsed().as_secs_f64();
+        let pk = pc.diagnostics().active_topics;
+        let sk = ssm.active_topics();
+        if it % 3 == 0 {
+            println!(
+                "{it:>6} {:>14} {pk:>8}   {:>14} {sk:>8}",
+                fmt_time(pc_t),
+                fmt_time(ssm_t)
+            );
+        }
+        rows.push((it, pc_t, pk, ssm_t, sk));
+    }
+    // Paper-shape summary: SSM slope vs PC slope across the run.
+    let slope = |f: &dyn Fn(&(usize, f64, usize, f64, usize)) -> f64| {
+        let first: f64 = rows[..5].iter().map(f).sum::<f64>() / 5.0;
+        let last: f64 = rows[rows.len() - 5..].iter().map(f).sum::<f64>() / 5.0;
+        last / first.max(1e-12)
+    };
+    println!(
+        "\ncost growth (last5/first5): PC {:.2}x, SSM {:.2}x — paper Fig 1(i): PC flat, SSM grows",
+        slope(&|r| r.1),
+        slope(&|r| r.3)
+    );
+    // CSV
+    std::fs::create_dir_all("results").ok();
+    let mut csv = String::from("iter,pc_secs,pc_topics,ssm_secs,ssm_topics\n");
+    for (it, a, b, c, d) in rows {
+        csv.push_str(&format!("{it},{a:.6},{b},{c:.6},{d}\n"));
+    }
+    std::fs::write("results/bench_fig1i.csv", csv).ok();
+}

@@ -1,0 +1,39 @@
+//! Bench: the `l` step — binomial trick (§2.6) vs explicit Bernoulli
+//! sequences (eq. 26–27). The claim: trick cost is constant in the
+//! number of documents D, explicit cost is linear in total counts.
+
+mod common;
+
+use hdp_sparse::benchkit::Bench;
+use hdp_sparse::hdp::pc::lstep::{sample_l_explicit, sample_l_topic};
+use hdp_sparse::rng::Pcg64;
+use hdp_sparse::sparse::DocCountHist;
+
+fn main() {
+    let mut bench = Bench::new("l_binomial");
+    for &docs in &[1_000usize, 10_000, 100_000] {
+        // Per-document topic counts with a realistic geometric-ish tail.
+        let mut rng = Pcg64::new(docs as u64);
+        let counts: Vec<u32> = (0..docs)
+            .map(|_| {
+                let u = rng.f64();
+                (1.0 + (-8.0 * u.ln()).min(60.0)) as u32
+            })
+            .collect();
+        let mut hist = DocCountHist::new(1);
+        for &c in &counts {
+            hist.record_doc(&[(0, c)]);
+        }
+        hist.finish();
+        let (alpha, psi_k) = (0.1, 0.02);
+        let mut r1 = Pcg64::new(1);
+        bench.run(&format!("binomial_trick_D{docs}"), Some(docs as f64), || {
+            sample_l_topic(&mut r1, &hist, 0, psi_k, alpha)
+        });
+        let mut r2 = Pcg64::new(2);
+        bench.run(&format!("explicit_bernoulli_D{docs}"), Some(docs as f64), || {
+            sample_l_explicit(&mut r2, &counts, psi_k, alpha)
+        });
+    }
+    bench.write_csv(std::path::Path::new("results/bench_l_binomial.csv")).ok();
+}

@@ -1,0 +1,58 @@
+//! Bench: the Φ step — sparse Poisson Pólya urn (β-splitting) vs dense
+//! PPU vs exact Dirichlet rows. The §2.5 design claim: sparse PPU cost
+//! is `O(nnz + βV)` per topic, independent of the dense row size.
+
+mod common;
+
+use hdp_sparse::benchkit::Bench;
+use hdp_sparse::hdp::pc::phi::{sample_ppu_row, sample_ppu_row_dense};
+use hdp_sparse::rng::{dist, Pcg64};
+
+fn main() {
+    let mut bench = Bench::new("phi_ppu");
+    let vocab = 50_000usize;
+    let beta = 0.01;
+    // Typical topic row: 500 nonzero words out of 50k.
+    let mut rng = Pcg64::new(3);
+    let mut row: Vec<(u32, u32)> = (0..500)
+        .map(|_| (rng.below(vocab as u64) as u32, 1 + rng.below(30) as u32))
+        .collect();
+    row.sort_unstable_by_key(|&(v, _)| v);
+    row.dedup_by(|a, b| {
+        if a.0 == b.0 {
+            b.1 += a.1;
+            true
+        } else {
+            false
+        }
+    });
+    let nnz = row.len() as f64;
+
+    let mut r1 = Pcg64::new(10);
+    bench.run("sparse_ppu_row_50k_vocab", Some(nnz), || {
+        sample_ppu_row(&mut r1, &row, beta, vocab)
+    });
+    let mut r2 = Pcg64::new(11);
+    bench.run("dense_ppu_row_50k_vocab", Some(nnz), || {
+        sample_ppu_row_dense(&mut r2, &row, beta, vocab)
+    });
+    // Exact Dirichlet row (the Algorithm-1 oracle's step).
+    let mut alpha_buf = vec![beta; vocab];
+    for &(v, c) in &row {
+        alpha_buf[v as usize] += c as f64;
+    }
+    let mut out = vec![0.0f64; vocab];
+    let mut r3 = Pcg64::new(12);
+    bench.run("exact_dirichlet_row_50k_vocab", Some(nnz), || {
+        dist::dirichlet_into(&mut r3, &alpha_buf, &mut out);
+    });
+
+    // Scaling in vocab at fixed nnz: sparse should be ~flat per βV unit.
+    for &v in &[10_000usize, 100_000] {
+        let mut r = Pcg64::new(20 + v as u64);
+        bench.run(&format!("sparse_ppu_row_vocab_{v}"), Some(nnz), || {
+            sample_ppu_row(&mut r, &row, beta, v)
+        });
+    }
+    bench.write_csv(std::path::Path::new("results/bench_phi_ppu.csv")).ok();
+}

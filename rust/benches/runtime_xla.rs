@@ -1,0 +1,68 @@
+//! Bench: the PJRT runtime — artifact execute latency for each
+//! compiled kernel plus the tile-staging cost, i.e. the price of one
+//! XLA-evaluated diagnostic pass (off the per-token hot path).
+
+mod common;
+
+use hdp_sparse::benchkit::Bench;
+use hdp_sparse::hdp::pc::phi::sample_phi;
+use hdp_sparse::rng::Pcg64;
+use hdp_sparse::runtime::{phi_loglik_sparse, Engine};
+use hdp_sparse::sparse::{TopicWordAcc, TopicWordRows};
+
+fn main() {
+    let dir = Engine::default_dir();
+    if !dir.join("manifest.txt").exists() {
+        println!("SKIP runtime_xla: no artifacts (run `make artifacts`)");
+        return;
+    }
+    let mut engine = Engine::load(&dir).expect("engine");
+    let mut bench = Bench::new("runtime_xla");
+    let (tk, tv) = engine.loglik_tile_shape();
+
+    // Raw tile execute.
+    let mut rng = Pcg64::new(1);
+    let n: Vec<f32> = (0..tk * tv)
+        .map(|_| if rng.bernoulli(0.05) { rng.below(20) as f32 } else { 0.0 })
+        .collect();
+    let phi: Vec<f32> =
+        n.iter().map(|&c| if c > 0.0 { 0.01 } else { 0.0 }).collect();
+    bench.run("loglik_tile_execute", Some((tk * tv) as f64), || {
+        engine.loglik_tile_raw(&n, &phi).unwrap()
+    });
+
+    // Full-state tiled loglik vs rust-native sparse.
+    let corpus = common::bench_corpus();
+    let mut acc = TopicWordAcc::with_capacity(corpus.num_tokens() as usize);
+    let mut r = Pcg64::new(2);
+    for doc in &corpus.docs {
+        for &v in doc {
+            acc.add(r.below(128) as u32, v, 1);
+        }
+    }
+    let nrows = TopicWordRows::merge_from(512, &mut [acc]);
+    let root = Pcg64::new(3);
+    let phim = sample_phi(&root, &nrows, 0.01, corpus.vocab_size(), 1);
+    let nnz = nrows.total() as f64;
+    bench.run("engine_loglik_full_state", Some(nnz), || {
+        engine.loglik(&nrows, &phim).unwrap()
+    });
+    bench.run("sparse_loglik_full_state", Some(nnz), || {
+        phi_loglik_sparse(&nrows, &phim)
+    });
+
+    // zscore + psi artifacts.
+    if let Some((b, k)) = engine.zscore_shape() {
+        let phi_cols = vec![0.01f32; b * k];
+        let m_rows = vec![0.0f32; b * k];
+        let psi = vec![1.0 / k as f32; k];
+        bench.run("zscore_execute", Some(b as f64), || {
+            engine.zscore(&phi_cols, &m_rows, &psi, 0.1).unwrap()
+        });
+    }
+    let sticks = vec![0.5f32; 1024];
+    bench.run("psi_stick_execute", Some(1024.0), || {
+        engine.psi_stick(&sticks).unwrap()
+    });
+    bench.write_csv(std::path::Path::new("results/bench_runtime_xla.csv")).ok();
+}

@@ -1,0 +1,45 @@
+//! Bench: §2.8 — under Heaps-law vocabulary growth, per-token
+//! iteration cost stays (near-)constant as the corpus grows; total
+//! cost is linear in N. Uses the Zipf generator so the observed
+//! vocabulary actually follows Heaps' law.
+
+mod common;
+
+use hdp_sparse::benchkit::Bench;
+use hdp_sparse::corpus::synthetic::ZipfCorpusSpec;
+use hdp_sparse::hdp::pc::PcSampler;
+use hdp_sparse::hdp::Trainer;
+use std::sync::Arc;
+
+fn main() {
+    std::env::set_var("BENCHKIT_SAMPLES", "5");
+    let mut bench = Bench::new("scaling_n");
+    for &docs in &[250usize, 1000, 4000] {
+        let corpus = Arc::new(
+            ZipfCorpusSpec {
+                vocab: 60_000,
+                exponent: 1.05,
+                docs,
+                mean_doc_len: 90.0,
+                len_sigma: 0.4,
+                min_doc_len: 10,
+            }
+            .generate(17),
+        );
+        let tokens = corpus.num_tokens() as f64;
+        let observed_v = corpus.observed_vocab();
+        let mut s = PcSampler::new(corpus, common::paper_cfg(400), 1, 4).unwrap();
+        for _ in 0..10 {
+            s.step().unwrap();
+        }
+        bench.run(&format!("pc_iteration_D{docs}"), Some(tokens), || {
+            s.step().unwrap();
+        });
+        println!(
+            "  D={docs}: N={tokens:.0}, observed V={observed_v} (Heaps), topics {}, work/token {:.2}",
+            s.diagnostics().active_topics,
+            s.mean_sparse_work()
+        );
+    }
+    bench.write_csv(std::path::Path::new("results/bench_scaling_n.csv")).ok();
+}

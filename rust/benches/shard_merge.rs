@@ -1,0 +1,48 @@
+//! Bench: parallel-phase overheads — shard-local n accumulation +
+//! merge cost vs shard count, and the weighted-sharding planner. The
+//! merge is the serialization point of the data-parallel z phase; it
+//! must stay a small fraction of sweep cost.
+
+mod common;
+
+use hdp_sparse::benchkit::Bench;
+use hdp_sparse::par::Sharding;
+use hdp_sparse::rng::Pcg64;
+use hdp_sparse::sparse::{TopicWordAcc, TopicWordRows};
+
+fn main() {
+    let mut bench = Bench::new("shard_merge");
+    let tokens = 200_000usize;
+    let topics = 400u64;
+    let vocab = 5000u64;
+    for &shards in &[1usize, 4, 16] {
+        // Pre-generate the token stream once.
+        let mut rng = Pcg64::new(shards as u64);
+        let stream: Vec<(u32, u32)> = (0..tokens)
+            .map(|_| (rng.below(topics) as u32, rng.below(vocab) as u32))
+            .collect();
+        bench.run(
+            &format!("accumulate_and_merge_s{shards}"),
+            Some(tokens as f64),
+            || {
+                let mut accs: Vec<TopicWordAcc> = (0..shards)
+                    .map(|_| TopicWordAcc::with_capacity(tokens / shards + 16))
+                    .collect();
+                for (i, &(k, v)) in stream.iter().enumerate() {
+                    accs[i % shards].add(k, v, 1);
+                }
+                TopicWordRows::merge_from(topics as usize, &mut accs)
+            },
+        );
+    }
+    // Sharding planners.
+    let mut rng = Pcg64::new(77);
+    let weights: Vec<u64> = (0..100_000).map(|_| 10 + rng.below(300)).collect();
+    bench.run("sharding_even_100k", Some(100_000.0), || {
+        Sharding::even(weights.len(), 16)
+    });
+    bench.run("sharding_weighted_100k", Some(100_000.0), || {
+        Sharding::weighted(&weights, 16)
+    });
+    bench.write_csv(std::path::Path::new("results/bench_shard_merge.csv")).ok();
+}

@@ -1,0 +1,61 @@
+//! Bench: eq. (29) — per-token cost tracks min(K^(m), K^(Φ)).
+//!
+//! Two sweeps move the two sparsity terms independently:
+//! * doc-topic sparsity: generator α controls topics per document;
+//! * topic-word sparsity: generator topic_beta controls words per
+//!   topic (hence Φ column sizes).
+//!
+//! The measured mean work counter and per-token time must follow the
+//! *smaller* term — the doubly sparse property.
+
+mod common;
+
+use hdp_sparse::benchkit::Bench;
+use hdp_sparse::corpus::synthetic::HdpCorpusSpec;
+use hdp_sparse::hdp::pc::PcSampler;
+use hdp_sparse::hdp::Trainer;
+use std::sync::Arc;
+
+fn run_case(bench: &mut Bench, tag: &str, gen_alpha: f64, topic_beta: f64) {
+    let (c, _) = HdpCorpusSpec {
+        vocab: 4000,
+        topics: 50,
+        gamma: 6.0,
+        alpha: gen_alpha,
+        topic_beta,
+        docs: 500,
+        mean_doc_len: 80.0,
+        len_sigma: 0.4,
+        min_doc_len: 10,
+    }
+    .generate(13);
+    let corpus = Arc::new(c);
+    let tokens = corpus.num_tokens() as f64;
+    let mut s = PcSampler::new(corpus, common::paper_cfg(400), 1, 3).unwrap();
+    for _ in 0..15 {
+        s.step().unwrap();
+    }
+    bench.run(tag, Some(tokens), || {
+        s.step().unwrap();
+    });
+    println!(
+        "  {tag}: mean min-work/token {:.2}, active topics {}",
+        s.mean_sparse_work(),
+        s.diagnostics().active_topics
+    );
+}
+
+fn main() {
+    std::env::set_var("BENCHKIT_SAMPLES", "5");
+    let mut bench = Bench::new("sparsity_mincost");
+    // doc-topic sparsity sweep (concentrated -> diffuse documents)
+    run_case(&mut bench, "docs_concentrated_a0.3", 0.3, 0.015);
+    run_case(&mut bench, "docs_medium_a1.5", 1.5, 0.015);
+    run_case(&mut bench, "docs_diffuse_a8", 8.0, 0.015);
+    // topic-word sparsity sweep (sharp -> broad topics)
+    run_case(&mut bench, "topics_sharp_b0.005", 1.5, 0.005);
+    run_case(&mut bench, "topics_broad_b0.1", 1.5, 0.1);
+    bench
+        .write_csv(std::path::Path::new("results/bench_sparsity_mincost.csv"))
+        .ok();
+}

@@ -1,0 +1,36 @@
+//! Bench: Table 2 — end-to-end per-iteration runtime of Algorithm 2 on
+//! each corpus analog, with the measured tokens/s that EXPERIMENTS.md
+//! extrapolates to the paper's full workloads.
+
+mod common;
+
+use hdp_sparse::benchkit::Bench;
+use hdp_sparse::corpus::registry;
+use hdp_sparse::hdp::pc::PcSampler;
+use hdp_sparse::hdp::Trainer;
+use std::sync::Arc;
+
+fn main() {
+    std::env::set_var("BENCHKIT_SAMPLES", "5");
+    let mut bench = Bench::new("table2_runtime");
+    for (name, warm) in [("ap", 15usize), ("cgcbib", 15), ("neurips", 5), ("pubmed", 3)] {
+        let corpus = Arc::new(registry::load(name, 2020).expect("corpus"));
+        let tokens = corpus.num_tokens() as f64;
+        let k_max = if name == "pubmed" { 1000 } else { 500 };
+        let mut s =
+            PcSampler::new(corpus, common::paper_cfg(k_max), 1, 2020).unwrap();
+        for _ in 0..warm {
+            s.step().unwrap();
+        }
+        bench.run(&format!("pc_iteration_{name}"), Some(tokens), || {
+            s.step().unwrap();
+        });
+        println!(
+            "  {name}: active topics {}, phi nnz {}, timers:\n{}",
+            s.diagnostics().active_topics,
+            s.phi_nnz,
+            s.timers.summary()
+        );
+    }
+    bench.write_csv(std::path::Path::new("results/bench_table2.csv")).ok();
+}

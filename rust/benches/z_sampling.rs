@@ -1,0 +1,49 @@
+//! Bench: the doubly sparse z sweep (the hot path of Algorithm 2) vs a
+//! dense-enumeration sweep — the core ablation behind eq. (29) and the
+//! headline throughput of Table 2.
+
+mod common;
+
+use hdp_sparse::benchkit::Bench;
+use hdp_sparse::hdp::pc::PcSampler;
+use hdp_sparse::hdp::{exact::ExactSampler, Trainer};
+
+fn main() {
+    let corpus = common::bench_corpus();
+    let tokens = corpus.num_tokens() as f64;
+    let mut bench = Bench::new("z_sampling");
+
+    // Warm the PC sampler into a structured state first so the bench
+    // measures the equilibrium sparsity pattern, not the init.
+    let mut pc = PcSampler::new(corpus.clone(), common::paper_cfg(500), 1, 1).unwrap();
+    for _ in 0..20 {
+        pc.step().unwrap();
+    }
+    bench.run("pc_doubly_sparse_iteration", Some(tokens), || {
+        pc.step().unwrap();
+    });
+    println!(
+        "  mean per-token sparse work (eq.29 min-term): {:.2}; active topics {}",
+        pc.mean_sparse_work(),
+        pc.diagnostics().active_topics
+    );
+
+    // Dense oracle at matched truncation on a slice of the corpus
+    // (dense is O(N·K*); run it on a 10% subsample and scale).
+    let sub = std::sync::Arc::new(hdp_sparse::corpus::Corpus {
+        docs: corpus.docs[..corpus.docs.len() / 10].to_vec(),
+        vocab: corpus.vocab.clone(),
+    });
+    let sub_tokens = sub.num_tokens() as f64;
+    let mut dense = ExactSampler::new(sub, common::paper_cfg(500), 1).unwrap();
+    for _ in 0..2 {
+        dense.step().unwrap();
+    }
+    bench.run("dense_enumeration_iteration_10pct", Some(sub_tokens), || {
+        dense.step().unwrap();
+    });
+
+    bench
+        .write_csv(std::path::Path::new("results/bench_z_sampling.csv"))
+        .ok();
+}

@@ -1,0 +1,250 @@
+//! Walker alias tables for O(1) categorical sampling.
+//!
+//! The doubly sparse `z` step (paper §2.5) splits the full conditional
+//! into bucket *(a)* `φ_{k,v}·α·Ψ_k` — identical for every token of word
+//! type `v` in every document — and bucket *(b)* `φ_{k,v}·m_{d,k}`.
+//! Bucket (a) is materialized once per iteration as one alias table per
+//! word type over the *nonzero support* of the `Φ` column (Walker 1977;
+//! Li et al. 2014), turning each draw into two uniforms. Because `Φ` and
+//! `Ψ` are held fixed throughout the z phase (partially collapsed
+//! sampler), the table is exact — no Metropolis–Hastings correction is
+//! needed, unlike alias methods for fully collapsed LDA.
+//!
+//! [`AliasTable`] is the dense variant (outcome = slot index);
+//! [`SparseAlias`] carries an explicit support so outcomes map back to
+//! topic ids.
+
+use crate::rng::Pcg64;
+
+/// Dense Walker alias table over outcomes `0..n`, built with Vose's
+/// O(n) construction. Stores the total input mass so callers can mix
+/// table draws with other buckets.
+#[derive(Clone, Debug)]
+pub struct AliasTable {
+    /// acceptance probability per slot, scaled to u64 for a branch-cheap
+    /// compare against raw RNG output.
+    prob: Vec<u64>,
+    alias: Vec<u32>,
+    total: f64,
+}
+
+const U64_SCALE: f64 = 1.844_674_407_370_955_2e19; // 2^64
+
+impl AliasTable {
+    /// Build from (unnormalized, nonnegative) weights. Zero-weight
+    /// outcomes are valid and will never be drawn. Panics on an empty or
+    /// all-zero input in debug builds; in release the table degenerates
+    /// to always returning slot 0.
+    pub fn new(weights: &[f64]) -> Self {
+        let n = weights.len();
+        debug_assert!(n > 0, "alias table needs at least one outcome");
+        debug_assert!(n <= u32::MAX as usize);
+        let total: f64 = weights.iter().sum();
+        debug_assert!(
+            total > 0.0 && weights.iter().all(|&w| w >= 0.0),
+            "alias table needs nonnegative weights with positive total"
+        );
+        let mut prob = vec![0u64; n];
+        let mut alias: Vec<u32> = (0..n as u32).collect();
+        // Vose's algorithm with two stacks.
+        let scale = n as f64 / total;
+        let mut scaled: Vec<f64> = weights.iter().map(|&w| w * scale).collect();
+        let mut small: Vec<u32> = Vec::with_capacity(n);
+        let mut large: Vec<u32> = Vec::with_capacity(n);
+        for (i, &s) in scaled.iter().enumerate() {
+            if s < 1.0 {
+                small.push(i as u32);
+            } else {
+                large.push(i as u32);
+            }
+        }
+        while let (Some(&s), Some(&l)) = (small.last(), large.last()) {
+            small.pop();
+            // p(s) fills the remainder of slot s from l.
+            prob[s as usize] = (scaled[s as usize].min(1.0) * U64_SCALE) as u64;
+            alias[s as usize] = l;
+            scaled[l as usize] -= 1.0 - scaled[s as usize];
+            if scaled[l as usize] < 1.0 {
+                large.pop();
+                small.push(l);
+            }
+        }
+        // Leftovers are numerically ≈ 1: accept unconditionally.
+        for &i in small.iter().chain(large.iter()) {
+            prob[i as usize] = u64::MAX;
+        }
+        Self { prob, alias, total }
+    }
+
+    /// Number of outcomes.
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.prob.len()
+    }
+
+    /// True when the table has no outcomes.
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.prob.is_empty()
+    }
+
+    /// Total (unnormalized) mass the table was built from.
+    #[inline]
+    pub fn total(&self) -> f64 {
+        self.total
+    }
+
+    /// Draw an outcome in `0..len()` — two uniforms, O(1).
+    #[inline]
+    pub fn sample(&self, rng: &mut Pcg64) -> usize {
+        let slot = rng.below(self.prob.len() as u64) as usize;
+        if rng.next_u64() < self.prob[slot] {
+            slot
+        } else {
+            self.alias[slot] as usize
+        }
+    }
+}
+
+/// Alias table over an explicit sparse support: draws return elements of
+/// `support` (topic ids), not slot indices. This is the per-word-type
+/// bucket-(a) table: support = topics with `φ_{k,v} > 0`.
+#[derive(Clone, Debug)]
+pub struct SparseAlias {
+    table: AliasTable,
+    support: Vec<u32>,
+}
+
+impl SparseAlias {
+    /// Build from parallel `(support, weights)` arrays.
+    pub fn new(support: Vec<u32>, weights: &[f64]) -> Self {
+        debug_assert_eq!(support.len(), weights.len());
+        Self { table: AliasTable::new(weights), support }
+    }
+
+    /// Total unnormalized mass.
+    #[inline]
+    pub fn total(&self) -> f64 {
+        self.table.total()
+    }
+
+    /// Support size.
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.support.len()
+    }
+
+    /// True when the support is empty.
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.support.is_empty()
+    }
+
+    /// Draw a topic id from the support.
+    #[inline]
+    pub fn sample(&self, rng: &mut Pcg64) -> u32 {
+        self.support[self.table.sample(rng)]
+    }
+
+    /// The support slice (sorted order is whatever the builder passed).
+    #[inline]
+    pub fn support(&self) -> &[u32] {
+        &self.support
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn check_table_matches(weights: &[f64], seed: u64, trials: usize, tol: f64) {
+        let table = AliasTable::new(weights);
+        let mut rng = Pcg64::new(seed);
+        let mut counts = vec![0usize; weights.len()];
+        for _ in 0..trials {
+            counts[table.sample(&mut rng)] += 1;
+        }
+        let total: f64 = weights.iter().sum();
+        for (i, &w) in weights.iter().enumerate() {
+            let want = w / total;
+            let got = counts[i] as f64 / trials as f64;
+            assert!(
+                (got - want).abs() < tol,
+                "outcome {i}: got {got}, want {want}"
+            );
+        }
+    }
+
+    #[test]
+    fn uniform_weights() {
+        check_table_matches(&[1.0; 8], 1, 200_000, 0.005);
+    }
+
+    #[test]
+    fn skewed_weights() {
+        check_table_matches(&[0.001, 10.0, 0.5, 3.0, 0.0, 0.2], 2, 400_000, 0.005);
+    }
+
+    #[test]
+    fn zero_weight_never_drawn() {
+        let table = AliasTable::new(&[0.0, 1.0, 0.0, 2.0]);
+        let mut rng = Pcg64::new(3);
+        for _ in 0..50_000 {
+            let k = table.sample(&mut rng);
+            assert!(k == 1 || k == 3);
+        }
+    }
+
+    #[test]
+    fn single_outcome() {
+        let table = AliasTable::new(&[3.7]);
+        let mut rng = Pcg64::new(4);
+        for _ in 0..100 {
+            assert_eq!(table.sample(&mut rng), 0);
+        }
+        assert!((table.total() - 3.7).abs() < 1e-12);
+    }
+
+    #[test]
+    fn total_preserved() {
+        let w = [1.5, 2.5, 6.0];
+        let table = AliasTable::new(&w);
+        assert!((table.total() - 10.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn sparse_alias_maps_support() {
+        let support = vec![5u32, 17, 900];
+        let weights = [1.0, 2.0, 1.0];
+        let sa = SparseAlias::new(support.clone(), &weights);
+        let mut rng = Pcg64::new(5);
+        let mut counts = std::collections::HashMap::new();
+        for _ in 0..100_000 {
+            *counts.entry(sa.sample(&mut rng)).or_insert(0usize) += 1;
+        }
+        assert_eq!(counts.len(), 3);
+        assert!((counts[&17] as f64 / 100_000.0 - 0.5).abs() < 0.01);
+        assert!(counts.keys().all(|k| support.contains(k)));
+    }
+
+    #[test]
+    fn many_outcomes_chi2() {
+        // 1000-outcome Zipf-ish weights, χ² sanity.
+        let weights: Vec<f64> = (1..=1000).map(|i| 1.0 / i as f64).collect();
+        let table = AliasTable::new(&weights);
+        let mut rng = Pcg64::new(6);
+        let trials = 2_000_000usize;
+        let mut counts = vec![0usize; 1000];
+        for _ in 0..trials {
+            counts[table.sample(&mut rng)] += 1;
+        }
+        let total: f64 = weights.iter().sum();
+        let mut chi2 = 0.0;
+        for (c, w) in counts.iter().zip(&weights) {
+            let e = trials as f64 * w / total;
+            chi2 += (*c as f64 - e).powi(2) / e;
+        }
+        // 999 dof: mean 999, sd ~44.7; allow 5 sigma.
+        assert!(chi2 < 999.0 + 5.0 * 44.7, "chi2={chi2}");
+    }
+}

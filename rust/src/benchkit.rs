@@ -1,0 +1,223 @@
+//! A small statistical benchmarking harness (criterion is not available
+//! in this environment, so `cargo bench` targets use this instead).
+//!
+//! Each [`Bench::run`] case is warmed up, then timed for a fixed number
+//! of samples of auto-calibrated batch size; the report prints median /
+//! mean ± sd / min and optional throughput. Results can also be dumped
+//! as CSV for the experiment logs.
+
+use std::time::{Duration, Instant};
+
+/// Result of one benchmark case.
+#[derive(Clone, Debug)]
+pub struct CaseResult {
+    /// Case label.
+    pub name: String,
+    /// Per-call times, seconds (one per sample, already divided by the
+    /// batch size).
+    pub samples: Vec<f64>,
+    /// Optional items processed per call (for throughput).
+    pub items_per_call: Option<f64>,
+}
+
+impl CaseResult {
+    /// Median per-call seconds.
+    pub fn median(&self) -> f64 {
+        let mut s = self.samples.clone();
+        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = s.len();
+        if n == 0 {
+            return f64::NAN;
+        }
+        if n % 2 == 1 {
+            s[n / 2]
+        } else {
+            0.5 * (s[n / 2 - 1] + s[n / 2])
+        }
+    }
+
+    /// Mean per-call seconds.
+    pub fn mean(&self) -> f64 {
+        self.samples.iter().sum::<f64>() / self.samples.len() as f64
+    }
+
+    /// Sample standard deviation.
+    pub fn stddev(&self) -> f64 {
+        let m = self.mean();
+        let n = self.samples.len() as f64;
+        (self.samples.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / (n - 1.0).max(1.0))
+            .sqrt()
+    }
+
+    /// Fastest sample.
+    pub fn min(&self) -> f64 {
+        self.samples.iter().copied().fold(f64::INFINITY, f64::min)
+    }
+
+    /// Items/second at the median, when a throughput basis was given.
+    pub fn throughput(&self) -> Option<f64> {
+        self.items_per_call.map(|items| items / self.median())
+    }
+}
+
+/// Pretty time formatting.
+pub fn fmt_time(secs: f64) -> String {
+    if secs < 1e-6 {
+        format!("{:7.2} ns", secs * 1e9)
+    } else if secs < 1e-3 {
+        format!("{:7.2} µs", secs * 1e6)
+    } else if secs < 1.0 {
+        format!("{:7.2} ms", secs * 1e3)
+    } else {
+        format!("{:7.3} s ", secs)
+    }
+}
+
+/// Benchmark group runner.
+pub struct Bench {
+    group: String,
+    samples: usize,
+    min_batch_time: Duration,
+    results: Vec<CaseResult>,
+}
+
+impl Bench {
+    /// New group with default settings (15 samples, ≥ 20 ms per batch).
+    pub fn new(group: &str) -> Self {
+        // Allow quick runs via env (used by `cargo test`-driven smoke).
+        let samples = std::env::var("BENCHKIT_SAMPLES")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(15);
+        let ms = std::env::var("BENCHKIT_BATCH_MS")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(20u64);
+        println!("\n== bench group: {group} ==");
+        Self {
+            group: group.to_string(),
+            samples,
+            min_batch_time: Duration::from_millis(ms),
+            results: Vec::new(),
+        }
+    }
+
+    /// Time `f`; `items` (if given) sets the throughput denominator.
+    pub fn run<R>(&mut self, name: &str, items: Option<f64>, mut f: impl FnMut() -> R) {
+        // Warmup + batch-size calibration: grow batch until a batch
+        // takes at least min_batch_time.
+        let mut batch = 1usize;
+        loop {
+            let t0 = Instant::now();
+            for _ in 0..batch {
+                std::hint::black_box(f());
+            }
+            let dt = t0.elapsed();
+            if dt >= self.min_batch_time || batch >= 1 << 24 {
+                break;
+            }
+            let grow = (self.min_batch_time.as_secs_f64() / dt.as_secs_f64().max(1e-9))
+                .ceil()
+                .min(1024.0) as usize;
+            batch = (batch * grow.max(2)).min(1 << 24);
+        }
+        let mut samples = Vec::with_capacity(self.samples);
+        for _ in 0..self.samples {
+            let t0 = Instant::now();
+            for _ in 0..batch {
+                std::hint::black_box(f());
+            }
+            samples.push(t0.elapsed().as_secs_f64() / batch as f64);
+        }
+        let case = CaseResult {
+            name: name.to_string(),
+            samples,
+            items_per_call: items,
+        };
+        let tput = case
+            .throughput()
+            .map(|t| format!("  {:>12.0} items/s", t))
+            .unwrap_or_default();
+        println!(
+            "{:<44} median {}  mean {} ± {}  min {}{}",
+            format!("{}/{}", self.group, name),
+            fmt_time(case.median()),
+            fmt_time(case.mean()),
+            fmt_time(case.stddev()),
+            fmt_time(case.min()),
+            tput
+        );
+        self.results.push(case);
+    }
+
+    /// Results so far.
+    pub fn results(&self) -> &[CaseResult] {
+        &self.results
+    }
+
+    /// Write a CSV summary (`name,median_s,mean_s,sd_s,min_s,items_per_s`).
+    pub fn write_csv(&self, path: &std::path::Path) -> anyhow::Result<()> {
+        use std::io::Write;
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+        writeln!(f, "group,name,median_s,mean_s,sd_s,min_s,items_per_s")?;
+        for c in &self.results {
+            writeln!(
+                f,
+                "{},{},{:.9},{:.9},{:.9},{:.9},{}",
+                self.group,
+                c.name,
+                c.median(),
+                c.mean(),
+                c.stddev(),
+                c.min(),
+                c.throughput().map(|t| format!("{t:.1}")).unwrap_or_default()
+            )?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_are_sane() {
+        let c = CaseResult {
+            name: "x".into(),
+            samples: vec![1.0, 2.0, 3.0, 4.0, 100.0],
+            items_per_call: Some(6.0),
+        };
+        assert_eq!(c.median(), 3.0);
+        assert_eq!(c.min(), 1.0);
+        assert!((c.mean() - 22.0).abs() < 1e-12);
+        assert!((c.throughput().unwrap() - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn fmt_time_ranges() {
+        assert!(fmt_time(5e-9).contains("ns"));
+        assert!(fmt_time(5e-6).contains("µs"));
+        assert!(fmt_time(5e-3).contains("ms"));
+        assert!(fmt_time(5.0).contains("s"));
+    }
+
+    #[test]
+    fn bench_runs_quickly_with_env() {
+        std::env::set_var("BENCHKIT_SAMPLES", "3");
+        std::env::set_var("BENCHKIT_BATCH_MS", "1");
+        let mut b = Bench::new("test");
+        let mut acc = 0u64;
+        b.run("noop", Some(1.0), || {
+            acc = acc.wrapping_add(1);
+            acc
+        });
+        assert_eq!(b.results().len(), 1);
+        assert!(b.results()[0].median() >= 0.0);
+        std::env::remove_var("BENCHKIT_SAMPLES");
+        std::env::remove_var("BENCHKIT_BATCH_MS");
+    }
+}

@@ -1,0 +1,168 @@
+//! Command-line argument parsing (no external crates).
+//!
+//! Grammar: `repro <command> [<subcommand>] [--flag] [--key value]
+//! [--key=value] [positional…]`. Typed accessors mirror the small part
+//! of `clap` this project needs; unknown-flag detection is the caller's
+//! job via [`Args::finish`].
+
+use std::collections::BTreeMap;
+
+/// Parsed arguments: positionals in order plus `--key [value]` options.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    positional: Vec<String>,
+    options: BTreeMap<String, Vec<String>>,
+    consumed: std::cell::RefCell<std::collections::BTreeSet<String>>,
+}
+
+impl Args {
+    /// Parse from an iterator of raw arguments (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(args: I) -> Self {
+        let mut positional = Vec::new();
+        let mut options: BTreeMap<String, Vec<String>> = BTreeMap::new();
+        let mut iter = args.into_iter().peekable();
+        while let Some(arg) = iter.next() {
+            if let Some(flag) = arg.strip_prefix("--") {
+                if let Some(eq) = flag.find('=') {
+                    options
+                        .entry(flag[..eq].to_string())
+                        .or_default()
+                        .push(flag[eq + 1..].to_string());
+                } else {
+                    // Value iff next token exists and isn't another flag.
+                    let takes_value =
+                        iter.peek().map(|n| !n.starts_with("--")).unwrap_or(false);
+                    if takes_value {
+                        let v = iter.next().unwrap();
+                        options.entry(flag.to_string()).or_default().push(v);
+                    } else {
+                        options.entry(flag.to_string()).or_default();
+                    }
+                }
+            } else {
+                positional.push(arg);
+            }
+        }
+        Self { positional, options, consumed: Default::default() }
+    }
+
+    /// Parse the process arguments.
+    pub fn from_env() -> Self {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    /// Positional argument at `i`.
+    pub fn positional(&self, i: usize) -> Option<&str> {
+        self.positional.get(i).map(String::as_str)
+    }
+
+    /// All positionals.
+    pub fn positionals(&self) -> &[String] {
+        &self.positional
+    }
+
+    /// True if `--name` was present (with or without a value).
+    pub fn flag(&self, name: &str) -> bool {
+        self.consumed.borrow_mut().insert(name.to_string());
+        self.options.contains_key(name)
+    }
+
+    /// Last value of `--name`, if any.
+    pub fn value(&self, name: &str) -> Option<&str> {
+        self.consumed.borrow_mut().insert(name.to_string());
+        self.options.get(name).and_then(|v| v.last()).map(String::as_str)
+    }
+
+    /// All values of a repeatable `--name`.
+    pub fn values(&self, name: &str) -> Vec<&str> {
+        self.consumed.borrow_mut().insert(name.to_string());
+        self.options
+            .get(name)
+            .map(|v| v.iter().map(String::as_str).collect())
+            .unwrap_or_default()
+    }
+
+    /// Typed value with default.
+    pub fn get_or<T: std::str::FromStr>(&self, name: &str, default: T) -> anyhow::Result<T> {
+        match self.value(name) {
+            None => Ok(default),
+            Some(s) => s
+                .parse::<T>()
+                .map_err(|_| anyhow::anyhow!("invalid value for --{name}: `{s}`")),
+        }
+    }
+
+    /// Required typed value.
+    pub fn require<T: std::str::FromStr>(&self, name: &str) -> anyhow::Result<T> {
+        let s = self
+            .value(name)
+            .ok_or_else(|| anyhow::anyhow!("missing required option --{name}"))?;
+        s.parse::<T>()
+            .map_err(|_| anyhow::anyhow!("invalid value for --{name}: `{s}`"))
+    }
+
+    /// Error on any option that was never consumed by the accessors —
+    /// catches typos like `--iteraitons`.
+    pub fn finish(&self) -> anyhow::Result<()> {
+        let consumed = self.consumed.borrow();
+        let unknown: Vec<&String> =
+            self.options.keys().filter(|k| !consumed.contains(*k)).collect();
+        anyhow::ensure!(unknown.is_empty(), "unknown option(s): {unknown:?}");
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(args: &[&str]) -> Args {
+        Args::parse(args.iter().map(|s| s.to_string()))
+    }
+
+    #[test]
+    fn positionals_and_flags() {
+        // NB: a bare `--flag` greedily takes the next non-flag token as
+        // its value (there is no flag registry), so positionals go
+        // before options or flags use `=`.
+        let a = parse(&["train", "extra", "--corpus", "ap", "--quiet"]);
+        assert_eq!(a.positional(0), Some("train"));
+        assert_eq!(a.positional(1), Some("extra"));
+        assert_eq!(a.value("corpus"), Some("ap"));
+        assert!(a.flag("quiet"));
+        assert!(!a.flag("verbose"));
+    }
+
+    #[test]
+    fn equals_syntax_and_repeats() {
+        let a = parse(&["--k=10", "--k", "20", "--list=x", "--list=y"]);
+        assert_eq!(a.value("k"), Some("20"));
+        assert_eq!(a.values("list"), vec!["x", "y"]);
+    }
+
+    #[test]
+    fn typed_access() {
+        let a = parse(&["--iters", "500", "--alpha=0.25"]);
+        assert_eq!(a.get_or("iters", 0usize).unwrap(), 500);
+        assert_eq!(a.get_or("alpha", 0.0f64).unwrap(), 0.25);
+        assert_eq!(a.get_or("missing", 7u32).unwrap(), 7);
+        assert!(a.require::<usize>("nope").is_err());
+        assert!(parse(&["--iters", "abc"]).get_or("iters", 0usize).is_err());
+    }
+
+    #[test]
+    fn unknown_option_detection() {
+        let a = parse(&["--known", "1", "--typo", "2"]);
+        let _ = a.value("known");
+        assert!(a.finish().is_err());
+        let _ = a.value("typo");
+        assert!(a.finish().is_ok());
+    }
+
+    #[test]
+    fn flag_without_value_before_flag() {
+        let a = parse(&["--quiet", "--corpus", "ap"]);
+        assert!(a.flag("quiet"));
+        assert_eq!(a.value("corpus"), Some("ap"));
+    }
+}

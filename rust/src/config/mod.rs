@@ -1,0 +1,417 @@
+//! Configuration system.
+//!
+//! A small TOML-subset parser ([`ConfigMap::parse`]) plus the typed
+//! configuration structs consumed by the trainers and experiment
+//! drivers. Supported syntax: `[section]` headers, `key = value` with
+//! string / integer / float / boolean / flat string-or-number arrays,
+//! `#` comments, blank lines. That covers every config this project
+//! ships; nested tables are intentionally out of scope.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+/// A parsed configuration value.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    List(Vec<Value>),
+}
+
+impl Value {
+    /// As f64 (ints coerce).
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::Float(f) => Some(*f),
+            Value::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+
+    /// As i64.
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            Value::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+
+    /// As str.
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    /// As bool.
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+}
+
+/// Parse error with line information.
+#[derive(Debug)]
+pub struct ParseError {
+    pub line: usize,
+    pub message: String,
+}
+
+impl fmt::Display for ParseError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "config parse error at line {}: {}", self.line, self.message)
+    }
+}
+
+impl std::error::Error for ParseError {}
+
+/// Sectioned key-value configuration. Keys in the preamble (before any
+/// `[section]`) live in the `""` section.
+#[derive(Clone, Debug, Default)]
+pub struct ConfigMap {
+    sections: BTreeMap<String, BTreeMap<String, Value>>,
+}
+
+impl ConfigMap {
+    /// Parse from TOML-subset text.
+    pub fn parse(text: &str) -> Result<Self, ParseError> {
+        let mut map = ConfigMap::default();
+        let mut section = String::new();
+        for (idx, raw) in text.lines().enumerate() {
+            let lineno = idx + 1;
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(rest) = line.strip_prefix('[') {
+                let name = rest.strip_suffix(']').ok_or_else(|| ParseError {
+                    line: lineno,
+                    message: "unterminated section header".into(),
+                })?;
+                section = name.trim().to_string();
+                map.sections.entry(section.clone()).or_default();
+                continue;
+            }
+            let eq = line.find('=').ok_or_else(|| ParseError {
+                line: lineno,
+                message: format!("expected `key = value`, got `{line}`"),
+            })?;
+            let key = line[..eq].trim().to_string();
+            if key.is_empty() {
+                return Err(ParseError { line: lineno, message: "empty key".into() });
+            }
+            let value = parse_value(line[eq + 1..].trim()).map_err(|m| ParseError {
+                line: lineno,
+                message: m,
+            })?;
+            map.sections.entry(section.clone()).or_default().insert(key, value);
+        }
+        Ok(map)
+    }
+
+    /// Load and parse a file.
+    pub fn load(path: &std::path::Path) -> anyhow::Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow::anyhow!("reading {}: {e}", path.display()))?;
+        Ok(Self::parse(&text)?)
+    }
+
+    /// Get a value.
+    pub fn get(&self, section: &str, key: &str) -> Option<&Value> {
+        self.sections.get(section)?.get(key)
+    }
+
+    /// Typed getters with defaults.
+    pub fn f64_or(&self, section: &str, key: &str, default: f64) -> f64 {
+        self.get(section, key).and_then(Value::as_f64).unwrap_or(default)
+    }
+
+    /// Integer (usize) getter with default.
+    pub fn usize_or(&self, section: &str, key: &str, default: usize) -> usize {
+        self.get(section, key)
+            .and_then(Value::as_i64)
+            .map(|i| i.max(0) as usize)
+            .unwrap_or(default)
+    }
+
+    /// u64 getter with default.
+    pub fn u64_or(&self, section: &str, key: &str, default: u64) -> u64 {
+        self.get(section, key)
+            .and_then(Value::as_i64)
+            .map(|i| i.max(0) as u64)
+            .unwrap_or(default)
+    }
+
+    /// String getter with default.
+    pub fn str_or(&self, section: &str, key: &str, default: &str) -> String {
+        self.get(section, key)
+            .and_then(Value::as_str)
+            .unwrap_or(default)
+            .to_string()
+    }
+
+    /// Bool getter with default.
+    pub fn bool_or(&self, section: &str, key: &str, default: bool) -> bool {
+        self.get(section, key).and_then(Value::as_bool).unwrap_or(default)
+    }
+
+    /// Set a value programmatically (used by CLI overrides).
+    pub fn set(&mut self, section: &str, key: &str, value: Value) {
+        self.sections
+            .entry(section.to_string())
+            .or_default()
+            .insert(key.to_string(), value);
+    }
+
+    /// Section names.
+    pub fn sections(&self) -> impl Iterator<Item = &str> {
+        self.sections.keys().map(String::as_str)
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // `#` starts a comment unless inside a quoted string.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Result<Value, String> {
+    if s.is_empty() {
+        return Err("empty value".into());
+    }
+    if let Some(rest) = s.strip_prefix('"') {
+        let inner = rest.strip_suffix('"').ok_or("unterminated string")?;
+        return Ok(Value::Str(inner.to_string()));
+    }
+    if let Some(inner) = s.strip_prefix('[') {
+        let inner = inner.strip_suffix(']').ok_or("unterminated array")?;
+        let mut items = Vec::new();
+        let trimmed = inner.trim();
+        if !trimmed.is_empty() {
+            for part in split_top_level(trimmed) {
+                items.push(parse_value(part.trim())?);
+            }
+        }
+        return Ok(Value::List(items));
+    }
+    match s {
+        "true" => return Ok(Value::Bool(true)),
+        "false" => return Ok(Value::Bool(false)),
+        _ => {}
+    }
+    if let Ok(i) = s.replace('_', "").parse::<i64>() {
+        return Ok(Value::Int(i));
+    }
+    if let Ok(f) = s.parse::<f64>() {
+        return Ok(Value::Float(f));
+    }
+    Err(format!("cannot parse value `{s}`"))
+}
+
+fn split_top_level(s: &str) -> Vec<&str> {
+    // split on commas not inside quotes (flat arrays only)
+    let mut parts = Vec::new();
+    let mut start = 0;
+    let mut in_str = false;
+    for (i, c) in s.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            ',' if !in_str => {
+                parts.push(&s[start..i]);
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    parts.push(&s[start..]);
+    parts
+}
+
+/// HDP model hyperparameters (paper §3: α=0.1, β=0.01, γ=1, K*=1000).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct HdpConfig {
+    /// Document-level DP concentration α.
+    pub alpha: f64,
+    /// Symmetric Dirichlet topic-word prior β.
+    pub beta: f64,
+    /// GEM concentration γ for the global topic distribution Ψ.
+    pub gamma: f64,
+    /// Truncation level K* (flag topic index; §2.4).
+    pub k_max: usize,
+    /// Number of topics assigned at initialization (paper follows
+    /// Teh et al. 2006 and starts from a single topic).
+    pub init_topics: usize,
+}
+
+impl Default for HdpConfig {
+    fn default() -> Self {
+        Self { alpha: 0.1, beta: 0.01, gamma: 1.0, k_max: 1000, init_topics: 1 }
+    }
+}
+
+impl HdpConfig {
+    /// Read from the `[model]` section, falling back to paper defaults.
+    pub fn from_map(map: &ConfigMap) -> Self {
+        let d = Self::default();
+        Self {
+            alpha: map.f64_or("model", "alpha", d.alpha),
+            beta: map.f64_or("model", "beta", d.beta),
+            gamma: map.f64_or("model", "gamma", d.gamma),
+            k_max: map.usize_or("model", "k_max", d.k_max),
+            init_topics: map.usize_or("model", "init_topics", d.init_topics),
+        }
+    }
+
+    /// Validate ranges.
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(self.alpha > 0.0, "alpha must be > 0");
+        anyhow::ensure!(self.beta > 0.0, "beta must be > 0");
+        anyhow::ensure!(self.gamma > 0.0, "gamma must be > 0");
+        anyhow::ensure!(self.k_max >= 2, "k_max must be >= 2");
+        anyhow::ensure!(
+            self.init_topics >= 1 && self.init_topics < self.k_max,
+            "init_topics must be in [1, k_max)"
+        );
+        Ok(())
+    }
+}
+
+/// Run-control parameters.
+#[derive(Clone, Debug, PartialEq)]
+pub struct RunConfig {
+    /// Gibbs iterations.
+    pub iterations: usize,
+    /// Worker threads for the parallel phases.
+    pub threads: usize,
+    /// RNG seed (chains are reproducible per seed and shard-invariant).
+    pub seed: u64,
+    /// Evaluate diagnostics every this many iterations.
+    pub eval_every: usize,
+    /// Optional wall-clock budget in seconds (0 = unlimited); used by
+    /// the Fig-1(g–i) fixed-budget comparison.
+    pub time_budget_secs: u64,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        Self { iterations: 100, threads: 1, seed: 2020, eval_every: 10, time_budget_secs: 0 }
+    }
+}
+
+impl RunConfig {
+    /// Read from the `[run]` section.
+    pub fn from_map(map: &ConfigMap) -> Self {
+        let d = Self::default();
+        Self {
+            iterations: map.usize_or("run", "iterations", d.iterations),
+            threads: map.usize_or("run", "threads", d.threads).max(1),
+            seed: map.u64_or("run", "seed", d.seed),
+            eval_every: map.usize_or("run", "eval_every", d.eval_every).max(1),
+            time_budget_secs: map.u64_or("run", "time_budget_secs", 0),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+# experiment config
+title = "ap reproduction"
+
+[model]
+alpha = 0.1
+beta = 0.01
+gamma = 1 # integer coerces
+k_max = 1000
+
+[run]
+iterations = 100_000
+threads = 8
+trace = true
+corpora = ["ap", "cgcbib"]
+ratio = 2.5
+"#;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let map = ConfigMap::parse(SAMPLE).unwrap();
+        assert_eq!(map.get("", "title").unwrap().as_str().unwrap(), "ap reproduction");
+        assert_eq!(map.f64_or("model", "alpha", 0.0), 0.1);
+        assert_eq!(map.f64_or("model", "gamma", 0.0), 1.0);
+        assert_eq!(map.usize_or("run", "iterations", 0), 100_000);
+        assert!(map.bool_or("run", "trace", false));
+        assert_eq!(map.f64_or("run", "ratio", 0.0), 2.5);
+        match map.get("run", "corpora").unwrap() {
+            Value::List(items) => {
+                assert_eq!(items.len(), 2);
+                assert_eq!(items[0].as_str().unwrap(), "ap");
+            }
+            other => panic!("expected list, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn defaults_when_missing() {
+        let map = ConfigMap::parse("").unwrap();
+        let hdp = HdpConfig::from_map(&map);
+        assert_eq!(hdp, HdpConfig::default());
+        let run = RunConfig::from_map(&map);
+        assert_eq!(run, RunConfig::default());
+    }
+
+    #[test]
+    fn typed_configs_from_map() {
+        let map = ConfigMap::parse(SAMPLE).unwrap();
+        let hdp = HdpConfig::from_map(&map);
+        assert_eq!(hdp.alpha, 0.1);
+        assert_eq!(hdp.k_max, 1000);
+        hdp.validate().unwrap();
+        let run = RunConfig::from_map(&map);
+        assert_eq!(run.threads, 8);
+    }
+
+    #[test]
+    fn rejects_bad_syntax() {
+        assert!(ConfigMap::parse("[unterminated").is_err());
+        assert!(ConfigMap::parse("novalue").is_err());
+        assert!(ConfigMap::parse("x = ").is_err());
+        assert!(ConfigMap::parse("x = \"open").is_err());
+    }
+
+    #[test]
+    fn comments_and_strings_interact() {
+        let map = ConfigMap::parse("s = \"a # not comment\" # real comment").unwrap();
+        assert_eq!(map.get("", "s").unwrap().as_str().unwrap(), "a # not comment");
+    }
+
+    #[test]
+    fn validate_catches_bad_hparams() {
+        let mut c = HdpConfig::default();
+        c.alpha = 0.0;
+        assert!(c.validate().is_err());
+        let mut c = HdpConfig::default();
+        c.init_topics = c.k_max;
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn set_overrides() {
+        let mut map = ConfigMap::parse(SAMPLE).unwrap();
+        map.set("model", "alpha", Value::Float(0.5));
+        assert_eq!(map.f64_or("model", "alpha", 0.0), 0.5);
+    }
+}

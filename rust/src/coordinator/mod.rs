@@ -1,0 +1,176 @@
+//! The training coordinator: drives any [`Trainer`] through its
+//! iterations with wall-clock budgeting, periodic diagnostics, and
+//! trace streaming — the L3 event loop.
+//!
+//! Fig 1's three x-axes come from here: per-iteration traces (AP,
+//! CGCBIB, PubMed panels), real-time traces under a fixed wall-clock
+//! budget (NeurIPS panels), and per-iteration runtime (panel i).
+
+use crate::config::RunConfig;
+use crate::hdp::Trainer;
+use crate::metrics::{IterRecord, TraceWriter};
+use std::time::Instant;
+
+/// Outcome of a training run.
+#[derive(Clone, Debug)]
+pub struct TrainSummary {
+    /// Iterations actually completed (≤ requested when a time budget
+    /// fires).
+    pub iterations: usize,
+    /// Total wall-clock seconds.
+    pub elapsed_secs: f64,
+    /// Final evaluated log-likelihood.
+    pub final_log_likelihood: f64,
+    /// Final active topic count.
+    pub final_active_topics: usize,
+    /// Tokens per second over the whole run.
+    pub tokens_per_sec: f64,
+}
+
+/// Options controlling the loop beyond [`RunConfig`].
+#[derive(Clone, Debug, Default)]
+pub struct LoopOptions {
+    /// Print progress lines to stdout.
+    pub verbose: bool,
+    /// Evaluate diagnostics on iteration 1 regardless of `eval_every`.
+    pub eval_first: bool,
+}
+
+/// Run `trainer` for `run.iterations` (or until `run.time_budget_secs`
+/// elapses), pushing an [`IterRecord`] into `trace` every
+/// `run.eval_every` iterations (plus the final one).
+pub fn train(
+    trainer: &mut dyn Trainer,
+    run: &RunConfig,
+    trace: &mut TraceWriter,
+    opts: &LoopOptions,
+) -> anyhow::Result<TrainSummary> {
+    let start = Instant::now();
+    let tokens = trainer.corpus().num_tokens();
+    let mut completed = 0usize;
+    let mut last_rec: Option<IterRecord> = None;
+    for it in 1..=run.iterations {
+        let iter_start = Instant::now();
+        trainer.step()?;
+        let iter_secs = iter_start.elapsed().as_secs_f64();
+        completed = it;
+        let budget_hit = run.time_budget_secs > 0
+            && start.elapsed().as_secs() >= run.time_budget_secs;
+        let eval_now = it % run.eval_every == 0
+            || it == run.iterations
+            || budget_hit
+            || (opts.eval_first && it == 1);
+        if eval_now {
+            let d = trainer.diagnostics();
+            let rec = IterRecord {
+                iteration: it,
+                elapsed_secs: start.elapsed().as_secs_f64(),
+                iter_secs,
+                log_likelihood: d.log_likelihood,
+                active_topics: d.active_topics,
+                flag_topic_tokens: d.flag_topic_tokens,
+                total_tokens: d.total_tokens,
+            };
+            if opts.verbose {
+                println!(
+                    "[{}] iter {:>6}  ll {:>14.2}  topics {:>4}  {:>7.3}s/iter",
+                    trainer.name(),
+                    it,
+                    rec.log_likelihood,
+                    rec.active_topics,
+                    rec.iter_secs
+                );
+            }
+            trace.push(rec.clone())?;
+            last_rec = Some(rec);
+        }
+        if budget_hit {
+            break;
+        }
+    }
+    trace.flush()?;
+    let elapsed = start.elapsed().as_secs_f64();
+    let last = last_rec.expect("at least one evaluation");
+    Ok(TrainSummary {
+        iterations: completed,
+        elapsed_secs: elapsed,
+        final_log_likelihood: last.log_likelihood,
+        final_active_topics: last.active_topics,
+        tokens_per_sec: tokens as f64 * completed as f64 / elapsed.max(1e-9),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{HdpConfig, RunConfig};
+    use crate::corpus::synthetic::HdpCorpusSpec;
+    use crate::hdp::pc::PcSampler;
+
+    fn corpus() -> std::sync::Arc<crate::corpus::Corpus> {
+        let (c, _) = HdpCorpusSpec {
+            vocab: 100,
+            topics: 4,
+            gamma: 1.0,
+            alpha: 1.0,
+            topic_beta: 0.1,
+            docs: 30,
+            mean_doc_len: 20.0,
+            len_sigma: 0.3,
+            min_doc_len: 5,
+        }
+        .generate(61);
+        std::sync::Arc::new(c)
+    }
+
+    #[test]
+    fn loop_runs_and_records() {
+        let cfg = HdpConfig { k_max: 20, ..Default::default() };
+        let mut t = PcSampler::new(corpus(), cfg, 1, 1).unwrap();
+        let run = RunConfig { iterations: 7, eval_every: 3, ..Default::default() };
+        let mut trace = TraceWriter::in_memory();
+        let summary = train(&mut t, &run, &mut trace, &LoopOptions::default()).unwrap();
+        assert_eq!(summary.iterations, 7);
+        // evals at 3, 6, 7
+        let iters: Vec<usize> = trace.records().iter().map(|r| r.iteration).collect();
+        assert_eq!(iters, vec![3, 6, 7]);
+        assert!(summary.tokens_per_sec > 0.0);
+        assert_eq!(summary.final_active_topics, trace.records().last().unwrap().active_topics);
+    }
+
+    #[test]
+    fn time_budget_stops_early() {
+        let cfg = HdpConfig { k_max: 20, ..Default::default() };
+        let mut t = PcSampler::new(corpus(), cfg, 1, 2).unwrap();
+        // 1-second budget with an absurd iteration count: must stop on
+        // budget, not run 10^8 iterations.
+        let run = RunConfig {
+            iterations: 100_000_000,
+            eval_every: 1000,
+            time_budget_secs: 1,
+            ..Default::default()
+        };
+        let mut trace = TraceWriter::in_memory();
+        let summary = train(&mut t, &run, &mut trace, &LoopOptions::default()).unwrap();
+        assert!(summary.iterations < 100_000_000);
+        assert!(summary.elapsed_secs < 30.0);
+        assert!(!trace.records().is_empty());
+    }
+
+    #[test]
+    fn eval_first_option() {
+        let cfg = HdpConfig { k_max: 20, ..Default::default() };
+        let mut t = PcSampler::new(corpus(), cfg, 1, 3).unwrap();
+        let run = RunConfig { iterations: 5, eval_every: 100, ..Default::default() };
+        let mut trace = TraceWriter::in_memory();
+        train(
+            &mut t,
+            &run,
+            &mut trace,
+            &LoopOptions { eval_first: true, verbose: false },
+        )
+        .unwrap();
+        let iters: Vec<usize> = trace.records().iter().map(|r| r.iteration).collect();
+        assert_eq!(iters, vec![1, 5]);
+    }
+}

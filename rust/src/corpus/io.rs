@@ -1,0 +1,251 @@
+//! Corpus I/O.
+//!
+//! * UCI "bag of words" format (the format of the paper's NeurIPS and
+//!   PubMed downloads): `docword.txt` has a 3-line header `D`, `V`,
+//!   `NNZ` followed by `docId wordId count` triples (both ids
+//!   1-based); `vocab.txt` has one word per line.
+//! * A compact little-endian binary cache (`.hdpc`) so synthetic corpora
+//!   are generated once and reloaded quickly by benches and examples.
+
+use super::Corpus;
+use std::io::{BufRead, BufWriter, Read, Write};
+use std::path::Path;
+
+/// Read UCI bag-of-words (`docword` stream + `vocab` stream).
+///
+/// Expansion note: counts are expanded into individual tokens, grouped
+/// by document, preserving word-id order within a document — the
+/// sampler is exchangeable so any stable order is fine.
+pub fn read_uci(docword: impl Read, vocab: impl Read) -> anyhow::Result<Corpus> {
+    let mut lines = std::io::BufReader::new(docword).lines();
+    let mut header = |name: &str| -> anyhow::Result<usize> {
+        let line = lines
+            .next()
+            .ok_or_else(|| anyhow::anyhow!("missing {name} header"))??;
+        Ok(line.trim().parse::<usize>()?)
+    };
+    let d = header("D")?;
+    let v = header("V")?;
+    let nnz = header("NNZ")?;
+    let mut docs: Vec<Vec<u32>> = vec![Vec::new(); d];
+    let mut seen = 0usize;
+    for line in lines {
+        let line = line?;
+        let t = line.trim();
+        if t.is_empty() {
+            continue;
+        }
+        let mut it = t.split_ascii_whitespace();
+        let (Some(ds), Some(ws), Some(cs)) = (it.next(), it.next(), it.next()) else {
+            anyhow::bail!("malformed triple: `{t}`");
+        };
+        let di: usize = ds.parse()?;
+        let wi: usize = ws.parse()?;
+        let c: usize = cs.parse()?;
+        anyhow::ensure!(di >= 1 && di <= d, "doc id {di} out of range 1..={d}");
+        anyhow::ensure!(wi >= 1 && wi <= v, "word id {wi} out of range 1..={v}");
+        let doc = &mut docs[di - 1];
+        doc.extend(std::iter::repeat((wi - 1) as u32).take(c));
+        seen += 1;
+    }
+    anyhow::ensure!(seen == nnz, "expected {nnz} triples, read {seen}");
+    let vocab: Vec<String> = std::io::BufReader::new(vocab)
+        .lines()
+        .collect::<Result<Vec<_>, _>>()?
+        .into_iter()
+        .map(|s| s.trim().to_string())
+        .filter(|s| !s.is_empty())
+        .collect();
+    anyhow::ensure!(
+        vocab.len() == v,
+        "vocab has {} entries, header says {v}",
+        vocab.len()
+    );
+    Ok(Corpus { docs, vocab })
+}
+
+/// Read UCI bag-of-words from file paths.
+pub fn read_uci_files(docword: &Path, vocab: &Path) -> anyhow::Result<Corpus> {
+    Ok(read_uci(
+        std::fs::File::open(docword)
+            .map_err(|e| anyhow::anyhow!("open {}: {e}", docword.display()))?,
+        std::fs::File::open(vocab)
+            .map_err(|e| anyhow::anyhow!("open {}: {e}", vocab.display()))?,
+    )?)
+}
+
+/// Write UCI bag-of-words files.
+pub fn write_uci(corpus: &Corpus, docword: &Path, vocab: &Path) -> anyhow::Result<()> {
+    let mut triples: Vec<(u32, u32, u32)> = Vec::new();
+    for (d, doc) in corpus.docs.iter().enumerate() {
+        let mut counts = std::collections::BTreeMap::new();
+        for &w in doc {
+            *counts.entry(w).or_insert(0u32) += 1;
+        }
+        for (w, c) in counts {
+            triples.push((d as u32 + 1, w + 1, c));
+        }
+    }
+    let mut f = BufWriter::new(std::fs::File::create(docword)?);
+    writeln!(f, "{}", corpus.num_docs())?;
+    writeln!(f, "{}", corpus.vocab_size())?;
+    writeln!(f, "{}", triples.len())?;
+    for (d, w, c) in triples {
+        writeln!(f, "{d} {w} {c}")?;
+    }
+    f.flush()?;
+    let mut f = BufWriter::new(std::fs::File::create(vocab)?);
+    for w in &corpus.vocab {
+        writeln!(f, "{w}")?;
+    }
+    f.flush()?;
+    Ok(())
+}
+
+const MAGIC: &[u8; 8] = b"HDPCORP1";
+
+/// Write the compact binary cache.
+pub fn write_binary(corpus: &Corpus, path: &Path) -> anyhow::Result<()> {
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    let mut f = BufWriter::new(std::fs::File::create(path)?);
+    f.write_all(MAGIC)?;
+    write_u64(&mut f, corpus.docs.len() as u64)?;
+    write_u64(&mut f, corpus.vocab.len() as u64)?;
+    for doc in &corpus.docs {
+        write_u64(&mut f, doc.len() as u64)?;
+        for &w in doc {
+            f.write_all(&w.to_le_bytes())?;
+        }
+    }
+    for w in &corpus.vocab {
+        let bytes = w.as_bytes();
+        write_u64(&mut f, bytes.len() as u64)?;
+        f.write_all(bytes)?;
+    }
+    f.flush()?;
+    Ok(())
+}
+
+/// Read the compact binary cache.
+pub fn read_binary(path: &Path) -> anyhow::Result<Corpus> {
+    let mut f = std::io::BufReader::new(
+        std::fs::File::open(path)
+            .map_err(|e| anyhow::anyhow!("open {}: {e}", path.display()))?,
+    );
+    let mut magic = [0u8; 8];
+    f.read_exact(&mut magic)?;
+    anyhow::ensure!(&magic == MAGIC, "not an hdp corpus cache: {}", path.display());
+    let d = read_u64(&mut f)? as usize;
+    let v = read_u64(&mut f)? as usize;
+    let mut docs = Vec::with_capacity(d);
+    for _ in 0..d {
+        let len = read_u64(&mut f)? as usize;
+        let mut buf = vec![0u8; len * 4];
+        f.read_exact(&mut buf)?;
+        let doc: Vec<u32> = buf
+            .chunks_exact(4)
+            .map(|c| u32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
+        docs.push(doc);
+    }
+    let mut vocab = Vec::with_capacity(v);
+    for _ in 0..v {
+        let len = read_u64(&mut f)? as usize;
+        let mut buf = vec![0u8; len];
+        f.read_exact(&mut buf)?;
+        vocab.push(String::from_utf8(buf)?);
+    }
+    let corpus = Corpus { docs, vocab };
+    corpus.validate()?;
+    Ok(corpus)
+}
+
+fn write_u64(f: &mut impl Write, x: u64) -> std::io::Result<()> {
+    f.write_all(&x.to_le_bytes())
+}
+
+fn read_u64(f: &mut impl Read) -> anyhow::Result<u64> {
+    let mut b = [0u8; 8];
+    f.read_exact(&mut b)?;
+    Ok(u64::from_le_bytes(b))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Corpus {
+        Corpus {
+            docs: vec![vec![0, 0, 2], vec![1], vec![2, 1]],
+            vocab: vec!["alpha".into(), "beta".into(), "gamma".into()],
+        }
+    }
+
+    #[test]
+    fn uci_roundtrip() {
+        let c = sample();
+        let dir = std::env::temp_dir().join("hdp_uci_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let dw = dir.join("docword.txt");
+        let vc = dir.join("vocab.txt");
+        write_uci(&c, &dw, &vc).unwrap();
+        let back = read_uci_files(&dw, &vc).unwrap();
+        assert_eq!(back.vocab, c.vocab);
+        assert_eq!(back.num_tokens(), c.num_tokens());
+        // Bag-of-words equality per document.
+        for (a, b) in c.docs.iter().zip(&back.docs) {
+            let mut a = a.clone();
+            let mut b = b.clone();
+            a.sort_unstable();
+            b.sort_unstable();
+            assert_eq!(a, b);
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn uci_parses_reference_text() {
+        let docword = "2\n3\n3\n1 1 2\n1 3 1\n2 2 5\n";
+        let vocab = "x\ny\nz\n";
+        let c = read_uci(docword.as_bytes(), vocab.as_bytes()).unwrap();
+        assert_eq!(c.num_docs(), 2);
+        assert_eq!(c.docs[0], vec![0, 0, 2]);
+        assert_eq!(c.docs[1], vec![1, 1, 1, 1, 1]);
+    }
+
+    #[test]
+    fn uci_rejects_bad_input() {
+        assert!(read_uci("2\n3\n".as_bytes(), "x\n".as_bytes()).is_err());
+        // out-of-range word id
+        let bad = "1\n2\n1\n1 9 1\n";
+        assert!(read_uci(bad.as_bytes(), "x\ny\n".as_bytes()).is_err());
+        // nnz mismatch
+        let bad = "1\n2\n5\n1 1 1\n";
+        assert!(read_uci(bad.as_bytes(), "x\ny\n".as_bytes()).is_err());
+        // vocab length mismatch
+        let bad = "1\n2\n1\n1 1 1\n";
+        assert!(read_uci(bad.as_bytes(), "x\n".as_bytes()).is_err());
+    }
+
+    #[test]
+    fn binary_roundtrip_exact() {
+        let c = sample();
+        let path = std::env::temp_dir().join("hdp_bin_test/corpus.hdpc");
+        write_binary(&c, &path).unwrap();
+        let back = read_binary(&path).unwrap();
+        assert_eq!(back.docs, c.docs); // exact, including token order
+        assert_eq!(back.vocab, c.vocab);
+        std::fs::remove_dir_all(path.parent().unwrap()).ok();
+    }
+
+    #[test]
+    fn binary_rejects_garbage() {
+        let path = std::env::temp_dir().join("hdp_bin_test2/garbage.hdpc");
+        std::fs::create_dir_all(path.parent().unwrap()).unwrap();
+        std::fs::write(&path, b"not a corpus").unwrap();
+        assert!(read_binary(&path).is_err());
+        std::fs::remove_dir_all(path.parent().unwrap()).ok();
+    }
+}

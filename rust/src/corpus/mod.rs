@@ -1,0 +1,137 @@
+//! Corpus substrate: document storage, I/O, preprocessing, synthesis.
+//!
+//! The samplers see a [`Corpus`]: a bag-of-words token stream per
+//! document over an integer vocabulary. Sources:
+//!
+//! * [`io`] — the UCI "bag of words" interchange format used by the
+//!   paper's NeurIPS/PubMed downloads (`docword.txt` + `vocab.txt`),
+//!   plus a compact binary cache.
+//! * [`preprocess`] — MALLET-equivalent preprocessing: stop-word
+//!   removal, rare-word limit, minimum document size (paper §3 uses
+//!   stoplist + min-doc-size 10 + rare-word limit 10).
+//! * [`synthetic`] — the corpus *simulators* standing in for AP /
+//!   CGCBIB / NeurIPS / PubMed (no network in this environment):
+//!   a Zipf/Heaps generator matched to each corpus' (V, D, N) and an
+//!   HDP generative-model generator with planted ground truth.
+//! * [`registry`] — named corpus specs (`ap`, `cgcbib`, `neurips`,
+//!   `pubmed-scaled`, …) with the paper's Table 2 statistics.
+
+pub mod io;
+pub mod preprocess;
+pub mod registry;
+pub mod synthetic;
+
+/// A tokenized bag-of-words corpus.
+///
+/// Token order inside a document is meaningless to the model (bag of
+/// words) but is kept stable so chains are reproducible.
+#[derive(Clone, Debug, Default)]
+pub struct Corpus {
+    /// `docs[d]` = word ids of every token in document `d`.
+    pub docs: Vec<Vec<u32>>,
+    /// Word strings, indexed by word id.
+    pub vocab: Vec<String>,
+}
+
+impl Corpus {
+    /// Number of documents `D`.
+    pub fn num_docs(&self) -> usize {
+        self.docs.len()
+    }
+
+    /// Vocabulary size `V`.
+    pub fn vocab_size(&self) -> usize {
+        self.vocab.len()
+    }
+
+    /// Total token count `N`.
+    pub fn num_tokens(&self) -> u64 {
+        self.docs.iter().map(|d| d.len() as u64).sum()
+    }
+
+    /// Longest document length `max_d N_d`.
+    pub fn max_doc_len(&self) -> usize {
+        self.docs.iter().map(Vec::len).max().unwrap_or(0)
+    }
+
+    /// Per-document lengths as weights for load-balanced sharding.
+    pub fn doc_weights(&self) -> Vec<u64> {
+        self.docs.iter().map(|d| d.len() as u64).collect()
+    }
+
+    /// Number of *distinct* word types that actually occur.
+    pub fn observed_vocab(&self) -> usize {
+        let mut seen = vec![false; self.vocab.len()];
+        for doc in &self.docs {
+            for &w in doc {
+                seen[w as usize] = true;
+            }
+        }
+        seen.iter().filter(|&&b| b).count()
+    }
+
+    /// Corpus-wide word frequencies.
+    pub fn word_counts(&self) -> Vec<u64> {
+        let mut counts = vec![0u64; self.vocab.len()];
+        for doc in &self.docs {
+            for &w in doc {
+                counts[w as usize] += 1;
+            }
+        }
+        counts
+    }
+
+    /// Validate internal consistency (word ids in range, nonempty vocab
+    /// when there are tokens).
+    pub fn validate(&self) -> anyhow::Result<()> {
+        let v = self.vocab.len() as u32;
+        for (d, doc) in self.docs.iter().enumerate() {
+            for &w in doc {
+                anyhow::ensure!(w < v, "doc {d}: word id {w} out of range (V={v})");
+            }
+        }
+        Ok(())
+    }
+
+    /// One-line summary (Table-2 style).
+    pub fn summary(&self) -> String {
+        format!(
+            "D={} V={} N={} max_Nd={}",
+            self.num_docs(),
+            self.vocab_size(),
+            self.num_tokens(),
+            self.max_doc_len()
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> Corpus {
+        Corpus {
+            docs: vec![vec![0, 1, 1], vec![2], vec![]],
+            vocab: vec!["a".into(), "b".into(), "c".into(), "unused".into()],
+        }
+    }
+
+    #[test]
+    fn stats() {
+        let c = tiny();
+        assert_eq!(c.num_docs(), 3);
+        assert_eq!(c.vocab_size(), 4);
+        assert_eq!(c.num_tokens(), 4);
+        assert_eq!(c.max_doc_len(), 3);
+        assert_eq!(c.observed_vocab(), 3);
+        assert_eq!(c.word_counts(), vec![1, 2, 1, 0]);
+        assert_eq!(c.doc_weights(), vec![3, 1, 0]);
+        c.validate().unwrap();
+    }
+
+    #[test]
+    fn validate_catches_out_of_range() {
+        let c = Corpus { docs: vec![vec![5]], vocab: vec!["a".into()] };
+        assert!(c.validate().is_err());
+    }
+}

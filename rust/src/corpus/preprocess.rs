@@ -1,0 +1,195 @@
+//! MALLET-equivalent corpus preprocessing (paper §3): stop-word
+//! removal, rare-word limit, and minimum document size, with vocabulary
+//! compaction.
+//!
+//! The paper preprocesses with "default Mallet stop-word removal,
+//! minimum document size of 10, and a rare word limit of 10"; the same
+//! defaults are exposed here via [`PreprocessConfig::paper_defaults`].
+
+use super::Corpus;
+use std::collections::HashSet;
+
+/// A trimmed version of MALLET's default English stoplist — enough to
+/// strip the function words that dominate raw newswire; synthetic
+/// corpora generate content words only, so the exact list is not
+/// behaviour-critical.
+pub const DEFAULT_STOPWORDS: &[&str] = &[
+    "a", "about", "above", "after", "again", "against", "all", "am", "an", "and",
+    "any", "are", "as", "at", "be", "because", "been", "before", "being", "below",
+    "between", "both", "but", "by", "can", "cannot", "could", "did", "do", "does",
+    "doing", "down", "during", "each", "few", "for", "from", "further", "had",
+    "has", "have", "having", "he", "her", "here", "hers", "herself", "him",
+    "himself", "his", "how", "i", "if", "in", "into", "is", "it", "its", "itself",
+    "just", "me", "more", "most", "my", "myself", "no", "nor", "not", "now", "of",
+    "off", "on", "once", "only", "or", "other", "our", "ours", "ourselves", "out",
+    "over", "own", "same", "she", "should", "so", "some", "such", "than", "that",
+    "the", "their", "theirs", "them", "themselves", "then", "there", "these",
+    "they", "this", "those", "through", "to", "too", "under", "until", "up",
+    "very", "was", "we", "were", "what", "when", "where", "which", "while", "who",
+    "whom", "why", "will", "with", "would", "you", "your", "yours", "yourself",
+    "yourselves",
+];
+
+/// Preprocessing parameters.
+#[derive(Clone, Debug)]
+pub struct PreprocessConfig {
+    /// Remove these exact word strings.
+    pub stopwords: HashSet<String>,
+    /// Drop word types occurring fewer than this many times corpus-wide.
+    pub rare_word_limit: u64,
+    /// Drop documents with fewer than this many tokens *after* word
+    /// filtering.
+    pub min_doc_size: usize,
+}
+
+impl PreprocessConfig {
+    /// The paper's settings: default stoplist, rare-word limit 10,
+    /// minimum document size 10.
+    pub fn paper_defaults() -> Self {
+        Self {
+            stopwords: DEFAULT_STOPWORDS.iter().map(|s| s.to_string()).collect(),
+            rare_word_limit: 10,
+            min_doc_size: 10,
+        }
+    }
+
+    /// No-op preprocessing.
+    pub fn none() -> Self {
+        Self { stopwords: HashSet::new(), rare_word_limit: 0, min_doc_size: 0 }
+    }
+}
+
+/// Report of what preprocessing removed.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct PreprocessReport {
+    pub docs_in: usize,
+    pub docs_out: usize,
+    pub vocab_in: usize,
+    pub vocab_out: usize,
+    pub tokens_in: u64,
+    pub tokens_out: u64,
+    pub stopword_types_removed: usize,
+    pub rare_types_removed: usize,
+}
+
+/// Apply preprocessing, producing a compacted corpus (word ids
+/// renumbered densely; empty/short documents dropped).
+pub fn preprocess(corpus: &Corpus, cfg: &PreprocessConfig) -> (Corpus, PreprocessReport) {
+    let mut report = PreprocessReport {
+        docs_in: corpus.num_docs(),
+        vocab_in: corpus.vocab_size(),
+        tokens_in: corpus.num_tokens(),
+        ..Default::default()
+    };
+    let counts = corpus.word_counts();
+    // Decide which word types survive.
+    let mut keep = vec![true; corpus.vocab_size()];
+    for (w, word) in corpus.vocab.iter().enumerate() {
+        if cfg.stopwords.contains(word.as_str()) {
+            keep[w] = false;
+            report.stopword_types_removed += 1;
+        } else if counts[w] < cfg.rare_word_limit {
+            keep[w] = false;
+            if counts[w] > 0 {
+                report.rare_types_removed += 1;
+            }
+        } else if counts[w] == 0 {
+            // unused vocab entries are dropped silently
+            keep[w] = false;
+        }
+    }
+    // Dense renumbering.
+    let mut remap = vec![u32::MAX; corpus.vocab_size()];
+    let mut vocab = Vec::new();
+    for (w, &k) in keep.iter().enumerate() {
+        if k {
+            remap[w] = vocab.len() as u32;
+            vocab.push(corpus.vocab[w].clone());
+        }
+    }
+    report.vocab_out = vocab.len();
+    // Filter documents.
+    let mut docs = Vec::new();
+    for doc in &corpus.docs {
+        let filtered: Vec<u32> = doc
+            .iter()
+            .filter_map(|&w| {
+                let r = remap[w as usize];
+                (r != u32::MAX).then_some(r)
+            })
+            .collect();
+        if filtered.len() >= cfg.min_doc_size.max(1) {
+            report.tokens_out += filtered.len() as u64;
+            docs.push(filtered);
+        }
+    }
+    report.docs_out = docs.len();
+    (Corpus { docs, vocab }, report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn corpus() -> Corpus {
+        // "the" is a stopword; "rare" occurs once; "cat"/"dog" common.
+        let vocab: Vec<String> =
+            ["the", "cat", "dog", "rare", "unused"].iter().map(|s| s.to_string()).collect();
+        let docs = vec![
+            vec![0, 1, 1, 2, 2, 2], // the cat cat dog dog dog
+            vec![0, 3],             // the rare -> too short after filtering
+            vec![1, 2, 1, 2],       // cat dog cat dog
+        ];
+        Corpus { docs, vocab }
+    }
+
+    #[test]
+    fn filters_and_compacts() {
+        let cfg = PreprocessConfig {
+            stopwords: ["the"].iter().map(|s| s.to_string()).collect(),
+            rare_word_limit: 2,
+            min_doc_size: 2,
+        };
+        let (out, report) = preprocess(&corpus(), &cfg);
+        assert_eq!(out.vocab, vec!["cat".to_string(), "dog".to_string()]);
+        assert_eq!(out.num_docs(), 2);
+        assert_eq!(out.num_tokens(), 9);
+        assert_eq!(report.stopword_types_removed, 1);
+        assert_eq!(report.rare_types_removed, 1);
+        assert_eq!(report.vocab_out, 2);
+        assert_eq!(report.docs_out, 2);
+        assert_eq!(report.tokens_out, 9);
+        out.validate().unwrap();
+        // ids are dense and remapped
+        for doc in &out.docs {
+            assert!(doc.iter().all(|&w| w < 2));
+        }
+    }
+
+    #[test]
+    fn none_config_keeps_used_words() {
+        let (out, _) = preprocess(&corpus(), &PreprocessConfig::none());
+        // "unused" dropped (zero count), everything else kept.
+        assert_eq!(out.vocab.len(), 4);
+        assert_eq!(out.num_tokens(), corpus().num_tokens());
+    }
+
+    #[test]
+    fn paper_defaults_are_papers() {
+        let cfg = PreprocessConfig::paper_defaults();
+        assert_eq!(cfg.rare_word_limit, 10);
+        assert_eq!(cfg.min_doc_size, 10);
+        assert!(cfg.stopwords.contains("the"));
+    }
+
+    #[test]
+    fn min_doc_size_drops_empty() {
+        let cfg = PreprocessConfig::none();
+        let c = Corpus {
+            docs: vec![vec![], vec![0]],
+            vocab: vec!["w".into()],
+        };
+        let (out, _) = preprocess(&c, &cfg);
+        assert_eq!(out.num_docs(), 1); // empty doc dropped even with min 0
+    }
+}

@@ -1,0 +1,311 @@
+//! Synthetic corpus generators.
+//!
+//! The paper's corpora (AP, CGCBIB, NeurIPS, PubMed) cannot be
+//! downloaded in this environment, so two simulators stand in
+//! (substitution documented in DESIGN.md):
+//!
+//! * [`ZipfCorpusSpec`] — tokens drawn i.i.d. from a Zipf(s) marginal
+//!   over a large underlying vocabulary. The *observed* vocabulary then
+//!   grows like Heaps' law `V ≈ ξ·N^ζ`, which is the assumption the
+//!   paper's complexity analysis (§2.8) rests on. Used by the scaling
+//!   benches.
+//! * [`HdpCorpusSpec`] — documents drawn from the HDP generative model
+//!   itself (truncated GEM Ψ, Dirichlet topics, θ_d ~ Dir(αΨ)), with
+//!   the planted `Φ`/`Ψ` returned as ground truth. This produces the
+//!   document-topic and topic-word sparsity the doubly sparse sampler
+//!   exploits, and supports recovery tests.
+//!
+//! Word strings are deterministic pronounceable pseudo-words
+//! ([`pseudo_word`]) so top-word tables in the experiment output read
+//! like the paper's appendices.
+
+use super::Corpus;
+use crate::alias::AliasTable;
+use crate::rng::{dist, Pcg64};
+
+/// Deterministic pronounceable pseudo-word for a word id ("zana",
+/// "tiko", …). Ids map to distinct strings (base-(C·V) positional code
+/// over consonant-vowel syllables, with a disambiguating suffix beyond
+/// the code range).
+pub fn pseudo_word(id: u32) -> String {
+    const C: &[u8] = b"bcdfghjklmnprstvwz";
+    const V: &[u8] = b"aeiou";
+    let mut s = String::new();
+    let mut x = id as u64;
+    // at least two syllables for visual plausibility
+    for _ in 0..2 {
+        s.push(C[(x % C.len() as u64) as usize] as char);
+        x /= C.len() as u64;
+        s.push(V[(x % V.len() as u64) as usize] as char);
+        x /= V.len() as u64;
+    }
+    while x > 0 {
+        s.push(C[(x % C.len() as u64) as usize] as char);
+        x /= C.len() as u64;
+        if x > 0 {
+            s.push(V[(x % V.len() as u64) as usize] as char);
+            x /= V.len() as u64;
+        }
+    }
+    s
+}
+
+/// Build a vocabulary of `n` distinct pseudo-words.
+pub fn pseudo_vocab(n: usize) -> Vec<String> {
+    (0..n as u32).map(pseudo_word).collect()
+}
+
+/// Zipf/Heaps corpus parameters.
+#[derive(Clone, Debug)]
+pub struct ZipfCorpusSpec {
+    /// Underlying vocabulary size (observed vocabulary will be smaller
+    /// for small N — Heaps' law).
+    pub vocab: usize,
+    /// Zipf exponent (≈1 for natural language).
+    pub exponent: f64,
+    /// Number of documents.
+    pub docs: usize,
+    /// Mean document length (lognormal with `len_sigma`).
+    pub mean_doc_len: f64,
+    /// Lognormal sigma of document length.
+    pub len_sigma: f64,
+    /// Minimum document length.
+    pub min_doc_len: usize,
+}
+
+impl ZipfCorpusSpec {
+    /// Generate the corpus.
+    pub fn generate(&self, seed: u64) -> Corpus {
+        let mut rng = Pcg64::new(seed);
+        let weights: Vec<f64> =
+            (1..=self.vocab).map(|r| 1.0 / (r as f64).powf(self.exponent)).collect();
+        let zipf = AliasTable::new(&weights);
+        // lognormal(mu, sigma) with mean = mean_doc_len
+        let sigma = self.len_sigma;
+        let mu = self.mean_doc_len.ln() - 0.5 * sigma * sigma;
+        let mut docs = Vec::with_capacity(self.docs);
+        for _ in 0..self.docs {
+            let len = (mu + sigma * dist::std_normal(&mut rng)).exp().round() as usize;
+            let len = len.max(self.min_doc_len);
+            let mut doc = Vec::with_capacity(len);
+            for _ in 0..len {
+                doc.push(zipf.sample(&mut rng) as u32);
+            }
+            docs.push(doc);
+        }
+        Corpus { docs, vocab: pseudo_vocab(self.vocab) }
+    }
+}
+
+/// HDP generative-model corpus parameters.
+#[derive(Clone, Debug)]
+pub struct HdpCorpusSpec {
+    /// Vocabulary size.
+    pub vocab: usize,
+    /// Number of planted topics (Ψ is GEM(γ) truncated here).
+    pub topics: usize,
+    /// GEM concentration for the planted Ψ.
+    pub gamma: f64,
+    /// Document-level concentration: θ_d ~ Dir(α·Ψ).
+    pub alpha: f64,
+    /// Topic-word Dirichlet concentration (small → sparse, distinct
+    /// topics).
+    pub topic_beta: f64,
+    /// Number of documents.
+    pub docs: usize,
+    /// Mean document length (lognormal with `len_sigma`).
+    pub mean_doc_len: f64,
+    /// Lognormal sigma of document length.
+    pub len_sigma: f64,
+    /// Minimum document length.
+    pub min_doc_len: usize,
+}
+
+/// Planted ground truth of an HDP-generated corpus.
+#[derive(Clone, Debug)]
+pub struct HdpGroundTruth {
+    /// Planted global topic distribution (length = spec.topics).
+    pub psi: Vec<f64>,
+    /// Planted topic-word distributions, `phi[k][v]`.
+    pub phi: Vec<Vec<f64>>,
+    /// True topic of every token, aligned with `corpus.docs`.
+    pub z: Vec<Vec<u32>>,
+}
+
+impl HdpCorpusSpec {
+    /// Generate corpus + ground truth.
+    pub fn generate(&self, seed: u64) -> (Corpus, HdpGroundTruth) {
+        let mut rng = Pcg64::new(seed);
+        // Planted Ψ: truncated GEM(γ), renormalized.
+        let mut psi = Vec::with_capacity(self.topics);
+        let mut remaining = 1.0f64;
+        for _ in 0..self.topics {
+            let s = dist::beta(&mut rng, 1.0, self.gamma);
+            psi.push(remaining * s);
+            remaining *= 1.0 - s;
+        }
+        let total: f64 = psi.iter().sum();
+        psi.iter_mut().for_each(|p| *p /= total);
+        // Planted topics: sparse symmetric Dirichlet rows.
+        let phi: Vec<Vec<f64>> = (0..self.topics)
+            .map(|_| dist::symmetric_dirichlet(&mut rng, self.topic_beta, self.vocab))
+            .collect();
+        let phi_alias: Vec<AliasTable> =
+            phi.iter().map(|row| AliasTable::new(row)).collect();
+        let sigma = self.len_sigma;
+        let mu = self.mean_doc_len.ln() - 0.5 * sigma * sigma;
+        let alpha_psi: Vec<f64> = psi.iter().map(|p| self.alpha * p).collect();
+        let mut docs = Vec::with_capacity(self.docs);
+        let mut zs = Vec::with_capacity(self.docs);
+        let mut theta = vec![0.0f64; self.topics];
+        for _ in 0..self.docs {
+            let len = (mu + sigma * dist::std_normal(&mut rng)).exp().round() as usize;
+            let len = len.max(self.min_doc_len);
+            dist::dirichlet_into(&mut rng, &alpha_psi, &mut theta);
+            let theta_alias = AliasTable::new(&theta);
+            let mut doc = Vec::with_capacity(len);
+            let mut z = Vec::with_capacity(len);
+            for _ in 0..len {
+                let k = theta_alias.sample(&mut rng);
+                z.push(k as u32);
+                doc.push(phi_alias[k].sample(&mut rng) as u32);
+            }
+            docs.push(doc);
+            zs.push(z);
+        }
+        (
+            Corpus { docs, vocab: pseudo_vocab(self.vocab) },
+            HdpGroundTruth { psi, phi, z: zs },
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pseudo_words_distinct() {
+        let v = pseudo_vocab(5000);
+        let set: std::collections::HashSet<&String> = v.iter().collect();
+        assert_eq!(set.len(), 5000);
+        assert!(v.iter().all(|w| w.len() >= 4));
+    }
+
+    #[test]
+    fn zipf_corpus_shape() {
+        let spec = ZipfCorpusSpec {
+            vocab: 2000,
+            exponent: 1.05,
+            docs: 200,
+            mean_doc_len: 60.0,
+            len_sigma: 0.5,
+            min_doc_len: 5,
+        };
+        let c = spec.generate(1);
+        c.validate().unwrap();
+        assert_eq!(c.num_docs(), 200);
+        let mean = c.num_tokens() as f64 / 200.0;
+        assert!((mean - 60.0).abs() < 12.0, "mean len {mean}");
+        // Zipf head dominance: most frequent word should have far more
+        // mass than rank ~100.
+        let counts = c.word_counts();
+        let mut sorted = counts.clone();
+        sorted.sort_unstable_by(|a, b| b.cmp(a));
+        assert!(sorted[0] > 10 * sorted[100].max(1) / 2);
+    }
+
+    #[test]
+    fn zipf_heaps_growth() {
+        // Observed vocabulary grows sublinearly in N.
+        let gen = |docs: usize| {
+            ZipfCorpusSpec {
+                vocab: 50_000,
+                exponent: 1.1,
+                docs,
+                mean_doc_len: 50.0,
+                len_sigma: 0.3,
+                min_doc_len: 5,
+            }
+            .generate(7)
+        };
+        let small = gen(50);
+        let big = gen(800);
+        let (vs, ns) = (small.observed_vocab() as f64, small.num_tokens() as f64);
+        let (vb, nb) = (big.observed_vocab() as f64, big.num_tokens() as f64);
+        let zeta = (vb / vs).ln() / (nb / ns).ln();
+        assert!(zeta > 0.3 && zeta < 0.95, "heaps exponent {zeta}");
+    }
+
+    #[test]
+    fn hdp_corpus_ground_truth_consistent() {
+        let spec = HdpCorpusSpec {
+            vocab: 500,
+            topics: 8,
+            gamma: 2.0,
+            alpha: 2.0,
+            topic_beta: 0.05,
+            docs: 100,
+            mean_doc_len: 40.0,
+            len_sigma: 0.3,
+            min_doc_len: 5,
+        };
+        let (c, truth) = spec.generate(3);
+        c.validate().unwrap();
+        assert_eq!(truth.phi.len(), 8);
+        assert_eq!(truth.z.len(), c.num_docs());
+        // psi sums to 1 and is (stochastically) decreasing-ish in k
+        assert!((truth.psi.iter().sum::<f64>() - 1.0).abs() < 1e-9);
+        for (d, doc) in c.docs.iter().enumerate() {
+            assert_eq!(doc.len(), truth.z[d].len());
+            assert!(truth.z[d].iter().all(|&k| (k as usize) < 8));
+        }
+        // Documents should be topic-sparse: mean distinct topics per doc
+        // well below the planted topic count.
+        let mean_distinct: f64 = truth
+            .z
+            .iter()
+            .map(|z| {
+                let set: std::collections::HashSet<&u32> = z.iter().collect();
+                set.len() as f64
+            })
+            .sum::<f64>()
+            / c.num_docs() as f64;
+        assert!(mean_distinct < 7.0, "docs not sparse: {mean_distinct}");
+    }
+
+    #[test]
+    fn hdp_tokens_match_planted_topics() {
+        // Tokens assigned to topic k should be distributed ~ phi_k:
+        // check the chi-square-ish agreement on the most common topic.
+        let spec = HdpCorpusSpec {
+            vocab: 50,
+            topics: 3,
+            gamma: 1.0,
+            alpha: 5.0,
+            topic_beta: 0.2,
+            docs: 400,
+            mean_doc_len: 80.0,
+            len_sigma: 0.2,
+            min_doc_len: 10,
+        };
+        let (c, truth) = spec.generate(11);
+        let mut counts = vec![vec![0u64; 50]; 3];
+        for (doc, z) in c.docs.iter().zip(&truth.z) {
+            for (&w, &k) in doc.iter().zip(z) {
+                counts[k as usize][w as usize] += 1;
+            }
+        }
+        for k in 0..3 {
+            let total: u64 = counts[k].iter().sum();
+            if total < 2000 {
+                continue;
+            }
+            let mut l1 = 0.0;
+            for v in 0..50 {
+                l1 += (counts[k][v] as f64 / total as f64 - truth.phi[k][v]).abs();
+            }
+            assert!(l1 < 0.15, "topic {k} l1 distance {l1}");
+        }
+    }
+}

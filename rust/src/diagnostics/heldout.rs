@@ -1,0 +1,204 @@
+//! Held-out evaluation: document-completion perplexity.
+//!
+//! Standard protocol: split each held-out document's tokens in half;
+//! estimate the document's topic mixture `θ̂_d` from the first half by
+//! a few Gibbs passes against the *fixed* trained `Φ̂`, `Ψ`; score the
+//! second half under `p(w) = Σ_k θ̂_{d,k} φ̂_{k,w}` and report
+//! `exp(−Σ log p / N)`. The per-token estimation step is exactly the
+//! sampler's z conditional (eq. 24), so this module doubles as a
+//! consumer of the dense `zscore` XLA artifact for cross-validation.
+
+use crate::corpus::Corpus;
+use crate::rng::{dist, Pcg64};
+use crate::sparse::PhiMatrix;
+
+/// Result of a held-out evaluation.
+#[derive(Clone, Debug)]
+pub struct HeldoutResult {
+    /// Document-completion perplexity (lower = better).
+    pub perplexity: f64,
+    /// Tokens scored.
+    pub tokens: u64,
+    /// Tokens whose word had zero mass in every topic (skipped).
+    pub skipped: u64,
+}
+
+/// Evaluate document-completion perplexity of `(phi, psi)` on held-out
+/// documents. `gibbs_passes` sweeps estimate θ̂ from the observed half.
+pub fn document_completion(
+    corpus: &Corpus,
+    docs: &[usize],
+    phi: &PhiMatrix,
+    psi: &[f64],
+    alpha: f64,
+    gibbs_passes: usize,
+    seed: u64,
+) -> HeldoutResult {
+    let k_max = psi.len();
+    let mut rng = Pcg64::with_stream(seed, 0x4e1d);
+    let mut log_p = 0.0f64;
+    let mut scored = 0u64;
+    let mut skipped = 0u64;
+    let mut weights = vec![0.0f64; k_max];
+    for &d in docs {
+        let doc = &corpus.docs[d];
+        if doc.len() < 2 {
+            continue;
+        }
+        let half = doc.len() / 2;
+        let (observed, held) = doc.split_at(half);
+        // θ̂ estimation: collapsed Gibbs on the observed half with Φ, Ψ
+        // fixed (the PC z conditional).
+        let mut z: Vec<u32> = observed
+            .iter()
+            .map(|_| rng.below(k_max as u64) as u32)
+            .collect();
+        let mut m = vec![0u32; k_max];
+        for &k in &z {
+            m[k as usize] += 1;
+        }
+        for _ in 0..gibbs_passes {
+            for (i, &v) in observed.iter().enumerate() {
+                let kold = z[i] as usize;
+                m[kold] -= 1;
+                let (col_topics, col_probs) = phi.col(v);
+                let mut total = 0.0;
+                weights[..k_max].iter_mut().for_each(|w| *w = 0.0);
+                for (&k, &p) in col_topics.iter().zip(col_probs) {
+                    let w = p * (alpha * psi[k as usize] + m[k as usize] as f64);
+                    weights[k as usize] = w;
+                    total += w;
+                }
+                let knew = if total <= 0.0 {
+                    kold
+                } else {
+                    dist::categorical(&mut rng, &weights)
+                };
+                z[i] = knew as u32;
+                m[knew] += 1;
+            }
+        }
+        // θ̂ point estimate (posterior mean given the final z).
+        let denom = observed.len() as f64 + alpha;
+        // score the held-out half
+        for &v in held {
+            let (col_topics, col_probs) = phi.col(v);
+            if col_topics.is_empty() {
+                skipped += 1;
+                continue;
+            }
+            let mut p = 0.0f64;
+            for (&k, &pw) in col_topics.iter().zip(col_probs) {
+                let theta =
+                    (m[k as usize] as f64 + alpha * psi[k as usize]) / denom;
+                p += theta * pw;
+            }
+            if p > 0.0 {
+                log_p += p.ln();
+                scored += 1;
+            } else {
+                skipped += 1;
+            }
+        }
+    }
+    HeldoutResult {
+        perplexity: (-log_p / scored.max(1) as f64).exp(),
+        tokens: scored,
+        skipped,
+    }
+}
+
+/// Split a corpus index set into train/held-out document ids.
+pub fn train_test_split(
+    num_docs: usize,
+    test_fraction: f64,
+    seed: u64,
+) -> (Vec<usize>, Vec<usize>) {
+    let mut ids: Vec<usize> = (0..num_docs).collect();
+    let mut rng = Pcg64::with_stream(seed, 0x5711);
+    rng.shuffle(&mut ids);
+    let n_test = ((num_docs as f64) * test_fraction).round() as usize;
+    let test = ids[..n_test].to_vec();
+    let train = ids[n_test..].to_vec();
+    (train, test)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::HdpConfig;
+    use crate::corpus::synthetic::HdpCorpusSpec;
+    use crate::hdp::pc::{phi::sample_phi, PcSampler};
+    use crate::hdp::Trainer;
+    use std::sync::Arc;
+
+    #[test]
+    fn split_partitions() {
+        let (train, test) = train_test_split(100, 0.2, 1);
+        assert_eq!(train.len(), 80);
+        assert_eq!(test.len(), 20);
+        let mut all: Vec<usize> = train.iter().chain(&test).copied().collect();
+        all.sort_unstable();
+        assert_eq!(all, (0..100).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn trained_model_beats_shuffled_phi() {
+        // A trained model must achieve lower held-out perplexity than
+        // the same Φ with shuffled topic rows (destroying the learned
+        // word structure while keeping the size distribution).
+        let (c, _) = HdpCorpusSpec {
+            vocab: 300,
+            topics: 6,
+            gamma: 2.0,
+            alpha: 0.6,
+            topic_beta: 0.02,
+            docs: 150,
+            mean_doc_len: 50.0,
+            len_sigma: 0.3,
+            min_doc_len: 20,
+        }
+        .generate(81);
+        let corpus = Arc::new(c);
+        let cfg = HdpConfig { alpha: 0.3, beta: 0.02, gamma: 1.0, k_max: 48, init_topics: 1 };
+        let mut s = PcSampler::new(corpus.clone(), cfg, 1, 7).unwrap();
+        for _ in 0..120 {
+            s.step().unwrap();
+        }
+        let root = crate::rng::Pcg64::new(5);
+        let phi = sample_phi(&root, s.n(), cfg.beta, corpus.vocab_size(), 1);
+        let (_, test) = train_test_split(corpus.num_docs(), 0.2, 3);
+        let good = document_completion(&corpus, &test, &phi, s.psi(), cfg.alpha, 5, 11);
+        assert!(good.tokens > 100);
+        assert!(good.perplexity.is_finite() && good.perplexity > 1.0);
+        // Scrambled baseline: permute word ids inside each row.
+        let mut rng = crate::rng::Pcg64::new(9);
+        let scrambled_rows: Vec<Vec<(u32, u32)>> = (0..cfg.k_max)
+            .map(|k| {
+                let row = s.n().row(k);
+                let mut out: Vec<(u32, u32)> = row
+                    .iter()
+                    .map(|&(_, cnt)| (rng.below(300) as u32, cnt))
+                    .collect();
+                out.sort_unstable_by_key(|&(v, _)| v);
+                out.dedup_by(|a, b| {
+                    if a.0 == b.0 {
+                        b.1 += a.1;
+                        true
+                    } else {
+                        false
+                    }
+                });
+                out
+            })
+            .collect();
+        let bad_phi = PhiMatrix::from_count_rows(300, &scrambled_rows);
+        let bad = document_completion(&corpus, &test, &bad_phi, s.psi(), cfg.alpha, 5, 11);
+        assert!(
+            good.perplexity < 0.8 * bad.perplexity,
+            "trained {} vs scrambled {}",
+            good.perplexity,
+            bad.perplexity
+        );
+    }
+}

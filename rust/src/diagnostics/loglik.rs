@@ -1,0 +1,198 @@
+//! Log-likelihood computations (the Fig 1 trace metric).
+//!
+//! The joint collapsed log-likelihood used for all trace plots is
+//!
+//! ```text
+//! log p(w, z | Ψ, α, β) = log p(w | z, β) + log p(z | Ψ, α)
+//! ```
+//!
+//! * `log p(w | z, β)` integrates `Φ` out of the categorical likelihood
+//!   against its symmetric Dirichlet prior:
+//!   `Σ_k [ lnΓ(Vβ) − lnΓ(Vβ + n_k·) + Σ_{v: n_kv>0} (lnΓ(β + n_kv) − lnΓ(β)) ]`
+//!   — sparse in the nonzeros of `n`.
+//! * `log p(z | Ψ, α)` is the Pólya-sequence probability of each
+//!   document's topic sequence under the document DP with base `Ψ`
+//!   (eq. 30): `Σ_d Σ_i log[(αΨ_{z_i} + m^{<i}_{d,z_i}) / (α + i − 1)]`.
+//!
+//! Both terms are exact; neither depends on the PPU approximation, so
+//! the same metric is comparable across the partially collapsed,
+//! direct-assignment, and (with the caveat the paper notes) subcluster
+//! samplers.
+
+use crate::par;
+use crate::rng::special::ln_gamma;
+use crate::sparse::DocTopics;
+
+/// `log p(w | z, β)` from sparse topic-word rows.
+///
+/// `rows[k]` = sorted `(word, count)`; topics with zero tokens
+/// contribute 0 (their prior integrates to 1).
+pub fn word_loglik(rows: &[Vec<(u32, u32)>], beta: f64, vocab: usize) -> f64 {
+    let vb = vocab as f64 * beta;
+    let ln_gamma_vb = ln_gamma(vb);
+    let ln_gamma_b = ln_gamma(beta);
+    let mut total = 0.0;
+    for row in rows {
+        if row.is_empty() {
+            continue;
+        }
+        let nk: u64 = row.iter().map(|&(_, c)| c as u64).sum();
+        total += ln_gamma_vb - ln_gamma(vb + nk as f64);
+        for &(_, c) in row {
+            total += ln_gamma(beta + c as f64) - ln_gamma_b;
+        }
+    }
+    total
+}
+
+/// `log p(z | Ψ, α)`: Pólya-sequence probability of every document's
+/// topic sequence. `psi[k]` must cover every topic id appearing in `z`.
+/// Parallel over documents.
+pub fn crp_loglik(z: &[Vec<u32>], psi: &[f64], alpha: f64, threads: usize) -> f64 {
+    let plan = par::Sharding::even(z.len(), threads);
+    let partials = par::scope_shards(&plan, |_, shard| {
+        let mut acc = 0.0f64;
+        let mut m = DocTopics::with_capacity(16);
+        for zd in &z[shard.start..shard.end] {
+            m.clear();
+            for (i, &k) in zd.iter().enumerate() {
+                let num = alpha * psi[k as usize] + m.get(k) as f64;
+                let den = alpha + i as f64;
+                acc += (num / den).ln();
+                m.inc(k);
+            }
+        }
+        acc
+    });
+    partials.into_iter().sum()
+}
+
+/// Joint metric: `word_loglik + crp_loglik`.
+pub fn joint_loglik(
+    rows: &[Vec<(u32, u32)>],
+    z: &[Vec<u32>],
+    psi: &[f64],
+    alpha: f64,
+    beta: f64,
+    vocab: usize,
+    threads: usize,
+) -> f64 {
+    word_loglik(rows, beta, vocab) + crp_loglik(z, psi, alpha, threads)
+}
+
+/// Dense reference for [`word_loglik`] (tests + the XLA cross-check):
+/// `Σ_{k,v} n_{k,v}·log φ_{k,v}` for a *given* normalized `Φ` — the
+/// quantity the L1 Pallas kernel computes on tiles.
+pub fn dense_phi_loglik(n: &[Vec<f64>], phi: &[Vec<f64>]) -> f64 {
+    let mut acc = 0.0;
+    for (nrow, prow) in n.iter().zip(phi) {
+        for (&c, &p) in nrow.iter().zip(prow) {
+            if c > 0.0 {
+                acc += c * p.max(1e-300).ln();
+            }
+        }
+    }
+    acc
+}
+
+/// Per-document held-out perplexity given point estimates `Φ̂`, `θ̂`
+/// (used by the eval examples): `exp(−Σ log p(w) / N)`.
+pub fn perplexity(docs: &[Vec<u32>], phi: &[Vec<f64>], theta: &[Vec<f64>]) -> f64 {
+    let mut ll = 0.0f64;
+    let mut n = 0u64;
+    for (d, doc) in docs.iter().enumerate() {
+        for &w in doc {
+            let mut p = 0.0;
+            for (k, th) in theta[d].iter().enumerate() {
+                p += th * phi[k][w as usize];
+            }
+            ll += p.max(1e-300).ln();
+            n += 1;
+        }
+    }
+    (-ll / n.max(1) as f64).exp()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn word_loglik_matches_brute_force() {
+        // K=2, V=3, counts: k0: {0:2, 1:1}, k1: {2:4}
+        let rows = vec![vec![(0u32, 2u32), (1, 1)], vec![(2, 4)]];
+        let beta = 0.5;
+        let v = 3usize;
+        // brute force with dense counts
+        let dense = [[2u32, 1, 0], [0, 0, 4]];
+        let mut want = 0.0;
+        for row in dense {
+            let nk: u32 = row.iter().sum();
+            want += ln_gamma(v as f64 * beta) - ln_gamma(v as f64 * beta + nk as f64);
+            for c in row {
+                want += ln_gamma(beta + c as f64) - ln_gamma(beta);
+            }
+        }
+        let got = word_loglik(&rows, beta, v);
+        assert!((got - want).abs() < 1e-10, "{got} vs {want}");
+    }
+
+    #[test]
+    fn word_loglik_zero_rows_no_contribution() {
+        let rows = vec![vec![], vec![(0u32, 1u32)], vec![]];
+        let with_empties = word_loglik(&rows, 0.1, 5);
+        let without = word_loglik(&[vec![(0u32, 1u32)]], 0.1, 5);
+        assert!((with_empties - without).abs() < 1e-12);
+    }
+
+    #[test]
+    fn crp_loglik_single_token_doc() {
+        // One doc, one token on topic 1: p = αΨ_1 / α  = Ψ_1.
+        let z = vec![vec![1u32]];
+        let psi = [0.3, 0.7];
+        let got = crp_loglik(&z, &psi, 0.5, 1);
+        assert!((got - 0.7f64.ln()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn crp_loglik_sequence_by_hand() {
+        // Doc [0, 0, 1], α=1, Ψ=(0.5, 0.5):
+        // p1 = (0.5·1 + 0)/1 = 0.5
+        // p2 = (0.5 + 1)/2 = 0.75
+        // p3 = (0.5 + 0)/3 = 1/6
+        let z = vec![vec![0u32, 0, 1]];
+        let psi = [0.5, 0.5];
+        let want = 0.5f64.ln() + 0.75f64.ln() + (1.0f64 / 6.0).ln();
+        let got = crp_loglik(&z, &psi, 1.0, 1);
+        assert!((got - want).abs() < 1e-12, "{got} vs {want}");
+    }
+
+    #[test]
+    fn crp_loglik_thread_invariant() {
+        let z: Vec<Vec<u32>> = (0..37)
+            .map(|d| (0..50).map(|i| ((d + i) % 5) as u32).collect())
+            .collect();
+        let psi = [0.2; 5];
+        let a = crp_loglik(&z, &psi, 0.7, 1);
+        let b = crp_loglik(&z, &psi, 0.7, 4);
+        assert!((a - b).abs() < 1e-9);
+    }
+
+    #[test]
+    fn dense_phi_loglik_by_hand() {
+        let n = vec![vec![2.0, 0.0], vec![0.0, 3.0]];
+        let phi = vec![vec![0.5, 0.5], vec![0.25, 0.75]];
+        let want = 2.0 * 0.5f64.ln() + 3.0 * 0.75f64.ln();
+        assert!((dense_phi_loglik(&n, &phi) - want).abs() < 1e-12);
+    }
+
+    #[test]
+    fn perplexity_uniform_model() {
+        // Uniform phi over V=4 and any theta gives perplexity 4.
+        let docs = vec![vec![0u32, 1, 2, 3]];
+        let phi = vec![vec![0.25; 4]; 2];
+        let theta = vec![vec![0.5, 0.5]];
+        let p = perplexity(&docs, &phi, &theta);
+        assert!((p - 4.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,13 @@
+//! Model diagnostics: log-likelihoods, topic summaries, coherence.
+//!
+//! * [`loglik`] — the Fig-1 trace metric: joint collapsed
+//!   log-likelihood `log p(w | z, β) + log p(z | Ψ, α)`, computed
+//!   sparsely from the sufficient statistics (and cross-checked against
+//!   the XLA-compiled dense kernel via [`crate::runtime`]).
+//! * [`topics`] — top-words extraction, the paper's quantile summary
+//!   tables (Appendices C–F), and UMass topic coherence (discussed in
+//!   the paper's §4).
+
+pub mod heldout;
+pub mod loglik;
+pub mod topics;

@@ -1,0 +1,238 @@
+//! Topic summaries: top words, the paper's quantile tables
+//! (Appendices C–F / Fig 2), and UMass coherence.
+
+use crate::corpus::Corpus;
+
+/// One summarized topic.
+#[derive(Clone, Debug)]
+pub struct TopicSummary {
+    /// Sampler-internal topic id.
+    pub topic: usize,
+    /// Total tokens `n_{k,·}`.
+    pub tokens: u64,
+    /// Top words, most frequent first.
+    pub top_words: Vec<String>,
+}
+
+/// Extract per-topic top-`w` words from sparse topic-word rows,
+/// restricted to topics with at least `min_tokens` tokens, sorted by
+/// token count descending (the paper ranks topics this way).
+pub fn top_words(
+    rows: &[Vec<(u32, u32)>],
+    corpus: &Corpus,
+    w: usize,
+    min_tokens: u64,
+) -> Vec<TopicSummary> {
+    let mut out = Vec::new();
+    for (k, row) in rows.iter().enumerate() {
+        let tokens: u64 = row.iter().map(|&(_, c)| c as u64).sum();
+        if tokens < min_tokens.max(1) {
+            continue;
+        }
+        let mut sorted: Vec<(u32, u32)> = row.clone();
+        sorted.sort_unstable_by(|a, b| b.1.cmp(&a.1).then(a.0.cmp(&b.0)));
+        let top = sorted
+            .iter()
+            .take(w)
+            .map(|&(v, _)| corpus.vocab[v as usize].clone())
+            .collect();
+        out.push(TopicSummary { topic: k, tokens, top_words: top });
+    }
+    out.sort_by(|a, b| b.tokens.cmp(&a.tokens).then(a.topic.cmp(&b.topic)));
+    out
+}
+
+/// The paper's quantile summary (Appendix C preamble): rank topics with
+/// ≥ `min_tokens` tokens by size, pick the `per_quantile` topics closest
+/// to each of the 100 / 75 / 50 / 25 / 5 % quantiles of the ranking,
+/// and report their top words.
+pub fn quantile_summary(
+    summaries: &[TopicSummary],
+    quantiles: &[f64],
+    per_quantile: usize,
+) -> Vec<(f64, Vec<TopicSummary>)> {
+    let n = summaries.len();
+    let mut out = Vec::new();
+    if n == 0 {
+        return quantiles.iter().map(|&q| (q, Vec::new())).collect();
+    }
+    for &q in quantiles {
+        // rank 0 = largest topic = 100% quantile.
+        let target = ((1.0 - q) * (n - 1) as f64).round() as usize;
+        let mut order: Vec<usize> = (0..n).collect();
+        order.sort_by_key(|&i| (i as i64 - target as i64).abs());
+        let mut picks: Vec<TopicSummary> =
+            order.iter().take(per_quantile.min(n)).map(|&i| summaries[i].clone()).collect();
+        picks.sort_by(|a, b| b.tokens.cmp(&a.tokens));
+        out.push((q, picks));
+    }
+    out
+}
+
+/// Render a quantile summary as an aligned text table (the experiment
+/// drivers write these next to the CSV traces).
+pub fn render_quantile_table(groups: &[(f64, Vec<TopicSummary>)]) -> String {
+    let mut s = String::new();
+    for (q, topics) in groups {
+        s.push_str(&format!("== quantile {:.0}% ==\n", q * 100.0));
+        if topics.is_empty() {
+            s.push_str("(no topics)\n");
+            continue;
+        }
+        s.push_str(&format!(
+            "{}\n",
+            topics
+                .iter()
+                .map(|t| format!("topic {:>4} ({:>9})", t.topic, t.tokens))
+                .collect::<Vec<_>>()
+                .join("  ")
+        ));
+        let depth = topics.iter().map(|t| t.top_words.len()).max().unwrap_or(0);
+        for r in 0..depth {
+            let row: Vec<String> = topics
+                .iter()
+                .map(|t| {
+                    format!("{:<21}", t.top_words.get(r).cloned().unwrap_or_default())
+                })
+                .collect();
+            s.push_str(&row.join("  "));
+            s.push('\n');
+        }
+        s.push('\n');
+    }
+    s
+}
+
+/// UMass topic coherence (Mimno et al. 2011) for one topic's top words:
+/// `Σ_{i<j} log[(D(w_i, w_j) + 1) / D(w_j)]` over document
+/// co-occurrence counts. The paper (§4) notes this score is strongly
+/// K-dependent; it is reported for completeness.
+pub fn umass_coherence(corpus: &Corpus, word_ids: &[u32]) -> f64 {
+    // Document frequency and co-document frequency over the top words.
+    let set: Vec<u32> = word_ids.to_vec();
+    let idx_of = |w: u32| set.iter().position(|&x| x == w);
+    let mut df = vec![0u64; set.len()];
+    let mut codf = vec![vec![0u64; set.len()]; set.len()];
+    let mut present = vec![false; set.len()];
+    for doc in &corpus.docs {
+        present.fill(false);
+        for &w in doc {
+            if let Some(i) = idx_of(w) {
+                present[i] = true;
+            }
+        }
+        for i in 0..set.len() {
+            if present[i] {
+                df[i] += 1;
+                for j in 0..i {
+                    if present[j] {
+                        codf[i][j] += 1;
+                        codf[j][i] += 1;
+                    }
+                }
+            }
+        }
+    }
+    let mut score = 0.0;
+    for i in 1..set.len() {
+        for j in 0..i {
+            if df[j] > 0 {
+                score += ((codf[i][j] + 1) as f64 / df[j] as f64).ln();
+            }
+        }
+    }
+    score
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn corpus() -> Corpus {
+        Corpus {
+            docs: vec![vec![0, 1], vec![0, 2], vec![1, 2], vec![0]],
+            vocab: vec!["apple".into(), "banana".into(), "cherry".into()],
+        }
+    }
+
+    #[test]
+    fn top_words_sorted_and_filtered() {
+        let rows = vec![
+            vec![(0u32, 5u32), (1, 2)],
+            vec![(2, 1)],
+            vec![], // dead
+        ];
+        let s = top_words(&rows, &corpus(), 2, 2);
+        assert_eq!(s.len(), 1); // topic 1 below min_tokens, topic 2 dead
+        assert_eq!(s[0].topic, 0);
+        assert_eq!(s[0].tokens, 7);
+        assert_eq!(s[0].top_words, vec!["apple".to_string(), "banana".to_string()]);
+    }
+
+    #[test]
+    fn top_words_ranking_descending() {
+        let rows = vec![vec![(0u32, 1u32)], vec![(1, 10)], vec![(2, 5)]];
+        let s = top_words(&rows, &corpus(), 1, 1);
+        let sizes: Vec<u64> = s.iter().map(|t| t.tokens).collect();
+        assert_eq!(sizes, vec![10, 5, 1]);
+    }
+
+    #[test]
+    fn quantile_summary_picks_extremes() {
+        let summaries: Vec<TopicSummary> = (0..100)
+            .map(|i| TopicSummary {
+                topic: i,
+                tokens: (1000 - i * 10) as u64,
+                top_words: vec![],
+            })
+            .collect();
+        let q = quantile_summary(&summaries, &[1.0, 0.05], 3);
+        assert_eq!(q.len(), 2);
+        // 100% quantile -> largest topics (ranks 0,1,2)
+        let top_ids: Vec<usize> = q[0].1.iter().map(|t| t.topic).collect();
+        assert!(top_ids.contains(&0) && top_ids.contains(&1));
+        // 5% quantile -> near rank 94
+        assert!(q[1].1.iter().all(|t| t.topic > 85));
+    }
+
+    #[test]
+    fn quantile_summary_empty() {
+        let q = quantile_summary(&[], &[1.0], 5);
+        assert!(q[0].1.is_empty());
+    }
+
+    #[test]
+    fn render_contains_words() {
+        let groups = vec![(
+            1.0,
+            vec![TopicSummary {
+                topic: 3,
+                tokens: 42,
+                top_words: vec!["apple".into(), "banana".into()],
+            }],
+        )];
+        let text = render_quantile_table(&groups);
+        assert!(text.contains("apple"));
+        assert!(text.contains("topic    3"));
+        assert!(text.contains("100%"));
+    }
+
+    #[test]
+    fn coherence_prefers_cooccurring_words() {
+        // Same document frequencies, different co-occurrence: UMass
+        // must rank the co-occurring pair higher.
+        let vocab: Vec<String> = vec!["a".into(), "b".into()];
+        let together = Corpus {
+            docs: vec![vec![0, 1], vec![0, 1]],
+            vocab: vocab.clone(),
+        };
+        let apart = Corpus {
+            docs: vec![vec![0], vec![1], vec![0], vec![1]],
+            vocab,
+        };
+        let coherent = umass_coherence(&together, &[0, 1]);
+        let incoherent = umass_coherence(&apart, &[0, 1]);
+        // together: ln((2+1)/2) > 0; apart: ln((0+1)/2) < 0.
+        assert!(coherent > 0.0 && incoherent < 0.0, "{coherent} vs {incoherent}");
+    }
+}

@@ -1,0 +1,93 @@
+//! Topic-table reproduction: Fig 2 (PubMed top words) and the quantile
+//! summaries of Appendices C–F.
+//!
+//! Ranks topics by token count, extracts top-8 words, and renders
+//! either the 100/75/50/25/5 % quantile tables (`--quantiles` style,
+//! the appendix format) or the all-topics listing (Fig 2 / Appendix F
+//! format). Also reports mean UMass coherence per quantile — the
+//! metric the paper's §4 discusses as K-sensitive.
+
+use super::ExpContext;
+use crate::config::RunConfig;
+use crate::diagnostics::topics;
+
+/// Train PC on `corpus` and emit the topic tables.
+pub fn run(ctx: &ExpContext, corpus: &str, all_topics: bool) -> anyhow::Result<()> {
+    println!("\n=== Topic tables ({corpus}) ===");
+    let iters = ctx.iters(80);
+    let run = RunConfig {
+        iterations: iters,
+        threads: ctx.threads,
+        seed: ctx.seed,
+        eval_every: iters.max(1),
+        time_budget_secs: 0,
+    };
+    let cfg = ctx.paper_cfg(500);
+    let (_summary, t) = super::run_one(
+        "pc",
+        corpus,
+        cfg,
+        &run,
+        &ctx.out_dir,
+        &format!("topics_{corpus}_pc"),
+        ctx.verbose,
+    )?;
+    let rows = t.topic_word_rows();
+    let summaries = topics::top_words(&rows, t.corpus(), 8, 100);
+    let text = if all_topics {
+        // Fig 2 / Appendix F style: all topics with >= 8 distinct words.
+        let mut s = String::new();
+        for ts in &summaries {
+            s.push_str(&format!(
+                "topic {:>4}  n_k={:>9}  {}\n",
+                ts.topic,
+                ts.tokens,
+                ts.top_words.join(" ")
+            ));
+        }
+        s
+    } else {
+        // Appendix C–E style quantile summary with coherence.
+        let groups = topics::quantile_summary(
+            &summaries,
+            &[1.0, 0.75, 0.5, 0.25, 0.05],
+            5,
+        );
+        let mut s = topics::render_quantile_table(&groups);
+        s.push_str("\nUMass coherence by quantile (higher = more coherent):\n");
+        for (q, group) in &groups {
+            if group.is_empty() {
+                continue;
+            }
+            let mean: f64 = group
+                .iter()
+                .map(|ts| {
+                    let ids: Vec<u32> = ts
+                        .top_words
+                        .iter()
+                        .filter_map(|w| {
+                            t.corpus().vocab.iter().position(|x| x == w).map(|i| i as u32)
+                        })
+                        .collect();
+                    topics::umass_coherence(t.corpus(), &ids)
+                })
+                .sum::<f64>()
+                / group.len() as f64;
+            s.push_str(&format!("  {:>4.0}%: {:8.2}\n", q * 100.0, mean));
+        }
+        s
+    };
+    let suffix = if all_topics { "all" } else { "quantiles" };
+    let path = ctx.out_dir.join(format!("topics_{corpus}_{suffix}.txt"));
+    std::fs::write(&path, &text)?;
+    println!(
+        "{} topics with >=100 tokens -> {}",
+        summaries.len(),
+        path.display()
+    );
+    // print the head for the console
+    for line in text.lines().take(16) {
+        println!("{line}");
+    }
+    Ok(())
+}

@@ -1,0 +1,327 @@
+//! The fully collapsed **direct assignment** sampler of Teh et al.
+//! (2006) — the paper's small-scale baseline (Fig 1 a–f).
+//!
+//! `Φ` is integrated out, so the z conditional couples every token to
+//! the global topic-word counts:
+//!
+//! ```text
+//! P(z_{i,d} = k) ∝ (m^{-i}_{d,k} + αΨ_k) · (n^{-i}_{k,v} + β) / (n^{-i}_{k,·} + Vβ)
+//! P(new topic)  ∝ αΨ_u / V
+//! ```
+//!
+//! which makes the sweep inherently *sequential* — the property the
+//! paper's parallel sampler removes. Topics are born by splitting the
+//! unrepresented mass `Ψ_u` with a `Beta(1, γ)` stick and die when
+//! their last token is removed. After each sweep the auxiliary counts
+//! `l` are drawn (using the same binomial trick — §2.6 notes it applies
+//! to other HDP samplers) and `(Ψ_1..Ψ_K, Ψ_u) ~ Dir(l_1..l_K, γ)`.
+
+use crate::config::HdpConfig;
+use crate::corpus::Corpus;
+use crate::diagnostics::loglik;
+use crate::rng::{dist, Pcg64};
+use crate::sparse::DocCountHist;
+
+use super::pc::lstep;
+use super::state::Assignments;
+use super::{DiagSnapshot, Trainer};
+
+/// The direct-assignment sampler.
+pub struct DaSampler {
+    corpus: std::sync::Arc<Corpus>,
+    cfg: HdpConfig,
+    rng: Pcg64,
+    assign: Assignments,
+    /// Dense per-slot topic-word counts.
+    n: Vec<Vec<u32>>,
+    /// Per-slot totals.
+    nk: Vec<u64>,
+    /// Per-slot global weights; slots of dead topics hold 0.
+    psi: Vec<f64>,
+    /// Unrepresented mass Ψ_u.
+    psi_u: f64,
+    /// Reusable dead slots.
+    free_slots: Vec<usize>,
+    /// Scratch for the per-token weight vector.
+    weights: Vec<f64>,
+    iteration: usize,
+}
+
+impl DaSampler {
+    /// Create with single-topic initialization (all tokens in slot 0).
+    pub fn new(corpus: std::sync::Arc<Corpus>, cfg: HdpConfig, seed: u64) -> anyhow::Result<Self> {
+        cfg.validate()?;
+        let assign = Assignments::single_topic(&corpus);
+        let v = corpus.vocab_size();
+        let mut n0 = vec![0u32; v];
+        let mut total = 0u64;
+        for doc in &corpus.docs {
+            for &w in doc {
+                n0[w as usize] += 1;
+                total += 1;
+            }
+        }
+        let mut rng = Pcg64::with_stream(seed, 0xda);
+        // Initial Ψ: one represented topic plus the unrepresented rest.
+        let s = dist::beta(&mut rng, 1.0 + corpus.num_docs() as f64, cfg.gamma);
+        Ok(Self {
+            corpus,
+            cfg,
+            rng,
+            assign,
+            n: vec![n0],
+            nk: vec![total],
+            psi: vec![s],
+            psi_u: 1.0 - s,
+            free_slots: Vec::new(),
+            weights: Vec::with_capacity(64),
+            iteration: 0,
+        })
+    }
+
+    /// Number of live topics.
+    pub fn active_topics(&self) -> usize {
+        self.nk.iter().filter(|&&c| c > 0).count()
+    }
+
+    /// Per-slot Ψ (dead slots are 0) — excludes Ψ_u.
+    pub fn psi(&self) -> &[f64] {
+        &self.psi
+    }
+
+    /// Unrepresented mass.
+    pub fn psi_u(&self) -> f64 {
+        self.psi_u
+    }
+
+    fn remove_token(&mut self, d: usize, i: usize) {
+        let k = self.assign.z[d][i] as usize;
+        let v = self.corpus.docs[d][i] as usize;
+        self.assign.m[d].dec(k as u32);
+        self.n[k][v] -= 1;
+        self.nk[k] -= 1;
+        if self.nk[k] == 0 {
+            // Topic dies: fold its stick back into Ψ_u.
+            self.psi_u += self.psi[k];
+            self.psi[k] = 0.0;
+            self.free_slots.push(k);
+        }
+    }
+
+    fn add_token(&mut self, d: usize, i: usize, k: usize) {
+        let v = self.corpus.docs[d][i] as usize;
+        self.assign.z[d][i] = k as u32;
+        self.assign.m[d].inc(k as u32);
+        self.n[k][v] += 1;
+        self.nk[k] += 1;
+    }
+
+    fn spawn_topic(&mut self) -> usize {
+        // Break the unrepresented stick.
+        let b = dist::beta(&mut self.rng, 1.0, self.cfg.gamma);
+        let slot = if let Some(s) = self.free_slots.pop() {
+            self.n[s].fill(0);
+            s
+        } else {
+            self.n.push(vec![0u32; self.corpus.vocab_size()]);
+            self.nk.push(0);
+            self.psi.push(0.0);
+            self.nk.len() - 1
+        };
+        self.psi[slot] = b * self.psi_u;
+        self.psi_u *= 1.0 - b;
+        slot
+    }
+
+    fn sweep(&mut self) {
+        let vb = self.corpus.vocab_size() as f64 * self.cfg.beta;
+        for d in 0..self.corpus.docs.len() {
+            for i in 0..self.corpus.docs[d].len() {
+                self.remove_token(d, i);
+                let v = self.corpus.docs[d][i] as usize;
+                let slots = self.nk.len();
+                self.weights.clear();
+                self.weights.resize(slots + 1, 0.0);
+                for k in 0..slots {
+                    if self.nk[k] == 0 && self.psi[k] == 0.0 {
+                        continue; // dead slot
+                    }
+                    let doc_side = self.assign.m[d].get(k as u32) as f64
+                        + self.cfg.alpha * self.psi[k];
+                    let word_side = (self.n[k][v] as f64 + self.cfg.beta)
+                        / (self.nk[k] as f64 + vb);
+                    self.weights[k] = doc_side * word_side;
+                }
+                // New-topic option.
+                self.weights[slots] =
+                    self.cfg.alpha * self.psi_u / self.corpus.vocab_size() as f64;
+                let pick = dist::categorical(&mut self.rng, &self.weights);
+                let k = if pick == slots { self.spawn_topic() } else { pick };
+                self.add_token(d, i, k);
+            }
+        }
+    }
+
+    /// Resample `(Ψ, Ψ_u)` from `Dir(l_1.., γ)` via the binomial trick
+    /// on the per-document counts.
+    fn resample_psi(&mut self) {
+        let slots = self.nk.len();
+        let mut hist = DocCountHist::new(slots);
+        for m in &self.assign.m {
+            hist.record_doc(m.entries());
+        }
+        hist.finish();
+        let mut gammas = vec![0.0f64; slots + 1];
+        let mut total = 0.0;
+        for k in 0..slots {
+            if self.nk[k] == 0 {
+                continue;
+            }
+            let l = lstep::sample_l_topic(&mut self.rng, &hist, k, self.psi[k], self.cfg.alpha);
+            let g = dist::gamma(&mut self.rng, l as f64 + 1e-12);
+            gammas[k] = g;
+            total += g;
+        }
+        let gu = dist::gamma(&mut self.rng, self.cfg.gamma);
+        gammas[slots] = gu;
+        total += gu;
+        for k in 0..slots {
+            self.psi[k] = gammas[k] / total;
+        }
+        self.psi_u = gammas[slots] / total;
+    }
+}
+
+impl Trainer for DaSampler {
+    fn name(&self) -> &'static str {
+        "da-hdp"
+    }
+
+    fn step(&mut self) -> anyhow::Result<()> {
+        self.sweep();
+        self.resample_psi();
+        self.iteration += 1;
+        Ok(())
+    }
+
+    fn diagnostics(&self) -> DiagSnapshot {
+        let rows = self.topic_word_rows();
+        let ll = loglik::joint_loglik(
+            &rows,
+            &self.assign.z,
+            &self.psi,
+            self.cfg.alpha,
+            self.cfg.beta,
+            self.corpus.vocab_size(),
+            1,
+        );
+        let mut tokens_per_topic: Vec<u64> =
+            self.nk.iter().copied().filter(|&t| t > 0).collect();
+        tokens_per_topic.sort_unstable_by(|a, b| b.cmp(a));
+        DiagSnapshot {
+            log_likelihood: ll,
+            active_topics: self.active_topics(),
+            flag_topic_tokens: 0, // no truncation in direct assignment
+            total_tokens: self.nk.iter().sum(),
+            tokens_per_topic,
+        }
+    }
+
+    fn assignments(&self) -> &[Vec<u32>] {
+        &self.assign.z
+    }
+
+    fn topic_word_rows(&self) -> Vec<Vec<(u32, u32)>> {
+        self.n
+            .iter()
+            .map(|row| {
+                row.iter()
+                    .enumerate()
+                    .filter(|&(_, &c)| c > 0)
+                    .map(|(v, &c)| (v as u32, c))
+                    .collect()
+            })
+            .collect()
+    }
+
+    fn corpus(&self) -> &Corpus {
+        &self.corpus
+    }
+
+    fn iterations_done(&self) -> usize {
+        self.iteration
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::corpus::synthetic::HdpCorpusSpec;
+
+    fn tiny() -> std::sync::Arc<Corpus> {
+        let (c, _) = HdpCorpusSpec {
+            vocab: 80,
+            topics: 4,
+            gamma: 1.0,
+            alpha: 1.0,
+            topic_beta: 0.08,
+            docs: 40,
+            mean_doc_len: 20.0,
+            len_sigma: 0.3,
+            min_doc_len: 5,
+        }
+        .generate(31);
+        std::sync::Arc::new(c)
+    }
+
+    fn cfg() -> HdpConfig {
+        HdpConfig { alpha: 0.5, beta: 0.1, gamma: 1.0, k_max: 100, init_topics: 1 }
+    }
+
+    #[test]
+    fn conserves_tokens_and_simplex() {
+        let corpus = tiny();
+        let total = corpus.num_tokens();
+        let mut s = DaSampler::new(corpus.clone(), cfg(), 3).unwrap();
+        for _ in 0..10 {
+            s.step().unwrap();
+            let d = s.diagnostics();
+            assert_eq!(d.total_tokens, total);
+            let sum: f64 = s.psi().iter().sum::<f64>() + s.psi_u();
+            assert!((sum - 1.0).abs() < 1e-9, "psi simplex: {sum}");
+            s.assign.check_consistency(&corpus).unwrap();
+        }
+    }
+
+    #[test]
+    fn grows_topics_and_improves() {
+        let corpus = tiny();
+        let mut s = DaSampler::new(corpus, cfg(), 5).unwrap();
+        s.step().unwrap();
+        let first = s.diagnostics();
+        for _ in 0..40 {
+            s.step().unwrap();
+        }
+        let last = s.diagnostics();
+        assert!(last.active_topics > 1, "topics grew: {}", last.active_topics);
+        assert!(last.log_likelihood > first.log_likelihood);
+    }
+
+    #[test]
+    fn dead_topics_recycle_slots() {
+        let corpus = tiny();
+        let mut s = DaSampler::new(corpus, cfg(), 7).unwrap();
+        for _ in 0..30 {
+            s.step().unwrap();
+        }
+        // Slots should stay bounded well below token count: deaths are
+        // recycled rather than appended forever.
+        assert!(s.nk.len() < 60, "slot count {} runaway", s.nk.len());
+        // All dead slots have zero psi.
+        for k in 0..s.nk.len() {
+            if s.nk[k] == 0 {
+                assert_eq!(s.psi[k], 0.0);
+            }
+        }
+    }
+}

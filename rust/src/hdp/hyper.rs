@@ -1,0 +1,163 @@
+//! Hyperparameter inference — the paper's §4 extensions.
+//!
+//! * [`sample_alpha`] / [`sample_gamma`] — Gibbs updates for the
+//!   document-level concentration `α` and the GEM concentration `γ`
+//!   under Gamma priors, via the auxiliary-variable schemes of Teh et
+//!   al. (2006, §A.1) / Escobar & West (1995). Both consume only the
+//!   sufficient statistics the sparse sampler already maintains
+//!   (per-document token counts and the table-count statistic `l`), so
+//!   they add O(D + K) per iteration.
+//! * [`super::pc::psi::sample_psi_general`] — the informative
+//!   generalized-Dirichlet prior for `Ψ` suggested by §4 "one could
+//!   consider an informative prior for Ψ in lieu of GEM(γ)".
+
+use crate::rng::{dist, Pcg64};
+
+/// Gamma(shape `a`, rate `b`) prior on a concentration parameter.
+#[derive(Clone, Copy, Debug)]
+pub struct GammaPrior {
+    pub shape: f64,
+    pub rate: f64,
+}
+
+impl Default for GammaPrior {
+    /// A vague prior (shape 1, rate 1).
+    fn default() -> Self {
+        Self { shape: 1.0, rate: 1.0 }
+    }
+}
+
+/// Resample the document-level DP concentration `α`.
+///
+/// `doc_tokens[j]` = `N_j` (tokens in document j), `total_tables` =
+/// `Σ_k l_k` (the paper's auxiliary statistic: total number of draws
+/// from Ψ). Teh et al. (2006) §A.1: per document draw
+/// `w_j ~ Beta(α+1, N_j)`, `s_j ~ Ber(N_j / (N_j + α))`, then
+/// `α ~ Gamma(a + T − Σs_j, b − Σ log w_j)`.
+pub fn sample_alpha(
+    rng: &mut Pcg64,
+    alpha: f64,
+    doc_tokens: &[u32],
+    total_tables: u64,
+    prior: GammaPrior,
+) -> f64 {
+    let mut sum_log_w = 0.0f64;
+    let mut sum_s = 0u64;
+    for &nj in doc_tokens {
+        if nj == 0 {
+            continue;
+        }
+        let nj = nj as f64;
+        let w = dist::beta(rng, alpha + 1.0, nj);
+        sum_log_w += w.max(1e-300).ln();
+        if rng.bernoulli(nj / (nj + alpha)) {
+            sum_s += 1;
+        }
+    }
+    let shape = prior.shape + total_tables as f64 - sum_s as f64;
+    let rate = prior.rate - sum_log_w;
+    // Guard degenerate corners (empty corpus): fall back to the prior.
+    if shape <= 0.0 || rate <= 0.0 {
+        return dist::gamma_scaled(rng, prior.shape, 1.0 / prior.rate);
+    }
+    dist::gamma_scaled(rng, shape, 1.0 / rate)
+}
+
+/// Resample the GEM concentration `γ` (Escobar & West 1995).
+///
+/// `active_topics` = K (current number of represented topics),
+/// `total_tables` = `Σ_k l_k`. Draw `η ~ Beta(γ+1, T)`, then γ from a
+/// two-component Gamma mixture with odds
+/// `(a + K − 1) / (T·(b − log η))`.
+pub fn sample_gamma(
+    rng: &mut Pcg64,
+    gamma: f64,
+    active_topics: usize,
+    total_tables: u64,
+    prior: GammaPrior,
+) -> f64 {
+    if total_tables == 0 || active_topics == 0 {
+        return dist::gamma_scaled(rng, prior.shape, 1.0 / prior.rate);
+    }
+    let t = total_tables as f64;
+    let k = active_topics as f64;
+    let eta = dist::beta(rng, gamma + 1.0, t);
+    let rate = prior.rate - eta.max(1e-300).ln();
+    let odds = (prior.shape + k - 1.0) / (t * rate);
+    let shape = if rng.bernoulli(odds / (1.0 + odds)) {
+        prior.shape + k
+    } else {
+        prior.shape + k - 1.0
+    };
+    dist::gamma_scaled(rng, shape.max(1e-3), 1.0 / rate)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn alpha_stays_positive_and_stable() {
+        let mut rng = Pcg64::new(1);
+        let doc_tokens: Vec<u32> = (0..200).map(|i| 20 + (i % 50) as u32).collect();
+        let mut alpha = 1.0;
+        for _ in 0..200 {
+            alpha = sample_alpha(&mut rng, alpha, &doc_tokens, 600, GammaPrior::default());
+            assert!(alpha.is_finite() && alpha > 0.0, "alpha {alpha}");
+            assert!(alpha < 100.0, "alpha runaway {alpha}");
+        }
+    }
+
+    #[test]
+    fn alpha_tracks_table_count() {
+        // More tables (relative to the same token counts) must push α up.
+        let doc_tokens: Vec<u32> = vec![50; 300];
+        let run = |tables: u64, seed: u64| {
+            let mut rng = Pcg64::new(seed);
+            let mut a = 1.0;
+            let mut acc = 0.0;
+            for i in 0..400 {
+                a = sample_alpha(&mut rng, a, &doc_tokens, tables, GammaPrior::default());
+                if i >= 200 {
+                    acc += a;
+                }
+            }
+            acc / 200.0
+        };
+        let low = run(350, 2);
+        let high = run(3000, 2);
+        assert!(
+            high > 2.0 * low,
+            "α should grow with table count: {low} vs {high}"
+        );
+    }
+
+    #[test]
+    fn gamma_tracks_topic_count() {
+        let run = |k: usize, seed: u64| {
+            let mut rng = Pcg64::new(seed);
+            let mut g = 1.0;
+            let mut acc = 0.0;
+            for i in 0..400 {
+                g = sample_gamma(&mut rng, g, k, 5000, GammaPrior::default());
+                assert!(g.is_finite() && g > 0.0);
+                if i >= 200 {
+                    acc += g;
+                }
+            }
+            acc / 200.0
+        };
+        let few = run(5, 3);
+        let many = run(200, 3);
+        assert!(many > 3.0 * few, "γ should grow with K: {few} vs {many}");
+    }
+
+    #[test]
+    fn degenerate_inputs_fall_back_to_prior() {
+        let mut rng = Pcg64::new(4);
+        let g = sample_gamma(&mut rng, 1.0, 0, 0, GammaPrior::default());
+        assert!(g > 0.0 && g.is_finite());
+        let a = sample_alpha(&mut rng, 1.0, &[], 0, GammaPrior::default());
+        assert!(a > 0.0 && a.is_finite());
+    }
+}

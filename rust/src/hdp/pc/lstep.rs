@@ -1,0 +1,178 @@
+//! The `l` Gibbs step via the binomial trick (§2.6).
+//!
+//! Rather than storing the O(N) Bernoulli augmentation `b`, the
+//! sufficient statistic is sampled directly:
+//!
+//! ```text
+//! l_k = Σ_{j=1..max_d m_{d,k}}  Bin(D_{k,j},  αΨ_k / (αΨ_k + j − 1))
+//! ```
+//!
+//! where `D_{k,j}` = #documents with `m_{d,k} ≥ j`, read off the sparse
+//! [`DocCountHist`]. Cost is constant in `D` and linear in the number
+//! of distinct per-document count levels. [`sample_l_explicit`] is the
+//! literal eq. (26)–(27) Bernoulli-sequence sampler used to validate
+//! the trick distributionally.
+
+use crate::rng::{dist, Pcg64};
+use crate::sparse::DocCountHist;
+
+/// Sample `l_k` for one topic from the count histogram.
+pub fn sample_l_topic(rng: &mut Pcg64, hist: &DocCountHist, k: usize, psi_k: f64, alpha: f64) -> u64 {
+    let a = alpha * psi_k;
+    let mut l = 0u64;
+    hist.for_runs(k, |j_lo, j_hi, d| {
+        for j in j_lo..=j_hi {
+            if j == 1 {
+                // p = a / (a + 0) = 1: every document's first draw of a
+                // topic necessarily came from Ψ.
+                l += d as u64;
+            } else if a > 0.0 {
+                let p = a / (a + (j - 1) as f64);
+                l += dist::binomial(rng, d as u64, p);
+            }
+        }
+    });
+    l
+}
+
+/// Sample the full `l` vector in parallel over topics, using one RNG
+/// stream per topic (shard-layout invariant).
+pub fn sample_l(
+    root: &Pcg64,
+    hist: &DocCountHist,
+    psi: &[f64],
+    alpha: f64,
+    threads: usize,
+) -> Vec<u64> {
+    let k_max = hist.num_topics();
+    assert_eq!(psi.len(), k_max);
+    crate::par::parallel_map(k_max, threads, |k| {
+        if hist.max_count(k) == 0 {
+            return 0u64;
+        }
+        let mut rng = root.stream(0x6c00_0000 | k as u64);
+        sample_l_topic(&mut rng, hist, k, psi[k], alpha)
+    })
+}
+
+/// Literal eq. (26)–(27): for one topic, iterate every document's count
+/// `m_{d,k}` and draw the Bernoulli sequence. O(Σ_d m_{d,k}) — the
+/// reference the binomial trick is tested against.
+pub fn sample_l_explicit(
+    rng: &mut Pcg64,
+    doc_counts: &[u32],
+    psi_k: f64,
+    alpha: f64,
+) -> u64 {
+    let a = alpha * psi_k;
+    let mut l = 0u64;
+    for &m in doc_counts {
+        for j in 1..=m {
+            let p = if j == 1 { 1.0 } else { a / (a + (j - 1) as f64) };
+            if rng.bernoulli(p) {
+                l += 1;
+            }
+        }
+    }
+    l
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn hist_from_counts(counts: &[u32]) -> DocCountHist {
+        let mut h = DocCountHist::new(1);
+        for &c in counts {
+            if c > 0 {
+                h.record_doc(&[(0, c)]);
+            }
+        }
+        h.finish();
+        h
+    }
+
+    #[test]
+    fn at_least_one_per_document() {
+        // l_k >= number of documents containing the topic, and
+        // l_k <= total tokens of the topic.
+        let mut rng = Pcg64::new(1);
+        let counts = [3u32, 1, 7, 2];
+        let h = hist_from_counts(&counts);
+        for _ in 0..200 {
+            let l = sample_l_topic(&mut rng, &h, 0, 0.3, 0.5);
+            assert!(l >= 4, "l={l}");
+            assert!(l <= 13, "l={l}");
+        }
+    }
+
+    #[test]
+    fn trick_matches_explicit_distribution() {
+        // Moment comparison of the binomial trick vs the literal
+        // Bernoulli-sequence sampler on the same configuration.
+        let counts = [5u32, 2, 2, 9, 1, 3];
+        let h = hist_from_counts(&counts);
+        let (alpha, psi_k) = (1.2, 0.4);
+        let reps = 40_000;
+        let mut rng = Pcg64::new(2);
+        let (mut s1, mut s1sq) = (0.0f64, 0.0f64);
+        let (mut s2, mut s2sq) = (0.0f64, 0.0f64);
+        for _ in 0..reps {
+            let a = sample_l_topic(&mut rng, &h, 0, psi_k, alpha) as f64;
+            let b = sample_l_explicit(&mut rng, &counts, psi_k, alpha) as f64;
+            s1 += a;
+            s1sq += a * a;
+            s2 += b;
+            s2sq += b * b;
+        }
+        let m1 = s1 / reps as f64;
+        let m2 = s2 / reps as f64;
+        let v1 = s1sq / reps as f64 - m1 * m1;
+        let v2 = s2sq / reps as f64 - m2 * m2;
+        assert!((m1 - m2).abs() < 0.05, "means {m1} vs {m2}");
+        assert!((v1 - v2).abs() < 0.15 * v2.max(0.5), "vars {v1} vs {v2}");
+    }
+
+    #[test]
+    fn exact_mean_small_case() {
+        // counts = [2]: l = 1 + Ber(a/(a+1)); E[l] = 1 + a/(a+1).
+        let h = hist_from_counts(&[2]);
+        let (alpha, psi_k) = (0.8, 0.5);
+        let a = alpha * psi_k;
+        let want = 1.0 + a / (a + 1.0);
+        let mut rng = Pcg64::new(3);
+        let reps = 100_000;
+        let mean = (0..reps)
+            .map(|_| sample_l_topic(&mut rng, &h, 0, psi_k, alpha) as f64)
+            .sum::<f64>()
+            / reps as f64;
+        assert!((mean - want).abs() < 0.01, "{mean} vs {want}");
+    }
+
+    #[test]
+    fn zero_psi_gives_first_draw_only() {
+        // With Ψ_k = 0, every j>1 Bernoulli has p=0: l = #documents.
+        let h = hist_from_counts(&[4, 4, 4]);
+        let mut rng = Pcg64::new(4);
+        let l = sample_l_topic(&mut rng, &h, 0, 0.0, 1.0);
+        assert_eq!(l, 3);
+    }
+
+    #[test]
+    fn parallel_l_deterministic_and_thread_invariant() {
+        let mut h = DocCountHist::new(5);
+        h.record_doc(&[(0, 2), (3, 7)]);
+        h.record_doc(&[(0, 1), (3, 2), (4, 1)]);
+        h.finish();
+        let psi = [0.2, 0.1, 0.1, 0.5, 0.1];
+        let root = Pcg64::new(9);
+        let l1 = sample_l(&root, &h, &psi, 0.7, 1);
+        let l4 = sample_l(&root, &h, &psi, 0.7, 4);
+        assert_eq!(l1, l4, "per-topic streams make layout irrelevant");
+        assert_eq!(l1[1], 0);
+        assert_eq!(l1[2], 0);
+        assert!(l1[0] >= 2 && l1[0] <= 3);
+        assert!(l1[3] >= 2 && l1[3] <= 9);
+        assert_eq!(l1[4], 1);
+    }
+}

@@ -1,0 +1,213 @@
+//! The `Φ` Gibbs step via the Poisson Pólya urn (§2.5, eq. 21).
+//!
+//! `φ_{k,v} ∝ Pois(β + n_{k,v})`, sampled sparsely by splitting the
+//! rate: the `β` part is a Poisson process with total rate `β·V` whose
+//! points land on uniform word ids; the `n` part iterates the nonzeros
+//! of the topic's row. Expected cost per topic is `β·V + nnz(n_k)`
+//! draws, independent of the dense row size.
+//!
+//! The resulting integer rows are normalized into a [`PhiMatrix`].
+//! Because the draws are integers, most of `Φ` is *exactly* zero — the
+//! topic-word sparsity the z step exploits.
+
+use crate::par;
+use crate::rng::{dist, Pcg64};
+use crate::sparse::{PhiMatrix, TopicWordRows};
+
+/// Sample one PPU row: integer counts `ϕ_{k,v} ~ Pois(β + n_{k,v})`,
+/// returned as sorted `(word, count)` with zeros omitted.
+pub fn sample_ppu_row(
+    rng: &mut Pcg64,
+    n_row: &[(u32, u32)],
+    beta: f64,
+    vocab: usize,
+) -> Vec<(u32, u32)> {
+    // β part: B ~ Pois(β·V) points at uniform word ids.
+    let b_total = dist::poisson(rng, beta * vocab as f64);
+    let mut beta_points: Vec<u32> =
+        (0..b_total).map(|_| rng.below(vocab as u64) as u32).collect();
+    beta_points.sort_unstable();
+    // n part: Pois(n_{k,v}) at each nonzero (already sorted by word).
+    let mut out: Vec<(u32, u32)> = Vec::with_capacity(n_row.len() + b_total as usize);
+    let mut bi = 0usize;
+    for &(v, c) in n_row {
+        // flush β points before v
+        while bi < beta_points.len() && beta_points[bi] < v {
+            push_count(&mut out, beta_points[bi], 1);
+            bi += 1;
+        }
+        let mut draw = dist::poisson(rng, c as f64);
+        while bi < beta_points.len() && beta_points[bi] == v {
+            draw += 1;
+            bi += 1;
+        }
+        if draw > 0 {
+            push_count(&mut out, v, draw as u32);
+        }
+    }
+    while bi < beta_points.len() {
+        push_count(&mut out, beta_points[bi], 1);
+        bi += 1;
+    }
+    out
+}
+
+#[inline]
+fn push_count(out: &mut Vec<(u32, u32)>, v: u32, c: u32) {
+    if let Some(last) = out.last_mut() {
+        if last.0 == v {
+            last.1 += c;
+            return;
+        }
+    }
+    out.push((v, c));
+}
+
+/// Dense exact reference for tests: `ϕ_{k,v} ~ Pois(β + n_{k,v})` for
+/// every `v` (O(V) draws).
+pub fn sample_ppu_row_dense(
+    rng: &mut Pcg64,
+    n_row: &[(u32, u32)],
+    beta: f64,
+    vocab: usize,
+) -> Vec<(u32, u32)> {
+    let mut dense = vec![0u32; vocab];
+    let mut idx = 0usize;
+    for v in 0..vocab as u32 {
+        let c = if idx < n_row.len() && n_row[idx].0 == v {
+            let c = n_row[idx].1;
+            idx += 1;
+            c
+        } else {
+            0
+        };
+        dense[v as usize] = dist::poisson(rng, beta + c as f64) as u32;
+    }
+    dense
+        .into_iter()
+        .enumerate()
+        .filter(|&(_, c)| c > 0)
+        .map(|(v, c)| (v as u32, c))
+        .collect()
+}
+
+/// Sample the whole `Φ` in parallel over topics (one RNG stream per
+/// topic — shard-layout invariant) and assemble the [`PhiMatrix`].
+pub fn sample_phi(
+    root: &Pcg64,
+    n: &TopicWordRows,
+    beta: f64,
+    vocab: usize,
+    threads: usize,
+) -> PhiMatrix {
+    let k_max = n.num_topics();
+    let rows: Vec<Vec<(u32, u32)>> = par::parallel_map(k_max, threads, |k| {
+        let mut rng = root.stream(0x9900_0000 | k as u64);
+        sample_ppu_row(&mut rng, n.row(k), beta, vocab)
+    });
+    PhiMatrix::from_count_rows(vocab, &rows)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sparse_matches_dense_in_moments() {
+        // Same (β, n) configuration sampled both ways; compare per-word
+        // mean counts. They are draws from the SAME distribution, so
+        // means must agree.
+        let n_row = vec![(3u32, 5u32), (10, 1), (50, 20)];
+        let (beta, vocab) = (0.05, 100usize);
+        let reps = 20_000;
+        let mut rng = Pcg64::new(1);
+        let mut mean_sparse = vec![0.0f64; vocab];
+        let mut mean_dense = vec![0.0f64; vocab];
+        for _ in 0..reps {
+            for (v, c) in sample_ppu_row(&mut rng, &n_row, beta, vocab) {
+                mean_sparse[v as usize] += c as f64;
+            }
+            for (v, c) in sample_ppu_row_dense(&mut rng, &n_row, beta, vocab) {
+                mean_dense[v as usize] += c as f64;
+            }
+        }
+        for v in 0..vocab {
+            let a = mean_sparse[v] / reps as f64;
+            let b = mean_dense[v] / reps as f64;
+            let expect = beta
+                + n_row
+                    .iter()
+                    .find(|&&(w, _)| w as usize == v)
+                    .map(|&(_, c)| c as f64)
+                    .unwrap_or(0.0);
+            assert!((a - expect).abs() < 0.15 * expect.max(0.3), "v={v}: {a} vs {expect}");
+            assert!((b - expect).abs() < 0.15 * expect.max(0.3), "v={v}: {b} vs {expect}");
+        }
+    }
+
+    #[test]
+    fn rows_sorted_no_duplicates() {
+        let mut rng = Pcg64::new(2);
+        let n_row = vec![(0u32, 3u32), (1, 1), (99, 2)];
+        for _ in 0..200 {
+            let row = sample_ppu_row(&mut rng, &n_row, 0.1, 100);
+            assert!(row.windows(2).all(|w| w[0].0 < w[1].0), "{row:?}");
+            assert!(row.iter().all(|&(v, c)| c > 0 && v < 100));
+        }
+    }
+
+    #[test]
+    fn empty_row_gets_only_beta_points() {
+        let mut rng = Pcg64::new(3);
+        let (beta, vocab) = (0.01, 1000usize);
+        let mut total = 0u64;
+        let reps = 5000;
+        for _ in 0..reps {
+            let row = sample_ppu_row(&mut rng, &[], beta, vocab);
+            total += row.iter().map(|&(_, c)| c as u64).sum::<u64>();
+        }
+        // E[total per row] = β·V = 10
+        let mean = total as f64 / reps as f64;
+        assert!((mean - 10.0).abs() < 0.5, "mean β mass {mean}");
+    }
+
+    #[test]
+    fn ppu_approximates_dirichlet_mean() {
+        // For moderately large counts, E[φ_kv] ≈ (β + n_kv)/(Vβ + n_k).
+        let n_row = vec![(0u32, 40u32), (1, 60)];
+        let (beta, vocab) = (0.5, 10usize);
+        let mut rng = Pcg64::new(4);
+        let reps = 30_000;
+        let mut mean0 = 0.0f64;
+        for _ in 0..reps {
+            let row = sample_ppu_row(&mut rng, &n_row, beta, vocab);
+            let total: u32 = row.iter().map(|&(_, c)| c).sum();
+            if total == 0 {
+                continue;
+            }
+            let c0 = row.iter().find(|&&(v, _)| v == 0).map(|&(_, c)| c).unwrap_or(0);
+            mean0 += c0 as f64 / total as f64;
+        }
+        mean0 /= reps as f64;
+        let want = (beta + 40.0) / (vocab as f64 * beta + 100.0);
+        assert!((mean0 - want).abs() < 0.01, "{mean0} vs {want}");
+    }
+
+    #[test]
+    fn phi_matrix_parallel_deterministic() {
+        use crate::sparse::TopicWordAcc;
+        let mut acc = TopicWordAcc::with_capacity(64);
+        let mut rng = Pcg64::new(5);
+        for _ in 0..2000 {
+            acc.add(rng.below(8) as u32, rng.below(50) as u32, 1);
+        }
+        let n = TopicWordRows::merge_from(8, &mut [acc]);
+        let root = Pcg64::new(7);
+        let phi1 = sample_phi(&root, &n, 0.1, 50, 1);
+        let phi4 = sample_phi(&root, &n, 0.1, 50, 4);
+        assert_eq!(phi1.nnz(), phi4.nnz());
+        for k in 0..8 {
+            assert_eq!(phi1.row(k), phi4.row(k), "topic {k}");
+        }
+    }
+}

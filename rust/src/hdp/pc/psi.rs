@@ -1,0 +1,207 @@
+//! The `Ψ` Gibbs step: stick-breaking posterior of Proposition 1 under
+//! the FGEM truncation of §2.4.
+//!
+//! Given the sufficient statistic `l` (how many topic draws came from
+//! `Ψ` rather than the urn), `Ψ | l` is generalized-Dirichlet:
+//!
+//! ```text
+//! ς_k ~ Beta(1 + l_k, γ + Σ_{i>k} l_i),   ς_{K*} = 1
+//! Ψ_k = ς_k · Π_{i<k} (1 − ς_i)
+//! ```
+
+use crate::rng::{dist, Pcg64};
+
+/// Sample `Ψ | l` into `psi` (same length as `l`); the last index is
+/// the flag topic `K*` with `ς = 1`, so `Ψ` sums to exactly 1.
+pub fn sample_psi(rng: &mut Pcg64, l: &[u64], gamma: f64, psi: &mut [f64]) {
+    let k_max = l.len();
+    assert_eq!(psi.len(), k_max);
+    assert!(k_max >= 1);
+    // Suffix sums Σ_{i>k} l_i.
+    let mut suffix = vec![0u64; k_max + 1];
+    for k in (0..k_max).rev() {
+        suffix[k] = suffix[k + 1] + l[k];
+    }
+    let mut remaining = 1.0f64;
+    for k in 0..k_max {
+        let s = if k + 1 == k_max {
+            1.0 // flag topic: absorb the tail (§2.4)
+        } else {
+            dist::beta(rng, 1.0 + l[k] as f64, gamma + suffix[k + 1] as f64)
+        };
+        psi[k] = remaining * s;
+        remaining *= 1.0 - s;
+    }
+}
+
+/// Generalized-Dirichlet `Ψ` step with an *informative* stick prior
+/// (the §4 extension): `ς_k ~ Beta(a_k + l_k, b_k + Σ_{i>k} l_i)` with
+/// per-stick prior hyperparameters `(a_k, b_k)` instead of the GEM's
+/// `(1, γ)`. `sample_psi` is the special case `a_k = 1, b_k = γ`.
+pub fn sample_psi_general(
+    rng: &mut Pcg64,
+    l: &[u64],
+    a: &[f64],
+    b: &[f64],
+    psi: &mut [f64],
+) {
+    let k_max = l.len();
+    assert_eq!(psi.len(), k_max);
+    assert_eq!(a.len(), k_max);
+    assert_eq!(b.len(), k_max);
+    let mut suffix = vec![0u64; k_max + 1];
+    for k in (0..k_max).rev() {
+        suffix[k] = suffix[k + 1] + l[k];
+    }
+    let mut remaining = 1.0f64;
+    for k in 0..k_max {
+        let s = if k + 1 == k_max {
+            1.0
+        } else {
+            dist::beta(rng, a[k] + l[k] as f64, b[k] + suffix[k + 1] as f64)
+        };
+        psi[k] = remaining * s;
+        remaining *= 1.0 - s;
+    }
+}
+
+/// Posterior mean of `Ψ_k | l` under the same FGEM posterior — used by
+/// moment-matching tests and as a deterministic point estimate:
+/// `E[ς_k] = (1 + l_k) / (1 + γ + Σ_{i≥k} l_i)` and
+/// `E[Ψ_k] = E[ς_k]·Π_{i<k}(1 − E[ς_i])` (independence of the sticks).
+pub fn psi_posterior_mean(l: &[u64], gamma: f64) -> Vec<f64> {
+    let k_max = l.len();
+    let mut suffix = vec![0u64; k_max + 1];
+    for k in (0..k_max).rev() {
+        suffix[k] = suffix[k + 1] + l[k];
+    }
+    let mut out = vec![0.0; k_max];
+    let mut remaining = 1.0f64;
+    for k in 0..k_max {
+        let e = if k + 1 == k_max {
+            1.0
+        } else {
+            let a = 1.0 + l[k] as f64;
+            let b = gamma + suffix[k + 1] as f64;
+            a / (a + b)
+        };
+        out[k] = remaining * e;
+        remaining *= 1.0 - e;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sums_to_one_and_nonnegative() {
+        let mut rng = Pcg64::new(1);
+        let l = [10u64, 5, 0, 1, 0];
+        let mut psi = [0.0; 5];
+        for _ in 0..100 {
+            sample_psi(&mut rng, &l, 1.0, &mut psi);
+            let s: f64 = psi.iter().sum();
+            assert!((s - 1.0).abs() < 1e-12, "sum {s}");
+            assert!(psi.iter().all(|&p| p >= 0.0));
+        }
+    }
+
+    #[test]
+    fn empirical_mean_matches_posterior_mean() {
+        let mut rng = Pcg64::new(2);
+        let l = [50u64, 20, 5, 0];
+        let gamma = 1.5;
+        let want = psi_posterior_mean(&l, gamma);
+        let mut acc = [0.0f64; 4];
+        let reps = 50_000;
+        let mut psi = [0.0; 4];
+        for _ in 0..reps {
+            sample_psi(&mut rng, &l, gamma, &mut psi);
+            for i in 0..4 {
+                acc[i] += psi[i];
+            }
+        }
+        for i in 0..4 {
+            let got = acc[i] / reps as f64;
+            assert!(
+                (got - want[i]).abs() < 0.01,
+                "component {i}: {got} vs {}",
+                want[i]
+            );
+        }
+    }
+
+    #[test]
+    fn no_counts_gives_gem_prior_means() {
+        // With l = 0, ς_k ~ Beta(1, γ): E[Ψ_k] = (1/(1+γ))(γ/(1+γ))^k.
+        let gamma = 2.0;
+        let l = [0u64; 6];
+        let want = psi_posterior_mean(&l, gamma);
+        for k in 0..5 {
+            let expect =
+                (1.0 / (1.0 + gamma)) * (gamma / (1.0 + gamma)).powi(k as i32);
+            assert!((want[k] - expect).abs() < 1e-12, "k={k}");
+        }
+    }
+
+    #[test]
+    fn heavy_count_concentrates_mass() {
+        let mut rng = Pcg64::new(3);
+        let mut l = vec![0u64; 10];
+        l[2] = 100_000;
+        let mut psi = vec![0.0; 10];
+        sample_psi(&mut rng, &l, 1.0, &mut psi);
+        assert!(psi[2] > 0.9, "psi={psi:?}");
+    }
+
+    #[test]
+    fn general_prior_reduces_to_gem() {
+        // With a_k = 1, b_k = γ the general sampler must agree with
+        // sample_psi distributionally (same seed ⇒ same draws).
+        let l = [10u64, 3, 0, 1];
+        let gamma = 1.7;
+        let a = vec![1.0; 4];
+        let b = vec![gamma; 4];
+        let mut r1 = Pcg64::new(5);
+        let mut r2 = Pcg64::new(5);
+        let mut p1 = [0.0; 4];
+        let mut p2 = [0.0; 4];
+        sample_psi(&mut r1, &l, gamma, &mut p1);
+        sample_psi_general(&mut r2, &l, &a, &b, &mut p2);
+        assert_eq!(p1, p2);
+    }
+
+    #[test]
+    fn informative_prior_shifts_mass() {
+        // A prior concentrated on stick 2 must raise E[Ψ_2] vs GEM.
+        let l = [0u64; 5];
+        let mut a = vec![1.0; 5];
+        let b = vec![1.0; 5];
+        a[2] = 50.0; // strongly favour stick 2
+        let mut rng = Pcg64::new(6);
+        let mut acc_gem = 0.0;
+        let mut acc_inf = 0.0;
+        let mut psi = [0.0; 5];
+        for _ in 0..5000 {
+            sample_psi(&mut rng, &l, 1.0, &mut psi);
+            acc_gem += psi[2];
+            sample_psi_general(&mut rng, &l, &a, &b, &mut psi);
+            acc_inf += psi[2];
+        }
+        assert!(acc_inf > 1.5 * acc_gem, "{acc_inf} vs {acc_gem}");
+    }
+
+    #[test]
+    fn flag_topic_takes_tail() {
+        // With all sticks at prior and a tiny K*, the flag topic takes
+        // visible mass; the invariant is exact sum-to-one.
+        let mut rng = Pcg64::new(4);
+        let l = [0u64, 0];
+        let mut psi = [0.0; 2];
+        sample_psi(&mut rng, &l, 1.0, &mut psi);
+        assert!((psi[0] + psi[1] - 1.0).abs() < 1e-15);
+        assert!(psi[1] > 0.0);
+    }
+}

@@ -1,0 +1,539 @@
+//! The doubly sparse `z` Gibbs step (§2.5, eq. 22–24).
+//!
+//! The full conditional `P(z_{i,d} = k) ∝ φ_{k,v}·α·Ψ_k + φ_{k,v}·m^{-i}_{d,k}`
+//! splits into:
+//!
+//! * **bucket (a)** `φ_{k,v}·α·Ψ_k` — document-independent: one Walker
+//!   alias table per word type, built once per iteration over the
+//!   nonzero support of the `Φ` column ([`WordTables`]);
+//! * **bucket (b)** `φ_{k,v}·m^{-i}_{d,k}` — evaluated per token by
+//!   iterating the sparser of `m_d` (with binary-search `φ` lookups)
+//!   and the `Φ` column (with O(1) dense-scratch `m` lookups) — the
+//!   `O(min(K^{(m)}_d, K^{(Φ)}_v))` bound of eq. 29.
+//!
+//! `Φ` and `Ψ` are fixed during the phase (partially collapsed), so the
+//! alias tables are exact and documents are embarrassingly parallel.
+//! Each document owns an RNG stream keyed by (iteration, doc id): the
+//! chain is bit-identical under any shard layout or thread count.
+
+use crate::alias::SparseAlias;
+use crate::par::{self, Sharding};
+use crate::rng::Pcg64;
+use crate::sparse::{DocCountHist, DocTopics, PhiMatrix, TopicWordAcc};
+
+/// Per-word-type bucket-(a) alias tables and totals.
+pub struct WordTables {
+    /// `tables[v]` — alias over `{k : φ_{k,v} > 0}` with weights
+    /// `φ_{k,v}·α·Ψ_k`; `None` for words with an empty `Φ` column.
+    tables: Vec<Option<SparseAlias>>,
+    /// Dense per-word totals `Q_v` — the per-token hot load (§Perf:
+    /// one predictable array read instead of an Option + pointer
+    /// chase per token).
+    masses: Vec<f64>,
+}
+
+impl WordTables {
+    /// Build all tables in parallel over word types.
+    pub fn build(phi: &PhiMatrix, psi: &[f64], alpha: f64, threads: usize) -> Self {
+        let vocab = phi.vocab();
+        let tables = par::parallel_map(vocab, threads, |v| {
+            let (topics, probs) = phi.col(v as u32);
+            if topics.is_empty() {
+                return None;
+            }
+            let weights: Vec<f64> = topics
+                .iter()
+                .zip(probs)
+                .map(|(&k, &p)| p * alpha * psi[k as usize])
+                .collect();
+            if weights.iter().sum::<f64>() <= 0.0 {
+                return None;
+            }
+            Some(SparseAlias::new(topics.to_vec(), &weights))
+        });
+        let masses = tables
+            .iter()
+            .map(|t| t.as_ref().map(SparseAlias::total).unwrap_or(0.0))
+            .collect();
+        Self { tables, masses }
+    }
+
+    /// Bucket-(a) total mass `Q_v = α·Σ_k φ_{k,v}Ψ_k`.
+    #[inline]
+    pub fn mass(&self, v: u32) -> f64 {
+        self.masses[v as usize]
+    }
+
+    /// Draw a topic from bucket (a) for word `v`.
+    #[inline]
+    pub fn sample(&self, v: u32, rng: &mut Pcg64) -> u32 {
+        self.tables[v as usize].as_ref().expect("empty column").sample(rng)
+    }
+}
+
+/// Shard-local outputs of the z phase.
+pub struct ZShardResult {
+    /// Topic-word counts accumulated from the new assignments.
+    pub n_acc: TopicWordAcc,
+    /// Per-topic document-count histogram (feeds the l step).
+    pub hist: DocCountHist,
+    /// Tokens whose conditional had zero mass (word vanished from every
+    /// topic under the integer `Φ`): assignment kept, counted here.
+    pub zero_mass_tokens: u64,
+    /// Tokens assigned to the flag topic `K* − 1` (§2.4 check).
+    pub flag_tokens: u64,
+    /// Work counter: Σ min(K^m, K^Φ) over tokens (eq. 29 audit).
+    pub sparse_work: u64,
+}
+
+/// Reusable per-worker scratch.
+pub struct ZScratch {
+    /// Dense `m_{d,k}` lookup (K*), maintained only for the current doc.
+    mdense: Vec<u32>,
+    /// Topics that have appeared in the current document (may contain
+    /// stale zero-count entries — iteration skips them; this makes the
+    /// per-token add/remove O(1) instead of the O(K_d) list scans a
+    /// `DocTopics` would cost; §Perf iteration 1).
+    entries: Vec<u32>,
+    /// Membership mark for `entries` (reset via `entries` at doc end).
+    in_list: Vec<bool>,
+    /// bucket-(b) partials `(topic, cumulative weight)`.
+    partials: Vec<(u32, f64)>,
+}
+
+impl ZScratch {
+    /// Scratch for `k_max` topics.
+    pub fn new(k_max: usize) -> Self {
+        Self {
+            mdense: vec![0; k_max],
+            entries: Vec::with_capacity(64),
+            in_list: vec![false; k_max],
+            partials: Vec::with_capacity(64),
+        }
+    }
+}
+
+/// Parameters of one z sweep.
+pub struct ZSweep<'a> {
+    pub phi: &'a PhiMatrix,
+    pub psi: &'a [f64],
+    pub tables: &'a WordTables,
+    pub alpha: f64,
+    pub k_max: usize,
+    /// Root RNG; per-document streams derive from it and the iteration.
+    pub seed_root: &'a Pcg64,
+    pub iteration: u64,
+}
+
+impl<'a> ZSweep<'a> {
+    /// Resample one document in place: `doc` tokens, `zd` assignments,
+    /// `md` sparse counts; accumulates into the shard result.
+    pub fn resample_doc(
+        &self,
+        doc_id: usize,
+        doc: &[u32],
+        zd: &mut [u32],
+        md: &mut DocTopics,
+        scratch: &mut ZScratch,
+        out: &mut ZShardResult,
+    ) {
+        let mut rng = self
+            .seed_root
+            .stream(self.iteration.rotate_left(32) ^ 0x2000_0000)
+            .stream(doc_id as u64);
+        // Load the per-doc scratch from md (touch only its entries).
+        // `live` tracks the current nnz of m_d for the min-sparsity
+        // branch; `entries` may keep stale zero-count topics (skipped
+        // during iteration, compacted at doc end).
+        let mut live = md.nnz();
+        for (k, c) in md.iter() {
+            scratch.mdense[k as usize] = c;
+            scratch.in_list[k as usize] = true;
+            scratch.entries.push(k);
+        }
+        for (&v, z) in doc.iter().zip(zd.iter_mut()) {
+            let kold = *z;
+            // Remove the token (the −i in m^{-i}) — O(1).
+            let cold = &mut scratch.mdense[kold as usize];
+            *cold -= 1;
+            if *cold == 0 {
+                live -= 1;
+            }
+            // Bucket (b): iterate the sparser side.
+            let (col_topics, col_probs) = self.phi.col(v);
+            scratch.partials.clear();
+            let mut s_b = 0.0f64;
+            if live <= col_topics.len() {
+                out.sparse_work += live as u64;
+                for &k in scratch.entries.iter() {
+                    let c = scratch.mdense[k as usize];
+                    if c == 0 {
+                        continue; // stale entry
+                    }
+                    // manual binary search over the hoisted column
+                    if let Ok(idx) = col_topics.binary_search(&k) {
+                        s_b += col_probs[idx] * c as f64;
+                        scratch.partials.push((k, s_b));
+                    }
+                }
+            } else {
+                out.sparse_work += col_topics.len() as u64;
+                for (&k, &p) in col_topics.iter().zip(col_probs) {
+                    let c = scratch.mdense[k as usize];
+                    if c > 0 {
+                        s_b += p * c as f64;
+                        scratch.partials.push((k, s_b));
+                    }
+                }
+            }
+            let q_a = self.tables.mass(v);
+            let total = q_a + s_b;
+            let knew = if total <= 0.0 {
+                // Word v currently absent from every topic's integer Φ:
+                // conditional is degenerate; keep the old assignment
+                // (it re-enters n, so Φ regains the word next sweep).
+                out.zero_mass_tokens += 1;
+                kold
+            } else {
+                let u = rng.f64() * total;
+                if u < s_b {
+                    // walk the partials (short vector, linear is fastest)
+                    let mut pick = scratch.partials.len() - 1;
+                    for (idx, &(_, cum)) in scratch.partials.iter().enumerate() {
+                        if u < cum {
+                            pick = idx;
+                            break;
+                        }
+                    }
+                    scratch.partials[pick].0
+                } else {
+                    self.tables.sample(v, &mut rng)
+                }
+            };
+            *z = knew;
+            // Add the token — O(1) amortized.
+            let cnew = &mut scratch.mdense[knew as usize];
+            if *cnew == 0 {
+                live += 1;
+                if !scratch.in_list[knew as usize] {
+                    scratch.in_list[knew as usize] = true;
+                    scratch.entries.push(knew);
+                }
+            }
+            *cnew += 1;
+            out.n_acc.add(knew, v, 1);
+            if knew as usize == self.k_max - 1 {
+                out.flag_tokens += 1;
+            }
+        }
+        // Compact the scratch back into md and reset it.
+        md.clear();
+        for &k in scratch.entries.iter() {
+            let c = scratch.mdense[k as usize];
+            if c > 0 {
+                md.set(k, c);
+            }
+            scratch.mdense[k as usize] = 0;
+            scratch.in_list[k as usize] = false;
+        }
+        scratch.entries.clear();
+        out.hist.record_doc(md.entries());
+    }
+
+    /// Run the sweep over all documents with the given shard plan,
+    /// mutating `z`/`m` in place and returning the per-shard results.
+    pub fn run(
+        &self,
+        docs: &[Vec<u32>],
+        z: &mut [Vec<u32>],
+        m: &mut [DocTopics],
+        plan: &Sharding,
+    ) -> Vec<ZShardResult> {
+        // Split z and m into per-shard mutable slices.
+        let mut z_parts: Vec<&mut [Vec<u32>]> = Vec::with_capacity(plan.len());
+        let mut m_parts: Vec<&mut [DocTopics]> = Vec::with_capacity(plan.len());
+        {
+            let mut z_rest = z;
+            let mut m_rest = m;
+            let mut offset = 0usize;
+            for shard in plan.shards() {
+                let (zl, zr) = z_rest.split_at_mut(shard.end - offset);
+                let (ml, mr) = m_rest.split_at_mut(shard.end - offset);
+                z_parts.push(zl);
+                m_parts.push(ml);
+                z_rest = zr;
+                m_rest = mr;
+                offset = shard.end;
+            }
+        }
+        // Interior mutability across shards: each worker owns its part.
+        let work: Vec<(usize, &mut [Vec<u32>], &mut [DocTopics])> = plan
+            .shards()
+            .iter()
+            .zip(z_parts.into_iter().zip(m_parts))
+            .map(|(s, (zp, mp))| (s.start, zp, mp))
+            .collect();
+        let work = std::sync::Mutex::new(
+            work.into_iter().map(Some).collect::<Vec<_>>(),
+        );
+        par::scope_shards(plan, |shard_idx, shard| {
+            let (start, zp, mp) = {
+                let mut guard = work.lock().unwrap();
+                guard[shard_idx].take().expect("shard taken once")
+            };
+            debug_assert_eq!(start, shard.start);
+            let mut scratch = ZScratch::new(self.k_max);
+            let mut out = ZShardResult {
+                n_acc: TopicWordAcc::with_capacity(
+                    zp.iter().map(|d| d.len()).sum::<usize>() / 2 + 16,
+                ),
+                hist: DocCountHist::new(self.k_max),
+                zero_mass_tokens: 0,
+                flag_tokens: 0,
+                sparse_work: 0,
+            };
+            for (off, (zd, md)) in zp.iter_mut().zip(mp.iter_mut()).enumerate() {
+                let d = shard.start + off;
+                self.resample_doc(d, &docs[d], zd, md, &mut scratch, &mut out);
+            }
+            out
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::TopicWordRows;
+
+    /// Dense reference: enumerate P(z=k) ∝ φ_{k,v}(αΨ_k + m_k) exactly.
+    fn dense_conditional(
+        phi: &PhiMatrix,
+        psi: &[f64],
+        alpha: f64,
+        v: u32,
+        mdense: &[u32],
+    ) -> Vec<f64> {
+        let k_max = psi.len();
+        let mut w = vec![0.0f64; k_max];
+        for k in 0..k_max {
+            let p = phi.get(k as u32, v);
+            w[k] = p * (alpha * psi[k] + mdense[k] as f64);
+        }
+        let s: f64 = w.iter().sum();
+        if s > 0.0 {
+            w.iter_mut().for_each(|x| *x /= s);
+        }
+        w
+    }
+
+    fn small_phi() -> PhiMatrix {
+        // K=4, V=3
+        PhiMatrix::from_count_rows(
+            3,
+            &[
+                vec![(0, 5), (1, 5)],
+                vec![(1, 2), (2, 8)],
+                vec![(0, 1)],
+                vec![], // dead topic
+            ],
+        )
+    }
+
+    #[test]
+    fn word_tables_mass_matches_sum() {
+        let phi = small_phi();
+        let psi = [0.4, 0.3, 0.2, 0.1];
+        let alpha = 0.7;
+        let t = WordTables::build(&phi, &psi, alpha, 2);
+        for v in 0..3u32 {
+            let want: f64 = (0..4)
+                .map(|k| phi.get(k as u32, v) * alpha * psi[k])
+                .sum();
+            assert!((t.mass(v) - want).abs() < 1e-12, "v={v}");
+        }
+    }
+
+    #[test]
+    fn word_tables_draw_distribution() {
+        let phi = small_phi();
+        let psi = [0.4, 0.3, 0.2, 0.1];
+        let alpha = 1.0;
+        let t = WordTables::build(&phi, &psi, alpha, 1);
+        let mut rng = Pcg64::new(1);
+        let mut counts = [0usize; 4];
+        let reps = 200_000;
+        for _ in 0..reps {
+            counts[t.sample(1, &mut rng) as usize] += 1;
+        }
+        // weights at v=1: k0: .5*.4, k1: .2*.3 -> normalized
+        let w0 = 0.5 * 0.4;
+        let w1 = 0.2 * 0.3;
+        let p0 = w0 / (w0 + w1);
+        let got = counts[0] as f64 / reps as f64;
+        assert!((got - p0).abs() < 0.01, "{got} vs {p0}");
+        assert_eq!(counts[2], 0, "φ_{{2,1}} = 0");
+        assert_eq!(counts[3], 0);
+    }
+
+    #[test]
+    fn sweep_token_distribution_matches_dense_enumeration() {
+        // Freeze Φ, Ψ, and one document with a single token; resampling
+        // that token repeatedly must match the dense conditional.
+        let phi = small_phi();
+        let psi = [0.4, 0.3, 0.2, 0.1];
+        let alpha = 0.9;
+        let tables = WordTables::build(&phi, &psi, alpha, 1);
+        // document: tokens [1, 1, 0], assignments start at [0, 1, 0]
+        let doc = vec![1u32, 1, 0];
+        let docs = vec![doc.clone()];
+        let mut counts = vec![[0usize; 4]; 3];
+        let reps = 60_000;
+        for rep in 0..reps {
+            let root = Pcg64::new(500 + rep as u64);
+            let sweep = ZSweep {
+                phi: &phi,
+                psi: &psi,
+                tables: &tables,
+                alpha,
+                k_max: 4,
+                seed_root: &root,
+                iteration: 3,
+            };
+            let mut z = vec![vec![0u32, 1, 0]];
+            let mut m: Vec<DocTopics> =
+                vec![z[0].iter().copied().collect()];
+            let plan = Sharding::even(1, 1);
+            sweep.run(&docs, &mut z, &mut m, &plan);
+            for (i, &k) in z[0].iter().enumerate() {
+                counts[i][k as usize] += 1;
+            }
+        }
+        // Check the FIRST token's distribution analytically: at its
+        // draw, m^{-i} = {0:1, 1:1} (the other two tokens unchanged).
+        let mdense = [1u32, 1, 0, 0];
+        let want = dense_conditional(&phi, &psi, alpha, 1, &mdense);
+        for k in 0..4 {
+            let got = counts[0][k] as f64 / reps as f64;
+            assert!(
+                (got - want[k]).abs() < 0.015,
+                "token0 k={k}: {got} vs {}",
+                want[k]
+            );
+        }
+    }
+
+    #[test]
+    fn sweep_shard_invariant() {
+        // Same corpus, same seed, different shard counts → identical z.
+        use crate::corpus::synthetic::HdpCorpusSpec;
+        let (corpus, _) = HdpCorpusSpec {
+            vocab: 120,
+            topics: 5,
+            gamma: 2.0,
+            alpha: 1.0,
+            topic_beta: 0.1,
+            docs: 40,
+            mean_doc_len: 25.0,
+            len_sigma: 0.3,
+            min_doc_len: 5,
+        }
+        .generate(8);
+        // Build some non-trivial state.
+        let mut acc = TopicWordAcc::with_capacity(256);
+        let mut rng = Pcg64::new(3);
+        let mut z: Vec<Vec<u32>> = corpus
+            .docs
+            .iter()
+            .map(|d| d.iter().map(|_| rng.below(6) as u32).collect())
+            .collect();
+        for (doc, zd) in corpus.docs.iter().zip(&z) {
+            for (&v, &k) in doc.iter().zip(zd) {
+                acc.add(k, v, 1);
+            }
+        }
+        let n = TopicWordRows::merge_from(8, &mut [acc]);
+        let root = Pcg64::new(77);
+        let phi = super::super::phi::sample_phi(&root, &n, 0.05, 120, 1);
+        let psi = [0.3, 0.2, 0.15, 0.1, 0.1, 0.05, 0.05, 0.05];
+        let tables = WordTables::build(&phi, &psi, 0.5, 1);
+        let sweep = ZSweep {
+            phi: &phi,
+            psi: &psi,
+            tables: &tables,
+            alpha: 0.5,
+            k_max: 8,
+            seed_root: &root,
+            iteration: 1,
+        };
+        let mut m: Vec<DocTopics> =
+            z.iter().map(|zd| zd.iter().copied().collect()).collect();
+        let mut z1 = z.clone();
+        let mut m1 = m.clone();
+        sweep.run(&corpus.docs, &mut z1, &mut m1, &Sharding::even(40, 1));
+        sweep.run(&corpus.docs, &mut z, &mut m, &Sharding::even(40, 7));
+        assert_eq!(z, z1, "chains must not depend on shard layout");
+    }
+
+    #[test]
+    fn sweep_conserves_counts_and_fills_results() {
+        use crate::corpus::synthetic::HdpCorpusSpec;
+        let (corpus, _) = HdpCorpusSpec {
+            vocab: 80,
+            topics: 4,
+            gamma: 1.0,
+            alpha: 1.0,
+            topic_beta: 0.1,
+            docs: 25,
+            mean_doc_len: 30.0,
+            len_sigma: 0.3,
+            min_doc_len: 5,
+        }
+        .generate(9);
+        let mut z: Vec<Vec<u32>> =
+            corpus.docs.iter().map(|d| vec![0u32; d.len()]).collect();
+        let mut m: Vec<DocTopics> =
+            z.iter().map(|zd| zd.iter().copied().collect()).collect();
+        let mut acc = TopicWordAcc::with_capacity(256);
+        for (doc, zd) in corpus.docs.iter().zip(&z) {
+            for (&v, &k) in doc.iter().zip(zd) {
+                acc.add(k, v, 1);
+            }
+        }
+        let n = TopicWordRows::merge_from(6, &mut [acc]);
+        let root = Pcg64::new(5);
+        let phi = super::super::phi::sample_phi(&root, &n, 0.05, 80, 1);
+        let psi = [0.4, 0.2, 0.15, 0.1, 0.1, 0.05];
+        let tables = WordTables::build(&phi, &psi, 0.6, 1);
+        let sweep = ZSweep {
+            phi: &phi,
+            psi: &psi,
+            tables: &tables,
+            alpha: 0.6,
+            k_max: 6,
+            seed_root: &root,
+            iteration: 2,
+        };
+        let results =
+            sweep.run(&corpus.docs, &mut z, &mut m, &Sharding::even(25, 3));
+        // n accumulators hold exactly N tokens.
+        let mut total = 0u64;
+        for mut r in results {
+            total += r
+                .n_acc
+                .drain_triples()
+                .iter()
+                .map(|&(_, _, c)| c as u64)
+                .sum::<u64>();
+        }
+        assert_eq!(total, corpus.num_tokens());
+        // m consistent with z
+        for (zd, md) in z.iter().zip(&m) {
+            let rebuilt: DocTopics = zd.iter().copied().collect();
+            assert_eq!(rebuilt.total(), md.total());
+            for (k, c) in rebuilt.iter() {
+                assert_eq!(md.get(k), c);
+            }
+        }
+    }
+}

@@ -1,0 +1,223 @@
+//! Partially collapsed **Pólya urn LDA** (Terenin et al. 2019;
+//! Magnusson et al. 2018) — the fixed-K ablation baseline.
+//!
+//! Structurally this is Algorithm 2 with the nonparametric machinery
+//! removed: `Ψ` is pinned to the uniform distribution over K topics
+//! (the implicit assumption LDA makes — paper §2.4) and the `l`/`Ψ`
+//! steps are skipped. Everything else (PPU `Φ`, per-word alias tables,
+//! doubly sparse z, document-parallel sweep) is shared with
+//! [`super::pc`], which is exactly the paper's point: conditional on
+//! `Ψ`, the HDP's z step *is* the LDA z step.
+
+use crate::corpus::Corpus;
+use crate::diagnostics::loglik;
+use crate::metrics::PhaseTimers;
+use crate::par::Sharding;
+use crate::rng::Pcg64;
+use crate::sparse::{TopicWordAcc, TopicWordRows};
+
+use super::pc::{phi, zstep};
+use super::state::Assignments;
+use super::{DiagSnapshot, Trainer};
+
+/// The fixed-K Pólya urn LDA sampler.
+pub struct PcLdaSampler {
+    corpus: std::sync::Arc<Corpus>,
+    /// Number of topics K.
+    k: usize,
+    alpha: f64,
+    beta: f64,
+    threads: usize,
+    root: Pcg64,
+    assign: Assignments,
+    psi: Vec<f64>, // uniform, fixed
+    n: TopicWordRows,
+    iteration: usize,
+    /// Phase timers (comparable to the PC sampler's).
+    pub timers: PhaseTimers,
+    doc_plan: Sharding,
+}
+
+impl PcLdaSampler {
+    /// Create with random topic initialization over `k` topics (the
+    /// usual LDA initialization).
+    pub fn new(
+        corpus: std::sync::Arc<Corpus>,
+        k: usize,
+        alpha: f64,
+        beta: f64,
+        threads: usize,
+        seed: u64,
+    ) -> anyhow::Result<Self> {
+        anyhow::ensure!(k >= 2, "LDA needs at least 2 topics");
+        let mut rng = Pcg64::with_stream(seed, 0x1da);
+        let assign = Assignments::random(&corpus, k, &mut rng);
+        let mut acc = TopicWordAcc::with_capacity(corpus.num_tokens() as usize / 2 + 16);
+        for (doc, zd) in corpus.docs.iter().zip(&assign.z) {
+            for (&v, &kk) in doc.iter().zip(zd) {
+                acc.add(kk, v, 1);
+            }
+        }
+        let n = TopicWordRows::merge_from(k, &mut [acc]);
+        let doc_plan = Sharding::weighted(&corpus.doc_weights(), threads);
+        Ok(Self {
+            corpus,
+            k,
+            alpha,
+            beta,
+            threads,
+            root: Pcg64::with_stream(seed, 0x1da2),
+            assign,
+            psi: vec![1.0 / k as f64; k],
+            n,
+            iteration: 0,
+            timers: PhaseTimers::new(),
+            doc_plan,
+        })
+    }
+
+    /// Topic-word statistic.
+    pub fn n(&self) -> &TopicWordRows {
+        &self.n
+    }
+}
+
+impl Trainer for PcLdaSampler {
+    fn name(&self) -> &'static str {
+        "pclda"
+    }
+
+    fn step(&mut self) -> anyhow::Result<()> {
+        use std::time::Instant;
+        let iter = self.iteration as u64 + 1;
+        let vocab = self.corpus.vocab_size();
+        let root = self.root.clone();
+        let t0 = Instant::now();
+        let phi_m = phi::sample_phi(
+            &root.stream(iter.wrapping_mul(0x9e37) ^ 0x1f1),
+            &self.n,
+            self.beta,
+            vocab,
+            self.threads,
+        );
+        self.timers.add("phi", t0.elapsed());
+        let t0 = Instant::now();
+        // α·Ψ_k = α/K — the LDA symmetric document prior.
+        let tables = zstep::WordTables::build(&phi_m, &self.psi, self.alpha, self.threads);
+        self.timers.add("alias", t0.elapsed());
+        let sweep = zstep::ZSweep {
+            phi: &phi_m,
+            psi: &self.psi,
+            tables: &tables,
+            alpha: self.alpha,
+            k_max: self.k,
+            seed_root: &root,
+            iteration: iter,
+        };
+        let t0 = Instant::now();
+        let results = sweep.run(
+            &self.corpus.docs,
+            &mut self.assign.z,
+            &mut self.assign.m,
+            &self.doc_plan,
+        );
+        self.timers.add("z", t0.elapsed());
+        let t0 = Instant::now();
+        let mut accs: Vec<TopicWordAcc> = results.into_iter().map(|r| r.n_acc).collect();
+        self.n = TopicWordRows::merge_from(self.k, &mut accs);
+        self.timers.add("merge", t0.elapsed());
+        self.iteration += 1;
+        Ok(())
+    }
+
+    fn diagnostics(&self) -> DiagSnapshot {
+        let rows = self.topic_word_rows();
+        let ll = loglik::joint_loglik(
+            &rows,
+            &self.assign.z,
+            &self.psi,
+            self.alpha,
+            self.beta,
+            self.corpus.vocab_size(),
+            self.threads,
+        );
+        let mut tokens_per_topic: Vec<u64> =
+            self.n.row_totals().iter().copied().filter(|&t| t > 0).collect();
+        tokens_per_topic.sort_unstable_by(|a, b| b.cmp(a));
+        DiagSnapshot {
+            log_likelihood: ll,
+            active_topics: self.n.active_topics(),
+            flag_topic_tokens: 0,
+            total_tokens: self.n.total(),
+            tokens_per_topic,
+        }
+    }
+
+    fn assignments(&self) -> &[Vec<u32>] {
+        &self.assign.z
+    }
+
+    fn topic_word_rows(&self) -> Vec<Vec<(u32, u32)>> {
+        (0..self.k).map(|k| self.n.row(k).to_vec()).collect()
+    }
+
+    fn corpus(&self) -> &Corpus {
+        &self.corpus
+    }
+
+    fn iterations_done(&self) -> usize {
+        self.iteration
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::corpus::synthetic::HdpCorpusSpec;
+
+    fn tiny() -> std::sync::Arc<Corpus> {
+        let (c, _) = HdpCorpusSpec {
+            vocab: 150,
+            topics: 5,
+            gamma: 1.0,
+            alpha: 1.0,
+            topic_beta: 0.05,
+            docs: 60,
+            mean_doc_len: 30.0,
+            len_sigma: 0.3,
+            min_doc_len: 8,
+        }
+        .generate(51);
+        std::sync::Arc::new(c)
+    }
+
+    #[test]
+    fn runs_and_improves() {
+        let corpus = tiny();
+        let total = corpus.num_tokens();
+        let mut s = PcLdaSampler::new(corpus.clone(), 10, 0.1, 0.05, 2, 3).unwrap();
+        s.step().unwrap();
+        let first = s.diagnostics();
+        assert_eq!(first.total_tokens, total);
+        for _ in 0..20 {
+            s.step().unwrap();
+        }
+        let last = s.diagnostics();
+        assert_eq!(last.total_tokens, total);
+        assert!(last.log_likelihood > first.log_likelihood);
+        assert!(last.active_topics <= 10);
+        s.assign.check_consistency(&corpus).unwrap();
+    }
+
+    #[test]
+    fn thread_invariant() {
+        let corpus = tiny();
+        let mut a = PcLdaSampler::new(corpus.clone(), 8, 0.1, 0.05, 1, 7).unwrap();
+        let mut b = PcLdaSampler::new(corpus, 8, 0.1, 0.05, 3, 7).unwrap();
+        for _ in 0..3 {
+            a.step().unwrap();
+            b.step().unwrap();
+        }
+        assert_eq!(a.assignments(), b.assignments());
+    }
+}

@@ -1,0 +1,135 @@
+//! Topic assignments and shared sufficient statistics.
+
+use crate::corpus::Corpus;
+use crate::rng::Pcg64;
+use crate::sparse::DocTopics;
+
+/// Topic assignments `z` and the per-document statistic `m` they imply.
+#[derive(Clone, Debug, Default)]
+pub struct Assignments {
+    /// `z[d][i]` = topic of token `i` in document `d`.
+    pub z: Vec<Vec<u32>>,
+    /// `m[d]` = sparse per-document topic counts.
+    pub m: Vec<DocTopics>,
+}
+
+impl Assignments {
+    /// Initialize every token to topic 0 — the paper follows Teh et al.
+    /// (2006) and starts from a single topic, letting the sampler grow
+    /// the topic count.
+    pub fn single_topic(corpus: &Corpus) -> Self {
+        let z: Vec<Vec<u32>> = corpus.docs.iter().map(|d| vec![0u32; d.len()]).collect();
+        let m = z
+            .iter()
+            .map(|zd| {
+                let mut m = DocTopics::with_capacity(4);
+                for _ in 0..zd.len() {
+                    m.inc(0);
+                }
+                m
+            })
+            .collect();
+        Self { z, m }
+    }
+
+    /// Initialize tokens uniformly at random over `k` topics (used by
+    /// LDA and by robustness tests — the HDP experiments use
+    /// [`Assignments::single_topic`]).
+    pub fn random(corpus: &Corpus, k: usize, rng: &mut Pcg64) -> Self {
+        let mut z = Vec::with_capacity(corpus.num_docs());
+        let mut m = Vec::with_capacity(corpus.num_docs());
+        for doc in &corpus.docs {
+            let zd: Vec<u32> =
+                doc.iter().map(|_| rng.below(k as u64) as u32).collect();
+            m.push(zd.iter().copied().collect::<DocTopics>());
+            z.push(zd);
+        }
+        Self { z, m }
+    }
+
+    /// Total assigned tokens.
+    pub fn total_tokens(&self) -> u64 {
+        self.m.iter().map(|m| m.total() as u64).sum()
+    }
+
+    /// Tokens per topic over `num_topics` rows (the per-topic totals of
+    /// the implied `n`).
+    pub fn tokens_per_topic(&self, num_topics: usize) -> Vec<u64> {
+        let mut out = vec![0u64; num_topics];
+        for m in &self.m {
+            for (k, c) in m.iter() {
+                out[k as usize] += c as u64;
+            }
+        }
+        out
+    }
+
+    /// Check the `z`/`m` consistency invariant (tests / debug).
+    pub fn check_consistency(&self, corpus: &Corpus) -> anyhow::Result<()> {
+        anyhow::ensure!(self.z.len() == corpus.num_docs(), "z/doc count mismatch");
+        for (d, (zd, md)) in self.z.iter().zip(&self.m).enumerate() {
+            anyhow::ensure!(
+                zd.len() == corpus.docs[d].len(),
+                "doc {d}: token count mismatch"
+            );
+            let rebuilt: DocTopics = zd.iter().copied().collect();
+            anyhow::ensure!(
+                rebuilt.total() == md.total(),
+                "doc {d}: m total mismatch"
+            );
+            for (k, c) in rebuilt.iter() {
+                anyhow::ensure!(
+                    md.get(k) == c,
+                    "doc {d}: m[{k}] = {} but z implies {c}",
+                    md.get(k)
+                );
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::corpus::synthetic::HdpCorpusSpec;
+
+    fn corpus() -> Corpus {
+        Corpus {
+            docs: vec![vec![0, 1, 2], vec![1, 1]],
+            vocab: vec!["a".into(), "b".into(), "c".into()],
+        }
+    }
+
+    #[test]
+    fn single_topic_init() {
+        let c = corpus();
+        let a = Assignments::single_topic(&c);
+        a.check_consistency(&c).unwrap();
+        assert_eq!(a.total_tokens(), 5);
+        assert_eq!(a.tokens_per_topic(2), vec![5, 0]);
+        assert!(a.z.iter().flatten().all(|&k| k == 0));
+    }
+
+    #[test]
+    fn random_init_consistent() {
+        let spec = HdpCorpusSpec {
+            vocab: 100,
+            topics: 4,
+            gamma: 1.0,
+            alpha: 1.0,
+            topic_beta: 0.1,
+            docs: 30,
+            mean_doc_len: 20.0,
+            len_sigma: 0.3,
+            min_doc_len: 5,
+        };
+        let (c, _) = spec.generate(5);
+        let mut rng = Pcg64::new(1);
+        let a = Assignments::random(&c, 7, &mut rng);
+        a.check_consistency(&c).unwrap();
+        let tpt = a.tokens_per_topic(7);
+        assert_eq!(tpt.iter().sum::<u64>(), c.num_tokens());
+        assert!(tpt.iter().all(|&t| t > 0), "all 7 topics should be hit");
+    }
+}

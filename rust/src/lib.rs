@@ -1,0 +1,37 @@
+//! # hdp-sparse
+//!
+//! Reproduction of *Sparse Parallel Training of Hierarchical Dirichlet
+//! Process Topic Models* (Terenin, Magnusson & Jonsson, EMNLP 2020).
+//!
+//! The crate is the Layer-3 (rust) coordinator of a three-layer stack:
+//!
+//! * **L3 (this crate)** — the paper's contribution: the doubly sparse,
+//!   data-parallel, partially collapsed Gibbs sampler for the HDP topic
+//!   model ([`hdp::pc`]), its baselines (direct assignment [`hdp::da`],
+//!   subcluster split-merge [`hdp::ssm`], partially collapsed LDA
+//!   [`hdp::pclda`]), and every substrate they need: RNG and
+//!   distribution samplers ([`rng`]), alias tables ([`alias`]), sparse
+//!   count matrices ([`sparse`]), a thread pool ([`par`]), corpus
+//!   ingestion and synthesis ([`corpus`]), config ([`config`]),
+//!   diagnostics ([`diagnostics`]) and metrics ([`metrics`]).
+//! * **L2/L1 (python, build-time only)** — dense evaluation graphs
+//!   (model log-likelihood, dense z-conditional scoring) written in JAX
+//!   with Pallas kernels, AOT-lowered to HLO text in `artifacts/`.
+//! * **Runtime bridge** ([`runtime`]) — loads the HLO artifacts via the
+//!   `xla` crate's PJRT CPU client and executes them tile-by-tile from
+//!   the diagnostics path. Python never runs at training time.
+
+pub mod alias;
+pub mod benchkit;
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod corpus;
+pub mod diagnostics;
+pub mod experiments;
+pub mod hdp;
+pub mod metrics;
+pub mod par;
+pub mod rng;
+pub mod runtime;
+pub mod sparse;

@@ -1,0 +1,56 @@
+//! `repro` — the leader binary: train HDP topic models with the
+//! paper's sparse parallel sampler, run baselines, and regenerate every
+//! table and figure of the paper.
+//!
+//! ```text
+//! repro train     --corpus ap --sampler pc --iterations 500 --threads 4
+//! repro exp all   [--scale 1.0] [--out-dir results] [--quick]
+//! repro exp table2 | fig1-small | fig1-neurips | fig1-pubmed | topics
+//! repro corpus    --name pubmed
+//! repro eval-xla  --corpus tiny         # PJRT artifact cross-check
+//! ```
+
+use hdp_sparse::cli::Args;
+use hdp_sparse::experiments;
+
+const USAGE: &str = "\
+repro — sparse parallel HDP topic model training (EMNLP 2020 reproduction)
+
+USAGE:
+  repro train    [--corpus NAME] [--sampler pc|da|ssm|pclda] [--iterations N]
+                 [--threads N] [--seed N] [--alpha F] [--beta F] [--gamma F]
+                 [--k-max N] [--eval-every N] [--time-budget SECS] [--out-dir DIR]
+                 [--save CKPT] [--heldout FRAC]
+  repro exp      <table2|fig1-small|fig1-neurips|fig1-pubmed|topics|all>
+                 [--scale F] [--threads N] [--seed N] [--out-dir DIR] [--quick]
+                 [--corpus NAME] [--all]           (topics only)
+  repro corpus   --name NAME [--seed N]
+  repro eval-xla [--corpus NAME] [--iterations N]
+  repro help
+
+Registered corpora: tiny, small, ap, cgcbib, neurips, pubmed (synthetic
+analogs; set HDP_CORPUS_DIR to use real UCI bag-of-words files).
+";
+
+fn main() {
+    let args = Args::from_env();
+    let cmd = args.positional(0).unwrap_or("help").to_string();
+    let result = match cmd.as_str() {
+        "train" => experiments::cmd_train(&args),
+        "exp" => experiments::cmd_exp(&args),
+        "corpus" => experiments::cmd_corpus(&args),
+        "eval-xla" => experiments::cmd_eval_xla(&args),
+        "help" | "--help" | "-h" => {
+            print!("{USAGE}");
+            Ok(())
+        }
+        other => {
+            eprint!("unknown command `{other}`\n\n{USAGE}");
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}

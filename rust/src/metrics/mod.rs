@@ -1,0 +1,268 @@
+//! Metrics, timers, and trace output.
+//!
+//! Every trainer emits one [`IterRecord`] per evaluated iteration; a
+//! [`TraceWriter`] streams them as CSV (the format the experiment
+//! drivers and plotting scripts consume). [`PhaseTimers`] accumulates
+//! per-phase wall-clock so the perf pass and Fig 1(i) (time per
+//! iteration) come from the same instrumentation.
+
+use std::io::Write;
+use std::time::{Duration, Instant};
+
+/// Wall-clock accumulator for the sampler phases.
+#[derive(Clone, Debug, Default)]
+pub struct PhaseTimers {
+    /// (phase name, accumulated time, invocation count)
+    entries: Vec<(&'static str, Duration, u64)>,
+}
+
+impl PhaseTimers {
+    /// Create with no phases registered.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Add `elapsed` to `phase`.
+    pub fn add(&mut self, phase: &'static str, elapsed: Duration) {
+        for e in self.entries.iter_mut() {
+            if e.0 == phase {
+                e.1 += elapsed;
+                e.2 += 1;
+                return;
+            }
+        }
+        self.entries.push((phase, elapsed, 1));
+    }
+
+    /// Time a closure and attribute it to `phase`.
+    pub fn time<R>(&mut self, phase: &'static str, f: impl FnOnce() -> R) -> R {
+        let t0 = Instant::now();
+        let r = f();
+        self.add(phase, t0.elapsed());
+        r
+    }
+
+    /// Accumulated seconds for `phase` (0 when unknown).
+    pub fn seconds(&self, phase: &str) -> f64 {
+        self.entries
+            .iter()
+            .find(|e| e.0 == phase)
+            .map(|e| e.1.as_secs_f64())
+            .unwrap_or(0.0)
+    }
+
+    /// Total across phases.
+    pub fn total_seconds(&self) -> f64 {
+        self.entries.iter().map(|e| e.1.as_secs_f64()).sum()
+    }
+
+    /// `(phase, seconds, calls)` rows, insertion order.
+    pub fn rows(&self) -> Vec<(&'static str, f64, u64)> {
+        self.entries.iter().map(|e| (e.0, e.1.as_secs_f64(), e.2)).collect()
+    }
+
+    /// Human-readable summary.
+    pub fn summary(&self) -> String {
+        let total = self.total_seconds().max(1e-12);
+        let mut s = String::new();
+        for (name, secs, calls) in self.rows() {
+            s.push_str(&format!(
+                "{name:>12}: {secs:9.3}s ({:5.1}%) over {calls} calls\n",
+                100.0 * secs / total
+            ));
+        }
+        s
+    }
+
+    /// Merge another timer set into this one.
+    pub fn merge(&mut self, other: &PhaseTimers) {
+        for &(name, dur, count) in &other.entries {
+            for e in self.entries.iter_mut() {
+                if e.0 == name {
+                    e.1 += dur;
+                    e.2 += count;
+                }
+            }
+            if !self.entries.iter().any(|e| e.0 == name) {
+                self.entries.push((name, dur, count));
+            }
+        }
+    }
+}
+
+/// One evaluated iteration of a trainer.
+#[derive(Clone, Debug, PartialEq)]
+pub struct IterRecord {
+    /// Iteration index (1-based).
+    pub iteration: usize,
+    /// Wall-clock seconds since training started.
+    pub elapsed_secs: f64,
+    /// Seconds spent in this iteration alone.
+    pub iter_secs: f64,
+    /// Log marginal likelihood of z given Ψ, Φ (paper Fig 1 metric).
+    pub log_likelihood: f64,
+    /// Topics with ≥ 1 token.
+    pub active_topics: usize,
+    /// Tokens currently assigned to the flag topic K* (§2.4: should
+    /// stay 0 when K* is large enough).
+    pub flag_topic_tokens: u64,
+    /// Total tokens (invariant check).
+    pub total_tokens: u64,
+}
+
+impl IterRecord {
+    /// CSV header matching [`IterRecord::to_csv_row`].
+    pub const CSV_HEADER: &'static str =
+        "iteration,elapsed_secs,iter_secs,log_likelihood,active_topics,flag_topic_tokens,total_tokens";
+
+    /// Serialize as a CSV row.
+    pub fn to_csv_row(&self) -> String {
+        format!(
+            "{},{:.6},{:.6},{:.6},{},{},{}",
+            self.iteration,
+            self.elapsed_secs,
+            self.iter_secs,
+            self.log_likelihood,
+            self.active_topics,
+            self.flag_topic_tokens,
+            self.total_tokens
+        )
+    }
+
+    /// Parse a CSV row produced by [`IterRecord::to_csv_row`].
+    pub fn from_csv_row(row: &str) -> anyhow::Result<Self> {
+        let f: Vec<&str> = row.split(',').collect();
+        anyhow::ensure!(f.len() == 7, "expected 7 fields, got {}", f.len());
+        Ok(Self {
+            iteration: f[0].parse()?,
+            elapsed_secs: f[1].parse()?,
+            iter_secs: f[2].parse()?,
+            log_likelihood: f[3].parse()?,
+            active_topics: f[4].parse()?,
+            flag_topic_tokens: f[5].parse()?,
+            total_tokens: f[6].parse()?,
+        })
+    }
+}
+
+/// Streaming CSV trace writer. `None` path = in-memory only (tests and
+/// library callers that want the records without I/O).
+pub struct TraceWriter {
+    out: Option<std::io::BufWriter<std::fs::File>>,
+    records: Vec<IterRecord>,
+}
+
+impl TraceWriter {
+    /// In-memory trace.
+    pub fn in_memory() -> Self {
+        Self { out: None, records: Vec::new() }
+    }
+
+    /// Trace streaming to a CSV file (header written immediately).
+    pub fn to_file(path: &std::path::Path) -> anyhow::Result<Self> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let mut out = std::io::BufWriter::new(std::fs::File::create(path)?);
+        writeln!(out, "{}", IterRecord::CSV_HEADER)?;
+        Ok(Self { out: Some(out), records: Vec::new() })
+    }
+
+    /// Append a record.
+    pub fn push(&mut self, rec: IterRecord) -> anyhow::Result<()> {
+        if let Some(out) = self.out.as_mut() {
+            writeln!(out, "{}", rec.to_csv_row())?;
+        }
+        self.records.push(rec);
+        Ok(())
+    }
+
+    /// Records so far.
+    pub fn records(&self) -> &[IterRecord] {
+        &self.records
+    }
+
+    /// Flush file output.
+    pub fn flush(&mut self) -> anyhow::Result<()> {
+        if let Some(out) = self.out.as_mut() {
+            out.flush()?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timers_accumulate() {
+        let mut t = PhaseTimers::new();
+        t.add("z", Duration::from_millis(10));
+        t.add("z", Duration::from_millis(5));
+        t.add("phi", Duration::from_millis(1));
+        assert!((t.seconds("z") - 0.015).abs() < 1e-9);
+        assert_eq!(t.rows()[0].2, 2);
+        assert!(t.total_seconds() > 0.015);
+        let r = t.time("l", || 42);
+        assert_eq!(r, 42);
+        assert!(t.seconds("l") >= 0.0);
+        let summary = t.summary();
+        assert!(summary.contains("z") && summary.contains("phi"));
+    }
+
+    #[test]
+    fn timers_merge() {
+        let mut a = PhaseTimers::new();
+        a.add("z", Duration::from_millis(10));
+        let mut b = PhaseTimers::new();
+        b.add("z", Duration::from_millis(10));
+        b.add("phi", Duration::from_millis(2));
+        a.merge(&b);
+        assert!((a.seconds("z") - 0.02).abs() < 1e-9);
+        assert!((a.seconds("phi") - 0.002).abs() < 1e-9);
+    }
+
+    #[test]
+    fn record_csv_roundtrip() {
+        let rec = IterRecord {
+            iteration: 12,
+            elapsed_secs: 3.5,
+            iter_secs: 0.25,
+            log_likelihood: -12345.678,
+            active_topics: 42,
+            flag_topic_tokens: 0,
+            total_tokens: 99999,
+        };
+        let parsed = IterRecord::from_csv_row(&rec.to_csv_row()).unwrap();
+        assert_eq!(parsed, rec);
+        assert!(IterRecord::from_csv_row("1,2,3").is_err());
+    }
+
+    #[test]
+    fn trace_writer_file_and_memory() {
+        let dir = std::env::temp_dir().join("hdp_sparse_trace_test");
+        let path = dir.join("trace.csv");
+        let mut w = TraceWriter::to_file(&path).unwrap();
+        let rec = IterRecord {
+            iteration: 1,
+            elapsed_secs: 0.1,
+            iter_secs: 0.1,
+            log_likelihood: -1.0,
+            active_topics: 3,
+            flag_topic_tokens: 0,
+            total_tokens: 10,
+        };
+        w.push(rec.clone()).unwrap();
+        w.flush().unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let mut lines = text.lines();
+        assert_eq!(lines.next().unwrap(), IterRecord::CSV_HEADER);
+        assert_eq!(
+            IterRecord::from_csv_row(lines.next().unwrap()).unwrap(),
+            rec
+        );
+        assert_eq!(w.records().len(), 1);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,265 @@
+//! Minimal data-parallel execution substrate (no external crates).
+//!
+//! The sampler's phases are bulk-synchronous: *z phase* parallel over
+//! document shards, *Φ/l phases* parallel over topic ranges, followed by
+//! a merge. [`scope_shards`] and [`parallel_for_ranges`] implement that
+//! with `std::thread::scope` — threads are spawned per phase, which at
+//! phase granularity (milliseconds to seconds) costs well under 0.1 %.
+//!
+//! [`Sharding`] computes balanced contiguous shards; for documents it
+//! can balance by *token count* rather than document count, which is the
+//! load-balancing fix the paper inherits from Magnusson et al. (2018).
+
+/// A contiguous shard `[start, end)` of some index space.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Shard {
+    pub start: usize,
+    pub end: usize,
+}
+
+impl Shard {
+    /// Number of items in the shard.
+    pub fn len(&self) -> usize {
+        self.end - self.start
+    }
+
+    /// True when the shard is empty.
+    pub fn is_empty(&self) -> bool {
+        self.start == self.end
+    }
+}
+
+/// Balanced sharding plans.
+#[derive(Clone, Debug)]
+pub struct Sharding {
+    shards: Vec<Shard>,
+}
+
+impl Sharding {
+    /// Split `0..n` into at most `parts` near-equal contiguous shards
+    /// (every shard non-empty; fewer shards when `n < parts`).
+    pub fn even(n: usize, parts: usize) -> Self {
+        let parts = parts.max(1).min(n.max(1));
+        let mut shards = Vec::with_capacity(parts);
+        if n == 0 {
+            return Self { shards };
+        }
+        let base = n / parts;
+        let extra = n % parts;
+        let mut start = 0;
+        for i in 0..parts {
+            let len = base + usize::from(i < extra);
+            shards.push(Shard { start, end: start + len });
+            start += len;
+        }
+        Self { shards }
+    }
+
+    /// Split `0..weights.len()` into at most `parts` contiguous shards
+    /// with near-equal total weight (greedy cut at the running-average
+    /// boundary). Used to shard documents by token count so that long
+    /// documents don't serialize a shard.
+    pub fn weighted(weights: &[u64], parts: usize) -> Self {
+        let n = weights.len();
+        if n == 0 || parts <= 1 {
+            return Self::even(n, parts);
+        }
+        let total: u64 = weights.iter().sum();
+        let parts = parts.min(n);
+        let target = total as f64 / parts as f64;
+        let mut shards = Vec::with_capacity(parts);
+        let mut start = 0usize;
+        let mut acc = 0u64;
+        let mut cut = target;
+        for (i, &w) in weights.iter().enumerate() {
+            acc += w;
+            let remaining_shards = parts - shards.len();
+            let remaining_items = n - i - 1;
+            // Cut when we pass the running target, but never leave more
+            // shards to make than items remaining.
+            if (acc as f64 >= cut && shards.len() + 1 < parts)
+                || remaining_items + 1 == remaining_shards
+            {
+                shards.push(Shard { start, end: i + 1 });
+                start = i + 1;
+                cut += target;
+            }
+        }
+        if start < n {
+            shards.push(Shard { start, end: n });
+        }
+        Self { shards }
+    }
+
+    /// The shards.
+    pub fn shards(&self) -> &[Shard] {
+        &self.shards
+    }
+
+    /// Number of shards.
+    pub fn len(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// True when there are no shards (empty index space).
+    pub fn is_empty(&self) -> bool {
+        self.shards.is_empty()
+    }
+}
+
+/// Run `f(shard_index, shard)` on every shard, one OS thread per shard
+/// (plus the caller's thread for shard 0), and collect the results in
+/// shard order. Single-shard plans run inline with zero spawns.
+pub fn scope_shards<R: Send>(
+    sharding: &Sharding,
+    f: impl Fn(usize, Shard) -> R + Sync,
+) -> Vec<R> {
+    let shards = sharding.shards();
+    match shards.len() {
+        0 => Vec::new(),
+        1 => vec![f(0, shards[0])],
+        _ => {
+            let mut out: Vec<Option<R>> = Vec::new();
+            out.resize_with(shards.len(), || None);
+            std::thread::scope(|scope| {
+                let mut handles = Vec::with_capacity(shards.len() - 1);
+                let mut rest = out.as_mut_slice();
+                let (first, tail) = rest.split_first_mut().unwrap();
+                rest = tail;
+                for (i, &shard) in shards.iter().enumerate().skip(1) {
+                    let (slot, tail) = rest.split_first_mut().unwrap();
+                    rest = tail;
+                    let f = &f;
+                    handles.push(scope.spawn(move || {
+                        *slot = Some(f(i, shard));
+                    }));
+                }
+                *first = Some(f(0, shards[0]));
+            });
+            out.into_iter().map(|r| r.expect("shard completed")).collect()
+        }
+    }
+}
+
+/// Parallel-for over `0..n` in `threads` contiguous ranges; `f` receives
+/// each index. Convenience wrapper over [`scope_shards`].
+pub fn parallel_for_ranges(n: usize, threads: usize, f: impl Fn(usize) + Sync) {
+    let plan = Sharding::even(n, threads);
+    scope_shards(&plan, |_, shard| {
+        for i in shard.start..shard.end {
+            f(i);
+        }
+    });
+}
+
+/// Parallel map over `0..n` producing a `Vec<R>` in index order.
+pub fn parallel_map<R: Send + Default + Clone>(
+    n: usize,
+    threads: usize,
+    f: impl Fn(usize) -> R + Sync,
+) -> Vec<R> {
+    let plan = Sharding::even(n, threads);
+    let mut out = vec![R::default(); n];
+    let chunks = scope_shards(&plan, |_, shard| {
+        let mut local = Vec::with_capacity(shard.len());
+        for i in shard.start..shard.end {
+            local.push(f(i));
+        }
+        (shard.start, local)
+    });
+    for (start, local) in chunks {
+        for (off, r) in local.into_iter().enumerate() {
+            out[start + off] = r;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn even_sharding_covers_everything() {
+        for n in [0usize, 1, 7, 100] {
+            for parts in [1usize, 2, 3, 8, 200] {
+                let plan = Sharding::even(n, parts);
+                let mut seen = vec![false; n];
+                for s in plan.shards() {
+                    for i in s.start..s.end {
+                        assert!(!seen[i]);
+                        seen[i] = true;
+                    }
+                    assert!(!s.is_empty() || n == 0);
+                }
+                assert!(seen.iter().all(|&b| b), "n={n} parts={parts}");
+                if n > 0 {
+                    assert!(plan.len() <= parts.max(1));
+                    let lens: Vec<usize> =
+                        plan.shards().iter().map(|s| s.len()).collect();
+                    let min = lens.iter().min().unwrap();
+                    let max = lens.iter().max().unwrap();
+                    assert!(max - min <= 1, "balanced: {lens:?}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn weighted_sharding_balances_mass() {
+        // One huge doc + many small: even split by count would put the
+        // huge doc plus half the small ones in shard 0.
+        let mut weights = vec![10u64; 100];
+        weights[0] = 500;
+        let plan = Sharding::weighted(&weights, 4);
+        assert_eq!(plan.len(), 4);
+        let mass: Vec<u64> = plan
+            .shards()
+            .iter()
+            .map(|s| weights[s.start..s.end].iter().sum())
+            .collect();
+        let total: u64 = weights.iter().sum();
+        // every shard within 2x of ideal
+        for m in &mass {
+            assert!(*m <= total / 2, "mass {mass:?}");
+        }
+        // coverage
+        assert_eq!(mass.iter().sum::<u64>(), total);
+    }
+
+    #[test]
+    fn weighted_handles_degenerate() {
+        assert_eq!(Sharding::weighted(&[], 4).len(), 0);
+        let plan = Sharding::weighted(&[5, 5], 8);
+        assert_eq!(plan.shards().iter().map(|s| s.len()).sum::<usize>(), 2);
+    }
+
+    #[test]
+    fn scope_shards_returns_in_order() {
+        let plan = Sharding::even(10, 3);
+        let results = scope_shards(&plan, |i, s| (i, s.len()));
+        assert_eq!(results.len(), 3);
+        for (i, (idx, _)) in results.iter().enumerate() {
+            assert_eq!(i, *idx);
+        }
+        assert_eq!(results.iter().map(|r| r.1).sum::<usize>(), 10);
+    }
+
+    #[test]
+    fn parallel_for_touches_every_index() {
+        let counter = AtomicUsize::new(0);
+        parallel_for_ranges(1000, 4, |_| {
+            counter.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(counter.load(Ordering::Relaxed), 1000);
+    }
+
+    #[test]
+    fn parallel_map_ordered() {
+        let out = parallel_map(100, 7, |i| i * i);
+        for (i, v) in out.iter().enumerate() {
+            assert_eq!(*v, i * i);
+        }
+    }
+}

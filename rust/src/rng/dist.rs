@@ -1,0 +1,521 @@
+//! Non-uniform distribution samplers built on [`Pcg64`].
+//!
+//! Every Gibbs step of the HDP sampler reduces to draws from this
+//! module:
+//!
+//! * `Ψ` stick-breaking — [`beta`] (via [`gamma`]);
+//! * `Φ` Poisson Pólya urn — [`poisson`] (inversion + PTRS);
+//! * `l` binomial trick — [`binomial`] (BINV inversion + BTRS);
+//! * exact `Φ` Gibbs step — [`dirichlet`];
+//! * `z` indicators — categorical draws ([`categorical`] for the dense
+//!   fallback; the alias tables in [`crate::alias`] for the fast path).
+//!
+//! Rejection samplers follow Hörmann's transformed-rejection family
+//! (BTRS for binomial, PTRS for Poisson) and Marsaglia–Tsang for Gamma;
+//! all are exact (not approximations) up to floating point.
+
+use super::special::ln_factorial;
+use super::Pcg64;
+
+/// Standard normal via the Marsaglia polar method.
+pub fn std_normal(rng: &mut Pcg64) -> f64 {
+    loop {
+        let u = 2.0 * rng.f64() - 1.0;
+        let v = 2.0 * rng.f64() - 1.0;
+        let s = u * u + v * v;
+        if s > 0.0 && s < 1.0 {
+            return u * ((-2.0 * s.ln()) / s).sqrt();
+        }
+    }
+}
+
+/// Gamma(shape, 1) via Marsaglia–Tsang (2000); `shape > 0`.
+///
+/// For `shape < 1` uses the boost `Γ(a) = Γ(a+1)·U^{1/a}` (Johnk-style
+/// correction), which is exact.
+pub fn gamma(rng: &mut Pcg64, shape: f64) -> f64 {
+    debug_assert!(shape > 0.0, "gamma shape must be > 0, got {shape}");
+    if shape < 1.0 {
+        // Boost: draw Gamma(shape+1) and scale by U^(1/shape).
+        let g = gamma(rng, shape + 1.0);
+        let u = rng.f64_open();
+        return g * u.powf(1.0 / shape);
+    }
+    let d = shape - 1.0 / 3.0;
+    let c = 1.0 / (3.0 * d.sqrt());
+    loop {
+        let x = std_normal(rng);
+        let t = 1.0 + c * x;
+        if t <= 0.0 {
+            continue;
+        }
+        let v = t * t * t;
+        let u = rng.f64_open();
+        let x2 = x * x;
+        if u < 1.0 - 0.0331 * x2 * x2 {
+            return d * v;
+        }
+        if u.ln() < 0.5 * x2 + d * (1.0 - v + v.ln()) {
+            return d * v;
+        }
+    }
+}
+
+/// Gamma(shape, scale).
+#[inline]
+pub fn gamma_scaled(rng: &mut Pcg64, shape: f64, scale: f64) -> f64 {
+    gamma(rng, shape) * scale
+}
+
+/// Beta(a, b) via two Gamma draws. Exact for all `a, b > 0`.
+pub fn beta(rng: &mut Pcg64, a: f64, b: f64) -> f64 {
+    debug_assert!(a > 0.0 && b > 0.0);
+    let x = gamma(rng, a);
+    let y = gamma(rng, b);
+    let s = x + y;
+    if s <= 0.0 {
+        // Underflow corner (a, b both tiny): fall back to the Bernoulli
+        // limit of the Beta distribution.
+        return if rng.bernoulli(a / (a + b)) { 1.0 } else { 0.0 };
+    }
+    x / s
+}
+
+/// Threshold on `n·min(p,1−p)` below which binomial sampling uses BINV
+/// inversion; above it, BTRS transformed rejection.
+const BINV_CUTOFF: f64 = 10.0;
+
+/// Binomial(n, p) — exact.
+///
+/// * small `n·min(p,1−p)`: BINV sequential inversion (Kachitvichyanukul
+///   & Schmeiser 1988), O(n·p) expected;
+/// * otherwise: BTRS transformed rejection (Hörmann 1993), O(1)
+///   expected.
+///
+/// This is the hot call of the `l` "binomial trick" step (eq. 28 of the
+/// paper): one draw per (topic, per-document-count-level) pair.
+pub fn binomial(rng: &mut Pcg64, n: u64, p: f64) -> u64 {
+    debug_assert!((0.0..=1.0).contains(&p), "binomial p in [0,1], got {p}");
+    if n == 0 || p <= 0.0 {
+        return 0;
+    }
+    if p >= 1.0 {
+        return n;
+    }
+    // Work with q = min(p, 1-p), flip at the end.
+    let flipped = p > 0.5;
+    let q = if flipped { 1.0 - p } else { p };
+    let k = if (n as f64) * q < BINV_CUTOFF {
+        binomial_binv(rng, n, q)
+    } else {
+        binomial_btrs(rng, n, q)
+    };
+    if flipped {
+        n - k
+    } else {
+        k
+    }
+}
+
+/// BINV: CDF inversion by sequential search from 0. Requires `p <= 0.5`
+/// and moderate `n·p` (expected work ~ n·p).
+fn binomial_binv(rng: &mut Pcg64, n: u64, p: f64) -> u64 {
+    let q = 1.0 - p;
+    let s = p / q;
+    let a = (n + 1) as f64 * s;
+    let mut r = q.powf(n as f64);
+    if r <= 0.0 {
+        // q^n underflowed (large n, p near 0.5 shouldn't reach here, but
+        // guard anyway): fall back to summing Bernoullis in blocks.
+        let mut k = 0;
+        for _ in 0..n {
+            if rng.bernoulli(p) {
+                k += 1;
+            }
+        }
+        return k;
+    }
+    let mut u = rng.f64();
+    let mut x = 0u64;
+    loop {
+        if u < r {
+            return x;
+        }
+        u -= r;
+        x += 1;
+        if x > n {
+            // numerical tail leak: retry
+            u = rng.f64();
+            x = 0;
+            r = q.powf(n as f64);
+            continue;
+        }
+        r *= a / x as f64 - s;
+    }
+}
+
+/// BTRS: transformed rejection with squeeze (Hörmann 1993), `p <= 0.5`,
+/// `n·p >= 10`.
+fn binomial_btrs(rng: &mut Pcg64, n: u64, p: f64) -> u64 {
+    let nf = n as f64;
+    let q = 1.0 - p;
+    let spq = (nf * p * q).sqrt();
+    let b = 1.15 + 2.53 * spq;
+    let a = -0.0873 + 0.0248 * b + 0.01 * p;
+    let c = nf * p + 0.5;
+    let v_r = 0.92 - 4.2 / b;
+    let alpha = (2.83 + 5.1 / b) * spq;
+    let lpq = (p / q).ln();
+    let m = ((nf + 1.0) * p).floor();
+    let h = ln_factorial(m as u64) + ln_factorial(n - m as u64);
+    loop {
+        let u = rng.f64() - 0.5;
+        let mut v = rng.f64();
+        let us = 0.5 - u.abs();
+        let kf = ((2.0 * a / us + b) * u + c).floor();
+        if kf < 0.0 || kf > nf {
+            continue;
+        }
+        let k = kf as u64;
+        if us >= 0.07 && v <= v_r {
+            return k;
+        }
+        v = (v * alpha / (a / (us * us) + b)).ln();
+        let accept =
+            h - ln_factorial(k) - ln_factorial(n - k) + (kf - m) * lpq;
+        if v <= accept {
+            return k;
+        }
+    }
+}
+
+/// Threshold below which Poisson sampling uses multiplication/inversion.
+const POISSON_INV_CUTOFF: f64 = 10.0;
+
+/// Poisson(λ) — exact.
+///
+/// * `λ < 10`: inversion by sequential search (O(λ) expected);
+/// * `λ ≥ 10`: PTRS transformed rejection (Hörmann 1993), O(1) expected.
+///
+/// This is the hot call of the Poisson Pólya urn `Φ` step: one draw per
+/// nonzero of the topic-word statistic `n` plus one per β-process point.
+pub fn poisson(rng: &mut Pcg64, lambda: f64) -> u64 {
+    debug_assert!(lambda >= 0.0);
+    if lambda == 0.0 {
+        return 0;
+    }
+    if lambda < POISSON_INV_CUTOFF {
+        poisson_inversion(rng, lambda)
+    } else {
+        poisson_ptrs(rng, lambda)
+    }
+}
+
+fn poisson_inversion(rng: &mut Pcg64, lambda: f64) -> u64 {
+    let mut x = 0u64;
+    let mut p = (-lambda).exp();
+    let mut s = p;
+    let u = rng.f64();
+    while u > s {
+        x += 1;
+        p *= lambda / x as f64;
+        s += p;
+        if x > 10_000 {
+            break; // numerically impossible tail
+        }
+    }
+    x
+}
+
+/// PTRS transformed rejection for λ ≥ 10.
+fn poisson_ptrs(rng: &mut Pcg64, lambda: f64) -> u64 {
+    let slam = lambda.sqrt();
+    let loglam = lambda.ln();
+    let b = 0.931 + 2.53 * slam;
+    let a = -0.059 + 0.02483 * b;
+    let inv_alpha = 1.1239 + 1.1328 / (b - 3.4);
+    let v_r = 0.9277 - 3.6224 / (b - 2.0);
+    loop {
+        let u = rng.f64() - 0.5;
+        let v = rng.f64();
+        let us = 0.5 - u.abs();
+        let kf = ((2.0 * a / us + b) * u + lambda + 0.43).floor();
+        if us >= 0.07 && v <= v_r {
+            return kf as u64;
+        }
+        if kf < 0.0 || (us < 0.013 && v > us) {
+            continue;
+        }
+        let k = kf as u64;
+        if (v * inv_alpha / (a / (us * us) + b)).ln()
+            <= kf * loglam - lambda - ln_factorial(k)
+        {
+            return k;
+        }
+    }
+}
+
+/// Dirichlet(α) sample written into `out` (same length as `alpha`).
+/// Exact via normalized Gammas. Used by the *exact* (non-PPU) Φ step
+/// and by the synthetic-corpus generators.
+pub fn dirichlet_into(rng: &mut Pcg64, alpha: &[f64], out: &mut [f64]) {
+    debug_assert_eq!(alpha.len(), out.len());
+    let mut sum = 0.0;
+    for (o, &a) in out.iter_mut().zip(alpha) {
+        let g = gamma(rng, a);
+        *o = g;
+        sum += g;
+    }
+    if sum <= 0.0 {
+        // All gammas underflowed (all alphas tiny): put mass on one
+        // coordinate chosen ∝ alpha — the correct limiting behaviour.
+        let tot: f64 = alpha.iter().sum();
+        let mut u = rng.f64() * tot;
+        out.iter_mut().for_each(|o| *o = 0.0);
+        for (o, &a) in out.iter_mut().zip(alpha) {
+            u -= a;
+            if u <= 0.0 {
+                *o = 1.0;
+                return;
+            }
+        }
+        *out.last_mut().unwrap() = 1.0;
+        return;
+    }
+    for o in out.iter_mut() {
+        *o /= sum;
+    }
+}
+
+/// Symmetric Dirichlet(β, …, β) of dimension `dim`.
+pub fn symmetric_dirichlet(rng: &mut Pcg64, beta: f64, dim: usize) -> Vec<f64> {
+    let alpha = vec![beta; dim];
+    let mut out = vec![0.0; dim];
+    dirichlet_into(rng, &alpha, &mut out);
+    out
+}
+
+/// Categorical draw from (unnormalized) nonnegative weights by linear
+/// scan. O(k). The alias table ([`crate::alias`]) replaces this on hot
+/// paths; this is the reference/fallback.
+pub fn categorical(rng: &mut Pcg64, weights: &[f64]) -> usize {
+    let total: f64 = weights.iter().sum();
+    debug_assert!(total > 0.0, "categorical needs positive total mass");
+    let mut u = rng.f64() * total;
+    for (i, &w) in weights.iter().enumerate() {
+        u -= w;
+        if u <= 0.0 {
+            return i;
+        }
+    }
+    weights.len() - 1
+}
+
+/// Draw from a discrete distribution given cumulative weights
+/// (`cum[i] = w_0 + … + w_i`). O(log k) binary search.
+pub fn categorical_cum(rng: &mut Pcg64, cum: &[f64]) -> usize {
+    let total = *cum.last().expect("nonempty");
+    let u = rng.f64() * total;
+    match cum.binary_search_by(|c| c.partial_cmp(&u).unwrap()) {
+        Ok(i) => i + 1,
+        Err(i) => i,
+    }
+    .min(cum.len() - 1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn moments(xs: &[f64]) -> (f64, f64) {
+        let n = xs.len() as f64;
+        let mean = xs.iter().sum::<f64>() / n;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n;
+        (mean, var)
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut rng = Pcg64::new(1);
+        let xs: Vec<f64> = (0..200_000).map(|_| std_normal(&mut rng)).collect();
+        let (m, v) = moments(&xs);
+        assert!(m.abs() < 0.01, "mean={m}");
+        assert!((v - 1.0).abs() < 0.02, "var={v}");
+    }
+
+    #[test]
+    fn gamma_moments_large_and_small_shape() {
+        let mut rng = Pcg64::new(2);
+        for &shape in &[0.1, 0.5, 1.0, 2.5, 10.0] {
+            let xs: Vec<f64> = (0..100_000).map(|_| gamma(&mut rng, shape)).collect();
+            let (m, v) = moments(&xs);
+            assert!(
+                (m - shape).abs() < 0.06 * shape.max(0.3),
+                "shape {shape}: mean {m}"
+            );
+            assert!(
+                (v - shape).abs() < 0.12 * shape.max(0.5),
+                "shape {shape}: var {v}"
+            );
+            assert!(xs.iter().all(|&x| x >= 0.0));
+        }
+    }
+
+    #[test]
+    fn beta_moments() {
+        let mut rng = Pcg64::new(3);
+        for &(a, b) in &[(1.0, 1.0), (2.0, 5.0), (0.5, 0.5), (1.0, 9.0)] {
+            let xs: Vec<f64> = (0..100_000).map(|_| beta(&mut rng, a, b)).collect();
+            let (m, v) = moments(&xs);
+            let want_m = a / (a + b);
+            let want_v = a * b / ((a + b) * (a + b) * (a + b + 1.0));
+            assert!((m - want_m).abs() < 0.005, "Beta({a},{b}) mean {m} vs {want_m}");
+            assert!((v - want_v).abs() < 0.005, "Beta({a},{b}) var {v} vs {want_v}");
+        }
+    }
+
+    #[test]
+    fn binomial_moments_small_and_large() {
+        let mut rng = Pcg64::new(4);
+        // (n, p) pairs covering BINV, BTRS, and the p>0.5 flip.
+        for &(n, p) in &[(20u64, 0.1), (1000, 0.3), (1000, 0.9), (50, 0.5), (7, 0.99)] {
+            let xs: Vec<f64> =
+                (0..60_000).map(|_| binomial(&mut rng, n, p) as f64).collect();
+            let (m, v) = moments(&xs);
+            let want_m = n as f64 * p;
+            let want_v = n as f64 * p * (1.0 - p);
+            assert!(
+                (m - want_m).abs() < 4.0 * (want_v / 60_000.0).sqrt() + 0.02,
+                "Bin({n},{p}) mean {m} vs {want_m}"
+            );
+            assert!(
+                (v - want_v).abs() < 0.05 * want_v.max(1.0),
+                "Bin({n},{p}) var {v} vs {want_v}"
+            );
+            assert!(xs.iter().all(|&x| x <= n as f64));
+        }
+    }
+
+    #[test]
+    fn binomial_edge_cases() {
+        let mut rng = Pcg64::new(5);
+        assert_eq!(binomial(&mut rng, 0, 0.5), 0);
+        assert_eq!(binomial(&mut rng, 10, 0.0), 0);
+        assert_eq!(binomial(&mut rng, 10, 1.0), 10);
+    }
+
+    #[test]
+    fn binomial_exact_pmf_chi2() {
+        // χ² against the exact Bin(8, 0.3) pmf.
+        let mut rng = Pcg64::new(6);
+        let (n, p) = (8u64, 0.3);
+        let trials = 80_000usize;
+        let mut counts = [0usize; 9];
+        for _ in 0..trials {
+            counts[binomial(&mut rng, n, p) as usize] += 1;
+        }
+        let mut chi2 = 0.0;
+        for k in 0..=8u64 {
+            let lp = ln_factorial(n) - ln_factorial(k) - ln_factorial(n - k)
+                + k as f64 * p.ln()
+                + (n - k) as f64 * (1.0 - p).ln();
+            let e = trials as f64 * lp.exp();
+            let o = counts[k as usize] as f64;
+            chi2 += (o - e) * (o - e) / e.max(1e-9);
+        }
+        // 8 dof, 99.9th percentile ≈ 26.1
+        assert!(chi2 < 26.1, "chi2={chi2}");
+    }
+
+    #[test]
+    fn poisson_moments_small_and_large() {
+        let mut rng = Pcg64::new(7);
+        for &lam in &[0.1, 1.0, 5.0, 9.99, 10.0, 40.0, 500.0] {
+            let xs: Vec<f64> =
+                (0..60_000).map(|_| poisson(&mut rng, lam) as f64).collect();
+            let (m, v) = moments(&xs);
+            assert!(
+                (m - lam).abs() < 4.0 * (lam / 60_000.0).sqrt() + 0.02 * lam.max(0.1),
+                "Pois({lam}) mean {m}"
+            );
+            assert!((v - lam).abs() < 0.06 * lam.max(1.0), "Pois({lam}) var {v}");
+        }
+        assert_eq!(poisson(&mut rng, 0.0), 0);
+    }
+
+    #[test]
+    fn poisson_exact_pmf_chi2() {
+        let mut rng = Pcg64::new(8);
+        let lam = 3.5f64;
+        let trials = 80_000usize;
+        let kmax = 14usize;
+        let mut counts = vec![0usize; kmax + 2];
+        for _ in 0..trials {
+            let k = poisson(&mut rng, lam) as usize;
+            counts[k.min(kmax + 1)] += 1;
+        }
+        let mut chi2 = 0.0;
+        let mut tail = trials as f64;
+        for k in 0..=kmax {
+            let lp = k as f64 * lam.ln() - lam - ln_factorial(k as u64);
+            let e = trials as f64 * lp.exp();
+            tail -= e;
+            let o = counts[k] as f64;
+            chi2 += (o - e) * (o - e) / e.max(1e-9);
+        }
+        let o = counts[kmax + 1] as f64;
+        chi2 += (o - tail) * (o - tail) / tail.max(1e-9);
+        // 15 dof, 99.9th percentile ≈ 37.7
+        assert!(chi2 < 37.7, "chi2={chi2}");
+    }
+
+    #[test]
+    fn dirichlet_means_and_simplex() {
+        let mut rng = Pcg64::new(9);
+        let alpha = [1.0, 2.0, 7.0];
+        let mut acc = [0.0f64; 3];
+        let reps = 40_000;
+        for _ in 0..reps {
+            let mut out = [0.0; 3];
+            dirichlet_into(&mut rng, &alpha, &mut out);
+            let s: f64 = out.iter().sum();
+            assert!((s - 1.0).abs() < 1e-9);
+            for i in 0..3 {
+                acc[i] += out[i];
+            }
+        }
+        let tot: f64 = alpha.iter().sum();
+        for i in 0..3 {
+            let want = alpha[i] / tot;
+            let got = acc[i] / reps as f64;
+            assert!((got - want).abs() < 0.01, "dim {i}: {got} vs {want}");
+        }
+    }
+
+    #[test]
+    fn categorical_matches_weights() {
+        let mut rng = Pcg64::new(10);
+        let w = [0.1, 0.0, 0.4, 0.5];
+        let mut counts = [0usize; 4];
+        let n = 100_000;
+        for _ in 0..n {
+            counts[categorical(&mut rng, &w)] += 1;
+        }
+        assert_eq!(counts[1], 0);
+        for i in [0usize, 2, 3] {
+            let got = counts[i] as f64 / n as f64;
+            assert!((got - w[i]).abs() < 0.01, "{i}: {got}");
+        }
+        // cumulative variant agrees
+        let cum = [0.1, 0.1, 0.5, 1.0];
+        let mut counts2 = [0usize; 4];
+        for _ in 0..n {
+            counts2[categorical_cum(&mut rng, &cum)] += 1;
+        }
+        assert_eq!(counts2[1], 0);
+        for i in [0usize, 2, 3] {
+            let got = counts2[i] as f64 / n as f64;
+            assert!((got - w[i]).abs() < 0.01, "cum {i}: {got}");
+        }
+    }
+}

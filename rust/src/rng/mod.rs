@@ -1,0 +1,260 @@
+//! Pseudo-random number generation.
+//!
+//! The sampler needs (i) a fast, high-quality core generator, (ii)
+//! *independent streams* so that every document / topic / shard can be
+//! given its own deterministic generator (this is what makes parallel
+//! runs reproducible and shard-count invariant), and (iii) a set of
+//! non-uniform distribution samplers (Gamma, Beta, Binomial, Poisson,
+//! Dirichlet, …) that the HDP Gibbs steps are built from.
+//!
+//! No external crates are available in this environment, so the whole
+//! stack is implemented here from scratch:
+//!
+//! * [`Pcg64`] — PCG-XSL-RR 128/64 (O'Neill 2014). 128-bit LCG state,
+//!   64-bit output, distinct odd increments give independent streams.
+//! * [`SplitMix64`] — tiny seeding generator used to expand user seeds
+//!   into full PCG states and to hash stream ids.
+//! * [`dist`] — the distribution samplers.
+//! * [`special`] — `ln_gamma` and log-factorial machinery used by the
+//!   rejection samplers.
+
+pub mod dist;
+pub mod special;
+
+/// SplitMix64 (Steele et al. 2014). Used only for seeding/stream hashing;
+/// passes through every 64-bit value exactly once per period.
+#[derive(Clone, Debug)]
+pub struct SplitMix64 {
+    state: u64,
+}
+
+impl SplitMix64 {
+    /// Create a seeding generator from an arbitrary 64-bit seed.
+    pub fn new(seed: u64) -> Self {
+        Self { state: seed }
+    }
+
+    /// Next 64-bit value.
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9E37_79B9_7F4A_7C15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+        z ^ (z >> 31)
+    }
+}
+
+const PCG_MULT: u128 = 0x2360_ED05_1FC6_5DA4_4385_DF64_9FCC_F645;
+
+/// PCG-XSL-RR 128/64: a 128-bit linear congruential generator with an
+/// xorshift-low + random-rotate output function. Period 2^128 per
+/// stream; 2^127 distinct streams selected by the (odd) increment.
+///
+/// This is the generator used for *all* sampling in the crate. Every
+/// logical actor (document, topic row, shard) derives its own stream
+/// via [`Pcg64::stream`], which makes chains bit-reproducible under any
+/// shard layout.
+#[derive(Clone, Debug)]
+pub struct Pcg64 {
+    state: u128,
+    inc: u128, // odd
+}
+
+impl Pcg64 {
+    /// Seed from a 64-bit seed (expanded through SplitMix64) on the
+    /// default stream.
+    pub fn new(seed: u64) -> Self {
+        Self::with_stream(seed, 0)
+    }
+
+    /// Seed from a 64-bit seed on stream `stream`. Streams with
+    /// different ids are statistically independent sequences.
+    pub fn with_stream(seed: u64, stream: u64) -> Self {
+        let mut sm = SplitMix64::new(seed);
+        let s0 = sm.next_u64();
+        let s1 = sm.next_u64();
+        let mut sm2 = SplitMix64::new(stream ^ 0xDA3E_39CB_94B9_5BDB);
+        let i0 = sm2.next_u64();
+        let i1 = sm2.next_u64();
+        let state = ((s0 as u128) << 64) | s1 as u128;
+        let inc = ((((i0 as u128) << 64) | i1 as u128) << 1) | 1;
+        let mut rng = Self { state: 0, inc };
+        rng.state = rng.state.wrapping_add(state);
+        rng.step();
+        rng
+    }
+
+    /// Derive a child generator for stream `id`, deterministically from
+    /// this generator's current state *without* advancing it in a way
+    /// that depends on `id`. Children of distinct ids are independent.
+    pub fn stream(&self, id: u64) -> Pcg64 {
+        // Hash the current increment + id into a fresh (seed, stream).
+        let mut sm = SplitMix64::new((self.inc >> 1) as u64 ^ id.rotate_left(17));
+        let seed = sm.next_u64() ^ (self.state as u64);
+        Pcg64::with_stream(seed, id)
+    }
+
+    #[inline]
+    fn step(&mut self) {
+        self.state = self.state.wrapping_mul(PCG_MULT).wrapping_add(self.inc);
+    }
+
+    /// Next raw 64-bit output.
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        self.step();
+        let s = self.state;
+        let xored = ((s >> 64) as u64) ^ (s as u64);
+        let rot = (s >> 122) as u32;
+        xored.rotate_right(rot)
+    }
+
+    /// Next 32-bit output.
+    #[inline]
+    pub fn next_u32(&mut self) -> u32 {
+        (self.next_u64() >> 32) as u32
+    }
+
+    /// Uniform f64 in `[0, 1)` with 53 bits of precision.
+    #[inline]
+    pub fn f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform f64 in `(0, 1]` — safe as an argument to `ln`.
+    #[inline]
+    pub fn f64_open(&mut self) -> f64 {
+        ((self.next_u64() >> 11) + 1) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform integer in `[0, bound)` via Lemire's multiply-shift with
+    /// rejection (unbiased).
+    #[inline]
+    pub fn below(&mut self, bound: u64) -> u64 {
+        debug_assert!(bound > 0);
+        let mut x = self.next_u64();
+        let mut m = (x as u128).wrapping_mul(bound as u128);
+        let mut l = m as u64;
+        if l < bound {
+            let t = bound.wrapping_neg() % bound;
+            while l < t {
+                x = self.next_u64();
+                m = (x as u128).wrapping_mul(bound as u128);
+                l = m as u64;
+            }
+        }
+        (m >> 64) as u64
+    }
+
+    /// Uniform usize in `[0, bound)`.
+    #[inline]
+    pub fn below_usize(&mut self, bound: usize) -> usize {
+        self.below(bound as u64) as usize
+    }
+
+    /// Bernoulli draw with success probability `p`.
+    #[inline]
+    pub fn bernoulli(&mut self, p: f64) -> bool {
+        self.f64() < p
+    }
+
+    /// Fisher–Yates shuffle of a slice.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.below_usize(i + 1);
+            xs.swap(i, j);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_per_seed() {
+        let mut a = Pcg64::new(42);
+        let mut b = Pcg64::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+        let mut c = Pcg64::new(43);
+        let eq = (0..100).filter(|_| a.next_u64() == c.next_u64()).count();
+        assert!(eq < 3, "different seeds should disagree");
+    }
+
+    #[test]
+    fn streams_are_distinct_and_deterministic() {
+        let root = Pcg64::new(7);
+        let mut s1 = root.stream(1);
+        let mut s1b = root.stream(1);
+        let mut s2 = root.stream(2);
+        for _ in 0..64 {
+            assert_eq!(s1.next_u64(), s1b.next_u64());
+        }
+        let mut same = 0;
+        let mut s1c = root.stream(1);
+        for _ in 0..64 {
+            if s1c.next_u64() == s2.next_u64() {
+                same += 1;
+            }
+        }
+        assert!(same < 2);
+    }
+
+    #[test]
+    fn f64_in_unit_interval_and_uniform() {
+        let mut rng = Pcg64::new(1);
+        let n = 100_000;
+        let mut sum = 0.0;
+        let mut sumsq = 0.0;
+        for _ in 0..n {
+            let x = rng.f64();
+            assert!((0.0..1.0).contains(&x));
+            sum += x;
+            sumsq += x * x;
+        }
+        let mean = sum / n as f64;
+        let var = sumsq / n as f64 - mean * mean;
+        assert!((mean - 0.5).abs() < 0.005, "mean={mean}");
+        assert!((var - 1.0 / 12.0).abs() < 0.005, "var={var}");
+    }
+
+    #[test]
+    fn below_is_unbiased() {
+        let mut rng = Pcg64::new(3);
+        let bound = 7u64;
+        let mut counts = [0usize; 7];
+        let n = 140_000;
+        for _ in 0..n {
+            counts[rng.below(bound) as usize] += 1;
+        }
+        let expect = n as f64 / bound as f64;
+        for (i, &c) in counts.iter().enumerate() {
+            assert!(
+                (c as f64 - expect).abs() < 5.0 * expect.sqrt(),
+                "bucket {i}: {c} vs {expect}"
+            );
+        }
+    }
+
+    #[test]
+    fn shuffle_permutes() {
+        let mut rng = Pcg64::new(9);
+        let mut xs: Vec<u32> = (0..100).collect();
+        rng.shuffle(&mut xs);
+        let mut sorted = xs.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+        assert_ne!(xs, (0..100).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn f64_open_never_zero() {
+        let mut rng = Pcg64::new(11);
+        for _ in 0..10_000 {
+            assert!(rng.f64_open() > 0.0);
+        }
+    }
+}

@@ -1,0 +1,283 @@
+//! PJRT runtime: load the AOT-compiled HLO artifacts and execute them
+//! from the rust hot path.
+//!
+//! Python (jax + pallas) runs once at build time (`make artifacts`);
+//! this module makes its outputs callable at training/eval time with
+//! no python in the process:
+//!
+//! 1. [`Engine::load`] — read `artifacts/manifest.txt`, parse each
+//!    `*.hlo.txt` via `HloModuleProto::from_text_file`, and compile it
+//!    once on the PJRT CPU client;
+//! 2. [`Engine::loglik`] — stream zero-padded `(n, Φ)` f32 tiles of
+//!    the model state through the compiled `loglik_tile` executable
+//!    and sum the per-tile results (exactly what the L1 kernel's grid
+//!    does on-chip, tiled here across executions instead);
+//! 3. [`Engine::zscore`] / [`Engine::psi_stick`] — dense z-conditional
+//!    scoring batches and the stick-breaking transform.
+//!
+//! Buffers are reused across tile executions; each `execute` call
+//! copies one tile pair (H2D equivalent on CPU), so the runtime cost is
+//! dominated by the tile fill, measured in `benches/runtime_xla.rs`.
+
+use crate::sparse::{PhiMatrix, TopicWordRows};
+use anyhow::{Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+/// A compiled artifact and its declared dimensions.
+struct Artifact {
+    exe: xla::PjRtLoadedExecutable,
+    dims: Vec<usize>,
+}
+
+/// The PJRT execution engine.
+pub struct Engine {
+    #[allow(dead_code)]
+    client: xla::PjRtClient,
+    artifacts: HashMap<String, Artifact>,
+    /// Reused tile staging buffers.
+    tile_n: Vec<f32>,
+    tile_phi: Vec<f32>,
+}
+
+impl Engine {
+    /// Default artifact directory (overridable with `$HDP_ARTIFACTS`).
+    pub fn default_dir() -> PathBuf {
+        std::env::var("HDP_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|_| PathBuf::from("artifacts"))
+    }
+
+    /// Load and compile every artifact listed in `dir/manifest.txt`.
+    pub fn load(dir: &Path) -> Result<Self> {
+        let manifest = dir.join("manifest.txt");
+        let text = std::fs::read_to_string(&manifest)
+            .with_context(|| format!("reading {} (run `make artifacts`)", manifest.display()))?;
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        let mut artifacts = HashMap::new();
+        for line in text.lines() {
+            let line = line.trim();
+            if line.is_empty() {
+                continue;
+            }
+            let mut parts = line.split_ascii_whitespace();
+            let name = parts.next().context("manifest: missing name")?.to_string();
+            let dims: Vec<usize> = parts
+                .map(|p| p.parse::<usize>().context("manifest: bad dim"))
+                .collect::<Result<_>>()?;
+            let path = dir.join(format!("{name}.hlo.txt"));
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().context("non-utf8 path")?,
+            )
+            .map_err(|e| anyhow::anyhow!("parsing {}: {e:?}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client
+                .compile(&comp)
+                .map_err(|e| anyhow::anyhow!("compiling {name}: {e:?}"))?;
+            artifacts.insert(name, Artifact { exe, dims });
+        }
+        anyhow::ensure!(
+            artifacts.contains_key("loglik_tile"),
+            "manifest lacks loglik_tile"
+        );
+        let (tk, tv) = {
+            let a = &artifacts["loglik_tile"];
+            (a.dims[0], a.dims[1])
+        };
+        Ok(Self {
+            client,
+            artifacts,
+            tile_n: vec![0.0; tk * tv],
+            tile_phi: vec![0.0; tk * tv],
+        })
+    }
+
+    /// Loglik tile shape `(K_T, V_T)`.
+    pub fn loglik_tile_shape(&self) -> (usize, usize) {
+        let d = &self.artifacts["loglik_tile"].dims;
+        (d[0], d[1])
+    }
+
+    /// Names of loaded artifacts.
+    pub fn artifact_names(&self) -> Vec<&str> {
+        self.artifacts.keys().map(String::as_str).collect()
+    }
+
+    fn run1(&self, name: &str, inputs: &[xla::Literal]) -> Result<xla::Literal> {
+        let art = self
+            .artifacts
+            .get(name)
+            .with_context(|| format!("artifact {name} not loaded"))?;
+        let result = art
+            .exe
+            .execute::<xla::Literal>(inputs)
+            .map_err(|e| anyhow::anyhow!("executing {name}: {e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("fetching {name} result: {e:?}"))?;
+        // Artifacts are lowered with return_tuple=True → 1-tuples.
+        result
+            .to_tuple1()
+            .map_err(|e| anyhow::anyhow!("untupling {name} result: {e:?}"))
+    }
+
+    /// Execute one raw loglik tile pair (row-major `K_T × V_T`).
+    pub fn loglik_tile_raw(&self, n: &[f32], phi: &[f32]) -> Result<f32> {
+        let (tk, tv) = self.loglik_tile_shape();
+        anyhow::ensure!(n.len() == tk * tv && phi.len() == tk * tv, "tile size");
+        let ln = xla::Literal::vec1(n)
+            .reshape(&[tk as i64, tv as i64])
+            .map_err(|e| anyhow::anyhow!("reshape n: {e:?}"))?;
+        let lp = xla::Literal::vec1(phi)
+            .reshape(&[tk as i64, tv as i64])
+            .map_err(|e| anyhow::anyhow!("reshape phi: {e:?}"))?;
+        let out = self.run1("loglik_tile", &[ln, lp])?;
+        Ok(out.to_vec::<f32>().map_err(|e| anyhow::anyhow!("{e:?}"))?[0])
+    }
+
+    /// Model log-likelihood `Σ_{k,v} n_{k,v}·log φ_{k,v}` of a full
+    /// sparse state, streamed through the compiled tile executable.
+    ///
+    /// This is the dense cross-check of the sparse rust-native value
+    /// ([`phi_loglik_sparse`]): integration tests assert they agree.
+    pub fn loglik(&mut self, n: &TopicWordRows, phi: &PhiMatrix) -> Result<f64> {
+        let (tk, tv) = self.loglik_tile_shape();
+        let k_max = n.num_topics();
+        let vocab = phi.vocab();
+        let mut total = 0.0f64;
+        let mut k0 = 0usize;
+        while k0 < k_max {
+            // Skip all-empty topic bands quickly.
+            let band_has_tokens =
+                (k0..(k0 + tk).min(k_max)).any(|k| n.row_total(k) > 0);
+            if !band_has_tokens {
+                k0 += tk;
+                continue;
+            }
+            let mut v0 = 0usize;
+            while v0 < vocab {
+                self.fill_n_tile(n, k0, tk, v0, tv);
+                let n_tile_empty = self.tile_n.iter().all(|&x| x == 0.0);
+                if !n_tile_empty {
+                    phi.fill_tile_f32(k0, tk, v0, tv, &mut self.tile_phi);
+                    let ln = xla::Literal::vec1(&self.tile_n)
+                        .reshape(&[tk as i64, tv as i64])
+                        .map_err(|e| anyhow::anyhow!("{e:?}"))?;
+                    let lp = xla::Literal::vec1(&self.tile_phi)
+                        .reshape(&[tk as i64, tv as i64])
+                        .map_err(|e| anyhow::anyhow!("{e:?}"))?;
+                    let out = self.run1("loglik_tile", &[ln, lp])?;
+                    total += out.to_vec::<f32>().map_err(|e| anyhow::anyhow!("{e:?}"))?
+                        [0] as f64;
+                }
+                v0 += tv;
+            }
+            k0 += tk;
+        }
+        Ok(total)
+    }
+
+    fn fill_n_tile(&mut self, n: &TopicWordRows, k0: usize, tk: usize, v0: usize, tv: usize) {
+        self.tile_n.fill(0.0);
+        for (dk, k) in (k0..(k0 + tk).min(n.num_topics())).enumerate() {
+            let row = n.row(k);
+            let start = row.partition_point(|&(v, _)| (v as usize) < v0);
+            for &(v, c) in &row[start..] {
+                let v = v as usize;
+                if v >= v0 + tv {
+                    break;
+                }
+                self.tile_n[dk * tv + (v - v0)] = c as f32;
+            }
+        }
+    }
+
+    /// Dense z-conditional scoring for a token batch: inputs shaped
+    /// `(B, K)` row-major plus `psi[K]` and `alpha`; returns the
+    /// normalized `(B, K)` probabilities. `B`/`K` must match the
+    /// artifact (see manifest).
+    pub fn zscore(
+        &self,
+        phi_cols: &[f32],
+        m_rows: &[f32],
+        psi: &[f32],
+        alpha: f32,
+    ) -> Result<Vec<f32>> {
+        let d = &self.artifacts.get("zscore_tile").context("zscore_tile")?.dims;
+        let (b, k) = (d[0], d[1]);
+        anyhow::ensure!(phi_cols.len() == b * k, "phi_cols size");
+        anyhow::ensure!(m_rows.len() == b * k, "m_rows size");
+        anyhow::ensure!(psi.len() == k, "psi size");
+        let lphi = xla::Literal::vec1(phi_cols)
+            .reshape(&[b as i64, k as i64])
+            .map_err(|e| anyhow::anyhow!("{e:?}"))?;
+        let lm = xla::Literal::vec1(m_rows)
+            .reshape(&[b as i64, k as i64])
+            .map_err(|e| anyhow::anyhow!("{e:?}"))?;
+        let lpsi = xla::Literal::vec1(psi);
+        let lalpha = xla::Literal::from(alpha);
+        let out = self.run1("zscore_tile", &[lphi, lm, lpsi, lalpha])?;
+        out.to_vec::<f32>().map_err(|e| anyhow::anyhow!("{e:?}"))
+    }
+
+    /// Batch shape `(B, K)` of the zscore artifact.
+    pub fn zscore_shape(&self) -> Option<(usize, usize)> {
+        self.artifacts.get("zscore_tile").map(|a| (a.dims[0], a.dims[1]))
+    }
+
+    /// Stick-breaking transform via the compiled artifact; input length
+    /// must match the manifest (pad extra sticks with 1.0 — they take
+    /// the then-zero remainder).
+    pub fn psi_stick(&self, sticks: &[f32]) -> Result<Vec<f32>> {
+        let d = &self.artifacts.get("psi_stick").context("psi_stick")?.dims;
+        anyhow::ensure!(
+            sticks.len() == d[0],
+            "sticks length {} != {}",
+            sticks.len(),
+            d[0]
+        );
+        let ls = xla::Literal::vec1(sticks);
+        let out = self.run1("psi_stick", &[ls])?;
+        out.to_vec::<f32>().map_err(|e| anyhow::anyhow!("{e:?}"))
+    }
+}
+
+/// Rust-native sparse evaluation of the same quantity as
+/// [`Engine::loglik`]: `Σ n·log φ` over the nonzeros of `n`.
+pub fn phi_loglik_sparse(n: &TopicWordRows, phi: &PhiMatrix) -> f64 {
+    let mut total = 0.0f64;
+    for k in 0..n.num_topics() {
+        for &(v, c) in n.row(k) {
+            let p = phi.get(k as u32, v);
+            if p > 0.0 {
+                total += c as f64 * p.ln();
+            }
+            // p == 0 with c > 0 cannot happen for a Φ sampled from the
+            // same z that produced n, except transiently for the PPU's
+            // zero-mass words; those tokens are skipped in the sweep
+            // and contribute nothing here either.
+        }
+    }
+    total
+}
+
+#[cfg(test)]
+mod tests {
+    // Engine tests that need compiled artifacts live in
+    // rust/tests/runtime.rs (they require `make artifacts` to have
+    // run). Here: the sparse reference only.
+    use super::*;
+    use crate::sparse::TopicWordAcc;
+
+    #[test]
+    fn sparse_loglik_by_hand() {
+        let mut acc = TopicWordAcc::with_capacity(8);
+        acc.add(0, 1, 2); // n[0][1] = 2
+        acc.add(1, 0, 3); // n[1][0] = 3
+        let n = TopicWordRows::merge_from(2, &mut [acc]);
+        // phi: k0 = {1: 1.0}, k1 = {0: 0.5, 2: 0.5}
+        let phi = PhiMatrix::from_count_rows(3, &[vec![(1, 4)], vec![(0, 2), (2, 2)]]);
+        let want = 2.0 * 1.0f64.ln() + 3.0 * 0.5f64.ln();
+        let got = phi_loglik_sparse(&n, &phi);
+        assert!((got - want).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,192 @@
+//! The `d` matrix of paper §2.6 and the `D_{k,j}` reverse cumulative
+//! sums that feed the binomial trick.
+//!
+//! `d[k][p]` counts documents whose topic-`k` count `m_{d,k}` equals
+//! exactly `p`; `D_{k,j} = Σ_{p ≥ j} d[k][p]` is the number of documents
+//! with `m_{d,k} ≥ j`. The `l` step then draws
+//! `l_k = Σ_j Bin(D_{k,j}, αΨ_k / (αΨ_k + j − 1))` — constant in the
+//! number of documents.
+//!
+//! Rows are kept as sparse `(p, count)` lists: a topic's per-document
+//! counts concentrate on few distinct values, so rows are short. Shard
+//! accumulators merge the same way as the topic-word statistic.
+
+/// Sparse per-topic histogram of per-document counts.
+#[derive(Clone, Debug, Default)]
+pub struct DocCountHist {
+    /// `rows[k]` = sorted `(p, #docs with m_{d,k} == p)`, p ≥ 1.
+    rows: Vec<Vec<(u32, u32)>>,
+}
+
+impl DocCountHist {
+    /// Empty histogram over `num_topics` topics.
+    pub fn new(num_topics: usize) -> Self {
+        Self { rows: vec![Vec::new(); num_topics] }
+    }
+
+    /// Record one document's statistic `m_d`: for every `(k, p)` with
+    /// `p = m_{d,k} > 0`, increment `d[k][p]`. Unsorted insert; rows are
+    /// sorted at [`DocCountHist::finish`].
+    pub fn record_doc(&mut self, m_entries: &[(u32, u32)]) {
+        for &(k, p) in m_entries {
+            debug_assert!(p > 0);
+            self.rows[k as usize].push((p, 1));
+        }
+    }
+
+    /// Sort + deduplicate all rows (sums duplicate `p` entries).
+    pub fn finish(&mut self) {
+        for row in self.rows.iter_mut() {
+            row.sort_unstable_by_key(|&(p, _)| p);
+            let mut w = 0usize;
+            for i in 0..row.len() {
+                if w > 0 && row[w - 1].0 == row[i].0 {
+                    row[w - 1].1 += row[i].1;
+                } else {
+                    row[w] = row[i];
+                    w += 1;
+                }
+            }
+            row.truncate(w);
+        }
+    }
+
+    /// Merge shard histograms into one finished histogram.
+    pub fn merge(num_topics: usize, shards: Vec<DocCountHist>) -> Self {
+        let mut out = Self::new(num_topics);
+        for shard in shards {
+            for (k, row) in shard.rows.into_iter().enumerate() {
+                out.rows[k].extend(row);
+            }
+        }
+        out.finish();
+        out
+    }
+
+    /// Number of topic rows.
+    pub fn num_topics(&self) -> usize {
+        self.rows.len()
+    }
+
+    /// Sorted `(p, count)` row for topic `k` (valid after `finish`).
+    pub fn row(&self, k: usize) -> &[(u32, u32)] {
+        &self.rows[k]
+    }
+
+    /// Iterate `(j, D_{k,j})` for `j = 1 ..= max_p` **restricted to the
+    /// distinct j-runs**: the reverse cumulative sum `D_{k,j}` is a step
+    /// function, constant for `j` in `(p_{i-1}, p_i]`; the callback
+    /// receives each maximal run `(j_lo, j_hi, D)` with `D = D_{k,j}`
+    /// for all `j` in `[j_lo, j_hi]`.
+    ///
+    /// The binomial-trick consumer still needs a draw *per j* (the
+    /// success probability depends on j), but run-length exposure lets
+    /// it skip empty levels without scanning.
+    pub fn for_runs(&self, k: usize, mut f: impl FnMut(u32, u32, u32)) {
+        let row = &self.rows[k];
+        if row.is_empty() {
+            return;
+        }
+        // Suffix sums over the sorted distinct p values.
+        // D_{k,j} for j in (p_{i-1}, p_i] equals sum of counts with p >= p_i.
+        let mut suffix = 0u32;
+        let mut suffixes = vec![0u32; row.len()];
+        for (i, &(_, c)) in row.iter().enumerate().rev() {
+            suffix += c;
+            suffixes[i] = suffix;
+        }
+        let mut j_lo = 1u32;
+        for (i, &(p, _)) in row.iter().enumerate() {
+            f(j_lo, p, suffixes[i]);
+            j_lo = p + 1;
+        }
+    }
+
+    /// `D_{k,j}` for a single `(k, j)` — O(log nnz), used by tests and
+    /// the reference (non-run) l sampler.
+    pub fn docs_with_at_least(&self, k: usize, j: u32) -> u32 {
+        let row = &self.rows[k];
+        let start = row.partition_point(|&(p, _)| p < j);
+        row[start..].iter().map(|&(_, c)| c).sum()
+    }
+
+    /// Largest per-document count recorded for topic `k` (0 if none).
+    pub fn max_count(&self, k: usize) -> u32 {
+        self.rows[k].last().map(|&(p, _)| p).unwrap_or(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn hist_from_docs(num_topics: usize, docs: &[&[(u32, u32)]]) -> DocCountHist {
+        let mut h = DocCountHist::new(num_topics);
+        for d in docs {
+            h.record_doc(d);
+        }
+        h.finish();
+        h
+    }
+
+    #[test]
+    fn records_and_dedups() {
+        // doc1: m = {k0: 2, k1: 1}; doc2: m = {k0: 2}; doc3: m = {k0: 5}
+        let h = hist_from_docs(2, &[&[(0, 2), (1, 1)], &[(0, 2)], &[(0, 5)]]);
+        assert_eq!(h.row(0), &[(2, 2), (5, 1)]);
+        assert_eq!(h.row(1), &[(1, 1)]);
+        assert_eq!(h.max_count(0), 5);
+        assert_eq!(h.max_count(1), 1);
+    }
+
+    #[test]
+    fn docs_with_at_least_matches_definition() {
+        let h = hist_from_docs(1, &[&[(0, 2)], &[(0, 2)], &[(0, 5)], &[(0, 1)]]);
+        // counts: 1×1, 2×2, 5×1
+        assert_eq!(h.docs_with_at_least(0, 1), 4);
+        assert_eq!(h.docs_with_at_least(0, 2), 3);
+        assert_eq!(h.docs_with_at_least(0, 3), 1);
+        assert_eq!(h.docs_with_at_least(0, 5), 1);
+        assert_eq!(h.docs_with_at_least(0, 6), 0);
+    }
+
+    #[test]
+    fn runs_cover_every_level() {
+        let h = hist_from_docs(1, &[&[(0, 2)], &[(0, 2)], &[(0, 5)], &[(0, 1)]]);
+        let mut levels = std::collections::HashMap::new();
+        h.for_runs(0, |lo, hi, d| {
+            for j in lo..=hi {
+                levels.insert(j, d);
+            }
+        });
+        // Explicit D values per level from the definition.
+        for j in 1..=5u32 {
+            assert_eq!(levels[&j], h.docs_with_at_least(0, j), "level {j}");
+        }
+        assert_eq!(levels.len(), 5);
+    }
+
+    #[test]
+    fn merge_equals_single() {
+        let mut a = DocCountHist::new(2);
+        let mut b = DocCountHist::new(2);
+        a.record_doc(&[(0, 2), (1, 3)]);
+        b.record_doc(&[(0, 2)]);
+        b.record_doc(&[(1, 1)]);
+        let merged = DocCountHist::merge(2, vec![a, b]);
+        let whole =
+            hist_from_docs(2, &[&[(0, 2), (1, 3)], &[(0, 2)], &[(1, 1)]]);
+        for k in 0..2 {
+            assert_eq!(merged.row(k), whole.row(k));
+        }
+    }
+
+    #[test]
+    fn empty_topic_has_no_runs() {
+        let h = hist_from_docs(2, &[&[(0, 1)]]);
+        let mut called = false;
+        h.for_runs(1, |_, _, _| called = true);
+        assert!(!called);
+        assert_eq!(h.docs_with_at_least(1, 1), 0);
+    }
+}

@@ -1,0 +1,184 @@
+//! The per-document topic sufficient statistic `m_d`.
+//!
+//! Natural-language documents touch only a handful of topics, so `m_d`
+//! is a small unordered `(topic, count)` vector with linear-scan access:
+//! for realistic support sizes (a few dozen) this beats hash maps and
+//! trees by a wide margin and is the layout the doubly sparse bucket-(b)
+//! iteration wants anyway (paper §2.5: "iterate over whichever of `m`
+//! and `Φ` has fewer non-zero entries").
+
+/// Sparse per-document topic counts `m_{d,·}`.
+#[derive(Clone, Debug, Default)]
+pub struct DocTopics {
+    entries: Vec<(u32, u32)>, // (topic, count), count > 0, unordered
+    total: u32,
+}
+
+impl DocTopics {
+    /// Empty statistic.
+    pub fn new() -> Self {
+        Self { entries: Vec::new(), total: 0 }
+    }
+
+    /// With preallocated capacity for `cap` distinct topics.
+    pub fn with_capacity(cap: usize) -> Self {
+        Self { entries: Vec::with_capacity(cap), total: 0 }
+    }
+
+    /// Number of distinct topics in the document (`K_d^{(m)}`).
+    #[inline]
+    pub fn nnz(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// Total token count `Σ_k m_{d,k}` (= `N_d` when every token is
+    /// assigned).
+    #[inline]
+    pub fn total(&self) -> u32 {
+        self.total
+    }
+
+    /// Count for topic `k` (0 if absent). O(nnz).
+    #[inline]
+    pub fn get(&self, k: u32) -> u32 {
+        self.entries
+            .iter()
+            .find(|&&(t, _)| t == k)
+            .map(|&(_, c)| c)
+            .unwrap_or(0)
+    }
+
+    /// Increment topic `k` by one.
+    #[inline]
+    pub fn inc(&mut self, k: u32) {
+        self.total += 1;
+        for e in self.entries.iter_mut() {
+            if e.0 == k {
+                e.1 += 1;
+                return;
+            }
+        }
+        self.entries.push((k, 1));
+    }
+
+    /// Decrement topic `k` by one; removes the entry when it reaches
+    /// zero (swap-remove, order not preserved). Panics in debug builds
+    /// if `k` is absent.
+    #[inline]
+    pub fn dec(&mut self, k: u32) {
+        for i in 0..self.entries.len() {
+            if self.entries[i].0 == k {
+                self.total -= 1;
+                self.entries[i].1 -= 1;
+                if self.entries[i].1 == 0 {
+                    self.entries.swap_remove(i);
+                }
+                return;
+            }
+        }
+        debug_assert!(false, "dec on absent topic {k}");
+    }
+
+    /// Set topic `k` to `count > 0`, assuming `k` is not present
+    /// (bulk rebuild path — the z sweep compacts its dense scratch back
+    /// through this).
+    #[inline]
+    pub fn set(&mut self, k: u32, count: u32) {
+        debug_assert!(count > 0);
+        debug_assert!(self.get(k) == 0, "set on present topic {k}");
+        self.entries.push((k, count));
+        self.total += count;
+    }
+
+    /// Iterate `(topic, count)` pairs (unordered).
+    #[inline]
+    pub fn iter(&self) -> impl Iterator<Item = (u32, u32)> + '_ {
+        self.entries.iter().copied()
+    }
+
+    /// Raw entries slice.
+    #[inline]
+    pub fn entries(&self) -> &[(u32, u32)] {
+        &self.entries
+    }
+
+    /// Remove all entries.
+    pub fn clear(&mut self) {
+        self.entries.clear();
+        self.total = 0;
+    }
+
+    /// Maximum per-topic count (`max_k m_{d,k}`), 0 when empty.
+    pub fn max_count(&self) -> u32 {
+        self.entries.iter().map(|&(_, c)| c).max().unwrap_or(0)
+    }
+}
+
+impl FromIterator<u32> for DocTopics {
+    /// Build from an iterator of topic assignments (one per token).
+    fn from_iter<I: IntoIterator<Item = u32>>(iter: I) -> Self {
+        let mut m = DocTopics::new();
+        for k in iter {
+            m.inc(k);
+        }
+        m
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn inc_dec_roundtrip() {
+        let mut m = DocTopics::new();
+        m.inc(3);
+        m.inc(3);
+        m.inc(7);
+        assert_eq!(m.get(3), 2);
+        assert_eq!(m.get(7), 1);
+        assert_eq!(m.get(5), 0);
+        assert_eq!(m.nnz(), 2);
+        assert_eq!(m.total(), 3);
+        m.dec(3);
+        assert_eq!(m.get(3), 1);
+        m.dec(3);
+        assert_eq!(m.get(3), 0);
+        assert_eq!(m.nnz(), 1);
+        assert_eq!(m.total(), 1);
+    }
+
+    #[test]
+    fn from_assignments() {
+        let m: DocTopics = [1u32, 1, 2, 9, 1].into_iter().collect();
+        assert_eq!(m.get(1), 3);
+        assert_eq!(m.get(2), 1);
+        assert_eq!(m.get(9), 1);
+        assert_eq!(m.total(), 5);
+        assert_eq!(m.max_count(), 3);
+    }
+
+    #[test]
+    fn total_conserved_under_moves() {
+        // Simulates the z step: dec old topic, inc new topic.
+        let mut m: DocTopics = [0u32, 0, 1, 2, 2, 2].into_iter().collect();
+        let before = m.total();
+        for (from, to) in [(0u32, 5u32), (2, 1), (2, 2)] {
+            m.dec(from);
+            m.inc(to);
+        }
+        assert_eq!(m.total(), before);
+        assert_eq!(m.get(0), 1);
+        assert_eq!(m.get(5), 1);
+        assert_eq!(m.get(1), 2);
+        assert_eq!(m.get(2), 2);
+    }
+
+    #[test]
+    #[should_panic]
+    #[cfg(debug_assertions)]
+    fn dec_absent_panics_in_debug() {
+        let mut m = DocTopics::new();
+        m.dec(0);
+    }
+}

@@ -1,0 +1,26 @@
+//! Sparse count structures for the HDP sampler.
+//!
+//! The paper's complexity claims rest on never materializing dense
+//! `D×K` or `K×V` objects:
+//!
+//! * [`doc_topics::DocTopics`] — the per-document topic statistic `m_d`
+//!   as a small sparse vector (document-topic sparsity, paper §2.5).
+//! * [`topic_word::TopicWordAcc`] / [`topic_word::TopicWordRows`] — the
+//!   topic-word statistic `n` accumulated shard-locally during the z
+//!   phase and merged into per-topic sorted rows (topic-word sparsity).
+//! * [`phi::PhiMatrix`] — the PPU-sampled integer `Φ` in both row
+//!   (topic) and column (word) layouts; columns drive the per-word
+//!   alias tables and the bucket-(b) lookups.
+//! * [`dmat::DocCountHist`] — the `d` matrix of §2.6 (`d[k][p]` = #docs
+//!   with exactly `p` tokens in topic `k`) and its reverse cumulative
+//!   sums `D_{k,j}` feeding the binomial trick.
+
+pub mod dmat;
+pub mod doc_topics;
+pub mod phi;
+pub mod topic_word;
+
+pub use dmat::DocCountHist;
+pub use doc_topics::DocTopics;
+pub use phi::PhiMatrix;
+pub use topic_word::{TopicWordAcc, TopicWordRows};

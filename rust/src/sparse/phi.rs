@@ -1,0 +1,237 @@
+//! The sparse topic-word probability matrix `Φ`.
+//!
+//! Under the Poisson Pólya urn step (paper §2.5, eq. 21) each row of `Φ`
+//! is a normalized vector of *integer* Poisson draws, so most entries
+//! are exactly zero. [`PhiMatrix`] stores the nonzeros in **both**
+//! orientations:
+//!
+//! * rows (by topic) — used by diagnostics and the `Φ`-side of the
+//!   log-likelihood;
+//! * columns (by word type, CSC) — the hot layout: the per-word alias
+//!   table over bucket (a) is built from column `v`, and bucket (b)
+//!   needs `φ_{k,v}` for the topics in `m_d` (binary search in the
+//!   column) or a merge over the column, whichever side is sparser.
+
+/// Sparse `K × V` probability matrix with row and column views.
+#[derive(Clone, Debug)]
+pub struct PhiMatrix {
+    num_topics: usize,
+    vocab: usize,
+    /// Row view: `rows[k]` = sorted `(word, prob)`.
+    rows: Vec<Vec<(u32, f64)>>,
+    /// CSC: column pointers into `col_topics` / `col_probs`.
+    col_ptr: Vec<usize>,
+    col_topics: Vec<u32>,
+    col_probs: Vec<f64>,
+}
+
+impl PhiMatrix {
+    /// Build from integer count rows (the PPU draws `ϕ_{k,·}`): row `k`
+    /// is a sorted `(word, count)` list; probabilities are
+    /// `count / row_sum`. Rows with zero total stay empty (a dead topic
+    /// has no word distribution — callers must not score against it).
+    pub fn from_count_rows(vocab: usize, count_rows: &[Vec<(u32, u32)>]) -> Self {
+        let num_topics = count_rows.len();
+        let mut rows: Vec<Vec<(u32, f64)>> = Vec::with_capacity(num_topics);
+        let mut col_counts = vec![0usize; vocab + 1];
+        let mut nnz = 0usize;
+        for row in count_rows {
+            let total: u64 = row.iter().map(|&(_, c)| c as u64).sum();
+            if total == 0 {
+                rows.push(Vec::new());
+                continue;
+            }
+            let inv = 1.0 / total as f64;
+            let prow: Vec<(u32, f64)> =
+                row.iter().map(|&(v, c)| (v, c as f64 * inv)).collect();
+            for &(v, _) in &prow {
+                debug_assert!((v as usize) < vocab);
+                col_counts[v as usize + 1] += 1;
+                nnz += 1;
+            }
+            rows.push(prow);
+        }
+        // prefix sums -> col_ptr
+        let mut col_ptr = col_counts;
+        for i in 1..col_ptr.len() {
+            col_ptr[i] += col_ptr[i - 1];
+        }
+        let mut col_topics = vec![0u32; nnz];
+        let mut col_probs = vec![0.0f64; nnz];
+        let mut cursor = col_ptr.clone();
+        for (k, row) in rows.iter().enumerate() {
+            for &(v, p) in row {
+                let at = cursor[v as usize];
+                col_topics[at] = k as u32;
+                col_probs[at] = p;
+                cursor[v as usize] += 1;
+            }
+        }
+        // Topics within a column arrive in increasing k (rows iterated in
+        // order), so each column is sorted by topic id — required by the
+        // binary-search lookup.
+        Self { num_topics, vocab, rows, col_ptr, col_topics, col_probs }
+    }
+
+    /// Number of topic rows.
+    #[inline]
+    pub fn num_topics(&self) -> usize {
+        self.num_topics
+    }
+
+    /// Vocabulary size.
+    #[inline]
+    pub fn vocab(&self) -> usize {
+        self.vocab
+    }
+
+    /// Total number of stored nonzeros.
+    #[inline]
+    pub fn nnz(&self) -> usize {
+        self.col_topics.len()
+    }
+
+    /// Sorted `(word, prob)` row for topic `k`.
+    #[inline]
+    pub fn row(&self, k: usize) -> &[(u32, f64)] {
+        &self.rows[k]
+    }
+
+    /// Column `v` as parallel `(topics, probs)` slices, sorted by topic.
+    /// Its length is `K_v^{(Φ)}`, the topic-word sparsity term of the
+    /// per-token complexity bound (eq. 29).
+    #[inline]
+    pub fn col(&self, v: u32) -> (&[u32], &[f64]) {
+        let lo = self.col_ptr[v as usize];
+        let hi = self.col_ptr[v as usize + 1];
+        (&self.col_topics[lo..hi], &self.col_probs[lo..hi])
+    }
+
+    /// `φ_{k,v}` via binary search in column `v`. O(log K_v^{(Φ)}).
+    pub fn get(&self, k: u32, v: u32) -> f64 {
+        let (topics, probs) = self.col(v);
+        match topics.binary_search(&k) {
+            Ok(i) => probs[i],
+            Err(_) => 0.0,
+        }
+    }
+
+    /// Dense materialization (tests / tiny corpora only).
+    pub fn to_dense(&self) -> Vec<Vec<f64>> {
+        let mut out = vec![vec![0.0; self.vocab]; self.num_topics];
+        for (k, row) in self.rows.iter().enumerate() {
+            for &(v, p) in row {
+                out[k][v as usize] = p;
+            }
+        }
+        out
+    }
+
+    /// Rows as f32 tiles for the XLA evaluation path: writes the
+    /// `[k0..k0+kt) × [v0..v0+vt)` block of `Φ` into `out` (row-major,
+    /// `kt × vt`, zero-padded).
+    pub fn fill_tile_f32(
+        &self,
+        k0: usize,
+        kt: usize,
+        v0: usize,
+        vt: usize,
+        out: &mut [f32],
+    ) {
+        debug_assert_eq!(out.len(), kt * vt);
+        out.fill(0.0);
+        for (dk, k) in (k0..(k0 + kt).min(self.num_topics)).enumerate() {
+            let row = &self.rows[k];
+            let start = row.partition_point(|&(v, _)| (v as usize) < v0);
+            for &(v, p) in &row[start..] {
+                let v = v as usize;
+                if v >= v0 + vt {
+                    break;
+                }
+                out[dk * vt + (v - v0)] = p as f32;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_matrix() -> PhiMatrix {
+        // K=3, V=5
+        // k0: words 0(2), 2(2)     -> probs .5, .5
+        // k1: words 2(1), 3(3)     -> probs .25, .75
+        // k2: empty (dead topic)
+        PhiMatrix::from_count_rows(
+            5,
+            &[vec![(0, 2), (2, 2)], vec![(2, 1), (3, 3)], vec![]],
+        )
+    }
+
+    #[test]
+    fn rows_normalized() {
+        let phi = sample_matrix();
+        assert_eq!(phi.row(0), &[(0, 0.5), (2, 0.5)]);
+        assert_eq!(phi.row(1), &[(2, 0.25), (3, 0.75)]);
+        assert!(phi.row(2).is_empty());
+        for k in 0..2 {
+            let s: f64 = phi.row(k).iter().map(|&(_, p)| p).sum();
+            assert!((s - 1.0).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn columns_match_rows() {
+        let phi = sample_matrix();
+        let (t, p) = phi.col(2);
+        assert_eq!(t, &[0, 1]);
+        assert_eq!(p, &[0.5, 0.25]);
+        let (t, _) = phi.col(1);
+        assert!(t.is_empty());
+        let (t, p) = phi.col(3);
+        assert_eq!(t, &[1]);
+        assert_eq!(p, &[0.75]);
+    }
+
+    #[test]
+    fn get_lookup() {
+        let phi = sample_matrix();
+        assert_eq!(phi.get(0, 0), 0.5);
+        assert_eq!(phi.get(1, 3), 0.75);
+        assert_eq!(phi.get(2, 0), 0.0);
+        assert_eq!(phi.get(0, 4), 0.0);
+    }
+
+    #[test]
+    fn dense_agrees() {
+        let phi = sample_matrix();
+        let dense = phi.to_dense();
+        for k in 0..3u32 {
+            for v in 0..5u32 {
+                assert_eq!(dense[k as usize][v as usize], phi.get(k, v));
+            }
+        }
+    }
+
+    #[test]
+    fn tile_fill() {
+        let phi = sample_matrix();
+        let mut tile = vec![0.0f32; 2 * 3];
+        // block k in [1,3), v in [2,5)
+        phi.fill_tile_f32(1, 2, 2, 3, &mut tile);
+        assert_eq!(tile, vec![0.25, 0.75, 0.0, 0.0, 0.0, 0.0]);
+        // block beyond matrix bounds zero-padded
+        let mut tile = vec![1.0f32; 4];
+        phi.fill_tile_f32(2, 2, 0, 2, &mut tile);
+        assert_eq!(tile, vec![0.0; 4]);
+    }
+
+    #[test]
+    fn nnz_counts() {
+        let phi = sample_matrix();
+        assert_eq!(phi.nnz(), 4);
+        assert_eq!(phi.num_topics(), 3);
+        assert_eq!(phi.vocab(), 5);
+    }
+}

@@ -1,0 +1,98 @@
+//! Smoke tests for the experiment drivers: each figure/table driver
+//! runs end-to-end at a tiny scale and produces its output files with
+//! plausible contents. (Full-scale results live in EXPERIMENTS.md.)
+
+use hdp_sparse::experiments::{self, ExpContext};
+use hdp_sparse::metrics::IterRecord;
+
+fn ctx(tag: &str) -> ExpContext {
+    let out_dir = std::env::temp_dir().join(format!("hdp_exp_smoke_{tag}"));
+    std::fs::create_dir_all(&out_dir).unwrap();
+    ExpContext { out_dir, scale: 0.05, threads: 1, seed: 4, verbose: false }
+}
+
+fn read_trace(path: &std::path::Path) -> Vec<IterRecord> {
+    let text = std::fs::read_to_string(path).unwrap_or_else(|e| {
+        panic!("missing trace {}: {e}", path.display());
+    });
+    text.lines()
+        .skip(1)
+        .map(|l| IterRecord::from_csv_row(l).unwrap())
+        .collect()
+}
+
+#[test]
+fn table2_produces_all_rows() {
+    // Use the tiny/small corpora path indirectly: table2 runs the four
+    // paper corpora at scale; keep scale tiny so this finishes fast.
+    let ctx = ctx("table2");
+    // pubmed analog generation is the slow part (~40k docs) — still
+    // fine at this scale; cache makes reruns cheap.
+    experiments::table2::run(&ctx).unwrap();
+    let report = std::fs::read_to_string(ctx.out_dir.join("table2.txt")).unwrap();
+    for corpus in ["ap", "cgcbib", "neurips", "pubmed"] {
+        assert!(report.contains(corpus), "table2 missing {corpus}");
+    }
+    for corpus in ["ap", "cgcbib", "neurips", "pubmed"] {
+        let trace = read_trace(&ctx.out_dir.join(format!("table2_{corpus}.csv")));
+        assert!(!trace.is_empty());
+        assert!(trace.iter().all(|r| r.total_tokens > 0));
+    }
+    std::fs::remove_dir_all(&ctx.out_dir).ok();
+}
+
+#[test]
+fn fig1_small_produces_traces_and_histograms() {
+    let ctx = ctx("fig1small");
+    experiments::fig1::run_small(&ctx).unwrap();
+    for tag in ["fig1_ap_pc", "fig1_ap_da", "fig1_cgcbib_pc", "fig1_cgcbib_da"] {
+        let trace = read_trace(&ctx.out_dir.join(format!("{tag}.csv")));
+        assert!(trace.len() >= 2, "{tag}");
+        // log-likelihoods finite and tokens conserved within a run
+        let t0 = trace[0].total_tokens;
+        assert!(trace.iter().all(|r| r.total_tokens == t0));
+        assert!(trace.iter().all(|r| r.log_likelihood.is_finite()));
+    }
+    for tag in ["ap_pc", "ap_da", "cgcbib_pc", "cgcbib_da"] {
+        let hist = std::fs::read_to_string(
+            ctx.out_dir.join(format!("fig1_tokens_per_topic_{tag}.csv")),
+        )
+        .unwrap();
+        assert!(hist.lines().count() >= 2, "{tag} histogram");
+    }
+    assert!(ctx.out_dir.join("fig1_small_report.txt").exists());
+    std::fs::remove_dir_all(&ctx.out_dir).ok();
+}
+
+#[test]
+fn fig1_neurips_budgeted_comparison() {
+    let ctx = ctx("fig1neurips");
+    experiments::fig1::run_neurips(&ctx).unwrap();
+    let pc = read_trace(&ctx.out_dir.join("fig1_neurips_pc.csv"));
+    let ssm = read_trace(&ctx.out_dir.join("fig1_neurips_ssm.csv"));
+    assert!(!pc.is_empty() && !ssm.is_empty());
+    // Paper shape (Fig 1g–i): under the same wall-clock budget the
+    // doubly sparse PC sampler completes (far) more iterations than
+    // the dense subcluster split-merge sampler.
+    let pc_iters = pc.last().unwrap().iteration;
+    let ssm_iters = ssm.last().unwrap().iteration;
+    assert!(
+        pc_iters > ssm_iters,
+        "PC should out-iterate SSM: {pc_iters} vs {ssm_iters}"
+    );
+    std::fs::remove_dir_all(&ctx.out_dir).ok();
+}
+
+#[test]
+fn topics_quantile_tables() {
+    let ctx = ctx("topics");
+    experiments::topics_exp::run(&ctx, "tiny", false).unwrap();
+    let text =
+        std::fs::read_to_string(ctx.out_dir.join("topics_tiny_quantiles.txt")).unwrap();
+    assert!(text.contains("quantile 100%"));
+    assert!(text.contains("UMass coherence"));
+    experiments::topics_exp::run(&ctx, "tiny", true).unwrap();
+    let all = std::fs::read_to_string(ctx.out_dir.join("topics_tiny_all.txt")).unwrap();
+    assert!(all.contains("n_k="));
+    std::fs::remove_dir_all(&ctx.out_dir).ok();
+}

@@ -1,0 +1,171 @@
+//! Integration tests for the PJRT runtime: load the AOT artifacts
+//! produced by `make artifacts`, execute them, and cross-check numbers
+//! against rust-native computations and python-derived golden values.
+//!
+//! These tests are skipped (with a visible message) when artifacts are
+//! missing, so `cargo test` works before the python step; `make test`
+//! always builds artifacts first.
+
+use hdp_sparse::corpus::synthetic::HdpCorpusSpec;
+use hdp_sparse::hdp::pc::phi::sample_phi;
+use hdp_sparse::rng::Pcg64;
+use hdp_sparse::runtime::{phi_loglik_sparse, Engine};
+use hdp_sparse::sparse::{TopicWordAcc, TopicWordRows};
+
+fn engine() -> Option<Engine> {
+    let dir = Engine::default_dir();
+    if !dir.join("manifest.txt").exists() {
+        eprintln!("SKIP: no artifacts at {} (run `make artifacts`)", dir.display());
+        return None;
+    }
+    Some(Engine::load(&dir).expect("engine load"))
+}
+
+#[test]
+fn loads_all_artifacts() {
+    let Some(e) = engine() else { return };
+    let mut names = e.artifact_names();
+    names.sort();
+    assert_eq!(names, vec!["loglik_tile", "psi_stick", "zscore_tile"]);
+    let (tk, tv) = e.loglik_tile_shape();
+    assert!(tk >= 128 && tv >= 512);
+}
+
+#[test]
+fn loglik_tile_matches_python_golden() {
+    // Mirror of python/tests/test_aot.py::test_loglik_golden — the
+    // same deterministic stripe pattern must evaluate to the same
+    // closed-form value through the compiled artifact.
+    let Some(e) = engine() else { return };
+    let (tk, tv) = e.loglik_tile_shape();
+    let mut n = vec![0.0f32; tk * tv];
+    let mut phi = vec![0.0f32; tk * tv];
+    let mut want = 0.0f64;
+    for i in 0..tk {
+        let v = (i * 7) % tv;
+        let c = (i % 5 + 1) as f32;
+        n[i * tv + v] = c;
+        phi[i * tv + v] = 0.25;
+        phi[i * tv + (i * 11 + 1) % tv] += 0.75;
+        want += c as f64 * 0.25f64.ln();
+    }
+    let got = e.loglik_tile_raw(&n, &phi).unwrap() as f64;
+    assert!(
+        (got - want).abs() < 1e-2 * want.abs().max(1.0),
+        "{got} vs {want}"
+    );
+}
+
+#[test]
+fn engine_loglik_matches_sparse_reference() {
+    // Random sparse model state: the tiled XLA path and the rust-native
+    // sparse path must agree to f32 tolerance.
+    let Some(mut e) = engine() else { return };
+    let (corpus, _) = HdpCorpusSpec {
+        vocab: 1500, // forces multiple V tiles
+        topics: 10,
+        gamma: 3.0,
+        alpha: 1.0,
+        topic_beta: 0.03,
+        docs: 150,
+        mean_doc_len: 60.0,
+        len_sigma: 0.4,
+        min_doc_len: 10,
+    }
+    .generate(17);
+    let k_max = 300; // forces multiple K tiles
+    let mut rng = Pcg64::new(5);
+    let mut acc = TopicWordAcc::with_capacity(4096);
+    for doc in &corpus.docs {
+        for &v in doc {
+            acc.add(rng.below(24) as u32, v, 1);
+        }
+    }
+    let n = TopicWordRows::merge_from(k_max, &mut [acc]);
+    let root = Pcg64::new(9);
+    let phi = sample_phi(&root, &n, 0.01, 1500, 1);
+    let sparse = phi_loglik_sparse(&n, &phi);
+    let dense = e.loglik(&n, &phi).unwrap();
+    let rel = (sparse - dense).abs() / sparse.abs().max(1.0);
+    assert!(rel < 1e-4, "sparse {sparse} vs xla {dense} (rel {rel})");
+}
+
+#[test]
+fn zscore_matches_rust_dense_enumeration() {
+    let Some(e) = engine() else { return };
+    let Some((b, k)) = e.zscore_shape() else {
+        panic!("zscore artifact missing")
+    };
+    let mut rng = Pcg64::new(11);
+    let mut phi_cols = vec![0.0f32; b * k];
+    let mut m_rows = vec![0.0f32; b * k];
+    let mut psi = vec![0.0f32; k];
+    for p in psi.iter_mut() {
+        *p = rng.f64() as f32;
+    }
+    let psum: f32 = psi.iter().sum();
+    psi.iter_mut().for_each(|p| *p /= psum);
+    for x in phi_cols.iter_mut() {
+        if rng.bernoulli(0.2) {
+            *x = rng.f64() as f32;
+        }
+    }
+    for x in m_rows.iter_mut() {
+        if rng.bernoulli(0.1) {
+            *x = rng.below(5) as f32;
+        }
+    }
+    let alpha = 0.8f32;
+    let got = e.zscore(&phi_cols, &m_rows, &psi, alpha).unwrap();
+    assert_eq!(got.len(), b * k);
+    for t in 0..b {
+        let row = &phi_cols[t * k..(t + 1) * k];
+        let mrow = &m_rows[t * k..(t + 1) * k];
+        let want: Vec<f64> = row
+            .iter()
+            .zip(mrow)
+            .zip(&psi)
+            .map(|((&p, &m), &s)| p as f64 * (alpha as f64 * s as f64 + m as f64))
+            .collect();
+        let tot: f64 = want.iter().sum();
+        for i in 0..k {
+            let w = if tot > 0.0 { want[i] / tot } else { 0.0 };
+            let g = got[t * k + i] as f64;
+            assert!(
+                (g - w).abs() < 1e-4,
+                "token {t} topic {i}: {g} vs {w}"
+            );
+        }
+        // normalized
+        let s: f32 = got[t * k..(t + 1) * k].iter().sum();
+        assert!(s == 0.0 || (s - 1.0).abs() < 1e-3, "row {t} sum {s}");
+    }
+}
+
+#[test]
+fn psi_stick_matches_rust() {
+    let Some(e) = engine() else { return };
+    let klen = 1024usize;
+    let mut sticks = vec![0.0f32; klen];
+    let mut rng = Pcg64::new(3);
+    for s in sticks.iter_mut() {
+        *s = rng.f64() as f32 * 0.5;
+    }
+    sticks[klen - 1] = 1.0;
+    let got = e.psi_stick(&sticks).unwrap();
+    // rust reference
+    let mut remaining = 1.0f64;
+    let mut sum = 0.0f64;
+    for (i, &s) in sticks.iter().enumerate() {
+        let want = remaining * s as f64;
+        assert!(
+            (got[i] as f64 - want).abs() < 1e-5,
+            "component {i}: {} vs {want}",
+            got[i]
+        );
+        remaining *= 1.0 - s as f64;
+        sum += want;
+    }
+    assert!((sum - 1.0).abs() < 1e-4);
+    assert!((got.iter().map(|&x| x as f64).sum::<f64>() - 1.0).abs() < 1e-3);
+}

@@ -1,0 +1,234 @@
+//! Cross-sampler integration tests: the four samplers run on the same
+//! corpora and must agree on the model-level invariants, and the
+//! sparse Algorithm-2 implementation must be statistically
+//! indistinguishable from the dense Algorithm-1 oracle.
+
+use hdp_sparse::config::HdpConfig;
+use hdp_sparse::corpus::synthetic::HdpCorpusSpec;
+use hdp_sparse::corpus::Corpus;
+use hdp_sparse::hdp::{
+    da::DaSampler, exact::ExactSampler, pc::PcSampler, pclda::PcLdaSampler,
+    ssm::SsmSampler, Trainer,
+};
+use std::sync::Arc;
+
+fn corpus(seed: u64) -> Arc<Corpus> {
+    let (c, _) = HdpCorpusSpec {
+        vocab: 250,
+        topics: 5,
+        gamma: 2.0,
+        alpha: 1.0,
+        topic_beta: 0.04,
+        docs: 80,
+        mean_doc_len: 35.0,
+        len_sigma: 0.4,
+        min_doc_len: 10,
+    }
+    .generate(seed);
+    Arc::new(c)
+}
+
+fn cfg() -> HdpConfig {
+    HdpConfig { alpha: 0.5, beta: 0.05, gamma: 1.0, k_max: 60, init_topics: 1 }
+}
+
+fn check_invariants(t: &dyn Trainer, expected_tokens: u64) {
+    let d = t.diagnostics();
+    assert_eq!(d.total_tokens, expected_tokens, "{}: token conservation", t.name());
+    assert!(d.log_likelihood.is_finite(), "{}: finite ll", t.name());
+    assert!(d.active_topics >= 1, "{}", t.name());
+    assert_eq!(
+        d.tokens_per_topic.iter().sum::<u64>(),
+        expected_tokens,
+        "{}: tokens_per_topic partition",
+        t.name()
+    );
+    // descending
+    assert!(
+        d.tokens_per_topic.windows(2).all(|w| w[0] >= w[1]),
+        "{}: sorted histogram",
+        t.name()
+    );
+    // topic_word_rows consistent with assignments
+    let rows = t.topic_word_rows();
+    let total_n: u64 = rows
+        .iter()
+        .flat_map(|r| r.iter().map(|&(_, c)| c as u64))
+        .sum();
+    assert_eq!(total_n, expected_tokens, "{}: n totals", t.name());
+    // rebuild n from z and compare exactly
+    let mut rebuilt = std::collections::HashMap::new();
+    for (doc, zd) in t.corpus().docs.iter().zip(t.assignments()) {
+        for (&v, &k) in doc.iter().zip(zd) {
+            *rebuilt.entry((k, v)).or_insert(0u32) += 1;
+        }
+    }
+    for (k, row) in rows.iter().enumerate() {
+        for &(v, c) in row {
+            assert_eq!(
+                rebuilt.get(&(k as u32, v)).copied().unwrap_or(0),
+                c,
+                "{}: n[{k}][{v}]",
+                t.name()
+            );
+        }
+    }
+}
+
+#[test]
+fn all_samplers_preserve_invariants() {
+    let c = corpus(1);
+    let tokens = c.num_tokens();
+    let mut trainers: Vec<Box<dyn Trainer>> = vec![
+        Box::new(PcSampler::new(c.clone(), cfg(), 2, 7).unwrap()),
+        Box::new(DaSampler::new(c.clone(), cfg(), 7).unwrap()),
+        Box::new(SsmSampler::new(c.clone(), cfg(), 7).unwrap()),
+        Box::new(PcLdaSampler::new(c.clone(), 12, 0.5, 0.05, 2, 7).unwrap()),
+        Box::new(ExactSampler::new(c.clone(), cfg(), 7).unwrap()),
+    ];
+    for t in trainers.iter_mut() {
+        for _ in 0..6 {
+            t.step().unwrap();
+        }
+        check_invariants(t.as_ref(), tokens);
+        assert!(t.iterations_done() == 6);
+    }
+}
+
+/// The sparse PC sampler and the dense exact oracle sample from the
+/// same conditionals (PPU vs Dirichlet aside): their equilibrium
+/// summary statistics must land in the same region. This is the
+/// statistical-equivalence check of DESIGN.md §5.3.
+#[test]
+fn pc_matches_exact_oracle_statistically() {
+    let (c, _truth) = HdpCorpusSpec {
+        vocab: 120,
+        topics: 4,
+        gamma: 1.5,
+        alpha: 1.5,
+        topic_beta: 0.05,
+        docs: 60,
+        mean_doc_len: 30.0,
+        len_sigma: 0.3,
+        min_doc_len: 10,
+    }
+    .generate(77);
+    let c = Arc::new(c);
+    let cfg = HdpConfig { alpha: 0.5, beta: 0.1, gamma: 1.0, k_max: 24, init_topics: 1 };
+    let mut pc = PcSampler::new(c.clone(), cfg, 1, 3).unwrap();
+    let mut exact = ExactSampler::new(c.clone(), cfg, 3).unwrap();
+    // Burn both chains to their stationary region.
+    for _ in 0..250 {
+        pc.step().unwrap();
+        exact.step().unwrap();
+    }
+    let mut pc_lls = Vec::new();
+    let mut ex_lls = Vec::new();
+    let mut pc_topics = Vec::new();
+    let mut ex_topics = Vec::new();
+    for _ in 0..60 {
+        pc.step().unwrap();
+        exact.step().unwrap();
+        let dp = pc.diagnostics();
+        let de = exact.diagnostics();
+        pc_lls.push(dp.log_likelihood);
+        ex_lls.push(de.log_likelihood);
+        pc_topics.push(dp.active_topics as f64);
+        ex_topics.push(de.active_topics as f64);
+    }
+    let mean = |v: &[f64]| v.iter().sum::<f64>() / v.len() as f64;
+    let (mp, me) = (mean(&pc_lls), mean(&ex_lls));
+    let rel = (mp - me).abs() / me.abs();
+    assert!(
+        rel < 0.05,
+        "stationary log-lik region: pc {mp:.1} vs exact {me:.1} (rel {rel:.3})"
+    );
+    let (tp, te) = (mean(&pc_topics), mean(&ex_topics));
+    assert!(
+        (tp - te).abs() < 10.0,
+        "stationary topic counts: pc {tp:.1} vs exact {te:.1}"
+    );
+}
+
+/// Recovery: on a strongly structured corpus the PC sampler must find
+/// learned topics matching the planted ones by cosine similarity.
+#[test]
+fn pc_recovers_planted_topics() {
+    let (c, truth) = HdpCorpusSpec {
+        vocab: 400,
+        topics: 6,
+        gamma: 3.0,
+        alpha: 0.5, // concentrated docs
+        topic_beta: 0.01,
+        docs: 200,
+        mean_doc_len: 60.0,
+        len_sigma: 0.3,
+        min_doc_len: 20,
+    }
+    .generate(91);
+    let c = Arc::new(c);
+    let cfg = HdpConfig { alpha: 0.3, beta: 0.02, gamma: 1.0, k_max: 64, init_topics: 1 };
+    let mut pc = PcSampler::new(c.clone(), cfg, 2, 5).unwrap();
+    for _ in 0..400 {
+        pc.step().unwrap();
+    }
+    let rows = pc.topic_word_rows();
+    // learned topic distributions (significant topics only)
+    let mut learned: Vec<Vec<f64>> = Vec::new();
+    for row in &rows {
+        let total: u64 = row.iter().map(|&(_, c)| c as u64).sum();
+        if total < 200 {
+            continue;
+        }
+        let mut dense = vec![0.0f64; c.vocab_size()];
+        for &(v, cnt) in row {
+            dense[v as usize] = cnt as f64 / total as f64;
+        }
+        learned.push(dense);
+    }
+    let cosine = |a: &[f64], b: &[f64]| {
+        let dot: f64 = a.iter().zip(b).map(|(x, y)| x * y).sum();
+        let na: f64 = a.iter().map(|x| x * x).sum::<f64>().sqrt();
+        let nb: f64 = b.iter().map(|x| x * x).sum::<f64>().sqrt();
+        dot / (na * nb).max(1e-12)
+    };
+    let mut planted_tokens = vec![0u64; truth.phi.len()];
+    for zd in &truth.z {
+        for &k in zd {
+            planted_tokens[k as usize] += 1;
+        }
+    }
+    let mut matched = 0usize;
+    let mut sizable = 0usize;
+    for (k, phi_k) in truth.phi.iter().enumerate() {
+        if planted_tokens[k] < 500 {
+            continue; // too small to be recoverable
+        }
+        sizable += 1;
+        let best = learned.iter().map(|l| cosine(l, phi_k)).fold(0.0f64, f64::max);
+        if best > 0.8 {
+            matched += 1;
+        }
+    }
+    assert!(sizable >= 3, "test corpus should have sizable topics");
+    assert!(
+        matched * 10 >= sizable * 8,
+        "recovered {matched}/{sizable} sizable planted topics"
+    );
+}
+
+/// Chains are reproducible end-to-end: same seed → identical traces,
+/// different seed → different traces.
+#[test]
+fn chains_reproducible_per_seed() {
+    let c = corpus(5);
+    let run_chain = |seed: u64| {
+        let mut s = PcSampler::new(c.clone(), cfg(), 2, seed).unwrap();
+        for _ in 0..5 {
+            s.step().unwrap();
+        }
+        s.diagnostics().log_likelihood
+    };
+    assert_eq!(run_chain(11).to_bits(), run_chain(11).to_bits());
+    assert_ne!(run_chain(11).to_bits(), run_chain(12).to_bits());
+}

@@ -1,0 +1,100 @@
+#!/usr/bin/env python
+"""Render the Figure-1 panels from the experiment CSV traces.
+
+Usage: python scripts/plot_traces.py [results_dir] [out.png]
+
+Reads the traces written by `repro exp all` and draws the paper's
+Fig-1 layout: log-likelihood and active-topic traces for the
+PC-vs-direct-assignment comparison (per-iteration axis), the
+PC-vs-subcluster comparison (real-time axis), the PubMed-scale run,
+and the per-iteration-cost panel (Fig 1i) from the bench CSV.
+Offline-only convenience — no part of the pipeline depends on it.
+"""
+
+import csv
+import pathlib
+import sys
+
+import matplotlib
+
+matplotlib.use("Agg")
+import matplotlib.pyplot as plt
+
+
+def read_trace(path):
+    rows = []
+    with open(path) as f:
+        for row in csv.DictReader(f):
+            rows.append({k: float(v) for k, v in row.items()})
+    return rows
+
+
+def maybe(ax, results, name, x_key, y_key, label, **kw):
+    path = results / f"{name}.csv"
+    if not path.exists():
+        ax.set_title(f"{name} (missing)", fontsize=8)
+        return
+    rows = read_trace(path)
+    ax.plot([r[x_key] for r in rows], [r[y_key] for r in rows], label=label, **kw)
+
+
+def main():
+    results = pathlib.Path(sys.argv[1] if len(sys.argv) > 1 else "results")
+    out = sys.argv[2] if len(sys.argv) > 2 else str(results / "fig1.png")
+    fig, axes = plt.subplots(3, 3, figsize=(14, 10))
+    panels = [
+        # (axis, corpus tag, x key, title)
+        (axes[0][0], "fig1_ap", "iteration", "AP log-lik (a)"),
+        (axes[0][1], "fig1_ap", "iteration", "AP active topics (b)"),
+        (axes[0][2], "fig1_cgcbib", "iteration", "CGCBIB log-lik (d)"),
+    ]
+    for ax, tag, xk, title in panels:
+        yk = "active_topics" if "topics" in title else "log_likelihood"
+        maybe(ax, results, f"{tag}_pc", xk, yk, "partially collapsed")
+        maybe(ax, results, f"{tag}_da", xk, yk, "direct assignment")
+        ax.set_title(title, fontsize=9)
+        ax.legend(fontsize=7)
+    # NeurIPS real-time panels (g, h)
+    for ax, yk, title in [
+        (axes[1][0], "active_topics", "NeurIPS active topics vs time (g)"),
+        (axes[1][1], "log_likelihood", "NeurIPS log-lik vs time (h)"),
+    ]:
+        maybe(ax, results, "fig1_neurips_pc", "elapsed_secs", yk, "partially collapsed")
+        maybe(ax, results, "fig1_neurips_ssm", "elapsed_secs", yk, "subcluster split-merge")
+        ax.set_title(title, fontsize=9)
+        ax.legend(fontsize=7)
+    # Per-iteration cost (i) from the bench CSV
+    ax = axes[1][2]
+    bench = results / "bench_fig1i.csv"
+    if bench.exists():
+        rows = read_trace(bench)
+        ax.plot([r["iter"] for r in rows], [r["pc_secs"] for r in rows], label="PC")
+        ax.plot([r["iter"] for r in rows], [r["ssm_secs"] for r in rows], label="SSM")
+        ax.set_yscale("log")
+        ax.legend(fontsize=7)
+    ax.set_title("seconds per iteration (i)", fontsize=9)
+    # PubMed panels (j, k)
+    for ax, yk, title in [
+        (axes[2][0], "log_likelihood", "PubMed log-lik (j)"),
+        (axes[2][1], "active_topics", "PubMed active topics (k)"),
+    ]:
+        maybe(ax, results, "fig1_pubmed_pc", "iteration", yk, "partially collapsed")
+        ax.set_title(title, fontsize=9)
+    # tokens-per-topic (c)
+    ax = axes[2][2]
+    for tag, label in [("ap_pc", "PC"), ("ap_da", "DA")]:
+        path = results / f"fig1_tokens_per_topic_{tag}.csv"
+        if path.exists():
+            rows = read_trace(path)
+            ax.plot([r["rank"] for r in rows], [r["tokens"] for r in rows], label=label)
+    ax.set_xscale("log")
+    ax.set_yscale("log")
+    ax.set_title("AP tokens per topic (c)", fontsize=9)
+    ax.legend(fontsize=7)
+    fig.tight_layout()
+    fig.savefig(out, dpi=120)
+    print(f"wrote {out}")
+
+
+if __name__ == "__main__":
+    main()
