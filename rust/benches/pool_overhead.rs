@@ -1,0 +1,200 @@
+//! Bench: persistent worker pool vs per-phase scoped thread spawning.
+//!
+//! On small corpora an Algorithm-2 iteration is fractions of a
+//! millisecond, so the four parallel phases' thread spawn/join latency
+//! (the seed substrate) dominates. The pool amortizes worker creation
+//! across the whole chain and reuses per-slot shard scratch, so pooled
+//! per-iteration overhead must come in strictly below the scoped
+//! strategy exactly where it matters most.
+//!
+//! Two views:
+//! * `*_noop_phase_x4` — raw dispatch cost of four empty phases
+//!   (pure substrate overhead, no sampler work);
+//! * `*_phase_cycle` — a faithful Φ → alias → z → merge → l iteration
+//!   over a frozen small-corpus state, scoped vs pooled.
+
+use hdp_sparse::benchkit::Bench;
+use hdp_sparse::corpus::synthetic::HdpCorpusSpec;
+use hdp_sparse::hdp::pc::zstep::{ShardScratch, WordTables, ZSweep};
+use hdp_sparse::hdp::pc::{lstep, phi::sample_phi};
+use hdp_sparse::par::{self, Sharding, WorkerPool};
+use hdp_sparse::rng::Pcg64;
+use hdp_sparse::sparse::{DocCountHist, DocTopics, TopicWordAcc, TopicWordRows};
+
+const THREADS: usize = 4;
+const K_MAX: usize = 64;
+const ALPHA: f64 = 0.3;
+const BETA: f64 = 0.05;
+
+struct ChainState {
+    z: Vec<Vec<u32>>,
+    m: Vec<DocTopics>,
+    n: TopicWordRows,
+    iter: u64,
+}
+
+fn init_state(corpus: &hdp_sparse::corpus::Corpus) -> ChainState {
+    let mut rng = Pcg64::new(17);
+    let z: Vec<Vec<u32>> = corpus
+        .docs
+        .iter()
+        .map(|d| d.iter().map(|_| rng.below(8) as u32).collect())
+        .collect();
+    let m: Vec<DocTopics> =
+        z.iter().map(|zd| zd.iter().copied().collect()).collect();
+    let mut acc = TopicWordAcc::with_capacity(4096);
+    for (doc, zd) in corpus.docs.iter().zip(&z) {
+        for (&v, &k) in doc.iter().zip(zd) {
+            acc.add(k, v, 1);
+        }
+    }
+    let n = TopicWordRows::merge_from(K_MAX, &mut [acc]);
+    ChainState { z, m, n, iter: 0 }
+}
+
+fn main() {
+    let mut bench = Bench::new("pool_overhead");
+
+    // Small corpus: the regime where per-phase spawn latency dominates.
+    let (corpus, _) = HdpCorpusSpec {
+        vocab: 500,
+        topics: 8,
+        gamma: 2.0,
+        alpha: 0.8,
+        topic_beta: 0.03,
+        docs: 240,
+        mean_doc_len: 18.0,
+        len_sigma: 0.4,
+        min_doc_len: 5,
+    }
+    .generate(2026);
+    let tokens = corpus.num_tokens() as f64;
+    let plan = Sharding::weighted(&corpus.doc_weights(), THREADS);
+    let root = Pcg64::new(99);
+    // Uniform Ψ is fine for a frozen-state substrate bench.
+    let psi: Vec<f64> = vec![1.0 / (K_MAX as f64); K_MAX];
+
+    let pool = WorkerPool::new(THREADS);
+
+    // --- raw dispatch: four empty phases per call -------------------
+    bench.run("scoped_noop_phase_x4", Some(4.0), || {
+        for _ in 0..4 {
+            par::exec_for(THREADS, THREADS, |i| {
+                std::hint::black_box(i);
+            });
+        }
+    });
+    bench.run("pooled_noop_phase_x4", Some(4.0), || {
+        for _ in 0..4 {
+            par::exec_for(&pool, THREADS, |i| {
+                std::hint::black_box(i);
+            });
+        }
+    });
+
+    // --- faithful phase cycle: Φ → alias → z → merge → l ------------
+    let mut scoped = init_state(&corpus);
+    bench.run("scoped_phase_cycle", Some(tokens), || {
+        scoped.iter += 1;
+        let phi = sample_phi(
+            &root.stream(scoped.iter ^ 0x0f1),
+            &scoped.n,
+            BETA,
+            corpus.vocab_size(),
+            THREADS,
+        );
+        let tables = WordTables::build(&phi, &psi, ALPHA, THREADS);
+        let sweep = ZSweep {
+            phi: &phi,
+            psi: &psi,
+            tables: &tables,
+            alpha: ALPHA,
+            k_max: K_MAX,
+            seed_root: &root,
+            iteration: scoped.iter,
+        };
+        let results = sweep.run(&corpus.docs, &mut scoped.z, &mut scoped.m, &plan);
+        let mut accs = Vec::with_capacity(results.len());
+        let mut hists = Vec::with_capacity(results.len());
+        for r in results {
+            accs.push(r.n_acc);
+            hists.push(r.hist);
+        }
+        scoped.n = TopicWordRows::merge_from(K_MAX, &mut accs);
+        let hist = DocCountHist::merge(K_MAX, hists);
+        let l = lstep::sample_l(&root.stream(scoped.iter ^ 0x77), &hist, &psi, ALPHA, THREADS);
+        std::hint::black_box(l);
+    });
+
+    let mut pooled = init_state(&corpus);
+    let mut scratch: Vec<ShardScratch> = (0..pool.slots().max(plan.len()))
+        .map(|_| ShardScratch::new(K_MAX))
+        .collect();
+    bench.run("pooled_phase_cycle", Some(tokens), || {
+        pooled.iter += 1;
+        let phi = sample_phi(
+            &root.stream(pooled.iter ^ 0x0f1),
+            &pooled.n,
+            BETA,
+            corpus.vocab_size(),
+            &pool,
+        );
+        let tables = WordTables::build(&phi, &psi, ALPHA, &pool);
+        let sweep = ZSweep {
+            phi: &phi,
+            psi: &psi,
+            tables: &tables,
+            alpha: ALPHA,
+            k_max: K_MAX,
+            seed_root: &root,
+            iteration: pooled.iter,
+        };
+        sweep.run_with_scratch(
+            &corpus.docs,
+            &mut pooled.z,
+            &mut pooled.m,
+            &plan,
+            &pool,
+            &mut scratch,
+        );
+        pooled.n = TopicWordRows::merge_from_iter(
+            K_MAX,
+            scratch.iter_mut().map(|s| &mut s.out.n_acc),
+        );
+        let hist =
+            DocCountHist::merge_mut(K_MAX, scratch.iter_mut().map(|s| &mut s.out.hist));
+        let l = lstep::sample_l(&root.stream(pooled.iter ^ 0x77), &hist, &psi, ALPHA, &pool);
+        std::hint::black_box(l);
+    });
+
+    // --- verdict ----------------------------------------------------
+    let median = |name: &str| {
+        bench
+            .results()
+            .iter()
+            .find(|c| c.name == name)
+            .map(|c| c.median())
+            .unwrap_or(f64::NAN)
+    };
+    let noop_ratio = median("scoped_noop_phase_x4") / median("pooled_noop_phase_x4");
+    let cycle_scoped = median("scoped_phase_cycle");
+    let cycle_pooled = median("pooled_phase_cycle");
+    println!(
+        "\nnoop dispatch: pooled is {noop_ratio:.1}x cheaper than scoped spawning"
+    );
+    println!(
+        "phase cycle:   scoped {:.3} ms vs pooled {:.3} ms per iteration ({:+.1}% change)",
+        cycle_scoped * 1e3,
+        cycle_pooled * 1e3,
+        100.0 * (cycle_pooled - cycle_scoped) / cycle_scoped,
+    );
+    if cycle_pooled < cycle_scoped {
+        println!("PASS: pooled per-iteration overhead is strictly below per-phase spawning");
+    } else {
+        println!("WARN: pooled did not beat scoped on this machine/corpus");
+    }
+
+    bench
+        .write_csv(std::path::Path::new("results/bench_pool_overhead.csv"))
+        .ok();
+}

@@ -42,7 +42,7 @@ fn main() {
     }
     let nrows = TopicWordRows::merge_from(512, &mut [acc]);
     let root = Pcg64::new(3);
-    let phim = sample_phi(&root, &nrows, 0.01, corpus.vocab_size(), 1);
+    let phim = sample_phi(&root, &nrows, 0.01, corpus.vocab_size(), 1usize);
     let nnz = nrows.total() as f64;
     bench.run("engine_loglik_full_state", Some(nnz), || {
         engine.loglik(&nrows, &phim).unwrap()

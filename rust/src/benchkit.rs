@@ -18,6 +18,13 @@ pub struct CaseResult {
     pub samples: Vec<f64>,
     /// Optional items processed per call (for throughput).
     pub items_per_call: Option<f64>,
+    /// Mean OS threads spawned per call (from
+    /// [`crate::par::stats::thread_spawns`]; process-global, so
+    /// attribute only under a single-bench process).
+    pub spawns_per_call: f64,
+    /// Mean scratch-buffer growth events per call (from
+    /// [`crate::par::stats::scratch_allocs`]).
+    pub allocs_per_call: f64,
 }
 
 impl CaseResult {
@@ -103,7 +110,12 @@ impl Bench {
     }
 
     /// Time `f`; `items` (if given) sets the throughput denominator.
+    /// Substrate counters (thread spawns, scratch allocations) are
+    /// snapshotted around the case and reported per call.
     pub fn run<R>(&mut self, name: &str, items: Option<f64>, mut f: impl FnMut() -> R) {
+        let spawns0 = crate::par::stats::thread_spawns();
+        let allocs0 = crate::par::stats::scratch_allocs();
+        let mut calls = 0u64;
         // Warmup + batch-size calibration: grow batch until a batch
         // takes at least min_batch_time.
         let mut batch = 1usize;
@@ -112,6 +124,7 @@ impl Bench {
             for _ in 0..batch {
                 std::hint::black_box(f());
             }
+            calls += batch as u64;
             let dt = t0.elapsed();
             if dt >= self.min_batch_time || batch >= 1 << 24 {
                 break;
@@ -127,25 +140,39 @@ impl Bench {
             for _ in 0..batch {
                 std::hint::black_box(f());
             }
+            calls += batch as u64;
             samples.push(t0.elapsed().as_secs_f64() / batch as f64);
         }
+        let spawns = crate::par::stats::thread_spawns() - spawns0;
+        let allocs = crate::par::stats::scratch_allocs() - allocs0;
         let case = CaseResult {
             name: name.to_string(),
             samples,
             items_per_call: items,
+            spawns_per_call: spawns as f64 / calls.max(1) as f64,
+            allocs_per_call: allocs as f64 / calls.max(1) as f64,
         };
         let tput = case
             .throughput()
             .map(|t| format!("  {:>12.0} items/s", t))
             .unwrap_or_default();
+        let overhead = if spawns > 0 || allocs > 0 {
+            format!(
+                "  [{:.1} spawns/call, {:.2} allocs/call]",
+                case.spawns_per_call, case.allocs_per_call
+            )
+        } else {
+            String::new()
+        };
         println!(
-            "{:<44} median {}  mean {} ± {}  min {}{}",
+            "{:<44} median {}  mean {} ± {}  min {}{}{}",
             format!("{}/{}", self.group, name),
             fmt_time(case.median()),
             fmt_time(case.mean()),
             fmt_time(case.stddev()),
             fmt_time(case.min()),
-            tput
+            tput,
+            overhead
         );
         self.results.push(case);
     }
@@ -155,25 +182,31 @@ impl Bench {
         &self.results
     }
 
-    /// Write a CSV summary (`name,median_s,mean_s,sd_s,min_s,items_per_s`).
+    /// Write a CSV summary
+    /// (`name,median_s,mean_s,sd_s,min_s,items_per_s,spawns_per_call,allocs_per_call`).
     pub fn write_csv(&self, path: &std::path::Path) -> anyhow::Result<()> {
         use std::io::Write;
         if let Some(dir) = path.parent() {
             std::fs::create_dir_all(dir)?;
         }
         let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
-        writeln!(f, "group,name,median_s,mean_s,sd_s,min_s,items_per_s")?;
+        writeln!(
+            f,
+            "group,name,median_s,mean_s,sd_s,min_s,items_per_s,spawns_per_call,allocs_per_call"
+        )?;
         for c in &self.results {
             writeln!(
                 f,
-                "{},{},{:.9},{:.9},{:.9},{:.9},{}",
+                "{},{},{:.9},{:.9},{:.9},{:.9},{},{:.3},{:.3}",
                 self.group,
                 c.name,
                 c.median(),
                 c.mean(),
                 c.stddev(),
                 c.min(),
-                c.throughput().map(|t| format!("{t:.1}")).unwrap_or_default()
+                c.throughput().map(|t| format!("{t:.1}")).unwrap_or_default(),
+                c.spawns_per_call,
+                c.allocs_per_call
             )?;
         }
         Ok(())
@@ -190,6 +223,8 @@ mod tests {
             name: "x".into(),
             samples: vec![1.0, 2.0, 3.0, 4.0, 100.0],
             items_per_call: Some(6.0),
+            spawns_per_call: 0.0,
+            allocs_per_call: 0.0,
         };
         assert_eq!(c.median(), 3.0);
         assert_eq!(c.min(), 1.0);

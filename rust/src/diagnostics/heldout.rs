@@ -166,7 +166,7 @@ mod tests {
             s.step().unwrap();
         }
         let root = crate::rng::Pcg64::new(5);
-        let phi = sample_phi(&root, s.n(), cfg.beta, corpus.vocab_size(), 1);
+        let phi = sample_phi(&root, s.n(), cfg.beta, corpus.vocab_size(), 1usize);
         let (_, test) = train_test_split(corpus.num_docs(), 0.2, 3);
         let good = document_completion(&corpus, &test, &phi, s.psi(), cfg.alpha, 5, 11);
         assert!(good.tokens > 100);

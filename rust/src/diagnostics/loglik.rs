@@ -47,10 +47,11 @@ pub fn word_loglik(rows: &[Vec<(u32, u32)>], beta: f64, vocab: usize) -> f64 {
 
 /// `log p(z | Ψ, α)`: Pólya-sequence probability of every document's
 /// topic sequence. `psi[k]` must cover every topic id appearing in `z`.
-/// Parallel over documents.
-pub fn crp_loglik(z: &[Vec<u32>], psi: &[f64], alpha: f64, threads: usize) -> f64 {
-    let plan = par::Sharding::even(z.len(), threads);
-    let partials = par::scope_shards(&plan, |_, shard| {
+/// Parallel over documents on any executor (`threads: usize` scoped or
+/// a persistent [`&WorkerPool`](crate::par::WorkerPool)).
+pub fn crp_loglik(z: &[Vec<u32>], psi: &[f64], alpha: f64, exec: impl par::Executor) -> f64 {
+    let plan = par::Sharding::even(z.len(), exec.slots());
+    let partials = par::exec_shards(exec, &plan, |_, shard| {
         let mut acc = 0.0f64;
         let mut m = DocTopics::with_capacity(16);
         for zd in &z[shard.start..shard.end] {
@@ -75,9 +76,9 @@ pub fn joint_loglik(
     alpha: f64,
     beta: f64,
     vocab: usize,
-    threads: usize,
+    exec: impl par::Executor,
 ) -> f64 {
-    word_loglik(rows, beta, vocab) + crp_loglik(z, psi, alpha, threads)
+    word_loglik(rows, beta, vocab) + crp_loglik(z, psi, alpha, exec)
 }
 
 /// Dense reference for [`word_loglik`] (tests + the XLA cross-check):
@@ -150,7 +151,7 @@ mod tests {
         // One doc, one token on topic 1: p = αΨ_1 / α  = Ψ_1.
         let z = vec![vec![1u32]];
         let psi = [0.3, 0.7];
-        let got = crp_loglik(&z, &psi, 0.5, 1);
+        let got = crp_loglik(&z, &psi, 0.5, 1usize);
         assert!((got - 0.7f64.ln()).abs() < 1e-12);
     }
 
@@ -163,7 +164,7 @@ mod tests {
         let z = vec![vec![0u32, 0, 1]];
         let psi = [0.5, 0.5];
         let want = 0.5f64.ln() + 0.75f64.ln() + (1.0f64 / 6.0).ln();
-        let got = crp_loglik(&z, &psi, 1.0, 1);
+        let got = crp_loglik(&z, &psi, 1.0, 1usize);
         assert!((got - want).abs() < 1e-12, "{got} vs {want}");
     }
 
@@ -173,8 +174,8 @@ mod tests {
             .map(|d| (0..50).map(|i| ((d + i) % 5) as u32).collect())
             .collect();
         let psi = [0.2; 5];
-        let a = crp_loglik(&z, &psi, 0.7, 1);
-        let b = crp_loglik(&z, &psi, 0.7, 4);
+        let a = crp_loglik(&z, &psi, 0.7, 1usize);
+        let b = crp_loglik(&z, &psi, 0.7, 4usize);
         assert!((a - b).abs() < 1e-9);
     }
 

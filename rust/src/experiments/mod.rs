@@ -182,7 +182,18 @@ pub fn cmd_corpus(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
+/// `repro eval-xla` without the `xla` feature: explain how to get it.
+#[cfg(not(feature = "xla"))]
+pub fn cmd_eval_xla(_args: &Args) -> anyhow::Result<()> {
+    anyhow::bail!(
+        "this binary was built without the `xla` feature; \
+         rebuild with `cargo build --release --features xla` (requires \
+         the vendored `xla` crate and artifacts from `make artifacts`)"
+    )
+}
+
 /// `repro eval-xla --corpus tiny` — end-to-end XLA/native cross-check.
+#[cfg(feature = "xla")]
 pub fn cmd_eval_xla(args: &Args) -> anyhow::Result<()> {
     use crate::runtime::{phi_loglik_sparse, Engine};
     let corpus_name = args.value("corpus").unwrap_or("tiny").to_string();
@@ -200,7 +211,7 @@ pub fn cmd_eval_xla(args: &Args) -> anyhow::Result<()> {
         s.n(),
         cfg.beta,
         s.corpus().vocab_size(),
-        1,
+        1usize,
     );
     let sparse = phi_loglik_sparse(s.n(), &phi);
     let mut engine = Engine::load(&Engine::default_dir())?;

@@ -170,7 +170,7 @@ impl Trainer for ExactSampler {
             self.cfg.alpha,
             self.cfg.beta,
             self.corpus.vocab_size(),
-            1,
+            1usize,
         );
         let mut tokens_per_topic: Vec<u64> =
             self.nk.iter().copied().filter(|&t| t > 0).collect();

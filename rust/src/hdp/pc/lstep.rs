@@ -36,17 +36,19 @@ pub fn sample_l_topic(rng: &mut Pcg64, hist: &DocCountHist, k: usize, psi_k: f64
 }
 
 /// Sample the full `l` vector in parallel over topics, using one RNG
-/// stream per topic (shard-layout invariant).
+/// stream per topic (shard-layout invariant). Runs on any executor: a
+/// `threads: usize` scoped strategy or a persistent
+/// [`&WorkerPool`](crate::par::WorkerPool).
 pub fn sample_l(
     root: &Pcg64,
     hist: &DocCountHist,
     psi: &[f64],
     alpha: f64,
-    threads: usize,
+    exec: impl crate::par::Executor,
 ) -> Vec<u64> {
     let k_max = hist.num_topics();
     assert_eq!(psi.len(), k_max);
-    crate::par::parallel_map(k_max, threads, |k| {
+    crate::par::exec_map(exec, k_max, |k| {
         if hist.max_count(k) == 0 {
             return 0u64;
         }
@@ -166,8 +168,8 @@ mod tests {
         h.finish();
         let psi = [0.2, 0.1, 0.1, 0.5, 0.1];
         let root = Pcg64::new(9);
-        let l1 = sample_l(&root, &h, &psi, 0.7, 1);
-        let l4 = sample_l(&root, &h, &psi, 0.7, 4);
+        let l1 = sample_l(&root, &h, &psi, 0.7, 1usize);
+        let l4 = sample_l(&root, &h, &psi, 0.7, 4usize);
         assert_eq!(l1, l4, "per-topic streams make layout irrelevant");
         assert_eq!(l1[1], 0);
         assert_eq!(l1[2], 0);

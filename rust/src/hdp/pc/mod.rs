@@ -25,7 +25,7 @@ use crate::config::HdpConfig;
 use crate::corpus::Corpus;
 use crate::diagnostics::loglik;
 use crate::metrics::PhaseTimers;
-use crate::par::Sharding;
+use crate::par::{self, Sharding, WorkerPool};
 use crate::rng::Pcg64;
 use crate::sparse::{DocCountHist, TopicWordAcc, TopicWordRows};
 
@@ -57,6 +57,11 @@ pub struct PcSampler {
     /// nnz(Φ) of the last iteration (alias/bucket-a cost driver).
     pub phi_nnz: usize,
     doc_plan: Sharding,
+    /// Persistent fork-join pool: created once, reused by every phase
+    /// of every iteration (no per-phase thread spawns).
+    pool: WorkerPool,
+    /// Per-pool-slot z-phase scratch, cleared and reused each sweep.
+    scratch: Vec<zstep::ShardScratch>,
 }
 
 impl PcSampler {
@@ -100,6 +105,12 @@ impl PcSampler {
         let mut rng = root.stream(0x7051);
         psi::sample_psi(&mut rng, &l, cfg.gamma, &mut psi);
         let doc_plan = Sharding::weighted(&corpus.doc_weights(), threads);
+        let pool = WorkerPool::new(threads);
+        // One scratch per pool slot — the pool's slot bound is
+        // independent of the shard plan, so no resizing on plan swaps.
+        let scratch = (0..pool.slots())
+            .map(|_| zstep::ShardScratch::new(cfg.k_max))
+            .collect();
         Ok(Self {
             corpus,
             cfg,
@@ -116,6 +127,8 @@ impl PcSampler {
             sparse_work: 0,
             phi_nnz: 0,
             doc_plan,
+            pool,
+            scratch,
         })
     }
 
@@ -150,6 +163,23 @@ impl PcSampler {
         self.threads
     }
 
+    /// The sampler's persistent worker pool.
+    pub fn pool(&self) -> &WorkerPool {
+        &self.pool
+    }
+
+    /// Replace the document shard plan (tests and tuning: the chain is
+    /// bit-identical under any plan that covers `0..D` contiguously).
+    pub fn set_doc_plan(&mut self, plan: Sharding) {
+        let mut next = 0usize;
+        for s in plan.shards() {
+            assert_eq!(s.start, next, "plan must be contiguous from 0");
+            next = s.end;
+        }
+        assert_eq!(next, self.corpus.num_docs(), "plan must cover all documents");
+        self.doc_plan = plan;
+    }
+
     /// Mean per-token sparse work of the last iteration (eq. 29 audit).
     pub fn mean_sparse_work(&self) -> f64 {
         self.sparse_work as f64 / self.corpus.num_tokens().max(1) as f64
@@ -166,6 +196,9 @@ impl Trainer for PcSampler {
         let iter = self.iteration as u64 + 1;
         let vocab = self.corpus.vocab_size();
         let root = self.root.clone();
+        let spawns0 = par::stats::thread_spawns();
+        let jobs0 = self.pool.jobs_run();
+        let allocs0 = par::stats::scratch_allocs();
         // 1. Φ ~ PPU(n + β), parallel over topics.
         let t0 = Instant::now();
         let phi = phi::sample_phi(
@@ -173,16 +206,17 @@ impl Trainer for PcSampler {
             &self.n,
             self.cfg.beta,
             vocab,
-            self.threads,
+            &self.pool,
         );
         self.timers.add("phi", t0.elapsed());
         self.phi_nnz = phi.nnz();
         // 2. Bucket-(a) alias tables, parallel over word types.
         let t0 = Instant::now();
         let tables =
-            zstep::WordTables::build(&phi, &self.psi, self.cfg.alpha, self.threads);
+            zstep::WordTables::build(&phi, &self.psi, self.cfg.alpha, &self.pool);
         self.timers.add("alias", t0.elapsed());
-        // 3. z sweep, parallel over document shards.
+        // 3. z sweep, parallel over document shards, accumulating into
+        // the persistent per-slot scratch.
         let sweep = zstep::ZSweep {
             phi: &phi,
             psi: &self.psi,
@@ -193,36 +227,48 @@ impl Trainer for PcSampler {
             iteration: iter,
         };
         let t0 = Instant::now();
-        let results =
-            sweep.run(&self.corpus.docs, &mut self.assign.z, &mut self.assign.m, &self.doc_plan);
+        sweep.run_with_scratch(
+            &self.corpus.docs,
+            &mut self.assign.z,
+            &mut self.assign.m,
+            &self.doc_plan,
+            &self.pool,
+            &mut self.scratch,
+        );
         self.timers.add("z", t0.elapsed());
-        // 4. Merge shard outputs.
+        // 4. Merge the slot outputs (draining the scratch in place so
+        // its allocations survive into the next sweep).
         let t0 = Instant::now();
-        let mut accs = Vec::with_capacity(results.len());
-        let mut hists = Vec::with_capacity(results.len());
         self.zero_mass_tokens = 0;
         self.flag_tokens = 0;
         self.sparse_work = 0;
-        for r in results {
-            self.zero_mass_tokens += r.zero_mass_tokens;
-            self.flag_tokens += r.flag_tokens;
-            self.sparse_work += r.sparse_work;
-            accs.push(r.n_acc);
-            hists.push(r.hist);
+        for s in &self.scratch {
+            self.zero_mass_tokens += s.out.zero_mass_tokens;
+            self.flag_tokens += s.out.flag_tokens;
+            self.sparse_work += s.out.sparse_work;
         }
-        self.n = TopicWordRows::merge_from(self.cfg.k_max, &mut accs);
-        let hist = DocCountHist::merge(self.cfg.k_max, hists);
+        self.n = TopicWordRows::merge_from_iter(
+            self.cfg.k_max,
+            self.scratch.iter_mut().map(|s| &mut s.out.n_acc),
+        );
+        let hist = DocCountHist::merge_mut(
+            self.cfg.k_max,
+            self.scratch.iter_mut().map(|s| &mut s.out.hist),
+        );
         self.timers.add("merge", t0.elapsed());
         // 5. l via the binomial trick, parallel over topics.
         let t0 = Instant::now();
         let l_root = root.stream(iter.wrapping_mul(0x51ed) ^ 0x77);
-        self.l = lstep::sample_l(&l_root, &hist, &self.psi, self.cfg.alpha, self.threads);
+        self.l = lstep::sample_l(&l_root, &hist, &self.psi, self.cfg.alpha, &self.pool);
         self.timers.add("l", t0.elapsed());
         // 6. Ψ | l.
         let t0 = Instant::now();
         let mut psi_rng = root.stream(iter.wrapping_mul(0xabcd) ^ 0x7051);
         psi::sample_psi(&mut psi_rng, &self.l, self.cfg.gamma, &mut self.psi);
         self.timers.add("psi", t0.elapsed());
+        self.timers.incr("thread_spawns", par::stats::thread_spawns() - spawns0);
+        self.timers.incr("pool_jobs", self.pool.jobs_run() - jobs0);
+        self.timers.incr("scratch_allocs", par::stats::scratch_allocs() - allocs0);
         self.iteration += 1;
         Ok(())
     }
@@ -237,7 +283,7 @@ impl Trainer for PcSampler {
             self.cfg.alpha,
             self.cfg.beta,
             self.corpus.vocab_size(),
-            self.threads,
+            &self.pool,
         );
         let mut tokens_per_topic: Vec<u64> =
             self.n.row_totals().iter().copied().filter(|&t| t > 0).collect();
@@ -349,18 +395,50 @@ mod tests {
 
     #[test]
     fn chain_reproducible_and_thread_invariant() {
+        // Full matrix: threads × document-plan family. Every pooled
+        // chain must be bit-identical to the single-threaded reference
+        // after 4 sweeps — z, l, and Ψ.
         let corpus = tiny_corpus(4);
-        let mut a = PcSampler::new(corpus.clone(), cfg(), 1, 99).unwrap();
-        let mut b = PcSampler::new(corpus.clone(), cfg(), 4, 99).unwrap();
-        for _ in 0..4 {
-            a.step().unwrap();
-            b.step().unwrap();
+        let run = |threads: usize, weighted: bool| {
+            let mut s = PcSampler::new(corpus.clone(), cfg(), threads, 99).unwrap();
+            let plan = if weighted {
+                Sharding::weighted(&corpus.doc_weights(), threads)
+            } else {
+                Sharding::even(corpus.num_docs(), threads)
+            };
+            s.set_doc_plan(plan);
+            for _ in 0..4 {
+                s.step().unwrap();
+            }
+            (s.assignments().to_vec(), s.l().to_vec(), s.psi().to_vec())
+        };
+        let (z_ref, l_ref, psi_ref) = run(1, false);
+        for &threads in &[1usize, 2, 3, 7] {
+            for &weighted in &[false, true] {
+                let (z, l, psi) = run(threads, weighted);
+                let tag = format!("threads={threads} weighted={weighted}");
+                assert_eq!(z, z_ref, "z diverged: {tag}");
+                assert_eq!(l, l_ref, "l diverged: {tag}");
+                assert_eq!(psi, psi_ref, "psi diverged: {tag}");
+            }
         }
-        assert_eq!(a.assignments(), b.assignments());
-        assert_eq!(a.l(), b.l());
-        let pa: Vec<f64> = a.psi().to_vec();
-        let pb: Vec<f64> = b.psi().to_vec();
-        assert_eq!(pa, pb);
+    }
+
+    #[test]
+    fn pool_reuses_workers_across_iterations() {
+        // Every parallel phase must run as a job on the persistent
+        // pool: 4 jobs per iteration (Φ, alias, z, l), no per-phase
+        // pools or scoped fallbacks.
+        let corpus = tiny_corpus(6);
+        let mut s = PcSampler::new(corpus, cfg(), 4, 5).unwrap();
+        assert_eq!(s.pool().slots(), 4);
+        s.step().unwrap(); // warm-up (scratch growth happens here)
+        let jobs0 = s.pool().jobs_run();
+        for _ in 0..3 {
+            s.step().unwrap();
+        }
+        assert_eq!(s.pool().jobs_run() - jobs0, 12, "4 pool jobs per iteration");
+        assert!(s.timers.counter("pool_jobs") >= 16);
     }
 
     #[test]

@@ -93,15 +93,17 @@ pub fn sample_ppu_row_dense(
 
 /// Sample the whole `Φ` in parallel over topics (one RNG stream per
 /// topic — shard-layout invariant) and assemble the [`PhiMatrix`].
+/// Runs on any executor: a `threads: usize` scoped strategy or a
+/// persistent [`&WorkerPool`](crate::par::WorkerPool).
 pub fn sample_phi(
     root: &Pcg64,
     n: &TopicWordRows,
     beta: f64,
     vocab: usize,
-    threads: usize,
+    exec: impl par::Executor,
 ) -> PhiMatrix {
     let k_max = n.num_topics();
-    let rows: Vec<Vec<(u32, u32)>> = par::parallel_map(k_max, threads, |k| {
+    let rows: Vec<Vec<(u32, u32)>> = par::exec_map(exec, k_max, |k| {
         let mut rng = root.stream(0x9900_0000 | k as u64);
         sample_ppu_row(&mut rng, n.row(k), beta, vocab)
     });
@@ -203,8 +205,8 @@ mod tests {
         }
         let n = TopicWordRows::merge_from(8, &mut [acc]);
         let root = Pcg64::new(7);
-        let phi1 = sample_phi(&root, &n, 0.1, 50, 1);
-        let phi4 = sample_phi(&root, &n, 0.1, 50, 4);
+        let phi1 = sample_phi(&root, &n, 0.1, 50, 1usize);
+        let phi4 = sample_phi(&root, &n, 0.1, 50, 4usize);
         assert_eq!(phi1.nnz(), phi4.nnz());
         for k in 0..8 {
             assert_eq!(phi1.row(k), phi4.row(k), "topic {k}");

@@ -33,10 +33,12 @@ pub struct WordTables {
 }
 
 impl WordTables {
-    /// Build all tables in parallel over word types.
-    pub fn build(phi: &PhiMatrix, psi: &[f64], alpha: f64, threads: usize) -> Self {
+    /// Build all tables in parallel over word types on any executor
+    /// (a `threads: usize` scoped strategy or a
+    /// [`&WorkerPool`](crate::par::WorkerPool)).
+    pub fn build(phi: &PhiMatrix, psi: &[f64], alpha: f64, exec: impl par::Executor) -> Self {
         let vocab = phi.vocab();
-        let tables = par::parallel_map(vocab, threads, |v| {
+        let tables = par::exec_map(exec, vocab, |v| {
             let (topics, probs) = phi.col(v as u32);
             if topics.is_empty() {
                 return None;
@@ -86,6 +88,29 @@ pub struct ZShardResult {
     pub sparse_work: u64,
 }
 
+impl ZShardResult {
+    /// Empty result for a `k_max`-topic model.
+    pub fn new(k_max: usize) -> Self {
+        Self {
+            n_acc: TopicWordAcc::with_capacity(1 << 10),
+            hist: DocCountHist::new(k_max),
+            zero_mass_tokens: 0,
+            flag_tokens: 0,
+            sparse_work: 0,
+        }
+    }
+
+    /// Zero the counters and empty the accumulators, keeping every
+    /// allocation for the next sweep.
+    fn reset(&mut self, k_max: usize) {
+        self.n_acc.clear();
+        self.hist.reset(k_max);
+        self.zero_mass_tokens = 0;
+        self.flag_tokens = 0;
+        self.sparse_work = 0;
+    }
+}
+
 /// Reusable per-worker scratch.
 pub struct ZScratch {
     /// Dense `m_{d,k}` lookup (K*), maintained only for the current doc.
@@ -104,12 +129,44 @@ pub struct ZScratch {
 impl ZScratch {
     /// Scratch for `k_max` topics.
     pub fn new(k_max: usize) -> Self {
+        crate::par::stats::note_scratch_alloc();
         Self {
             mdense: vec![0; k_max],
             entries: Vec::with_capacity(64),
             in_list: vec![false; k_max],
             partials: Vec::with_capacity(64),
         }
+    }
+
+    /// Grow the dense workspaces to cover `k_max` topics if needed
+    /// (new space is zeroed/false, matching the between-docs
+    /// invariant) and drop any stale entries.
+    fn ensure(&mut self, k_max: usize) {
+        if self.mdense.len() < k_max {
+            crate::par::stats::note_scratch_alloc();
+            self.mdense.resize(k_max, 0);
+            self.in_list.resize(k_max, false);
+        }
+        self.entries.clear();
+        self.partials.clear();
+    }
+}
+
+/// One executor slot's persistent z-phase state: the dense probability
+/// workspaces ([`ZScratch`]) plus the shard-local sweep outputs
+/// ([`ZShardResult`]), all reused — cleared, not reallocated — across
+/// sweeps. The sampler owns one per pool slot.
+pub struct ShardScratch {
+    /// Sweep outputs accumulated by this slot (possibly over several
+    /// shards when the pool has fewer slots than the plan has shards).
+    pub out: ZShardResult,
+    scratch: ZScratch,
+}
+
+impl ShardScratch {
+    /// Fresh scratch for a `k_max`-topic model.
+    pub fn new(k_max: usize) -> Self {
+        Self { out: ZShardResult::new(k_max), scratch: ZScratch::new(k_max) }
     }
 }
 
@@ -242,6 +299,10 @@ impl<'a> ZSweep<'a> {
 
     /// Run the sweep over all documents with the given shard plan,
     /// mutating `z`/`m` in place and returning the per-shard results.
+    ///
+    /// One-shot form: allocates fresh per-shard scratch and runs on
+    /// scoped threads (one per shard). The samplers use
+    /// [`ZSweep::run_with_scratch`] with a persistent pool instead.
     pub fn run(
         &self,
         docs: &[Vec<u32>],
@@ -249,6 +310,39 @@ impl<'a> ZSweep<'a> {
         m: &mut [DocTopics],
         plan: &Sharding,
     ) -> Vec<ZShardResult> {
+        if plan.is_empty() {
+            return Vec::new();
+        }
+        let mut scratch: Vec<ShardScratch> =
+            (0..plan.len()).map(|_| ShardScratch::new(self.k_max)).collect();
+        // With the scoped executor, slot == shard index, so each
+        // ShardScratch.out is exactly one shard's result.
+        self.run_with_scratch(docs, z, m, plan, plan.len(), &mut scratch);
+        scratch.into_iter().map(|s| s.out).collect()
+    }
+
+    /// Run the sweep on `exec`, accumulating outputs into the per-slot
+    /// `scratch` (reset here, reused across calls — no per-sweep
+    /// allocation). The chain is bit-identical to [`ZSweep::run`] for
+    /// the same plan because every document owns its RNG stream; only
+    /// the grouping of outputs across `scratch` slots differs, and the
+    /// shard merges are order-independent.
+    pub fn run_with_scratch(
+        &self,
+        docs: &[Vec<u32>],
+        z: &mut [Vec<u32>],
+        m: &mut [DocTopics],
+        plan: &Sharding,
+        exec: impl par::Executor,
+        scratch: &mut [ShardScratch],
+    ) {
+        if plan.is_empty() {
+            return;
+        }
+        for s in scratch.iter_mut() {
+            s.out.reset(self.k_max);
+            s.scratch.ensure(self.k_max);
+        }
         // Split z and m into per-shard mutable slices.
         let mut z_parts: Vec<&mut [Vec<u32>]> = Vec::with_capacity(plan.len());
         let mut m_parts: Vec<&mut [DocTopics]> = Vec::with_capacity(plan.len());
@@ -266,7 +360,7 @@ impl<'a> ZSweep<'a> {
                 offset = shard.end;
             }
         }
-        // Interior mutability across shards: each worker owns its part.
+        // Interior mutability across shards: each task owns its part.
         let work: Vec<(usize, &mut [Vec<u32>], &mut [DocTopics])> = plan
             .shards()
             .iter()
@@ -276,28 +370,18 @@ impl<'a> ZSweep<'a> {
         let work = std::sync::Mutex::new(
             work.into_iter().map(Some).collect::<Vec<_>>(),
         );
-        par::scope_shards(plan, |shard_idx, shard| {
+        par::exec_shards_with(exec, plan, scratch, |slot, shard_idx, shard| {
             let (start, zp, mp) = {
                 let mut guard = work.lock().unwrap();
                 guard[shard_idx].take().expect("shard taken once")
             };
             debug_assert_eq!(start, shard.start);
-            let mut scratch = ZScratch::new(self.k_max);
-            let mut out = ZShardResult {
-                n_acc: TopicWordAcc::with_capacity(
-                    zp.iter().map(|d| d.len()).sum::<usize>() / 2 + 16,
-                ),
-                hist: DocCountHist::new(self.k_max),
-                zero_mass_tokens: 0,
-                flag_tokens: 0,
-                sparse_work: 0,
-            };
+            let ShardScratch { out, scratch: zs } = slot;
             for (off, (zd, md)) in zp.iter_mut().zip(mp.iter_mut()).enumerate() {
                 let d = shard.start + off;
-                self.resample_doc(d, &docs[d], zd, md, &mut scratch, &mut out);
+                self.resample_doc(d, &docs[d], zd, md, zs, out);
             }
-            out
-        })
+        });
     }
 }
 
@@ -345,7 +429,7 @@ mod tests {
         let phi = small_phi();
         let psi = [0.4, 0.3, 0.2, 0.1];
         let alpha = 0.7;
-        let t = WordTables::build(&phi, &psi, alpha, 2);
+        let t = WordTables::build(&phi, &psi, alpha, 2usize);
         for v in 0..3u32 {
             let want: f64 = (0..4)
                 .map(|k| phi.get(k as u32, v) * alpha * psi[k])
@@ -359,7 +443,7 @@ mod tests {
         let phi = small_phi();
         let psi = [0.4, 0.3, 0.2, 0.1];
         let alpha = 1.0;
-        let t = WordTables::build(&phi, &psi, alpha, 1);
+        let t = WordTables::build(&phi, &psi, alpha, 1usize);
         let mut rng = Pcg64::new(1);
         let mut counts = [0usize; 4];
         let reps = 200_000;
@@ -383,7 +467,7 @@ mod tests {
         let phi = small_phi();
         let psi = [0.4, 0.3, 0.2, 0.1];
         let alpha = 0.9;
-        let tables = WordTables::build(&phi, &psi, alpha, 1);
+        let tables = WordTables::build(&phi, &psi, alpha, 1usize);
         // document: tokens [1, 1, 0], assignments start at [0, 1, 0]
         let doc = vec![1u32, 1, 0];
         let docs = vec![doc.clone()];
@@ -454,9 +538,9 @@ mod tests {
         }
         let n = TopicWordRows::merge_from(8, &mut [acc]);
         let root = Pcg64::new(77);
-        let phi = super::super::phi::sample_phi(&root, &n, 0.05, 120, 1);
+        let phi = super::super::phi::sample_phi(&root, &n, 0.05, 120, 1usize);
         let psi = [0.3, 0.2, 0.15, 0.1, 0.1, 0.05, 0.05, 0.05];
-        let tables = WordTables::build(&phi, &psi, 0.5, 1);
+        let tables = WordTables::build(&phi, &psi, 0.5, 1usize);
         let sweep = ZSweep {
             phi: &phi,
             psi: &psi,
@@ -473,6 +557,90 @@ mod tests {
         sweep.run(&corpus.docs, &mut z1, &mut m1, &Sharding::even(40, 1));
         sweep.run(&corpus.docs, &mut z, &mut m, &Sharding::even(40, 7));
         assert_eq!(z, z1, "chains must not depend on shard layout");
+    }
+
+    #[test]
+    fn pooled_sweep_matches_scoped_sweep() {
+        // Same frozen state swept twice: scoped one-shot `run` vs
+        // `run_with_scratch` on a persistent pool (with slot count ≠
+        // shard count, twice in a row to exercise scratch reuse). The
+        // chain (z, m) must be bit-identical and the merged statistics
+        // equal.
+        use crate::corpus::synthetic::HdpCorpusSpec;
+        use crate::par::WorkerPool;
+        let (corpus, _) = HdpCorpusSpec {
+            vocab: 150,
+            topics: 5,
+            gamma: 2.0,
+            alpha: 1.0,
+            topic_beta: 0.1,
+            docs: 50,
+            mean_doc_len: 25.0,
+            len_sigma: 0.3,
+            min_doc_len: 5,
+        }
+        .generate(12);
+        let mut acc = TopicWordAcc::with_capacity(256);
+        let mut rng = Pcg64::new(4);
+        let z0: Vec<Vec<u32>> = corpus
+            .docs
+            .iter()
+            .map(|d| d.iter().map(|_| rng.below(6) as u32).collect())
+            .collect();
+        for (doc, zd) in corpus.docs.iter().zip(&z0) {
+            for (&v, &k) in doc.iter().zip(zd) {
+                acc.add(k, v, 1);
+            }
+        }
+        let n = TopicWordRows::merge_from(8, &mut [acc]);
+        let root = Pcg64::new(31);
+        let phi = super::super::phi::sample_phi(&root, &n, 0.05, 150, 1usize);
+        let psi = [0.3, 0.2, 0.15, 0.1, 0.1, 0.05, 0.05, 0.05];
+        let tables = WordTables::build(&phi, &psi, 0.5, 1usize);
+        let m0: Vec<DocTopics> =
+            z0.iter().map(|zd| zd.iter().copied().collect()).collect();
+        let plan = Sharding::even(50, 5);
+        let pool = WorkerPool::new(3); // fewer slots than shards
+        let mut scratch: Vec<ShardScratch> =
+            (0..plan.len().max(pool.slots())).map(|_| ShardScratch::new(8)).collect();
+        for iteration in 1..=2u64 {
+            let sweep = ZSweep {
+                phi: &phi,
+                psi: &psi,
+                tables: &tables,
+                alpha: 0.5,
+                k_max: 8,
+                seed_root: &root,
+                iteration,
+            };
+            let (mut z_scoped, mut m_scoped) = (z0.clone(), m0.clone());
+            let results =
+                sweep.run(&corpus.docs, &mut z_scoped, &mut m_scoped, &plan);
+            let (mut z_pooled, mut m_pooled) = (z0.clone(), m0.clone());
+            sweep.run_with_scratch(
+                &corpus.docs,
+                &mut z_pooled,
+                &mut m_pooled,
+                &plan,
+                &pool,
+                &mut scratch,
+            );
+            assert_eq!(z_pooled, z_scoped, "iteration {iteration}");
+            for (md, ms) in m_pooled.iter().zip(&m_scoped) {
+                assert_eq!(md.total(), ms.total());
+            }
+            // Merged statistics agree regardless of slot grouping.
+            let mut accs: Vec<TopicWordAcc> =
+                results.into_iter().map(|r| r.n_acc).collect();
+            let n_scoped = TopicWordRows::merge_from(8, &mut accs);
+            let n_pooled = TopicWordRows::merge_from_iter(
+                8,
+                scratch.iter_mut().map(|s| &mut s.out.n_acc),
+            );
+            for k in 0..8 {
+                assert_eq!(n_pooled.row(k), n_scoped.row(k), "topic {k}");
+            }
+        }
     }
 
     #[test]
@@ -502,9 +670,9 @@ mod tests {
         }
         let n = TopicWordRows::merge_from(6, &mut [acc]);
         let root = Pcg64::new(5);
-        let phi = super::super::phi::sample_phi(&root, &n, 0.05, 80, 1);
+        let phi = super::super::phi::sample_phi(&root, &n, 0.05, 80, 1usize);
         let psi = [0.4, 0.2, 0.15, 0.1, 0.1, 0.05];
-        let tables = WordTables::build(&phi, &psi, 0.6, 1);
+        let tables = WordTables::build(&phi, &psi, 0.6, 1usize);
         let sweep = ZSweep {
             phi: &phi,
             psi: &psi,

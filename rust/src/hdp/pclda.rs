@@ -12,7 +12,7 @@
 use crate::corpus::Corpus;
 use crate::diagnostics::loglik;
 use crate::metrics::PhaseTimers;
-use crate::par::Sharding;
+use crate::par::{Sharding, WorkerPool};
 use crate::rng::Pcg64;
 use crate::sparse::{TopicWordAcc, TopicWordRows};
 
@@ -36,6 +36,10 @@ pub struct PcLdaSampler {
     /// Phase timers (comparable to the PC sampler's).
     pub timers: PhaseTimers,
     doc_plan: Sharding,
+    /// Persistent fork-join pool shared by all phases.
+    pool: WorkerPool,
+    /// Per-pool-slot z-phase scratch, cleared and reused each sweep.
+    scratch: Vec<zstep::ShardScratch>,
 }
 
 impl PcLdaSampler {
@@ -60,6 +64,10 @@ impl PcLdaSampler {
         }
         let n = TopicWordRows::merge_from(k, &mut [acc]);
         let doc_plan = Sharding::weighted(&corpus.doc_weights(), threads);
+        let pool = WorkerPool::new(threads);
+        let scratch = (0..pool.slots())
+            .map(|_| zstep::ShardScratch::new(k))
+            .collect();
         Ok(Self {
             corpus,
             k,
@@ -73,12 +81,24 @@ impl PcLdaSampler {
             iteration: 0,
             timers: PhaseTimers::new(),
             doc_plan,
+            pool,
+            scratch,
         })
     }
 
     /// Topic-word statistic.
     pub fn n(&self) -> &TopicWordRows {
         &self.n
+    }
+
+    /// Thread count used by the parallel phases.
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// The sampler's persistent worker pool.
+    pub fn pool(&self) -> &WorkerPool {
+        &self.pool
     }
 }
 
@@ -98,12 +118,12 @@ impl Trainer for PcLdaSampler {
             &self.n,
             self.beta,
             vocab,
-            self.threads,
+            &self.pool,
         );
         self.timers.add("phi", t0.elapsed());
         let t0 = Instant::now();
         // α·Ψ_k = α/K — the LDA symmetric document prior.
-        let tables = zstep::WordTables::build(&phi_m, &self.psi, self.alpha, self.threads);
+        let tables = zstep::WordTables::build(&phi_m, &self.psi, self.alpha, &self.pool);
         self.timers.add("alias", t0.elapsed());
         let sweep = zstep::ZSweep {
             phi: &phi_m,
@@ -115,16 +135,20 @@ impl Trainer for PcLdaSampler {
             iteration: iter,
         };
         let t0 = Instant::now();
-        let results = sweep.run(
+        sweep.run_with_scratch(
             &self.corpus.docs,
             &mut self.assign.z,
             &mut self.assign.m,
             &self.doc_plan,
+            &self.pool,
+            &mut self.scratch,
         );
         self.timers.add("z", t0.elapsed());
         let t0 = Instant::now();
-        let mut accs: Vec<TopicWordAcc> = results.into_iter().map(|r| r.n_acc).collect();
-        self.n = TopicWordRows::merge_from(self.k, &mut accs);
+        self.n = TopicWordRows::merge_from_iter(
+            self.k,
+            self.scratch.iter_mut().map(|s| &mut s.out.n_acc),
+        );
         self.timers.add("merge", t0.elapsed());
         self.iteration += 1;
         Ok(())
@@ -139,7 +163,7 @@ impl Trainer for PcLdaSampler {
             self.alpha,
             self.beta,
             self.corpus.vocab_size(),
-            self.threads,
+            &self.pool,
         );
         let mut tokens_per_topic: Vec<u64> =
             self.n.row_totals().iter().copied().filter(|&t| t > 0).collect();

@@ -33,5 +33,9 @@ pub mod hdp;
 pub mod metrics;
 pub mod par;
 pub mod rng;
+/// PJRT/XLA bridge — compiled only with the off-by-default `xla`
+/// feature (requires the `xla` crate and an XLA toolchain; see
+/// `Cargo.toml`). The default build is pure rust + std.
+#[cfg(feature = "xla")]
 pub mod runtime;
 pub mod sparse;

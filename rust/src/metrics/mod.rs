@@ -9,11 +9,15 @@
 use std::io::Write;
 use std::time::{Duration, Instant};
 
-/// Wall-clock accumulator for the sampler phases.
+/// Wall-clock accumulator for the sampler phases, plus named event
+/// counters (thread spawns, pool jobs, scratch allocations, …) so the
+/// perf pass can see substrate overheads next to phase times.
 #[derive(Clone, Debug, Default)]
 pub struct PhaseTimers {
     /// (phase name, accumulated time, invocation count)
     entries: Vec<(&'static str, Duration, u64)>,
+    /// (counter name, accumulated count)
+    counters: Vec<(&'static str, u64)>,
 }
 
 impl PhaseTimers {
@@ -61,6 +65,31 @@ impl PhaseTimers {
         self.entries.iter().map(|e| (e.0, e.1.as_secs_f64(), e.2)).collect()
     }
 
+    /// Add `delta` to the named event counter.
+    pub fn incr(&mut self, counter: &'static str, delta: u64) {
+        for c in self.counters.iter_mut() {
+            if c.0 == counter {
+                c.1 += delta;
+                return;
+            }
+        }
+        self.counters.push((counter, delta));
+    }
+
+    /// Accumulated value of a counter (0 when unknown).
+    pub fn counter(&self, counter: &str) -> u64 {
+        self.counters
+            .iter()
+            .find(|c| c.0 == counter)
+            .map(|c| c.1)
+            .unwrap_or(0)
+    }
+
+    /// `(counter, count)` rows, insertion order.
+    pub fn counter_rows(&self) -> Vec<(&'static str, u64)> {
+        self.counters.clone()
+    }
+
     /// Human-readable summary.
     pub fn summary(&self) -> String {
         let total = self.total_seconds().max(1e-12);
@@ -70,6 +99,9 @@ impl PhaseTimers {
                 "{name:>12}: {secs:9.3}s ({:5.1}%) over {calls} calls\n",
                 100.0 * secs / total
             ));
+        }
+        for &(name, count) in &self.counters {
+            s.push_str(&format!("{name:>16}: {count}\n"));
         }
         s
     }
@@ -86,6 +118,9 @@ impl PhaseTimers {
             if !self.entries.iter().any(|e| e.0 == name) {
                 self.entries.push((name, dur, count));
             }
+        }
+        for &(name, count) in &other.counters {
+            self.incr(name, count);
         }
     }
 }
@@ -215,12 +250,30 @@ mod tests {
     fn timers_merge() {
         let mut a = PhaseTimers::new();
         a.add("z", Duration::from_millis(10));
+        a.incr("pool_jobs", 3);
         let mut b = PhaseTimers::new();
         b.add("z", Duration::from_millis(10));
         b.add("phi", Duration::from_millis(2));
+        b.incr("pool_jobs", 4);
+        b.incr("thread_spawns", 1);
         a.merge(&b);
         assert!((a.seconds("z") - 0.02).abs() < 1e-9);
         assert!((a.seconds("phi") - 0.002).abs() < 1e-9);
+        assert_eq!(a.counter("pool_jobs"), 7);
+        assert_eq!(a.counter("thread_spawns"), 1);
+    }
+
+    #[test]
+    fn counters_accumulate_and_report() {
+        let mut t = PhaseTimers::new();
+        assert_eq!(t.counter("pool_jobs"), 0);
+        t.incr("pool_jobs", 5);
+        t.incr("pool_jobs", 2);
+        t.incr("scratch_allocs", 1);
+        assert_eq!(t.counter("pool_jobs"), 7);
+        assert_eq!(t.counter_rows(), vec![("pool_jobs", 7), ("scratch_allocs", 1)]);
+        let s = t.summary();
+        assert!(s.contains("pool_jobs") && s.contains("scratch_allocs"));
     }
 
     #[test]

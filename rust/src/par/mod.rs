@@ -2,13 +2,26 @@
 //!
 //! The sampler's phases are bulk-synchronous: *z phase* parallel over
 //! document shards, *Φ/l phases* parallel over topic ranges, followed by
-//! a merge. [`scope_shards`] and [`parallel_for_ranges`] implement that
-//! with `std::thread::scope` — threads are spawned per phase, which at
-//! phase granularity (milliseconds to seconds) costs well under 0.1 %.
+//! a merge. Two substrates implement the [`pool::Executor`] contract:
+//!
+//! * [`pool::WorkerPool`] — a persistent fork-join pool created once
+//!   per sampler and reused across all iterations (no per-phase thread
+//!   spawns, reusable per-slot scratch); this is what the samplers run
+//!   on.
+//! * `usize` — the original scoped-thread-per-task strategy
+//!   ([`scope_shards`], [`parallel_for_ranges`], [`parallel_map`] are
+//!   thin wrappers over it), kept for one-shot callers and as the
+//!   baseline `benches/pool_overhead.rs` measures the pool against.
 //!
 //! [`Sharding`] computes balanced contiguous shards; for documents it
 //! can balance by *token count* rather than document count, which is the
 //! load-balancing fix the paper inherits from Magnusson et al. (2018).
+
+pub mod pool;
+
+pub use pool::{
+    exec_for, exec_map, exec_shards, exec_shards_with, stats, Executor, WorkerPool,
+};
 
 /// A contiguous shard `[start, end)` of some index space.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -114,65 +127,22 @@ pub fn scope_shards<R: Send>(
     sharding: &Sharding,
     f: impl Fn(usize, Shard) -> R + Sync,
 ) -> Vec<R> {
-    let shards = sharding.shards();
-    match shards.len() {
-        0 => Vec::new(),
-        1 => vec![f(0, shards[0])],
-        _ => {
-            let mut out: Vec<Option<R>> = Vec::new();
-            out.resize_with(shards.len(), || None);
-            std::thread::scope(|scope| {
-                let mut handles = Vec::with_capacity(shards.len() - 1);
-                let mut rest = out.as_mut_slice();
-                let (first, tail) = rest.split_first_mut().unwrap();
-                rest = tail;
-                for (i, &shard) in shards.iter().enumerate().skip(1) {
-                    let (slot, tail) = rest.split_first_mut().unwrap();
-                    rest = tail;
-                    let f = &f;
-                    handles.push(scope.spawn(move || {
-                        *slot = Some(f(i, shard));
-                    }));
-                }
-                *first = Some(f(0, shards[0]));
-            });
-            out.into_iter().map(|r| r.expect("shard completed")).collect()
-        }
-    }
+    pool::exec_shards(sharding.len(), sharding, f)
 }
 
 /// Parallel-for over `0..n` in `threads` contiguous ranges; `f` receives
-/// each index. Convenience wrapper over [`scope_shards`].
+/// each index. Scoped-thread convenience wrapper over [`pool::exec_for`].
 pub fn parallel_for_ranges(n: usize, threads: usize, f: impl Fn(usize) + Sync) {
-    let plan = Sharding::even(n, threads);
-    scope_shards(&plan, |_, shard| {
-        for i in shard.start..shard.end {
-            f(i);
-        }
-    });
+    pool::exec_for(threads, n, f)
 }
 
 /// Parallel map over `0..n` producing a `Vec<R>` in index order.
-pub fn parallel_map<R: Send + Default + Clone>(
+pub fn parallel_map<R: Send>(
     n: usize,
     threads: usize,
     f: impl Fn(usize) -> R + Sync,
 ) -> Vec<R> {
-    let plan = Sharding::even(n, threads);
-    let mut out = vec![R::default(); n];
-    let chunks = scope_shards(&plan, |_, shard| {
-        let mut local = Vec::with_capacity(shard.len());
-        for i in shard.start..shard.end {
-            local.push(f(i));
-        }
-        (shard.start, local)
-    });
-    for (start, local) in chunks {
-        for (off, r) in local.into_iter().enumerate() {
-            out[start + off] = r;
-        }
-    }
-    out
+    pool::exec_map(threads, n, f)
 }
 
 #[cfg(test)]
@@ -233,6 +203,69 @@ mod tests {
         assert_eq!(Sharding::weighted(&[], 4).len(), 0);
         let plan = Sharding::weighted(&[5, 5], 8);
         assert_eq!(plan.shards().iter().map(|s| s.len()).sum::<usize>(), 2);
+    }
+
+    /// Property check for adversarial weight vectors: every plan must
+    /// consist of non-empty contiguous shards covering `0..n` exactly
+    /// once, with at most `min(parts, n)` shards.
+    fn assert_weighted_plan_valid(weights: &[u64], parts: usize) {
+        let plan = Sharding::weighted(weights, parts);
+        let n = weights.len();
+        if n == 0 {
+            assert!(plan.is_empty(), "empty input yields empty plan");
+            return;
+        }
+        assert!(!plan.is_empty());
+        assert!(
+            plan.len() <= parts.max(1).min(n),
+            "n={n} parts={parts}: got {} shards",
+            plan.len()
+        );
+        let mut next = 0usize;
+        for s in plan.shards() {
+            assert!(!s.is_empty(), "empty shard in {:?}", plan.shards());
+            assert_eq!(s.start, next, "gap/overlap at {}", s.start);
+            next = s.end;
+        }
+        assert_eq!(next, n, "plan must cover all items");
+    }
+
+    #[test]
+    fn weighted_sharding_adversarial_weights() {
+        // All-zero weights (zero total mass must not divide-by-zero or
+        // produce empty shards).
+        assert_weighted_plan_valid(&[0u64; 50], 8);
+        assert_weighted_plan_valid(&[0u64; 3], 3);
+        // One giant document dwarfing everything else, in every
+        // position.
+        for pos in [0usize, 17, 49] {
+            let mut w = vec![1u64; 50];
+            w[pos] = 1_000_000_000;
+            assert_weighted_plan_valid(&w, 4);
+        }
+        // Fewer items than parts.
+        assert_weighted_plan_valid(&[7, 2, 9], 16);
+        assert_weighted_plan_valid(&[7], 16);
+        // Single part, and huge part counts.
+        assert_weighted_plan_valid(&[1, 2, 3, 4, 5], 1);
+        assert_weighted_plan_valid(&(0..200u64).collect::<Vec<_>>(), 200);
+        // Pseudo-random fuzz over sizes and skews.
+        let mut state = 0x9e37u64;
+        for case in 0..50 {
+            let n = 1 + (case * 13) % 120;
+            let parts = 1 + (case * 7) % 16;
+            let w: Vec<u64> = (0..n)
+                .map(|_| {
+                    state = state.wrapping_mul(6364136223846793005).wrapping_add(1);
+                    if state % 11 == 0 {
+                        0
+                    } else {
+                        state % 1000
+                    }
+                })
+                .collect();
+            assert_weighted_plan_valid(&w, parts);
+        }
     }
 
     #[test]

@@ -1,0 +1,573 @@
+//! Persistent fork-join worker pool and the [`Executor`] abstraction.
+//!
+//! The sampler's iteration is a sequence of short bulk-synchronous
+//! phases (Φ, alias build, z sweep, l, diagnostics). The original
+//! substrate spawned fresh OS threads for every phase of every
+//! iteration; at PubMed scale that is noise, but on small corpora —
+//! where an iteration is fractions of a millisecond — spawn/join
+//! latency dominates. [`WorkerPool`] is created once per sampler and
+//! reused across all iterations: N−1 pinned workers parked on a
+//! condvar, woken per phase, with the calling thread participating as
+//! slot 0.
+//!
+//! [`Executor`] abstracts "run `ntasks` tasks and wait": it is
+//! implemented both by [`WorkerPool`] (persistent workers) and by
+//! `usize` (the legacy scoped-thread-per-task strategy), so every
+//! parallel phase — [`exec_shards`], [`exec_map`],
+//! [`exec_shards_with`] — can run on either substrate. Chains are
+//! bit-identical across executors because all sampler randomness flows
+//! through per-(phase, iteration, actor) RNG streams; the executor only
+//! decides *where* a task runs, never *what* it computes.
+//!
+//! [`exec_shards_with`] additionally gives every executor *slot* a
+//! reusable scratch value (`&mut S`), which is what lets the z sweep
+//! keep its `TopicWordAcc` / `DocCountHist` / dense-probability
+//! buffers across iterations instead of reallocating them every sweep.
+//!
+//! # Executor slot contract
+//!
+//! `run_tasks(ntasks, f)` must call `f(slot, task)` exactly once for
+//! every `task in 0..ntasks`, must not return before every call has
+//! completed, and must never run two concurrent tasks with the same
+//! `slot` value. [`exec_shards_with`] relies on that last guarantee to
+//! hand out disjoint `&mut S` scratch slots without locking.
+
+use super::{Shard, Sharding};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+
+/// Substrate-wide instrumentation: OS threads spawned and scratch
+/// buffer (re)allocations, exposed so [`crate::metrics::PhaseTimers`]
+/// and [`crate::benchkit`] can report per-phase / per-case deltas.
+///
+/// Counters are global (process-wide) monotonic totals; consumers
+/// subtract before/after snapshots. Under concurrent benchmarks the
+/// deltas attribute work from *all* threads, which is the honest number
+/// for a substrate-level counter.
+pub mod stats {
+    use super::{AtomicU64, Ordering};
+
+    static THREAD_SPAWNS: AtomicU64 = AtomicU64::new(0);
+    static SCRATCH_ALLOCS: AtomicU64 = AtomicU64::new(0);
+
+    /// Record `n` OS thread spawns.
+    pub fn note_spawns(n: u64) {
+        THREAD_SPAWNS.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Record one scratch-buffer (re)allocation / growth event.
+    pub fn note_scratch_alloc() {
+        SCRATCH_ALLOCS.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Total OS threads spawned by the parallel substrate so far.
+    pub fn thread_spawns() -> u64 {
+        THREAD_SPAWNS.load(Ordering::Relaxed)
+    }
+
+    /// Total scratch-buffer growth events so far.
+    pub fn scratch_allocs() -> u64 {
+        SCRATCH_ALLOCS.load(Ordering::Relaxed)
+    }
+}
+
+/// An execution substrate for one bulk-synchronous phase.
+///
+/// See the module docs for the slot contract. Implemented by
+/// [`&WorkerPool`](WorkerPool) (persistent workers) and by `usize`
+/// (spawn one scoped thread per task — the seed strategy, kept for
+/// one-shot callers and as the bench baseline).
+pub trait Executor {
+    /// Number of distinct slot values this executor uses for chunked
+    /// work ([`exec_map`] / [`exec_for`] plan sizing).
+    fn slots(&self) -> usize;
+
+    /// Exclusive upper bound on the `slot` values `run_tasks` may pass
+    /// for a job of `ntasks` tasks — the scratch length
+    /// [`exec_shards_with`] requires. Defaults to [`Executor::slots`];
+    /// the scoped `usize` executor overrides it with `ntasks` because
+    /// its slots are task indices.
+    fn slot_bound(&self, _ntasks: usize) -> usize {
+        self.slots()
+    }
+
+    /// Run `f(slot, task)` for every `task in 0..ntasks`; returns only
+    /// after all calls complete.
+    fn run_tasks(&self, ntasks: usize, f: &(dyn Fn(usize, usize) + Sync));
+}
+
+/// The seed substrate: one scoped OS thread per task (the caller runs
+/// task 0). Slot = task index, so per-slot state needs `ntasks`
+/// entries.
+impl Executor for usize {
+    fn slots(&self) -> usize {
+        (*self).max(1)
+    }
+
+    fn slot_bound(&self, ntasks: usize) -> usize {
+        ntasks
+    }
+
+    fn run_tasks(&self, ntasks: usize, f: &(dyn Fn(usize, usize) + Sync)) {
+        match ntasks {
+            0 => {}
+            1 => f(0, 0),
+            _ => {
+                stats::note_spawns(ntasks as u64 - 1);
+                std::thread::scope(|scope| {
+                    for i in 1..ntasks {
+                        scope.spawn(move || f(i, i));
+                    }
+                    f(0, 0);
+                });
+            }
+        }
+    }
+}
+
+/// Type-erased borrowed task closure. Only dereferenced while the
+/// publishing `run_tasks` call is still on the stack (it blocks until
+/// `remaining == 0`, and exhausted jobs never touch the pointer again),
+/// so the borrow can never dangle.
+struct TaskRef(*const (dyn Fn(usize, usize) + Sync));
+
+// SAFETY: the pointee is `Sync` (callable from any thread through a
+// shared reference) and the pointer's validity is guaranteed by the
+// blocking protocol described on `TaskRef`.
+unsafe impl Send for TaskRef {}
+unsafe impl Sync for TaskRef {}
+
+/// One published phase: a task closure plus its completion protocol.
+struct Job {
+    task: TaskRef,
+    ntasks: usize,
+    /// Next task index to claim (may overshoot `ntasks`).
+    next: AtomicUsize,
+    /// Tasks not yet completed; the publisher waits for 0.
+    remaining: AtomicUsize,
+    /// Set when any task panicked (re-raised by the publisher).
+    panicked: AtomicBool,
+    done: Mutex<bool>,
+    done_cv: Condvar,
+}
+
+impl Job {
+    /// Claim-and-run loop shared by workers and the publishing thread.
+    fn run_on(&self, slot: usize) {
+        loop {
+            let i = self.next.fetch_add(1, Ordering::Relaxed);
+            if i >= self.ntasks {
+                return;
+            }
+            // SAFETY: `i < ntasks` means the publisher is still blocked
+            // in `run_tasks`, so the borrowed closure is alive.
+            let task = unsafe { &*self.task.0 };
+            if catch_unwind(AssertUnwindSafe(|| task(slot, i))).is_err() {
+                self.panicked.store(true, Ordering::SeqCst);
+            }
+            if self.remaining.fetch_sub(1, Ordering::AcqRel) == 1 {
+                let mut done = self.done.lock().unwrap();
+                *done = true;
+                self.done_cv.notify_all();
+            }
+        }
+    }
+}
+
+struct PoolState {
+    job: Option<Arc<Job>>,
+    /// Bumped on every publish so parked workers can tell a new job
+    /// from a spurious wakeup.
+    epoch: u64,
+    shutdown: bool,
+}
+
+struct PoolShared {
+    state: Mutex<PoolState>,
+    work_cv: Condvar,
+}
+
+fn worker_loop(shared: &PoolShared, slot: usize) {
+    let mut seen_epoch = 0u64;
+    loop {
+        let job = {
+            let mut st = shared.state.lock().unwrap();
+            loop {
+                if st.shutdown {
+                    return;
+                }
+                if st.epoch != seen_epoch {
+                    seen_epoch = st.epoch;
+                    if let Some(job) = st.job.clone() {
+                        break job;
+                    }
+                }
+                st = shared.work_cv.wait(st).unwrap();
+            }
+        };
+        job.run_on(slot);
+    }
+}
+
+/// Persistent fork-join pool: `threads - 1` parked workers plus the
+/// calling thread. Create once per sampler; every phase of every
+/// iteration is one [`WorkerPool::run_tasks`] publish instead of a
+/// round of thread spawns.
+pub struct WorkerPool {
+    shared: Arc<PoolShared>,
+    handles: Vec<std::thread::JoinHandle<()>>,
+    jobs: AtomicU64,
+    /// Serializes dispatches: every publisher participates as slot 0,
+    /// so two concurrent `run_tasks` calls would otherwise run two
+    /// tasks with the same slot — exactly what the slot contract (and
+    /// the unsafe per-slot scratch access built on it) forbids.
+    /// Consequence: dispatching from *inside* a pool task deadlocks;
+    /// phases are serial, so nothing legitimate nests.
+    dispatch_gate: Mutex<()>,
+}
+
+impl WorkerPool {
+    /// Pool with `threads` logical slots (`threads - 1` spawned
+    /// workers; `threads <= 1` runs everything inline with zero
+    /// spawns).
+    pub fn new(threads: usize) -> Self {
+        let threads = threads.max(1);
+        let shared = Arc::new(PoolShared {
+            state: Mutex::new(PoolState { job: None, epoch: 0, shutdown: false }),
+            work_cv: Condvar::new(),
+        });
+        let mut handles = Vec::with_capacity(threads - 1);
+        for w in 1..threads {
+            let sh = Arc::clone(&shared);
+            stats::note_spawns(1);
+            handles.push(
+                std::thread::Builder::new()
+                    .name(format!("hdp-pool-{w}"))
+                    .spawn(move || worker_loop(&sh, w))
+                    .expect("spawn pool worker"),
+            );
+        }
+        Self { shared, handles, jobs: AtomicU64::new(0), dispatch_gate: Mutex::new(()) }
+    }
+
+    /// Zero-worker pool: runs every task inline on the caller. Cheap to
+    /// construct; the executor of choice for sequential samplers.
+    pub fn inline() -> Self {
+        Self::new(1)
+    }
+
+    /// Logical parallelism (workers + the calling thread).
+    pub fn slots(&self) -> usize {
+        self.handles.len() + 1
+    }
+
+    /// Jobs (phase publishes, including inline ones) dispatched so far.
+    pub fn jobs_run(&self) -> u64 {
+        self.jobs.load(Ordering::Relaxed)
+    }
+
+    fn dispatch(&self, ntasks: usize, f: &(dyn Fn(usize, usize) + Sync)) {
+        if ntasks == 0 {
+            return;
+        }
+        // One dispatch at a time (see `dispatch_gate`). A previous
+        // dispatch may have panicked while holding the gate; the pool
+        // itself is still consistent, so ignore the poison.
+        let _gate = self.dispatch_gate.lock().unwrap_or_else(|e| e.into_inner());
+        self.jobs.fetch_add(1, Ordering::Relaxed);
+        if self.handles.is_empty() || ntasks == 1 {
+            for i in 0..ntasks {
+                f(0, i);
+            }
+            return;
+        }
+        let job = Arc::new(Job {
+            task: TaskRef(f as *const _),
+            ntasks,
+            next: AtomicUsize::new(0),
+            remaining: AtomicUsize::new(ntasks),
+            panicked: AtomicBool::new(false),
+            done: Mutex::new(false),
+            done_cv: Condvar::new(),
+        });
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            st.job = Some(Arc::clone(&job));
+            st.epoch = st.epoch.wrapping_add(1);
+            self.shared.work_cv.notify_all();
+        }
+        // Participate as slot 0, then wait for stragglers.
+        job.run_on(0);
+        {
+            let mut done = job.done.lock().unwrap();
+            while !*done {
+                done = job.done_cv.wait(done).unwrap();
+            }
+        }
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            if st.job.as_ref().is_some_and(|j| Arc::ptr_eq(j, &job)) {
+                st.job = None;
+            }
+        }
+        if job.panicked.load(Ordering::SeqCst) {
+            panic!("worker pool task panicked");
+        }
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            st.shutdown = true;
+            self.shared.work_cv.notify_all();
+        }
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Executor for &WorkerPool {
+    fn slots(&self) -> usize {
+        WorkerPool::slots(self)
+    }
+
+    fn run_tasks(&self, ntasks: usize, f: &(dyn Fn(usize, usize) + Sync)) {
+        self.dispatch(ntasks, f);
+    }
+}
+
+/// Covariant raw-pointer wrapper for disjoint-index writes from tasks.
+#[derive(Clone, Copy)]
+struct SendPtr<T>(*mut T);
+
+// SAFETY: every use writes/borrows disjoint indices (task outputs by
+// task id, scratch by slot id under the Executor slot contract).
+unsafe impl<T> Send for SendPtr<T> {}
+unsafe impl<T> Sync for SendPtr<T> {}
+
+/// Run `f(shard_index, shard)` for every shard of `plan` on `exec`,
+/// collecting results in shard order.
+pub fn exec_shards<R: Send>(
+    exec: impl Executor,
+    plan: &Sharding,
+    f: impl Fn(usize, Shard) -> R + Sync,
+) -> Vec<R> {
+    let shards = plan.shards();
+    let n = shards.len();
+    let mut out: Vec<Option<R>> = Vec::with_capacity(n);
+    out.resize_with(n, || None);
+    {
+        let base = SendPtr(out.as_mut_ptr());
+        let task = move |_slot: usize, i: usize| {
+            let r = f(i, shards[i]);
+            // SAFETY: each task id writes only its own slot.
+            unsafe {
+                *base.0.add(i) = Some(r);
+            }
+        };
+        exec.run_tasks(n, &task);
+    }
+    out.into_iter().map(|r| r.expect("task completed")).collect()
+}
+
+/// Like [`exec_shards`] but every task additionally borrows the
+/// executor slot's reusable scratch value. `scratch` must have at
+/// least [`Executor::slot_bound`] entries — the pool needs one per
+/// pool slot regardless of shard count; the scoped `usize` executor
+/// needs one per shard (its slots are task indices).
+pub fn exec_shards_with<S: Send, R: Send>(
+    exec: impl Executor,
+    plan: &Sharding,
+    scratch: &mut [S],
+    f: impl Fn(&mut S, usize, Shard) -> R + Sync,
+) -> Vec<R> {
+    let shards = plan.shards();
+    let n = shards.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    assert!(
+        scratch.len() >= exec.slot_bound(n),
+        "scratch slots {} must cover the executor's slot bound {} for {} shards",
+        scratch.len(),
+        exec.slot_bound(n),
+        n
+    );
+    let mut out: Vec<Option<R>> = Vec::with_capacity(n);
+    out.resize_with(n, || None);
+    {
+        let base = SendPtr(out.as_mut_ptr());
+        let sbase = SendPtr(scratch.as_mut_ptr());
+        let task = move |slot: usize, i: usize| {
+            // SAFETY: the Executor slot contract guarantees no two
+            // concurrent tasks share `slot`; output index `i` is owned
+            // by this task.
+            let s = unsafe { &mut *sbase.0.add(slot) };
+            let r = f(s, i, shards[i]);
+            unsafe {
+                *base.0.add(i) = Some(r);
+            }
+        };
+        exec.run_tasks(n, &task);
+    }
+    out.into_iter().map(|r| r.expect("task completed")).collect()
+}
+
+/// Parallel map over `0..n` in index order, chunked into
+/// `exec.slots()` contiguous ranges.
+pub fn exec_map<R: Send>(
+    exec: impl Executor,
+    n: usize,
+    f: impl Fn(usize) -> R + Sync,
+) -> Vec<R> {
+    if n == 0 {
+        return Vec::new();
+    }
+    let plan = Sharding::even(n, exec.slots());
+    let shards = plan.shards();
+    let mut out: Vec<Option<R>> = Vec::with_capacity(n);
+    out.resize_with(n, || None);
+    {
+        let base = SendPtr(out.as_mut_ptr());
+        let task = move |_slot: usize, t: usize| {
+            let s = shards[t];
+            for i in s.start..s.end {
+                let r = f(i);
+                // SAFETY: ranges are disjoint across tasks.
+                unsafe {
+                    *base.0.add(i) = Some(r);
+                }
+            }
+        };
+        exec.run_tasks(shards.len(), &task);
+    }
+    out.into_iter().map(|r| r.expect("task completed")).collect()
+}
+
+/// Parallel for over `0..n`, chunked into `exec.slots()` ranges.
+pub fn exec_for(exec: impl Executor, n: usize, f: impl Fn(usize) + Sync) {
+    if n == 0 {
+        return;
+    }
+    let plan = Sharding::even(n, exec.slots());
+    let shards = plan.shards();
+    let task = |_slot: usize, t: usize| {
+        let s = shards[t];
+        for i in s.start..s.end {
+            f(i);
+        }
+    };
+    exec.run_tasks(shards.len(), &task);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicUsize;
+
+    #[test]
+    fn pool_runs_all_tasks_once() {
+        let pool = WorkerPool::new(4);
+        assert_eq!(pool.slots(), 4);
+        for round in 0..50 {
+            let n = 1 + (round * 7) % 23;
+            let hits: Vec<AtomicUsize> = (0..n).map(|_| AtomicUsize::new(0)).collect();
+            (&pool).run_tasks(n, &|_slot, i| {
+                hits[i].fetch_add(1, Ordering::Relaxed);
+            });
+            for (i, h) in hits.iter().enumerate() {
+                assert_eq!(h.load(Ordering::Relaxed), 1, "round {round} task {i}");
+            }
+        }
+        assert_eq!(pool.jobs_run(), 50);
+    }
+
+    #[test]
+    fn pool_slots_stay_disjoint() {
+        // Two concurrent tasks must never observe the same slot: mark
+        // the slot busy while running and assert on collision.
+        let pool = WorkerPool::new(4);
+        let busy: Vec<AtomicUsize> = (0..pool.slots()).map(|_| AtomicUsize::new(0)).collect();
+        for _ in 0..200 {
+            (&pool).run_tasks(8, &|slot, _i| {
+                assert_eq!(busy[slot].fetch_add(1, Ordering::SeqCst), 0, "slot reuse");
+                std::hint::spin_loop();
+                busy[slot].fetch_sub(1, Ordering::SeqCst);
+            });
+        }
+    }
+
+    #[test]
+    fn pool_matches_scoped_results() {
+        let pool = WorkerPool::new(3);
+        let plan = Sharding::even(17, 3);
+        let pooled = exec_shards(&pool, &plan, |i, s| (i, s.len()));
+        let scoped = exec_shards(plan.len(), &plan, |i, s| (i, s.len()));
+        assert_eq!(pooled, scoped);
+        let mapped = exec_map(&pool, 100, |i| i * 3);
+        assert_eq!(mapped, (0..100).map(|i| i * 3).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn inline_pool_has_no_workers() {
+        // (The global spawn counter can't be asserted exactly here —
+        // other tests spawn threads concurrently — but a 1-slot pool
+        // has no worker handles by construction.)
+        let pool = WorkerPool::inline();
+        assert_eq!(pool.slots(), 1);
+        assert!(pool.handles.is_empty());
+        let out = exec_map(&pool, 10, |i| i + 1);
+        assert_eq!(out[9], 10);
+        assert_eq!(pool.jobs_run(), 1);
+    }
+
+    #[test]
+    fn shards_with_scratch_accumulates_per_slot() {
+        let pool = WorkerPool::new(2);
+        let mut scratch = vec![0u64; pool.slots()];
+        let plan = Sharding::even(40, 2);
+        exec_shards_with(&pool, &plan, &mut scratch, |s, _i, shard| {
+            *s += shard.len() as u64;
+        });
+        // Every token counted exactly once across slots.
+        assert_eq!(scratch.iter().sum::<u64>(), 40);
+    }
+
+    #[test]
+    fn exec_for_covers_everything() {
+        let pool = WorkerPool::new(3);
+        let counter = AtomicUsize::new(0);
+        exec_for(&pool, 1000, |_| {
+            counter.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(counter.load(Ordering::Relaxed), 1000);
+    }
+
+    #[test]
+    fn pool_survives_task_panic() {
+        let pool = WorkerPool::new(2);
+        let res = std::panic::catch_unwind(AssertUnwindSafe(|| {
+            (&pool).run_tasks(4, &|_s, i| {
+                if i == 2 {
+                    panic!("boom");
+                }
+            });
+        }));
+        assert!(res.is_err(), "panic must propagate to the publisher");
+        // Pool still usable afterwards.
+        let out = exec_map(&pool, 8, |i| i);
+        assert_eq!(out.len(), 8);
+    }
+
+    #[test]
+    fn empty_work_is_a_noop() {
+        let pool = WorkerPool::new(2);
+        (&pool).run_tasks(0, &|_s, _i| unreachable!());
+        let out: Vec<usize> = exec_map(&pool, 0, |i| i);
+        assert!(out.is_empty());
+    }
+}

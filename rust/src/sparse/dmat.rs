@@ -52,15 +52,37 @@ impl DocCountHist {
     }
 
     /// Merge shard histograms into one finished histogram.
-    pub fn merge(num_topics: usize, shards: Vec<DocCountHist>) -> Self {
+    pub fn merge(num_topics: usize, mut shards: Vec<DocCountHist>) -> Self {
+        Self::merge_mut(num_topics, shards.iter_mut())
+    }
+
+    /// Merge any iterator of shard histograms, draining each in place —
+    /// the shards keep their row capacity for the next sweep (the
+    /// reusable-scratch merge path).
+    pub fn merge_mut<'a>(
+        num_topics: usize,
+        shards: impl IntoIterator<Item = &'a mut DocCountHist>,
+    ) -> Self {
         let mut out = Self::new(num_topics);
         for shard in shards {
-            for (k, row) in shard.rows.into_iter().enumerate() {
-                out.rows[k].extend(row);
+            for (k, row) in shard.rows.iter_mut().enumerate() {
+                debug_assert!(k < num_topics);
+                out.rows[k].append(row);
             }
         }
         out.finish();
         out
+    }
+
+    /// Reset to an empty, unfinished histogram over `num_topics`
+    /// topics, keeping every row's allocation.
+    pub fn reset(&mut self, num_topics: usize) {
+        if self.rows.len() != num_topics {
+            self.rows.resize(num_topics, Vec::new());
+        }
+        for row in self.rows.iter_mut() {
+            row.clear();
+        }
     }
 
     /// Number of topic rows.

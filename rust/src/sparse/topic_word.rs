@@ -86,6 +86,7 @@ impl TopicWordAcc {
     }
 
     fn grow(&mut self) {
+        crate::par::stats::note_scratch_alloc();
         let new_size = self.keys.len() * 2;
         let old_keys = std::mem::replace(&mut self.keys, vec![EMPTY; new_size]);
         let old_vals = std::mem::replace(&mut self.vals, vec![0; new_size]);
@@ -110,13 +111,20 @@ impl TopicWordAcc {
     /// Drain into `(k, v, c)` triples (unordered).
     pub fn drain_triples(&mut self) -> Vec<(u32, u32, u32)> {
         let mut out = Vec::with_capacity(self.len);
+        self.drain_each(|k, v, c| out.push((k, v, c)));
+        out
+    }
+
+    /// Visit every `(k, v, c)` entry (unordered), then clear the
+    /// accumulator keeping its capacity — the allocation-free merge
+    /// path the reusable shard scratch relies on.
+    pub fn drain_each(&mut self, mut f: impl FnMut(u32, u32, u32)) {
         for (i, &key) in self.keys.iter().enumerate() {
             if key != EMPTY {
-                out.push(((key >> 32) as u32, key as u32, self.vals[i]));
+                f((key >> 32) as u32, key as u32, self.vals[i]);
             }
         }
         self.clear();
-        out
     }
 }
 
@@ -137,14 +145,25 @@ impl TopicWordRows {
 
     /// Merge shard accumulators. Consumes their contents.
     pub fn merge_from(num_topics: usize, shards: &mut [TopicWordAcc]) -> Self {
+        Self::merge_from_iter(num_topics, shards.iter_mut())
+    }
+
+    /// Merge any iterator of shard accumulators, draining each in place
+    /// (their hash capacity survives for the next sweep). The result is
+    /// independent of shard order: rows are sorted by word id and
+    /// duplicate entries summed.
+    pub fn merge_from_iter<'a>(
+        num_topics: usize,
+        shards: impl IntoIterator<Item = &'a mut TopicWordAcc>,
+    ) -> Self {
         let mut out = Self::new(num_topics);
         // Bucket triples by topic, then sort each row by word id.
-        for shard in shards.iter_mut() {
-            for (k, v, c) in shard.drain_triples() {
+        for shard in shards {
+            shard.drain_each(|k, v, c| {
                 debug_assert!((k as usize) < num_topics);
                 out.rows[k as usize].push((v, c));
                 out.row_totals[k as usize] += c as u64;
-            }
+            });
         }
         for row in out.rows.iter_mut() {
             row.sort_unstable_by_key(|&(v, _)| v);

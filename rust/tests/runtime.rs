@@ -83,7 +83,7 @@ fn engine_loglik_matches_sparse_reference() {
     }
     let n = TopicWordRows::merge_from(k_max, &mut [acc]);
     let root = Pcg64::new(9);
-    let phi = sample_phi(&root, &n, 0.01, 1500, 1);
+    let phi = sample_phi(&root, &n, 0.01, 1500, 1usize);
     let sparse = phi_loglik_sparse(&n, &phi);
     let dense = e.loglik(&n, &phi).unwrap();
     let rel = (sparse - dense).abs() / sparse.abs().max(1.0);

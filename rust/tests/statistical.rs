@@ -1,0 +1,154 @@
+//! Statistical regression nets for the sampler math.
+//!
+//! * A cheap Geweke-style agreement check: the sparse, pooled
+//!   [`PcSampler`] and the dense [`ExactSampler`] oracle sample (PPU
+//!   approximation aside) the same posterior, so their post-burn-in
+//!   summary statistics — active-topic count and joint log-likelihood
+//!   — must agree across seeds within a generous tolerance. A broken
+//!   conditional (or a pool/scratch bug that corrupts a phase) moves
+//!   these means far outside the band.
+//! * χ² goodness-of-fit for the Walker alias tables against their
+//!   target distributions with a fixed seed and ~100k draws.
+
+use hdp_sparse::alias::{AliasTable, SparseAlias};
+use hdp_sparse::config::HdpConfig;
+use hdp_sparse::corpus::synthetic::HdpCorpusSpec;
+use hdp_sparse::hdp::{exact::ExactSampler, pc::PcSampler, Trainer};
+use hdp_sparse::rng::Pcg64;
+use std::sync::Arc;
+
+fn mean(v: &[f64]) -> f64 {
+    v.iter().sum::<f64>() / v.len().max(1) as f64
+}
+
+#[test]
+fn pc_and_exact_agree_across_seeds() {
+    let (c, _) = HdpCorpusSpec {
+        vocab: 100,
+        topics: 3,
+        gamma: 1.5,
+        alpha: 1.5,
+        topic_beta: 0.05,
+        docs: 40,
+        mean_doc_len: 25.0,
+        len_sigma: 0.3,
+        min_doc_len: 8,
+    }
+    .generate(2020);
+    let c = Arc::new(c);
+    let cfg = HdpConfig { alpha: 0.5, beta: 0.1, gamma: 1.0, k_max: 16, init_topics: 1 };
+    let (burn, keep) = (200usize, 40usize);
+
+    let mut pc_lls = Vec::new();
+    let mut ex_lls = Vec::new();
+    let mut pc_topics = Vec::new();
+    let mut ex_topics = Vec::new();
+    for seed in [11u64, 12, 13] {
+        // Pooled sparse sampler (2 threads: exercises the pool path).
+        let mut pc = PcSampler::new(c.clone(), cfg, 2, seed).unwrap();
+        let mut exact = ExactSampler::new(c.clone(), cfg, seed).unwrap();
+        for _ in 0..burn {
+            pc.step().unwrap();
+            exact.step().unwrap();
+        }
+        for _ in 0..keep {
+            pc.step().unwrap();
+            exact.step().unwrap();
+            let dp = pc.diagnostics();
+            let de = exact.diagnostics();
+            pc_lls.push(dp.log_likelihood);
+            ex_lls.push(de.log_likelihood);
+            pc_topics.push(dp.active_topics as f64);
+            ex_topics.push(de.active_topics as f64);
+        }
+    }
+    let (mp, me) = (mean(&pc_lls), mean(&ex_lls));
+    let rel = (mp - me).abs() / me.abs();
+    assert!(
+        rel < 0.05,
+        "stationary joint log-lik: pc {mp:.1} vs exact {me:.1} (rel {rel:.3})"
+    );
+    let (tp, te) = (mean(&pc_topics), mean(&ex_topics));
+    assert!(
+        (tp - te).abs() < 8.0,
+        "stationary active-topic count: pc {tp:.1} vs exact {te:.1}"
+    );
+}
+
+/// χ² of `draws` samples from `table` against `weights`; returns
+/// (statistic, degrees of freedom over bins with expected count ≥ 5).
+fn chi2_alias(table: &AliasTable, weights: &[f64], draws: usize, seed: u64) -> (f64, usize) {
+    let mut rng = Pcg64::new(seed);
+    let mut counts = vec![0u64; weights.len()];
+    for _ in 0..draws {
+        counts[table.sample(&mut rng)] += 1;
+    }
+    let total: f64 = weights.iter().sum();
+    let mut chi2 = 0.0;
+    let mut dof = 0usize;
+    for (c, w) in counts.iter().zip(weights) {
+        let e = draws as f64 * w / total;
+        if e < 5.0 {
+            // Rare outcomes: bound them instead of pooling into χ².
+            assert!((*c as f64) < 10.0 + 10.0 * e, "rare outcome overdrawn: {c} vs e={e:.2}");
+            continue;
+        }
+        chi2 += (*c as f64 - e).powi(2) / e;
+        dof += 1;
+    }
+    (chi2, dof)
+}
+
+#[test]
+fn alias_table_chi_square_goodness_of_fit() {
+    // Mixed-magnitude weights spanning 5 orders, fixed seed, 100k
+    // draws. Acceptance at mean + 5σ of the χ² distribution — loose
+    // enough to be deterministic-stable, tight enough to catch a
+    // mis-built table (off-by-one alias slot, unscaled probability).
+    let mut weights: Vec<f64> = (1..=40)
+        .map(|i| match i % 4 {
+            0 => 10.0,
+            1 => 1.0,
+            2 => 0.1,
+            _ => 0.37 * i as f64,
+        })
+        .collect();
+    weights[7] = 0.0; // zero-mass outcome must never be drawn
+    let table = AliasTable::new(&weights);
+    let (chi2, dof) = chi2_alias(&table, &weights, 100_000, 0xa11a5);
+    assert!(dof >= 20, "enough populated bins: {dof}");
+    let bound = dof as f64 + 5.0 * (2.0 * dof as f64).sqrt();
+    assert!(chi2 < bound, "chi2 {chi2:.1} over {dof} dof (bound {bound:.1})");
+
+    // Zero-weight outcome check rides along.
+    let mut rng = Pcg64::new(3);
+    for _ in 0..50_000 {
+        assert_ne!(table.sample(&mut rng), 7, "zero-weight outcome drawn");
+    }
+}
+
+#[test]
+fn sparse_alias_chi_square_on_support() {
+    // SparseAlias over a scattered topic support — the exact shape the
+    // bucket-(a) word tables use.
+    let support: Vec<u32> = vec![3, 17, 64, 999, 1024, 4095];
+    let weights = [0.05, 1.0, 2.5, 0.3, 4.0, 0.15];
+    let sa = SparseAlias::new(support.clone(), &weights);
+    let mut rng = Pcg64::new(0x5a11a5);
+    let draws = 120_000usize;
+    let mut counts = std::collections::HashMap::new();
+    for _ in 0..draws {
+        *counts.entry(sa.sample(&mut rng)).or_insert(0u64) += 1;
+    }
+    // Every drawn id must be in the support.
+    assert!(counts.keys().all(|k| support.contains(k)));
+    let total: f64 = weights.iter().sum();
+    let mut chi2 = 0.0;
+    for (id, w) in support.iter().zip(&weights) {
+        let e = draws as f64 * w / total;
+        let c = counts.get(id).copied().unwrap_or(0) as f64;
+        chi2 += (c - e).powi(2) / e;
+    }
+    // 5 dof: mean 5, sd sqrt(10); allow 5σ.
+    assert!(chi2 < 5.0 + 5.0 * 10.0f64.sqrt(), "chi2 {chi2:.1}");
+}

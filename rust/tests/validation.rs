@@ -106,7 +106,7 @@ fn ppu_phi_matrix_mean_matches_dirichlet() {
     let mut mean = vec![0.0f64; vocab];
     for rep in 0..reps {
         let root = Pcg64::new(1000 + rep as u64);
-        let phi = ppu::sample_phi(&root, &n, beta, vocab, 1);
+        let phi = ppu::sample_phi(&root, &n, beta, vocab, 1usize);
         for (v, m) in mean.iter_mut().enumerate() {
             *m += phi.get(0, v as u32);
         }
@@ -148,7 +148,7 @@ fn z_draw_chi2_vs_dense_enumeration() {
     let phi = PhiMatrix::from_count_rows(30, &count_rows);
     let psi = [0.25, 0.2, 0.15, 0.12, 0.1, 0.08, 0.06, 0.04];
     let alpha = 0.8;
-    let tables = zstep::WordTables::build(&phi, &psi, alpha, 1);
+    let tables = zstep::WordTables::build(&phi, &psi, alpha, 1usize);
     let doc = vec![5u32, 5, 5]; // word 5 appears in many topics
     let docs = vec![doc];
     let reps = 40_000;
