@@ -1,0 +1,105 @@
+//! Bench: barriered vs pipelined sampler iteration.
+//!
+//! The pipelined `PcSampler::step` submits Φ for iteration t+1 to the
+//! worker pool right after the z merge of iteration t and runs the
+//! serial l/Ψ tail concurrently, joining the prebuilt Φ at the start of
+//! the next step. The chain is bit-identical; only the schedule
+//! changes. This bench measures what that buys per iteration at
+//! 1/2/4/8 threads on a synthetic corpus, and reports each mode's
+//! `PhaseTimers` overlap (sum-of-phases vs critical-path wall) so the
+//! hidden Φ work is visible, not just the wall-time delta.
+
+use hdp_sparse::benchkit::Bench;
+use hdp_sparse::config::HdpConfig;
+use hdp_sparse::corpus::synthetic::HdpCorpusSpec;
+use hdp_sparse::hdp::pc::PcSampler;
+use hdp_sparse::hdp::Trainer;
+use hdp_sparse::metrics::PhaseTimers;
+
+const THREAD_COUNTS: [usize; 4] = [1, 2, 4, 8];
+const WARMUP_STEPS: usize = 3;
+
+fn main() {
+    let mut bench = Bench::new("pipeline_overlap");
+
+    // Mid-size corpus: enough Φ/alias work per iteration for overlap to
+    // matter, small enough for quick bench turnaround.
+    let (corpus, _) = HdpCorpusSpec {
+        vocab: 2000,
+        topics: 24,
+        gamma: 4.0,
+        alpha: 0.8,
+        topic_beta: 0.02,
+        docs: 600,
+        mean_doc_len: 60.0,
+        len_sigma: 0.4,
+        min_doc_len: 10,
+    }
+    .generate(2026);
+    let corpus = std::sync::Arc::new(corpus);
+    let tokens = corpus.num_tokens() as f64;
+    let cfg = HdpConfig { alpha: 0.3, beta: 0.02, gamma: 1.0, k_max: 96, init_topics: 1 };
+
+    let mut report: Vec<(usize, f64, f64, f64)> = Vec::new();
+    for threads in THREAD_COUNTS {
+        let mut barriered = PcSampler::new(corpus.clone(), cfg, threads, 7).unwrap();
+        barriered.set_pipelined(false);
+        let mut pipelined = PcSampler::new(corpus.clone(), cfg, threads, 7).unwrap();
+        assert!(pipelined.pipelined());
+        for _ in 0..WARMUP_STEPS {
+            barriered.step().unwrap();
+            pipelined.step().unwrap();
+        }
+        barriered.timers = PhaseTimers::new();
+        pipelined.timers = PhaseTimers::new();
+        bench.run(&format!("barriered_t{threads}"), Some(tokens), || {
+            barriered.step().unwrap()
+        });
+        bench.run(&format!("pipelined_t{threads}"), Some(tokens), || {
+            pipelined.step().unwrap()
+        });
+        let wall = pipelined.timers.seconds(PhaseTimers::CRITICAL_PATH);
+        let overlap = pipelined.timers.overlap_seconds();
+        // Timers were reset after warm-up, so only the benched steps count.
+        let iters = (pipelined.iterations_done() - WARMUP_STEPS) as f64;
+        report.push((threads, wall / iters.max(1.0), overlap / iters.max(1.0), {
+            let median = |name: &str| {
+                bench
+                    .results()
+                    .iter()
+                    .find(|c| c.name == name)
+                    .map(|c| c.median())
+                    .unwrap_or(f64::NAN)
+            };
+            median(&format!("barriered_t{threads}"))
+                / median(&format!("pipelined_t{threads}"))
+        }));
+    }
+
+    println!("\nthreads  wall/iter  overlap/iter  barriered/pipelined");
+    let mut pass = true;
+    for (threads, wall, overlap, speedup) in &report {
+        println!(
+            "{threads:>7}  {:>8.3}ms  {:>10.3}ms  {speedup:>18.2}x",
+            wall * 1e3,
+            overlap * 1e3
+        );
+        if *threads >= 4 {
+            if *speedup <= 1.0 {
+                pass = false;
+            }
+            if *overlap <= 0.0 {
+                pass = false;
+            }
+        }
+    }
+    if pass {
+        println!("PASS: pipelined wall/iter below barriered with nonzero overlap at ≥4 threads");
+    } else {
+        println!("WARN: pipelining did not pay off on this machine/corpus");
+    }
+
+    bench
+        .write_csv(std::path::Path::new("results/bench_pipeline_overlap.csv"))
+        .ok();
+}

@@ -21,6 +21,29 @@ use crate::par::{self, Sharding};
 use crate::rng::Pcg64;
 use crate::sparse::{DocCountHist, DocTopics, PhiMatrix, TopicWordAcc};
 
+/// Reusable per-executor-slot buffers for [`WordTables::build_into`]:
+/// the bucket-(a) weight vector for the word currently being processed
+/// by that slot. Growth is counted via
+/// [`crate::par::stats::note_scratch_alloc`].
+#[derive(Debug, Default)]
+pub struct WordTablesScratch {
+    weights: Vec<Vec<f64>>,
+}
+
+impl WordTablesScratch {
+    /// Empty scratch; per-slot buffers are grown on first use.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    fn ensure(&mut self, slots: usize) {
+        if self.weights.len() < slots {
+            crate::par::stats::note_scratch_alloc();
+            self.weights.resize_with(slots, Vec::new);
+        }
+    }
+}
+
 /// Per-word-type bucket-(a) alias tables and totals.
 pub struct WordTables {
     /// `tables[v]` — alias over `{k : φ_{k,v} > 0}` with weights
@@ -33,31 +56,82 @@ pub struct WordTables {
 }
 
 impl WordTables {
+    /// Empty table set, ready for [`WordTables::build_into`]. The
+    /// samplers keep one of these per chain and rebuild it in place
+    /// every iteration so the `tables`/`masses` vectors (and the
+    /// per-slot weight buffers) survive across sweeps.
+    pub fn empty() -> Self {
+        Self { tables: Vec::new(), masses: Vec::new() }
+    }
+
     /// Build all tables in parallel over word types on any executor
     /// (a `threads: usize` scoped strategy or a
-    /// [`&WorkerPool`](crate::par::WorkerPool)).
-    pub fn build(phi: &PhiMatrix, psi: &[f64], alpha: f64, exec: impl par::Executor) -> Self {
+    /// [`&WorkerPool`](crate::par::WorkerPool)). One-shot convenience
+    /// over [`WordTables::build_into`].
+    pub fn build<E: par::Executor + Copy>(
+        phi: &PhiMatrix,
+        psi: &[f64],
+        alpha: f64,
+        exec: E,
+    ) -> Self {
+        let mut out = Self::empty();
+        let mut scratch = WordTablesScratch::new();
+        out.build_into(phi, psi, alpha, exec, &mut scratch);
+        out
+    }
+
+    /// Rebuild the tables in place, recycling the `tables`/`masses`
+    /// vectors and the per-slot weight buffers across iterations
+    /// instead of reallocating them each time. The result is identical
+    /// to [`WordTables::build`] (same per-word weight order, same
+    /// float summation order).
+    pub fn build_into<E: par::Executor + Copy>(
+        &mut self,
+        phi: &PhiMatrix,
+        psi: &[f64],
+        alpha: f64,
+        exec: E,
+        scratch: &mut WordTablesScratch,
+    ) {
         let vocab = phi.vocab();
-        let tables = par::exec_map(exec, vocab, |v| {
-            let (topics, probs) = phi.col(v as u32);
-            if topics.is_empty() {
-                return None;
+        if self.tables.len() != vocab {
+            crate::par::stats::note_scratch_alloc();
+            self.tables.clear();
+            self.tables.resize_with(vocab, || None);
+            self.masses.clear();
+            self.masses.resize(vocab, 0.0);
+        }
+        if vocab == 0 {
+            return;
+        }
+        let plan = Sharding::even(vocab, exec.slots());
+        scratch.ensure(exec.slot_bound(plan.len()));
+        let tbase = crate::par::pool::SendPtr(self.tables.as_mut_ptr());
+        let mbase = crate::par::pool::SendPtr(self.masses.as_mut_ptr());
+        par::exec_shards_with(exec, &plan, &mut scratch.weights, |weights, _i, shard| {
+            for v in shard.start..shard.end {
+                let (topics, probs) = phi.col(v as u32);
+                // SAFETY: shards cover disjoint word ranges, so index
+                // `v` is owned by this task.
+                let slot_t = unsafe { &mut *tbase.0.add(v) };
+                let slot_m = unsafe { &mut *mbase.0.add(v) };
+                weights.clear();
+                let mut total = 0.0f64;
+                for (&k, &p) in topics.iter().zip(probs) {
+                    let w = p * alpha * psi[k as usize];
+                    weights.push(w);
+                    total += w;
+                }
+                if topics.is_empty() || total <= 0.0 {
+                    *slot_t = None;
+                    *slot_m = 0.0;
+                } else {
+                    let alias = SparseAlias::new(topics.to_vec(), weights);
+                    *slot_m = alias.total();
+                    *slot_t = Some(alias);
+                }
             }
-            let weights: Vec<f64> = topics
-                .iter()
-                .zip(probs)
-                .map(|(&k, &p)| p * alpha * psi[k as usize])
-                .collect();
-            if weights.iter().sum::<f64>() <= 0.0 {
-                return None;
-            }
-            Some(SparseAlias::new(topics.to_vec(), &weights))
         });
-        let masses = tables
-            .iter()
-            .map(|t| t.as_ref().map(SparseAlias::total).unwrap_or(0.0))
-            .collect();
-        Self { tables, masses }
     }
 
     /// Bucket-(a) total mass `Q_v = α·Σ_k φ_{k,v}Ψ_k`.
@@ -89,10 +163,20 @@ pub struct ZShardResult {
 }
 
 impl ZShardResult {
-    /// Empty result for a `k_max`-topic model.
+    /// Empty result for a `k_max`-topic model with a default `n_acc`
+    /// capacity. Prefer [`ZShardResult::with_pair_hint`] when the
+    /// caller knows the expected pair count — this default forces the
+    /// accumulator to regrow during the first sweeps on any real shard.
     pub fn new(k_max: usize) -> Self {
+        Self::with_pair_hint(k_max, 1 << 10)
+    }
+
+    /// Empty result whose `n_acc` is pre-sized for ~`pair_hint`
+    /// distinct `(topic, word)` pairs (the samplers pass a
+    /// tokens-per-slot estimate so warm sweeps never regrow the table).
+    pub fn with_pair_hint(k_max: usize, pair_hint: usize) -> Self {
         Self {
-            n_acc: TopicWordAcc::with_capacity(1 << 10),
+            n_acc: TopicWordAcc::with_capacity(pair_hint.max(64)),
             hist: DocCountHist::new(k_max),
             zero_mass_tokens: 0,
             flag_tokens: 0,
@@ -164,9 +248,20 @@ pub struct ShardScratch {
 }
 
 impl ShardScratch {
-    /// Fresh scratch for a `k_max`-topic model.
+    /// Fresh scratch for a `k_max`-topic model (default `n_acc` size;
+    /// see [`ShardScratch::with_pair_hint`]).
     pub fn new(k_max: usize) -> Self {
         Self { out: ZShardResult::new(k_max), scratch: ZScratch::new(k_max) }
+    }
+
+    /// Fresh scratch whose accumulator is pre-sized for ~`pair_hint`
+    /// distinct `(topic, word)` pairs — the samplers pass their
+    /// tokens-per-slot estimate here.
+    pub fn with_pair_hint(k_max: usize, pair_hint: usize) -> Self {
+        Self {
+            out: ZShardResult::with_pair_hint(k_max, pair_hint),
+            scratch: ZScratch::new(k_max),
+        }
     }
 }
 
@@ -336,6 +431,26 @@ impl<'a> ZSweep<'a> {
         exec: impl par::Executor,
         scratch: &mut [ShardScratch],
     ) {
+        self.run_with_scratch_sched(docs, z, m, plan, exec, scratch, par::Schedule::Steal)
+    }
+
+    /// [`ZSweep::run_with_scratch`] with an explicit [`par::Schedule`].
+    /// Under [`par::Schedule::SlotAffine`] shard `i` is handed to pool
+    /// slot `i % slots` every sweep, so a slot re-touches the same
+    /// `z`/`m` shard each iteration (cache/NUMA affinity); the chain is
+    /// bit-identical under either schedule because per-document RNG
+    /// streams make placement irrelevant.
+    #[allow(clippy::too_many_arguments)]
+    pub fn run_with_scratch_sched(
+        &self,
+        docs: &[Vec<u32>],
+        z: &mut [Vec<u32>],
+        m: &mut [DocTopics],
+        plan: &Sharding,
+        exec: impl par::Executor,
+        scratch: &mut [ShardScratch],
+        schedule: par::Schedule,
+    ) {
         if plan.is_empty() {
             return;
         }
@@ -370,7 +485,7 @@ impl<'a> ZSweep<'a> {
         let work = std::sync::Mutex::new(
             work.into_iter().map(Some).collect::<Vec<_>>(),
         );
-        par::exec_shards_with(exec, plan, scratch, |slot, shard_idx, shard| {
+        par::exec_shards_with_sched(exec, plan, scratch, schedule, |slot, shard_idx, shard| {
             let (start, zp, mp) = {
                 let mut guard = work.lock().unwrap();
                 guard[shard_idx].take().expect("shard taken once")
@@ -640,6 +755,130 @@ mod tests {
             for k in 0..8 {
                 assert_eq!(n_pooled.row(k), n_scoped.row(k), "topic {k}");
             }
+        }
+    }
+
+    #[test]
+    fn build_into_reuses_buffers_and_matches_build() {
+        use crate::par::WorkerPool;
+        let phi = small_phi();
+        let psi = [0.4, 0.3, 0.2, 0.1];
+        let alpha = 0.7;
+        let pool = WorkerPool::new(2);
+        let fresh = WordTables::build(&phi, &psi, alpha, &pool);
+        let mut reused = WordTables::empty();
+        let mut scratch = WordTablesScratch::new();
+        reused.build_into(&phi, &psi, alpha, &pool, &mut scratch);
+        let tables_ptr = reused.tables.as_ptr();
+        let masses_ptr = reused.masses.as_ptr();
+        // Rebuild with different Ψ, then with the original again: the
+        // recycled vectors must not be reallocated (the global alloc
+        // counter can't be asserted here — tests run concurrently).
+        let psi2 = [0.1, 0.2, 0.3, 0.4];
+        reused.build_into(&phi, &psi2, alpha, &pool, &mut scratch);
+        reused.build_into(&phi, &psi, alpha, &pool, &mut scratch);
+        assert_eq!(reused.tables.as_ptr(), tables_ptr, "tables vec must be reused");
+        assert_eq!(reused.masses.as_ptr(), masses_ptr, "masses vec must be reused");
+        assert_eq!(scratch.weights.len(), pool.slots());
+        for v in 0..3u32 {
+            assert_eq!(reused.mass(v).to_bits(), fresh.mass(v).to_bits(), "v={v}");
+        }
+        // Draw-level agreement on a live column.
+        let mut r1 = Pcg64::new(7);
+        let mut r2 = Pcg64::new(7);
+        for _ in 0..200 {
+            assert_eq!(reused.sample(1, &mut r1), fresh.sample(1, &mut r2));
+        }
+    }
+
+    #[test]
+    fn with_pair_hint_presizes_accumulator() {
+        let mut r = ZShardResult::with_pair_hint(8, 10_000);
+        let cap0 = r.n_acc.capacity();
+        assert!(cap0 >= 10_000, "hint must presize the table (got {cap0})");
+        for i in 0..10_000u32 {
+            r.n_acc.add(i % 8, i / 8, 1);
+        }
+        // 10k distinct pairs fit without a single regrow.
+        assert_eq!(r.n_acc.capacity(), cap0);
+        assert_eq!(r.n_acc.nnz(), 10_000);
+        // The no-hint default still works but is deliberately small.
+        assert!(ZShardResult::new(8).n_acc.capacity() < cap0);
+    }
+
+    #[test]
+    fn affine_sweep_matches_stealing_sweep() {
+        // Same frozen state swept with work stealing and with the
+        // slot-affine schedule: the chain (and merged stats) must be
+        // bit-identical — placement never changes what is computed.
+        use crate::corpus::synthetic::HdpCorpusSpec;
+        use crate::par::{Schedule, WorkerPool};
+        let (corpus, _) = HdpCorpusSpec {
+            vocab: 120,
+            topics: 5,
+            gamma: 2.0,
+            alpha: 1.0,
+            topic_beta: 0.1,
+            docs: 44,
+            mean_doc_len: 22.0,
+            len_sigma: 0.3,
+            min_doc_len: 5,
+        }
+        .generate(21);
+        let mut acc = TopicWordAcc::with_capacity(256);
+        let mut rng = Pcg64::new(6);
+        let z0: Vec<Vec<u32>> = corpus
+            .docs
+            .iter()
+            .map(|d| d.iter().map(|_| rng.below(6) as u32).collect())
+            .collect();
+        for (doc, zd) in corpus.docs.iter().zip(&z0) {
+            for (&v, &k) in doc.iter().zip(zd) {
+                acc.add(k, v, 1);
+            }
+        }
+        let n = TopicWordRows::merge_from(8, &mut [acc]);
+        let root = Pcg64::new(41);
+        let phi = super::super::phi::sample_phi(&root, &n, 0.05, 120, 1usize);
+        let psi = [0.3, 0.2, 0.15, 0.1, 0.1, 0.05, 0.05, 0.05];
+        let tables = WordTables::build(&phi, &psi, 0.5, 1usize);
+        let sweep = ZSweep {
+            phi: &phi,
+            psi: &psi,
+            tables: &tables,
+            alpha: 0.5,
+            k_max: 8,
+            seed_root: &root,
+            iteration: 1,
+        };
+        let m0: Vec<DocTopics> =
+            z0.iter().map(|zd| zd.iter().copied().collect()).collect();
+        let plan = Sharding::even(44, 7);
+        let pool = WorkerPool::new(3);
+        let run = |schedule: Schedule| {
+            let mut scratch: Vec<ShardScratch> =
+                (0..pool.slots()).map(|_| ShardScratch::new(8)).collect();
+            let (mut z, mut m) = (z0.clone(), m0.clone());
+            sweep.run_with_scratch_sched(
+                &corpus.docs,
+                &mut z,
+                &mut m,
+                &plan,
+                &pool,
+                &mut scratch,
+                schedule,
+            );
+            let n = TopicWordRows::merge_from_iter(
+                8,
+                scratch.iter_mut().map(|s| &mut s.out.n_acc),
+            );
+            (z, n)
+        };
+        let (z_steal, n_steal) = run(Schedule::Steal);
+        let (z_affine, n_affine) = run(Schedule::SlotAffine);
+        assert_eq!(z_affine, z_steal);
+        for k in 0..8 {
+            assert_eq!(n_affine.row(k), n_steal.row(k), "topic {k}");
         }
     }
 

@@ -5,16 +5,19 @@
 //! removed: `Ψ` is pinned to the uniform distribution over K topics
 //! (the implicit assumption LDA makes — paper §2.4) and the `l`/`Ψ`
 //! steps are skipped. Everything else (PPU `Φ`, per-word alias tables,
-//! doubly sparse z, document-parallel sweep) is shared with
+//! doubly sparse z, document-parallel sweep, and the async phase
+//! pipeline — `Φ_{t+1}` submitted right after the merge, joined at the
+//! next step, overlapping any between-step diagnostics) is shared with
 //! [`super::pc`], which is exactly the paper's point: conditional on
 //! `Ψ`, the HDP's z step *is* the LDA z step.
 
 use crate::corpus::Corpus;
 use crate::diagnostics::loglik;
 use crate::metrics::PhaseTimers;
-use crate::par::{Sharding, WorkerPool};
+use crate::par::{Schedule, Sharding, WorkerPool};
 use crate::rng::Pcg64;
-use crate::sparse::{TopicWordAcc, TopicWordRows};
+use crate::sparse::{MergeScratch, TopicWordAcc, TopicWordRows};
+use std::sync::Arc;
 
 use super::pc::{phi, zstep};
 use super::state::Assignments;
@@ -22,7 +25,7 @@ use super::{DiagSnapshot, Trainer};
 
 /// The fixed-K Pólya urn LDA sampler.
 pub struct PcLdaSampler {
-    corpus: std::sync::Arc<Corpus>,
+    corpus: Arc<Corpus>,
     /// Number of topics K.
     k: usize,
     alpha: f64,
@@ -31,22 +34,31 @@ pub struct PcLdaSampler {
     root: Pcg64,
     assign: Assignments,
     psi: Vec<f64>, // uniform, fixed
-    n: TopicWordRows,
+    /// Shared with the in-flight Φ job in pipelined mode.
+    n: Arc<TopicWordRows>,
     iteration: usize,
     /// Phase timers (comparable to the PC sampler's).
     pub timers: PhaseTimers,
     doc_plan: Sharding,
     /// Persistent fork-join pool shared by all phases.
-    pool: WorkerPool,
+    pool: Arc<WorkerPool>,
     /// Per-pool-slot z-phase scratch, cleared and reused each sweep.
     scratch: Vec<zstep::ShardScratch>,
+    /// Bucket-(a) alias tables, rebuilt in place every iteration.
+    tables: zstep::WordTables,
+    tables_scratch: zstep::WordTablesScratch,
+    merge_scratch: MergeScratch,
+    pipelined: bool,
+    slot_affine: bool,
+    /// Double-buffer slot for the in-flight Φ job.
+    phi_pipe: phi::PhiPipeline,
 }
 
 impl PcLdaSampler {
     /// Create with random topic initialization over `k` topics (the
     /// usual LDA initialization).
     pub fn new(
-        corpus: std::sync::Arc<Corpus>,
+        corpus: Arc<Corpus>,
         k: usize,
         alpha: f64,
         beta: f64,
@@ -62,11 +74,13 @@ impl PcLdaSampler {
                 acc.add(kk, v, 1);
             }
         }
-        let n = TopicWordRows::merge_from(k, &mut [acc]);
+        let n = Arc::new(TopicWordRows::merge_from(k, &mut [acc]));
         let doc_plan = Sharding::weighted(&corpus.doc_weights(), threads);
-        let pool = WorkerPool::new(threads);
+        let pool = Arc::new(WorkerPool::new(threads));
+        let per_slot = corpus.num_tokens() as usize / pool.slots();
+        let pair_hint = (per_slot + per_slot / 4 + 32).min(1 << 22);
         let scratch = (0..pool.slots())
-            .map(|_| zstep::ShardScratch::new(k))
+            .map(|_| zstep::ShardScratch::with_pair_hint(k, pair_hint))
             .collect();
         Ok(Self {
             corpus,
@@ -83,6 +97,12 @@ impl PcLdaSampler {
             doc_plan,
             pool,
             scratch,
+            tables: zstep::WordTables::empty(),
+            tables_scratch: zstep::WordTablesScratch::new(),
+            merge_scratch: MergeScratch::new(),
+            pipelined: true,
+            slot_affine: false,
+            phi_pipe: phi::PhiPipeline::new(0x1f1),
         })
     }
 
@@ -100,6 +120,20 @@ impl PcLdaSampler {
     pub fn pool(&self) -> &WorkerPool {
         &self.pool
     }
+
+    /// Enable/disable the phase pipeline (default on); chains are
+    /// bit-identical either way.
+    pub fn set_pipelined(&mut self, pipelined: bool) {
+        self.pipelined = pipelined;
+        if !pipelined {
+            self.phi_pipe.clear(); // join → discard
+        }
+    }
+
+    /// Enable/disable slot-affine z scheduling (default off).
+    pub fn set_slot_affine(&mut self, slot_affine: bool) {
+        self.slot_affine = slot_affine;
+    }
 }
 
 impl Trainer for PcLdaSampler {
@@ -109,47 +143,70 @@ impl Trainer for PcLdaSampler {
 
     fn step(&mut self) -> anyhow::Result<()> {
         use std::time::Instant;
+        let step_t0 = Instant::now();
         let iter = self.iteration as u64 + 1;
         let vocab = self.corpus.vocab_size();
         let root = self.root.clone();
+        // Φ: join the prebuilt job (submitted by the previous step,
+        // overlapping its merge tail and any between-step diagnostics)
+        // or sample synchronously. Identical RNG streams either way.
         let t0 = Instant::now();
-        let phi_m = phi::sample_phi(
-            &root.stream(iter.wrapping_mul(0x9e37) ^ 0x1f1),
-            &self.n,
-            self.beta,
-            vocab,
-            &self.pool,
-        );
-        self.timers.add("phi", t0.elapsed());
+        let (phi_m, overlapped) =
+            self.phi_pipe.resolve(iter, &root, &self.n, self.beta, vocab, &self.pool);
+        match overlapped {
+            Some(sampling) => {
+                self.timers.add("phi", sampling);
+                self.timers.add("phi_join", t0.elapsed());
+            }
+            None => self.timers.add("phi", t0.elapsed()),
+        }
         let t0 = Instant::now();
         // α·Ψ_k = α/K — the LDA symmetric document prior.
-        let tables = zstep::WordTables::build(&phi_m, &self.psi, self.alpha, &self.pool);
+        self.tables.build_into(
+            &phi_m,
+            &self.psi,
+            self.alpha,
+            &*self.pool,
+            &mut self.tables_scratch,
+        );
         self.timers.add("alias", t0.elapsed());
         let sweep = zstep::ZSweep {
             phi: &phi_m,
             psi: &self.psi,
-            tables: &tables,
+            tables: &self.tables,
             alpha: self.alpha,
             k_max: self.k,
             seed_root: &root,
             iteration: iter,
         };
+        let schedule =
+            if self.slot_affine { Schedule::SlotAffine } else { Schedule::Steal };
         let t0 = Instant::now();
-        sweep.run_with_scratch(
+        sweep.run_with_scratch_sched(
             &self.corpus.docs,
             &mut self.assign.z,
             &mut self.assign.m,
             &self.doc_plan,
-            &self.pool,
+            &*self.pool,
             &mut self.scratch,
+            schedule,
         );
         self.timers.add("z", t0.elapsed());
         let t0 = Instant::now();
-        self.n = TopicWordRows::merge_from_iter(
+        self.n = Arc::new(TopicWordRows::merge_par(
             self.k,
             self.scratch.iter_mut().map(|s| &mut s.out.n_acc),
-        );
+            &*self.pool,
+            &mut self.merge_scratch,
+        ));
         self.timers.add("merge", t0.elapsed());
+        // Pipeline front: n_t is final — Φ_{t+1} cooks on the workers
+        // while the driver does diagnostics/trace work between steps.
+        if self.pipelined {
+            self.phi_pipe
+                .submit_next(iter + 1, &root, &self.n, self.beta, vocab, &self.pool);
+        }
+        self.timers.add("critical_path", step_t0.elapsed());
         self.iteration += 1;
         Ok(())
     }
@@ -163,7 +220,7 @@ impl Trainer for PcLdaSampler {
             self.alpha,
             self.beta,
             self.corpus.vocab_size(),
-            &self.pool,
+            &*self.pool,
         );
         let mut tokens_per_topic: Vec<u64> =
             self.n.row_totals().iter().copied().filter(|&t| t > 0).collect();
@@ -243,5 +300,24 @@ mod tests {
             b.step().unwrap();
         }
         assert_eq!(a.assignments(), b.assignments());
+    }
+
+    #[test]
+    fn pipelined_matches_sequential() {
+        // Pipelining and slot-affine scheduling change only where/when
+        // work runs — the chain (and its diagnostics) must be
+        // bit-identical to the barriered loop.
+        let corpus = tiny();
+        let mut seq = PcLdaSampler::new(corpus.clone(), 8, 0.1, 0.05, 3, 9).unwrap();
+        seq.set_pipelined(false);
+        let mut pip = PcLdaSampler::new(corpus, 8, 0.1, 0.05, 3, 9).unwrap();
+        pip.set_slot_affine(true);
+        for it in 0..5 {
+            seq.step().unwrap();
+            pip.step().unwrap();
+            assert_eq!(pip.assignments(), seq.assignments(), "iter={it}");
+            let (ds, dp) = (seq.diagnostics(), pip.diagnostics());
+            assert_eq!(dp.log_likelihood.to_bits(), ds.log_likelihood.to_bits());
+        }
     }
 }

@@ -12,6 +12,13 @@ use std::time::{Duration, Instant};
 /// Wall-clock accumulator for the sampler phases, plus named event
 /// counters (thread spawns, pool jobs, scratch allocations, …) so the
 /// perf pass can see substrate overheads next to phase times.
+///
+/// The reserved phase name [`PhaseTimers::CRITICAL_PATH`] holds the
+/// per-iteration *wall* time (what the pipelined samplers record
+/// around the whole step). Per-phase times, by contrast, attribute
+/// *work* — including work that ran on pool workers concurrently with
+/// other phases — so `sum-of-phases > critical path` is exactly the
+/// overlap the pipeline bought ([`PhaseTimers::overlap_seconds`]).
 #[derive(Clone, Debug, Default)]
 pub struct PhaseTimers {
     /// (phase name, accumulated time, invocation count)
@@ -21,6 +28,10 @@ pub struct PhaseTimers {
 }
 
 impl PhaseTimers {
+    /// Reserved phase name for per-iteration wall time (excluded from
+    /// [`PhaseTimers::phase_seconds`]).
+    pub const CRITICAL_PATH: &'static str = "critical_path";
+
     /// Create with no phases registered.
     pub fn new() -> Self {
         Self::default()
@@ -60,6 +71,29 @@ impl PhaseTimers {
         self.entries.iter().map(|e| e.1.as_secs_f64()).sum()
     }
 
+    /// Sum of per-phase seconds, excluding the reserved
+    /// [`PhaseTimers::CRITICAL_PATH`] wall timer — the "work" side of
+    /// the overlap comparison.
+    pub fn phase_seconds(&self) -> f64 {
+        self.entries
+            .iter()
+            .filter(|e| e.0 != Self::CRITICAL_PATH)
+            .map(|e| e.1.as_secs_f64())
+            .sum()
+    }
+
+    /// Overlap the pipeline bought: `sum-of-phases − critical path`,
+    /// clamped at 0 (also 0 when no critical-path wall was recorded).
+    /// A barriered loop reports ≈ 0; a pipelined loop reports the
+    /// worker time hidden behind the serial tail.
+    pub fn overlap_seconds(&self) -> f64 {
+        let wall = self.seconds(Self::CRITICAL_PATH);
+        if wall <= 0.0 {
+            return 0.0;
+        }
+        (self.phase_seconds() - wall).max(0.0)
+    }
+
     /// `(phase, seconds, calls)` rows, insertion order.
     pub fn rows(&self) -> Vec<(&'static str, f64, u64)> {
         self.entries.iter().map(|e| (e.0, e.1.as_secs_f64(), e.2)).collect()
@@ -90,14 +124,26 @@ impl PhaseTimers {
         self.counters.clone()
     }
 
-    /// Human-readable summary.
+    /// Human-readable summary. Phase percentages are of the phase-work
+    /// total (the wall timer is reported separately with the overlap).
     pub fn summary(&self) -> String {
-        let total = self.total_seconds().max(1e-12);
+        let total = self.phase_seconds().max(1e-12);
         let mut s = String::new();
         for (name, secs, calls) in self.rows() {
+            if name == Self::CRITICAL_PATH {
+                continue;
+            }
             s.push_str(&format!(
                 "{name:>12}: {secs:9.3}s ({:5.1}%) over {calls} calls\n",
                 100.0 * secs / total
+            ));
+        }
+        let wall = self.seconds(Self::CRITICAL_PATH);
+        if wall > 0.0 {
+            s.push_str(&format!(
+                "{:>12}: {wall:9.3}s (overlap gained {:.3}s)\n",
+                Self::CRITICAL_PATH,
+                self.overlap_seconds()
             ));
         }
         for &(name, count) in &self.counters {
@@ -261,6 +307,28 @@ mod tests {
         assert!((a.seconds("phi") - 0.002).abs() < 1e-9);
         assert_eq!(a.counter("pool_jobs"), 7);
         assert_eq!(a.counter("thread_spawns"), 1);
+    }
+
+    #[test]
+    fn critical_path_and_overlap() {
+        let mut t = PhaseTimers::new();
+        t.add("phi", Duration::from_millis(30));
+        t.add("z", Duration::from_millis(50));
+        t.add(PhaseTimers::CRITICAL_PATH, Duration::from_millis(60));
+        // Work = 80 ms over a 60 ms wall → 20 ms of overlap.
+        assert!((t.phase_seconds() - 0.080).abs() < 1e-9);
+        assert!((t.overlap_seconds() - 0.020).abs() < 1e-9);
+        let s = t.summary();
+        assert!(s.contains("critical_path") && s.contains("overlap"));
+        // A barriered loop (wall ≥ work) reports zero overlap.
+        let mut t = PhaseTimers::new();
+        t.add("z", Duration::from_millis(10));
+        t.add(PhaseTimers::CRITICAL_PATH, Duration::from_millis(12));
+        assert_eq!(t.overlap_seconds(), 0.0);
+        // No wall recorded → overlap undefined → 0.
+        let mut t = PhaseTimers::new();
+        t.add("z", Duration::from_millis(10));
+        assert_eq!(t.overlap_seconds(), 0.0);
     }
 
     #[test]

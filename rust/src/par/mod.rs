@@ -7,7 +7,12 @@
 //! * [`pool::WorkerPool`] — a persistent fork-join pool created once
 //!   per sampler and reused across all iterations (no per-phase thread
 //!   spawns, reusable per-slot scratch); this is what the samplers run
-//!   on.
+//!   on. Beyond the blocking phase dispatch it supports *asynchronous*
+//!   submission ([`pool::WorkerPool::submit_map`] → [`pool::MapJob`]),
+//!   which is what lets the sampler overlap Φ sampling for iteration
+//!   t+1 with the serial merge/l/Ψ tail of iteration t, and a
+//!   [`pool::Schedule::SlotAffine`] mode that pins shard `i` to slot
+//!   `i % slots` every sweep (cache/NUMA affinity).
 //! * `usize` — the original scoped-thread-per-task strategy
 //!   ([`scope_shards`], [`parallel_for_ranges`], [`parallel_map`] are
 //!   thin wrappers over it), kept for one-shot callers and as the
@@ -20,7 +25,8 @@
 pub mod pool;
 
 pub use pool::{
-    exec_for, exec_map, exec_shards, exec_shards_with, stats, Executor, WorkerPool,
+    exec_for, exec_map, exec_shards, exec_shards_with, exec_shards_with_sched, stats,
+    Executor, JobHandle, MapJob, Schedule, WorkerPool,
 };
 
 /// A contiguous shard `[start, end)` of some index space.

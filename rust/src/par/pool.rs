@@ -1,8 +1,8 @@
 //! Persistent fork-join worker pool and the [`Executor`] abstraction.
 //!
 //! The sampler's iteration is a sequence of short bulk-synchronous
-//! phases (Φ, alias build, z sweep, l, diagnostics). The original
-//! substrate spawned fresh OS threads for every phase of every
+//! phases (Φ, alias build, z sweep, merge, l, diagnostics). The
+//! original substrate spawned fresh OS threads for every phase of every
 //! iteration; at PubMed scale that is noise, but on small corpora —
 //! where an iteration is fractions of a millisecond — spawn/join
 //! latency dominates. [`WorkerPool`] is created once per sampler and
@@ -24,15 +24,50 @@
 //! keep its `TopicWordAcc` / `DocCountHist` / dense-probability
 //! buffers across iterations instead of reallocating them every sweep.
 //!
+//! # Asynchronous submission and the phase pipeline
+//!
+//! Next to the blocking [`Executor::run_tasks`] path, the pool offers a
+//! **submit/join** API: [`WorkerPool::submit`] publishes a job and
+//! returns a [`JobHandle`] immediately; the workers chew on it in the
+//! background while the submitting thread does other work, and
+//! [`JobHandle::join`] (or drop) collects it. [`WorkerPool::submit_map`]
+//! is the `exec_map`-shaped convenience used by the sampler's phase
+//! pipeline: Φ for iteration t+1 depends only on the merged `n` of
+//! iteration t, so the sampler submits Φ right after the merge and runs
+//! the serial l/Ψ/diagnostics tail of iteration t concurrently,
+//! joining Φ at the start of iteration t+1. Internally jobs live in a
+//! FIFO queue (not a single slot), so an in-flight async job and a
+//! blocking phase dispatch coexist: workers drain the queue in order,
+//! and the blocking publisher always participates as slot 0.
+//!
+//! # Scheduling modes
+//!
+//! A job runs under a [`Schedule`]:
+//!
+//! * [`Schedule::Steal`] (default) — participants claim task indices
+//!   from a shared atomic counter; first-come-first-served.
+//! * [`Schedule::SlotAffine`] — task `i` runs on slot `i % slots`,
+//!   deterministically, every time. The z sweep uses this (opt-in) so a
+//!   pool slot re-touches the *same* document shard every iteration —
+//!   its `z`/`m` stay in that worker's cache (and, later, NUMA domain).
+//!
+//! Both schedules produce bit-identical results (the RNG streams are
+//! per-actor); they differ only in which OS thread touches which shard.
+//!
 //! # Executor slot contract
 //!
 //! `run_tasks(ntasks, f)` must call `f(slot, task)` exactly once for
 //! every `task in 0..ntasks`, must not return before every call has
 //! completed, and must never run two concurrent tasks with the same
 //! `slot` value. [`exec_shards_with`] relies on that last guarantee to
-//! hand out disjoint `&mut S` scratch slots without locking.
+//! hand out disjoint `&mut S` scratch slots without locking. The pool
+//! upholds it across blocking and async jobs alike: worker `w` only
+//! ever runs tasks as slot `w`, and slot 0 is serialized by the
+//! dispatch gate (blocking publishers and joining threads both take it
+//! before helping as slot 0).
 
 use super::{Shard, Sharding};
+use std::collections::VecDeque;
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
@@ -72,6 +107,21 @@ pub mod stats {
     }
 }
 
+/// How a job's tasks are distributed over executor slots.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum Schedule {
+    /// Work stealing: participants claim task indices from a shared
+    /// counter. Best latency under skewed task costs.
+    #[default]
+    Steal,
+    /// Deterministic affinity: task `i` runs on slot `i % slots`, every
+    /// time. Keeps per-shard state hot in one worker's cache across
+    /// iterations (the first step toward NUMA pinning). Executors
+    /// without persistent slots (the scoped `usize` strategy) ignore
+    /// this and fall back to their native placement.
+    SlotAffine,
+}
+
 /// An execution substrate for one bulk-synchronous phase.
 ///
 /// See the module docs for the slot contract. Implemented by
@@ -95,11 +145,24 @@ pub trait Executor {
     /// Run `f(slot, task)` for every `task in 0..ntasks`; returns only
     /// after all calls complete.
     fn run_tasks(&self, ntasks: usize, f: &(dyn Fn(usize, usize) + Sync));
+
+    /// Like [`Executor::run_tasks`] but with an explicit [`Schedule`].
+    /// Executors that cannot honor the schedule fall back to their
+    /// native placement (the default implementation).
+    fn run_tasks_scheduled(
+        &self,
+        ntasks: usize,
+        _schedule: Schedule,
+        f: &(dyn Fn(usize, usize) + Sync),
+    ) {
+        self.run_tasks(ntasks, f)
+    }
 }
 
 /// The seed substrate: one scoped OS thread per task (the caller runs
 /// task 0). Slot = task index, so per-slot state needs `ntasks`
-/// entries.
+/// entries. Scheduling modes are moot — its slots are born and die with
+/// the job.
 impl Executor for usize {
     fn slots(&self) -> usize {
         (*self).max(1)
@@ -127,59 +190,130 @@ impl Executor for usize {
 }
 
 /// Type-erased borrowed task closure. Only dereferenced while the
-/// publishing `run_tasks` call is still on the stack (it blocks until
-/// `remaining == 0`, and exhausted jobs never touch the pointer again),
-/// so the borrow can never dangle.
+/// closure is guaranteed alive: blocking publishers keep it on their
+/// stack until `run_tasks` returns, and async submitters box it into
+/// the [`JobHandle`], which joins (waits for `remaining == 0`) before
+/// releasing the box. Exhausted jobs never touch the pointer again.
 struct TaskRef(*const (dyn Fn(usize, usize) + Sync));
 
 // SAFETY: the pointee is `Sync` (callable from any thread through a
 // shared reference) and the pointer's validity is guaranteed by the
-// blocking protocol described on `TaskRef`.
+// blocking/joining protocols described on `TaskRef`.
 unsafe impl Send for TaskRef {}
 unsafe impl Sync for TaskRef {}
 
-/// One published phase: a task closure plus its completion protocol.
+/// One published job: a task closure plus its completion protocol.
 struct Job {
     task: TaskRef,
     ntasks: usize,
-    /// Next task index to claim (may overshoot `ntasks`).
+    /// Pool slot count at publish time (affine task placement modulus).
+    nslots: usize,
+    schedule: Schedule,
+    /// Steal: next task index to claim (may overshoot `ntasks`).
     next: AtomicUsize,
-    /// Tasks not yet completed; the publisher waits for 0.
+    /// SlotAffine: whether slot `s` has begun its task stripe
+    /// (`nslots` entries; empty for steal jobs).
+    started: Vec<AtomicBool>,
+    /// Tasks not yet completed; waiters block until 0.
     remaining: AtomicUsize,
-    /// Set when any task panicked (re-raised by the publisher).
+    /// Set when any task panicked (re-raised by the waiter).
     panicked: AtomicBool,
     done: Mutex<bool>,
     done_cv: Condvar,
 }
 
 impl Job {
-    /// Claim-and-run loop shared by workers and the publishing thread.
+    fn new(task: TaskRef, ntasks: usize, nslots: usize, schedule: Schedule) -> Self {
+        let started = match schedule {
+            Schedule::Steal => Vec::new(),
+            Schedule::SlotAffine => (0..nslots).map(|_| AtomicBool::new(false)).collect(),
+        };
+        Self {
+            task,
+            ntasks,
+            nslots,
+            schedule,
+            next: AtomicUsize::new(0),
+            started,
+            remaining: AtomicUsize::new(ntasks),
+            panicked: AtomicBool::new(false),
+            // A zero-task job is born complete (nothing will ever
+            // signal it).
+            done: Mutex::new(ntasks == 0),
+            done_cv: Condvar::new(),
+        }
+    }
+
+    /// Could `slot` still contribute work to this job? (Queue-scan
+    /// predicate; a false positive is harmless — `run_on` re-checks.)
+    fn can_contribute(&self, slot: usize) -> bool {
+        match self.schedule {
+            Schedule::Steal => self.next.load(Ordering::Relaxed) < self.ntasks,
+            Schedule::SlotAffine => {
+                slot < self.nslots
+                    && slot < self.ntasks
+                    && !self.started[slot].load(Ordering::Acquire)
+            }
+        }
+    }
+
+    /// Run one task invocation and signal completion bookkeeping.
+    fn run_one(&self, slot: usize, i: usize) {
+        // SAFETY: `remaining > 0` (this task has not completed), so the
+        // publisher/joiner is still keeping the closure alive.
+        let task = unsafe { &*self.task.0 };
+        if catch_unwind(AssertUnwindSafe(|| task(slot, i))).is_err() {
+            self.panicked.store(true, Ordering::SeqCst);
+        }
+        if self.remaining.fetch_sub(1, Ordering::AcqRel) == 1 {
+            let mut done = self.done.lock().unwrap();
+            *done = true;
+            self.done_cv.notify_all();
+        }
+    }
+
+    /// Claim-and-run loop shared by workers and publishing/joining
+    /// threads. Under `Steal`, claims from the shared counter; under
+    /// `SlotAffine`, runs exactly the stripe `slot, slot + nslots, …`.
     fn run_on(&self, slot: usize) {
-        loop {
-            let i = self.next.fetch_add(1, Ordering::Relaxed);
-            if i >= self.ntasks {
-                return;
+        match self.schedule {
+            Schedule::Steal => loop {
+                let i = self.next.fetch_add(1, Ordering::Relaxed);
+                if i >= self.ntasks {
+                    return;
+                }
+                self.run_one(slot, i);
+            },
+            Schedule::SlotAffine => {
+                if slot >= self.nslots
+                    || slot >= self.ntasks
+                    || self.started[slot].swap(true, Ordering::AcqRel)
+                {
+                    return;
+                }
+                let mut i = slot;
+                while i < self.ntasks {
+                    self.run_one(slot, i);
+                    i += self.nslots;
+                }
             }
-            // SAFETY: `i < ntasks` means the publisher is still blocked
-            // in `run_tasks`, so the borrowed closure is alive.
-            let task = unsafe { &*self.task.0 };
-            if catch_unwind(AssertUnwindSafe(|| task(slot, i))).is_err() {
-                self.panicked.store(true, Ordering::SeqCst);
-            }
-            if self.remaining.fetch_sub(1, Ordering::AcqRel) == 1 {
-                let mut done = self.done.lock().unwrap();
-                *done = true;
-                self.done_cv.notify_all();
-            }
+        }
+    }
+
+    /// Block until every task has completed.
+    fn wait_done(&self) {
+        let mut done = self.done.lock().unwrap();
+        while !*done {
+            done = self.done_cv.wait(done).unwrap();
         }
     }
 }
 
 struct PoolState {
-    job: Option<Arc<Job>>,
-    /// Bumped on every publish so parked workers can tell a new job
-    /// from a spurious wakeup.
-    epoch: u64,
+    /// FIFO of published jobs. Blocking dispatches and async submits
+    /// share it; workers drain it front-to-back, contributing to every
+    /// job they still can. Completed jobs are removed by their waiter.
+    queue: VecDeque<Arc<Job>>,
     shutdown: bool,
 }
 
@@ -189,7 +323,6 @@ struct PoolShared {
 }
 
 fn worker_loop(shared: &PoolShared, slot: usize) {
-    let mut seen_epoch = 0u64;
     loop {
         let job = {
             let mut st = shared.state.lock().unwrap();
@@ -197,12 +330,11 @@ fn worker_loop(shared: &PoolShared, slot: usize) {
                 if st.shutdown {
                     return;
                 }
-                if st.epoch != seen_epoch {
-                    seen_epoch = st.epoch;
-                    if let Some(job) = st.job.clone() {
-                        break job;
-                    }
+                if let Some(job) = st.queue.iter().find(|j| j.can_contribute(slot)) {
+                    break Arc::clone(job);
                 }
+                // No contributable job: park. Publishers push + notify
+                // under the same lock, so no wakeup can be lost.
                 st = shared.work_cv.wait(st).unwrap();
             }
         };
@@ -212,18 +344,19 @@ fn worker_loop(shared: &PoolShared, slot: usize) {
 
 /// Persistent fork-join pool: `threads - 1` parked workers plus the
 /// calling thread. Create once per sampler; every phase of every
-/// iteration is one [`WorkerPool::run_tasks`] publish instead of a
-/// round of thread spawns.
+/// iteration is one [`WorkerPool::run_tasks`] publish (or one
+/// [`WorkerPool::submit`]) instead of a round of thread spawns.
 pub struct WorkerPool {
     shared: Arc<PoolShared>,
     handles: Vec<std::thread::JoinHandle<()>>,
     jobs: AtomicU64,
-    /// Serializes dispatches: every publisher participates as slot 0,
-    /// so two concurrent `run_tasks` calls would otherwise run two
-    /// tasks with the same slot — exactly what the slot contract (and
-    /// the unsafe per-slot scratch access built on it) forbids.
-    /// Consequence: dispatching from *inside* a pool task deadlocks;
-    /// phases are serial, so nothing legitimate nests.
+    /// Serializes slot-0 participation: every blocking publisher (and
+    /// every joining thread that helps) runs tasks as slot 0, so two
+    /// concurrent ones would run two tasks with the same slot — exactly
+    /// what the slot contract (and the unsafe per-slot scratch access
+    /// built on it) forbids. Consequence: dispatching from *inside* a
+    /// pool task deadlocks; phases are serial, so nothing legitimate
+    /// nests.
     dispatch_gate: Mutex<()>,
 }
 
@@ -234,7 +367,7 @@ impl WorkerPool {
     pub fn new(threads: usize) -> Self {
         let threads = threads.max(1);
         let shared = Arc::new(PoolShared {
-            state: Mutex::new(PoolState { job: None, epoch: 0, shutdown: false }),
+            state: Mutex::new(PoolState { queue: VecDeque::new(), shutdown: false }),
             work_cv: Condvar::new(),
         });
         let mut handles = Vec::with_capacity(threads - 1);
@@ -251,8 +384,9 @@ impl WorkerPool {
         Self { shared, handles, jobs: AtomicU64::new(0), dispatch_gate: Mutex::new(()) }
     }
 
-    /// Zero-worker pool: runs every task inline on the caller. Cheap to
-    /// construct; the executor of choice for sequential samplers.
+    /// Zero-worker pool: runs every task inline on the caller (async
+    /// submissions run at join time). Cheap to construct; the executor
+    /// of choice for sequential samplers.
     pub fn inline() -> Self {
         Self::new(1)
     }
@@ -262,58 +396,111 @@ impl WorkerPool {
         self.handles.len() + 1
     }
 
-    /// Jobs (phase publishes, including inline ones) dispatched so far.
+    /// Jobs (blocking phase publishes, including inline ones, plus
+    /// async submissions) dispatched so far.
     pub fn jobs_run(&self) -> u64 {
         self.jobs.load(Ordering::Relaxed)
     }
 
-    fn dispatch(&self, ntasks: usize, f: &(dyn Fn(usize, usize) + Sync)) {
+    fn push_job(&self, job: &Arc<Job>) {
+        let mut st = self.shared.state.lock().unwrap();
+        st.queue.push_back(Arc::clone(job));
+        self.shared.work_cv.notify_all();
+    }
+
+    fn remove_job(&self, job: &Arc<Job>) {
+        let mut st = self.shared.state.lock().unwrap();
+        st.queue.retain(|j| !Arc::ptr_eq(j, job));
+    }
+
+    fn dispatch(&self, ntasks: usize, schedule: Schedule, f: &(dyn Fn(usize, usize) + Sync)) {
         if ntasks == 0 {
             return;
         }
-        // One dispatch at a time (see `dispatch_gate`). A previous
-        // dispatch may have panicked while holding the gate; the pool
-        // itself is still consistent, so ignore the poison.
+        // One slot-0 participant at a time (see `dispatch_gate`). A
+        // previous dispatch may have panicked while holding the gate;
+        // the pool itself is still consistent, so ignore the poison.
         let _gate = self.dispatch_gate.lock().unwrap_or_else(|e| e.into_inner());
         self.jobs.fetch_add(1, Ordering::Relaxed);
         if self.handles.is_empty() || ntasks == 1 {
+            // Inline fast path. With one slot every schedule degenerates
+            // to "slot 0 runs everything", so both modes agree.
             for i in 0..ntasks {
                 f(0, i);
             }
             return;
         }
-        let job = Arc::new(Job {
-            task: TaskRef(f as *const _),
-            ntasks,
-            next: AtomicUsize::new(0),
-            remaining: AtomicUsize::new(ntasks),
-            panicked: AtomicBool::new(false),
-            done: Mutex::new(false),
-            done_cv: Condvar::new(),
-        });
-        {
-            let mut st = self.shared.state.lock().unwrap();
-            st.job = Some(Arc::clone(&job));
-            st.epoch = st.epoch.wrapping_add(1);
-            self.shared.work_cv.notify_all();
-        }
+        let job = Arc::new(Job::new(TaskRef(f as *const _), ntasks, self.slots(), schedule));
+        self.push_job(&job);
         // Participate as slot 0, then wait for stragglers.
         job.run_on(0);
-        {
-            let mut done = job.done.lock().unwrap();
-            while !*done {
-                done = job.done_cv.wait(done).unwrap();
-            }
-        }
-        {
-            let mut st = self.shared.state.lock().unwrap();
-            if st.job.as_ref().is_some_and(|j| Arc::ptr_eq(j, &job)) {
-                st.job = None;
-            }
-        }
+        job.wait_done();
+        self.remove_job(&job);
         if job.panicked.load(Ordering::SeqCst) {
             panic!("worker pool task panicked");
         }
+    }
+
+    /// Publish a job asynchronously and return immediately: the workers
+    /// run it in the background while the caller does other work. The
+    /// returned [`JobHandle`] must be joined (explicitly or by drop) to
+    /// observe completion; joining also lets the calling thread help
+    /// with unclaimed tasks as slot 0.
+    ///
+    /// Associated function (the handle keeps its own `Arc` to the pool,
+    /// so it can outlive the caller's borrow). The closure must own its
+    /// captures (`'static`): unlike the blocking path there is no
+    /// enclosing stack frame to borrow from. Use [`Schedule::Steal`]
+    /// unless every slot is guaranteed a live thread promptly (an
+    /// affine stripe only runs on its own slot).
+    pub fn submit(
+        pool: &Arc<WorkerPool>,
+        ntasks: usize,
+        schedule: Schedule,
+        task: Box<dyn Fn(usize, usize) + Send + Sync + 'static>,
+    ) -> JobHandle {
+        pool.jobs.fetch_add(1, Ordering::Relaxed);
+        let task_ref: &(dyn Fn(usize, usize) + Sync) = &*task;
+        let job = Arc::new(Job::new(
+            TaskRef(task_ref as *const _),
+            ntasks,
+            pool.slots(),
+            schedule,
+        ));
+        if ntasks > 0 {
+            pool.push_job(&job);
+        }
+        JobHandle { pool: Arc::clone(pool), job, _task: task, joined: false }
+    }
+
+    /// Async parallel map over `0..n` in index order, chunked into
+    /// `slots()` contiguous ranges exactly like [`exec_map`] — results
+    /// are bit-identical to the blocking form; only *when* they are
+    /// computed differs. Collect with [`MapJob::join`].
+    pub fn submit_map<R: Send + 'static>(
+        pool: &Arc<WorkerPool>,
+        n: usize,
+        f: impl Fn(usize) -> R + Send + Sync + 'static,
+    ) -> MapJob<R> {
+        let mut out: Box<[Option<R>]> = (0..n).map(|_| None).collect();
+        let plan = Sharding::even(n, pool.slots());
+        let shards: Vec<Shard> = plan.shards().to_vec();
+        let base = SendPtr(out.as_mut_ptr());
+        let ntasks = shards.len();
+        let task = move |_slot: usize, t: usize| {
+            let s = shards[t];
+            for i in s.start..s.end {
+                let r = f(i);
+                // SAFETY: ranges are disjoint across tasks, and the
+                // output box outlives the job (owned by the MapJob,
+                // which joins before releasing it).
+                unsafe {
+                    *base.0.add(i) = Some(r);
+                }
+            }
+        };
+        let handle = WorkerPool::submit(pool, ntasks, Schedule::Steal, Box::new(task));
+        MapJob { handle, out }
     }
 }
 
@@ -330,19 +517,100 @@ impl Drop for WorkerPool {
     }
 }
 
+/// Handle to an asynchronously submitted job. Joining blocks until
+/// every task completed, helping with unclaimed tasks as slot 0 (on a
+/// zero-worker pool that is where the whole job runs). Dropping the
+/// handle joins implicitly — the job's borrowed closure must not be
+/// released while workers could still call it.
+pub struct JobHandle {
+    pool: Arc<WorkerPool>,
+    job: Arc<Job>,
+    /// Keeps the type-erased closure alive until the job completes.
+    _task: Box<dyn Fn(usize, usize) + Send + Sync>,
+    joined: bool,
+}
+
+impl JobHandle {
+    /// True once every task has completed (non-blocking probe).
+    pub fn is_done(&self) -> bool {
+        self.job.remaining.load(Ordering::Acquire) == 0
+    }
+
+    /// Block until the job completes, helping as slot 0. Idempotent.
+    pub fn wait(&mut self) {
+        if self.joined {
+            return;
+        }
+        self.joined = true;
+        {
+            // Slot-0 participation is exclusive (same gate as blocking
+            // dispatches); ignore poison like `dispatch` does.
+            let _gate = self.pool.dispatch_gate.lock().unwrap_or_else(|e| e.into_inner());
+            self.job.run_on(0);
+        }
+        self.job.wait_done();
+        self.pool.remove_job(&self.job);
+        if self.job.panicked.load(Ordering::SeqCst) && !std::thread::panicking() {
+            panic!("worker pool task panicked");
+        }
+    }
+
+    /// Join the job (consuming form of [`JobHandle::wait`]).
+    pub fn join(mut self) {
+        self.wait();
+    }
+}
+
+impl Drop for JobHandle {
+    fn drop(&mut self) {
+        self.wait();
+    }
+}
+
+/// An in-flight [`WorkerPool::submit_map`] job; [`MapJob::join`]
+/// returns the results in index order.
+pub struct MapJob<R> {
+    handle: JobHandle,
+    out: Box<[Option<R>]>,
+}
+
+impl<R> MapJob<R> {
+    /// True once every map task has completed (non-blocking probe).
+    pub fn is_done(&self) -> bool {
+        self.handle.is_done()
+    }
+
+    /// Block until the map completes and return the results in index
+    /// order (helping with unclaimed chunks as slot 0).
+    pub fn join(self) -> Vec<R> {
+        let MapJob { mut handle, mut out } = self;
+        handle.wait();
+        out.iter_mut().map(|r| r.take().expect("map task completed")).collect()
+    }
+}
+
 impl Executor for &WorkerPool {
     fn slots(&self) -> usize {
         WorkerPool::slots(self)
     }
 
     fn run_tasks(&self, ntasks: usize, f: &(dyn Fn(usize, usize) + Sync)) {
-        self.dispatch(ntasks, f);
+        self.dispatch(ntasks, Schedule::Steal, f);
+    }
+
+    fn run_tasks_scheduled(
+        &self,
+        ntasks: usize,
+        schedule: Schedule,
+        f: &(dyn Fn(usize, usize) + Sync),
+    ) {
+        self.dispatch(ntasks, schedule, f);
     }
 }
 
 /// Covariant raw-pointer wrapper for disjoint-index writes from tasks.
 #[derive(Clone, Copy)]
-struct SendPtr<T>(*mut T);
+pub(crate) struct SendPtr<T>(pub(crate) *mut T);
 
 // SAFETY: every use writes/borrows disjoint indices (task outputs by
 // task id, scratch by slot id under the Executor slot contract).
@@ -385,6 +653,20 @@ pub fn exec_shards_with<S: Send, R: Send>(
     scratch: &mut [S],
     f: impl Fn(&mut S, usize, Shard) -> R + Sync,
 ) -> Vec<R> {
+    exec_shards_with_sched(exec, plan, scratch, Schedule::Steal, f)
+}
+
+/// [`exec_shards_with`] with an explicit [`Schedule`]:
+/// [`Schedule::SlotAffine`] deterministically hands shard `i` to slot
+/// `i % slots` every call, so a slot re-touches the same shard across
+/// iterations (executors without persistent slots ignore the mode).
+pub fn exec_shards_with_sched<S: Send, R: Send>(
+    exec: impl Executor,
+    plan: &Sharding,
+    scratch: &mut [S],
+    schedule: Schedule,
+    f: impl Fn(&mut S, usize, Shard) -> R + Sync,
+) -> Vec<R> {
     let shards = plan.shards();
     let n = shards.len();
     if n == 0 {
@@ -412,7 +694,7 @@ pub fn exec_shards_with<S: Send, R: Send>(
                 *base.0.add(i) = Some(r);
             }
         };
-        exec.run_tasks(n, &task);
+        exec.run_tasks_scheduled(n, schedule, &task);
     }
     out.into_iter().map(|r| r.expect("task completed")).collect()
 }
@@ -569,5 +851,140 @@ mod tests {
         (&pool).run_tasks(0, &|_s, _i| unreachable!());
         let out: Vec<usize> = exec_map(&pool, 0, |i| i);
         assert!(out.is_empty());
+    }
+
+    #[test]
+    fn slot_affine_places_tasks_deterministically() {
+        let pool = WorkerPool::new(4);
+        let slots = pool.slots();
+        for _ in 0..50 {
+            let seen: Vec<AtomicUsize> =
+                (0..13).map(|_| AtomicUsize::new(usize::MAX)).collect();
+            (&pool).run_tasks_scheduled(13, Schedule::SlotAffine, &|slot, i| {
+                seen[i].store(slot, Ordering::SeqCst);
+            });
+            for (i, s) in seen.iter().enumerate() {
+                assert_eq!(s.load(Ordering::SeqCst), i % slots, "task {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn slot_affine_single_slot_and_small_jobs() {
+        // One-slot pool: everything lands on slot 0 inline.
+        let pool = WorkerPool::inline();
+        let hits = AtomicUsize::new(0);
+        (&pool).run_tasks_scheduled(5, Schedule::SlotAffine, &|slot, _i| {
+            assert_eq!(slot, 0);
+            hits.fetch_add(1, Ordering::SeqCst);
+        });
+        assert_eq!(hits.load(Ordering::SeqCst), 5);
+        // Fewer tasks than slots: only the low slots run anything.
+        let pool = WorkerPool::new(4);
+        let hits: Vec<AtomicUsize> = (0..2).map(|_| AtomicUsize::new(0)).collect();
+        (&pool).run_tasks_scheduled(2, Schedule::SlotAffine, &|slot, i| {
+            assert!(slot < 2, "task {i} on slot {slot}");
+            hits[i].fetch_add(1, Ordering::SeqCst);
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::SeqCst) == 1));
+    }
+
+    #[test]
+    fn affine_scratch_follows_tasks() {
+        // Under SlotAffine, exec_shards_with_sched feeds shard i to
+        // scratch slot i % slots, deterministically.
+        let pool = WorkerPool::new(3);
+        let plan = Sharding::even(9, 9);
+        let mut scratch: Vec<Vec<usize>> = vec![Vec::new(); pool.slots()];
+        exec_shards_with_sched(
+            &pool,
+            &plan,
+            &mut scratch,
+            Schedule::SlotAffine,
+            |s, i, _shard| s.push(i),
+        );
+        for (slot, got) in scratch.iter_mut().enumerate() {
+            got.sort_unstable();
+            let want: Vec<usize> = (0..9).filter(|i| i % 3 == slot).collect();
+            assert_eq!(*got, want, "slot {slot}");
+        }
+    }
+
+    #[test]
+    fn submit_map_joins_with_results() {
+        let pool = Arc::new(WorkerPool::new(4));
+        let job = WorkerPool::submit_map(&pool, 100, |i| i * i);
+        let out = job.join();
+        assert_eq!(out, (0..100).map(|i| i * i).collect::<Vec<_>>());
+        // Empty maps join immediately.
+        let empty: Vec<usize> = WorkerPool::submit_map(&pool, 0, |i| i).join();
+        assert!(empty.is_empty());
+    }
+
+    #[test]
+    fn submit_map_runs_on_zero_worker_pool_at_join() {
+        let pool = Arc::new(WorkerPool::inline());
+        let job = WorkerPool::submit_map(&pool, 10, |i| i + 1);
+        // Nobody else can run it; join must execute it inline.
+        let out = job.join();
+        assert_eq!(out[9], 10);
+    }
+
+    #[test]
+    fn async_job_overlaps_blocking_dispatches() {
+        // An in-flight async job must not wedge the blocking path (and
+        // vice versa): queue both repeatedly and verify every result.
+        let pool = Arc::new(WorkerPool::new(3));
+        for round in 0..20usize {
+            let async_job = WorkerPool::submit_map(&pool, 50, move |i| i + round);
+            let blocking = exec_map(&*pool, 50, |i| i * 2);
+            assert_eq!(blocking, (0..50).map(|i| i * 2).collect::<Vec<_>>());
+            let got = async_job.join();
+            assert_eq!(got, (0..50).map(|i| i + round).collect::<Vec<_>>());
+        }
+    }
+
+    #[test]
+    fn dropping_handle_joins() {
+        let pool = Arc::new(WorkerPool::new(2));
+        let counter = Arc::new(AtomicUsize::new(0));
+        {
+            let c = Arc::clone(&counter);
+            let _handle = WorkerPool::submit(
+                &pool,
+                8,
+                Schedule::Steal,
+                Box::new(move |_slot, _i| {
+                    c.fetch_add(1, Ordering::SeqCst);
+                }),
+            );
+            // handle dropped here without an explicit join
+        }
+        assert_eq!(counter.load(Ordering::SeqCst), 8, "drop must join");
+    }
+
+    #[test]
+    fn async_panic_propagates_at_join() {
+        let pool = Arc::new(WorkerPool::new(2));
+        let job = WorkerPool::submit_map(&pool, 4, |i| {
+            if i == 3 {
+                panic!("async boom");
+            }
+            i
+        });
+        let res = std::panic::catch_unwind(AssertUnwindSafe(move || job.join()));
+        assert!(res.is_err(), "async task panic must surface at join");
+        // Pool still usable afterwards.
+        let out = exec_map(&*pool, 8, |i| i);
+        assert_eq!(out.len(), 8);
+    }
+
+    #[test]
+    fn submitted_jobs_count_toward_jobs_run() {
+        let pool = Arc::new(WorkerPool::new(2));
+        let j0 = pool.jobs_run();
+        WorkerPool::submit_map(&pool, 10, |i| i).join();
+        exec_map(&*pool, 10, |i| i);
+        assert_eq!(pool.jobs_run() - j0, 2);
     }
 }

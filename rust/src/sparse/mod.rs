@@ -23,4 +23,4 @@ pub mod topic_word;
 pub use dmat::DocCountHist;
 pub use doc_topics::DocTopics;
 pub use phi::PhiMatrix;
-pub use topic_word::{TopicWordAcc, TopicWordRows};
+pub use topic_word::{MergeScratch, TopicWordAcc, TopicWordRows};

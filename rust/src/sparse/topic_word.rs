@@ -6,6 +6,15 @@
 //! accumulates its own [`TopicWordAcc`]; the coordinator merges them
 //! into [`TopicWordRows`] (per-topic sorted `(word, count)` rows), which
 //! is exactly the layout the Poisson Pólya urn `Φ` step consumes.
+//!
+//! Two merge paths produce bit-identical rows: the serial drain
+//! ([`TopicWordRows::merge_from_iter`], the reference) and the
+//! pool-parallel two-phase range merge ([`TopicWordRows::merge_par`])
+//! the pipelined sampler uses — phase 1 drains each shard accumulator
+//! into per-(shard, topic) buckets in parallel over shards, phase 2
+//! sorts and combines each topic row in parallel over topics. The
+//! merged `n` is what unblocks Φ for the *next* iteration, so its
+//! latency sits directly on the pipeline's critical path.
 
 /// Shard-local accumulator of `(topic, word) → count`.
 ///
@@ -43,6 +52,13 @@ impl TopicWordAcc {
     #[inline]
     pub fn nnz(&self) -> usize {
         self.len
+    }
+
+    /// Pairs this accumulator can hold before its table regrows (the
+    /// open-addressing map doubles at 50% load).
+    #[inline]
+    pub fn capacity(&self) -> usize {
+        self.keys.len() / 2
     }
 
     /// Add `c` to `n[k][v]`.
@@ -128,6 +144,42 @@ impl TopicWordAcc {
     }
 }
 
+/// Reusable buckets for [`TopicWordRows::merge_par`]: one `(word,
+/// count)` list per (shard, topic) pair. Allocations persist across
+/// iterations; growth events are counted via
+/// [`crate::par::stats::note_scratch_alloc`] so warm-sweep regressions
+/// show up in the substrate counters.
+#[derive(Debug, Default)]
+pub struct MergeScratch {
+    /// `buckets[shard][topic]` — cleared, never shrunk, between merges.
+    buckets: Vec<Vec<Vec<(u32, u32)>>>,
+}
+
+impl MergeScratch {
+    /// Empty scratch; buffers are grown on first use.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Make `buckets[..shards][..topics]` available and empty, keeping
+    /// every existing allocation.
+    fn ensure(&mut self, shards: usize, topics: usize) {
+        if self.buckets.len() < shards {
+            crate::par::stats::note_scratch_alloc();
+            self.buckets.resize_with(shards, Vec::new);
+        }
+        for per_shard in self.buckets[..shards].iter_mut() {
+            if per_shard.len() < topics {
+                crate::par::stats::note_scratch_alloc();
+                per_shard.resize_with(topics, Vec::new);
+            }
+            for row in per_shard.iter_mut() {
+                row.clear();
+            }
+        }
+    }
+}
+
 /// Merged, per-topic sorted rows of the `n` statistic.
 #[derive(Clone, Debug, Default)]
 pub struct TopicWordRows {
@@ -178,6 +230,72 @@ impl TopicWordRows {
                 }
             }
             row.truncate(w);
+        }
+        out
+    }
+
+    /// Pool-parallel merge, bit-identical to
+    /// [`TopicWordRows::merge_from_iter`] on the same shard sequence:
+    /// phase 1 drains every accumulator into `scratch`'s per-(shard,
+    /// topic) buckets (parallel over shards, allocations reused across
+    /// calls), phase 2 concatenates each topic's buckets in shard
+    /// order, sorts by word id and sums duplicates (parallel over
+    /// topics). Identity holds because each topic sees the same entry
+    /// sequence either way and `sort_unstable_by_key` + duplicate
+    /// summation is deterministic in it.
+    pub fn merge_par<'a, E: crate::par::Executor + Copy>(
+        num_topics: usize,
+        shards: impl IntoIterator<Item = &'a mut TopicWordAcc>,
+        exec: E,
+        scratch: &mut MergeScratch,
+    ) -> Self {
+        let mut accs: Vec<&'a mut TopicWordAcc> = shards.into_iter().collect();
+        let nshards = accs.len();
+        if nshards == 0 {
+            return Self::new(num_topics);
+        }
+        scratch.ensure(nshards, num_topics);
+        // Phase 1: drain shard s into scratch.buckets[s][k].
+        {
+            let abase = crate::par::pool::SendPtr(accs.as_mut_ptr());
+            let bbase = crate::par::pool::SendPtr(scratch.buckets.as_mut_ptr());
+            let task = move |_slot: usize, s: usize| {
+                // SAFETY: task `s` is the only one touching index `s`
+                // of either array (Executor task-uniqueness contract).
+                let acc: &mut TopicWordAcc = unsafe { &mut *abase.0.add(s) };
+                let buckets: &mut Vec<Vec<(u32, u32)>> = unsafe { &mut *bbase.0.add(s) };
+                acc.drain_each(|k, v, c| buckets[k as usize].push((v, c)));
+            };
+            exec.run_tasks(nshards, &task);
+        }
+        // Phase 2: per-topic concatenate (shard order), sort, combine.
+        let buckets = &scratch.buckets;
+        let merged: Vec<(Vec<(u32, u32)>, u64)> =
+            crate::par::exec_map(exec, num_topics, |k| {
+                let nnz: usize = buckets[..nshards].iter().map(|b| b[k].len()).sum();
+                let mut row: Vec<(u32, u32)> = Vec::with_capacity(nnz);
+                for b in &buckets[..nshards] {
+                    row.extend_from_slice(&b[k]);
+                }
+                row.sort_unstable_by_key(|&(v, _)| v);
+                let mut total = 0u64;
+                let mut w = 0usize;
+                for i in 0..row.len() {
+                    total += row[i].1 as u64;
+                    if w > 0 && row[w - 1].0 == row[i].0 {
+                        row[w - 1].1 += row[i].1;
+                    } else {
+                        row[w] = row[i];
+                        w += 1;
+                    }
+                }
+                row.truncate(w);
+                (row, total)
+            });
+        let mut out = Self::new(num_topics);
+        for (k, (row, total)) in merged.into_iter().enumerate() {
+            out.rows[k] = row;
+            out.row_totals[k] = total;
         }
         out
     }
@@ -277,6 +395,63 @@ mod tests {
         assert_eq!(rows.active_topics(), 2);
         assert_eq!(rows.get(0, 5), 4);
         assert_eq!(rows.get(0, 3), 0);
+    }
+
+    /// Shared fixture: `nshards` accumulators filled from a seeded
+    /// assignment stream.
+    fn random_shards(seed: u64, nshards: usize, pairs: usize) -> Vec<TopicWordAcc> {
+        use crate::rng::Pcg64;
+        let mut rng = Pcg64::new(seed);
+        let mut shards: Vec<TopicWordAcc> =
+            (0..nshards).map(|_| TopicWordAcc::with_capacity(64)).collect();
+        for _ in 0..pairs {
+            let k = rng.below(20) as u32;
+            let v = rng.below(100) as u32;
+            let s = rng.below(nshards as u64) as usize;
+            shards[s].add(k, v, 1 + (v % 3));
+        }
+        shards
+    }
+
+    #[test]
+    fn parallel_merge_matches_serial() {
+        use crate::par::WorkerPool;
+        let pool = WorkerPool::new(3);
+        let mut scratch = MergeScratch::new();
+        for seed in [1u64, 2, 3] {
+            let mut serial = random_shards(seed, 4, 5_000);
+            let mut pooled = serial.clone();
+            let mut scoped = serial.clone();
+            let want = TopicWordRows::merge_from_iter(20, serial.iter_mut());
+            // Twice on the pool to exercise scratch reuse.
+            let got = TopicWordRows::merge_par(20, pooled.iter_mut(), &pool, &mut scratch);
+            let got2 =
+                TopicWordRows::merge_par(20, scoped.iter_mut(), 4usize, &mut scratch);
+            assert_eq!(got.total(), want.total(), "seed {seed}");
+            for k in 0..20 {
+                assert_eq!(got.row(k), want.row(k), "seed {seed} topic {k} (pool)");
+                assert_eq!(got2.row(k), want.row(k), "seed {seed} topic {k} (scoped)");
+                assert_eq!(got.row_total(k), want.row_total(k), "seed {seed} topic {k}");
+            }
+        }
+    }
+
+    #[test]
+    fn parallel_merge_drains_shards_and_handles_empty() {
+        use crate::par::WorkerPool;
+        let pool = WorkerPool::new(2);
+        let mut scratch = MergeScratch::new();
+        let mut shards = random_shards(9, 3, 500);
+        let rows = TopicWordRows::merge_par(20, shards.iter_mut(), &pool, &mut scratch);
+        assert!(rows.total() > 0);
+        // Accumulators drained in place (capacity kept for the next
+        // sweep), exactly like the serial path.
+        assert!(shards.iter().all(|s| s.nnz() == 0));
+        // Zero shards → empty statistic.
+        let empty =
+            TopicWordRows::merge_par(5, std::iter::empty(), &pool, &mut scratch);
+        assert_eq!(empty.total(), 0);
+        assert_eq!(empty.num_topics(), 5);
     }
 
     #[test]
