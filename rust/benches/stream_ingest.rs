@@ -1,0 +1,193 @@
+//! Bench: resident vs streamed vs fully out-of-core z sweeps over the
+//! packed corpus arena.
+//!
+//! The streamed path exists for corpora whose tokens + z do not fit in
+//! RAM (PubMed: 768M tokens ≈ 3 GB arena + 3 GB z). This bench
+//! measures what bounding residency costs on an in-RAM corpus where
+//! the comparison is honest:
+//!
+//! * `resident_packed` — the default sweep over the packed arena
+//!   (everything hot);
+//! * `streamed_nested_b*` — block-streamed sweep (per-slot z block
+//!   buffers) over the resident nested assignments, two block sizes;
+//! * `ooc_file_b*` — tokens *and* z served from disk
+//!   ([`PackedCorpusFile`] + [`FileZ`]), the true out-of-core shape.
+//!
+//! Peak hot-z bytes per case come from the per-slot block buffers
+//! ([`ShardScratch::stream_buf_bytes`]); steady-state allocation
+//! behavior shows up in benchkit's `allocs/call` column (the scratch
+//! counters) — a warm streamed sweep must not grow its buffers.
+
+use hdp_sparse::benchkit::Bench;
+use hdp_sparse::corpus::io::{write_packed, PackedCorpusFile};
+use hdp_sparse::corpus::synthetic::HdpCorpusSpec;
+use hdp_sparse::hdp::pc::zstep::{FileZ, NestedZ, ShardScratch, WordTables, ZSweep};
+use hdp_sparse::hdp::pc::phi::sample_phi;
+use hdp_sparse::par::{Schedule, Sharding, WorkerPool};
+use hdp_sparse::rng::Pcg64;
+use hdp_sparse::sparse::{DocTopics, TopicWordAcc, TopicWordRows};
+
+const THREADS: usize = 4;
+const K_MAX: usize = 48;
+const ALPHA: f64 = 0.4;
+const BETA: f64 = 0.03;
+
+fn main() {
+    let mut bench = Bench::new("stream_ingest");
+
+    let (corpus, _) = HdpCorpusSpec {
+        vocab: 3000,
+        topics: 30,
+        gamma: 4.0,
+        alpha: 0.8,
+        topic_beta: 0.02,
+        docs: 2000,
+        mean_doc_len: 60.0,
+        len_sigma: 0.5,
+        min_doc_len: 10,
+    }
+    .generate(2027);
+    let packed = corpus.to_packed();
+    let tokens = packed.num_tokens() as f64;
+    let plan = Sharding::weighted(&corpus.doc_weights(), THREADS);
+    let pool = WorkerPool::new(THREADS);
+    let root = Pcg64::new(41);
+    let psi: Vec<f64> = vec![1.0 / K_MAX as f64; K_MAX];
+
+    // Frozen chain state (the bench sweeps the same posterior state
+    // repeatedly; iteration advances so draws differ but cost doesn't).
+    let mut rng = Pcg64::new(7);
+    let z0: Vec<Vec<u32>> = corpus
+        .docs
+        .iter()
+        .map(|d| d.iter().map(|_| rng.below(16) as u32).collect())
+        .collect();
+    let m0: Vec<DocTopics> =
+        z0.iter().map(|zd| zd.iter().copied().collect()).collect();
+    let mut acc = TopicWordAcc::with_capacity(1 << 16);
+    for (doc, zd) in corpus.docs.iter().zip(&z0) {
+        for (&v, &k) in doc.iter().zip(zd) {
+            acc.add(k, v, 1);
+        }
+    }
+    let n = TopicWordRows::merge_from(K_MAX, &mut [acc]);
+    let phi = sample_phi(&root, &n, BETA, corpus.vocab_size(), &pool);
+    let tables = WordTables::build(&phi, &psi, ALPHA, &pool);
+
+    let iter = std::cell::Cell::new(0u64);
+    let sweep_iter = || {
+        iter.set(iter.get() + 1);
+        ZSweep {
+            phi: &phi,
+            psi: &psi,
+            tables: &tables,
+            alpha: ALPHA,
+            k_max: K_MAX,
+            seed_root: &root,
+            iteration: iter.get(),
+        }
+    };
+
+    let fresh_scratch =
+        || -> Vec<ShardScratch> { (0..pool.slots()).map(|_| ShardScratch::new(K_MAX)).collect() };
+    let peak_bytes =
+        |scratch: &[ShardScratch]| scratch.iter().map(|s| s.stream_buf_bytes()).sum::<usize>();
+
+    // --- resident reference -----------------------------------------
+    let (mut z, mut m) = (z0.clone(), m0.clone());
+    let mut scratch = fresh_scratch();
+    bench.run("resident_packed", Some(tokens), || {
+        let sweep = sweep_iter();
+        sweep.run_with_scratch_sched(
+            &packed,
+            &mut z,
+            &mut m,
+            &plan,
+            &pool,
+            &mut scratch,
+            Schedule::Steal,
+        );
+    });
+    println!("    resident hot-z buffer bytes: {}", peak_bytes(&scratch));
+
+    // --- streamed over resident storage -----------------------------
+    for block_docs in [16usize, 256] {
+        let blocks = plan.refine(block_docs);
+        let (mut z, mut m) = (z0.clone(), m0.clone());
+        let mut scratch = fresh_scratch();
+        bench.run(&format!("streamed_nested_b{block_docs}"), Some(tokens), || {
+            let sweep = sweep_iter();
+            sweep.run_streamed(
+                &packed,
+                &NestedZ::new(&mut z),
+                &mut m,
+                &blocks,
+                &pool,
+                &mut scratch,
+                Schedule::Steal,
+            );
+        });
+        println!(
+            "    streamed b{block_docs} hot-z buffer bytes: {} ({} blocks, {:.2}% of arena)",
+            peak_bytes(&scratch),
+            blocks.len(),
+            100.0 * peak_bytes(&scratch) as f64 / (4.0 * tokens),
+        );
+    }
+
+    // --- fully out of core: tokens and z from disk -------------------
+    let dir = std::env::temp_dir().join("hdp_stream_ingest_bench");
+    let cpath = dir.join("corpus.hdpp");
+    write_packed(&packed, &cpath).expect("write packed corpus");
+    let cfile = PackedCorpusFile::open(&cpath).expect("open packed corpus");
+    for block_docs in [64usize, 512] {
+        let blocks = plan.refine(block_docs);
+        let zfile =
+            FileZ::from_nested(&dir.join(format!("z_b{block_docs}.bin")), &z0).expect("z file");
+        let mut m = m0.clone();
+        let mut scratch = fresh_scratch();
+        bench.run(&format!("ooc_file_b{block_docs}"), Some(tokens), || {
+            let sweep = sweep_iter();
+            sweep.run_streamed(
+                &cfile,
+                &zfile,
+                &mut m,
+                &blocks,
+                &pool,
+                &mut scratch,
+                Schedule::Steal,
+            );
+        });
+        println!(
+            "    ooc b{block_docs} hot bytes (z + tokens): {} ({:.2}% of arena+z)",
+            peak_bytes(&scratch),
+            100.0 * peak_bytes(&scratch) as f64 / (8.0 * tokens),
+        );
+    }
+
+    // --- verdict -----------------------------------------------------
+    let median = |name: &str| {
+        bench
+            .results()
+            .iter()
+            .find(|c| c.name == name)
+            .map(|c| c.median())
+            .unwrap_or(f64::NAN)
+    };
+    let res = median("resident_packed");
+    let stream = median("streamed_nested_b256");
+    let ooc = median("ooc_file_b512");
+    println!(
+        "\nper-sweep wall: resident {:.3} ms, streamed {:.3} ms ({:+.1}%), out-of-core {:.3} ms ({:+.1}%)",
+        res * 1e3,
+        stream * 1e3,
+        100.0 * (stream - res) / res,
+        ooc * 1e3,
+        100.0 * (ooc - res) / res,
+    );
+
+    bench
+        .write_csv(std::path::Path::new("results/bench_stream_ingest.csv"))
+        .ok();
+    std::fs::remove_dir_all(&dir).ok();
+}

@@ -6,10 +6,43 @@
 //!   1-based); `vocab.txt` has one word per line.
 //! * A compact little-endian binary cache (`.hdpc`) so synthetic corpora
 //!   are generated once and reloaded quickly by benches and examples.
+//! * The **packed corpus format** (`.hdpp`) — the on-disk twin of
+//!   [`PackedCorpus`], designed so the token arena can be memory-mapped
+//!   or block-read without parsing.
+//!
+//! # Packed on-disk format (version 1)
+//!
+//! All integers are **little-endian**. The file is a fixed-size header
+//! followed by three sections at alignment-friendly offsets (the
+//! offsets section is 8-byte aligned, the token section 4-byte
+//! aligned), so an mmap of the file can serve `doc_offsets` and
+//! `tokens` in place:
+//!
+//! ```text
+//! byte 0   magic       [u8; 8]  = b"HDPPACK\0"
+//! byte 8   version     u32      = 1
+//! byte 12  flags       u32      = 0 (reserved)
+//! byte 16  D           u64      number of documents
+//! byte 24  V           u64      number of vocabulary entries
+//! byte 32  N           u64      number of tokens (== doc_offsets[D])
+//! byte 40  doc_offsets (D+1) × u64   CSR offsets, doc_offsets[0] == 0
+//! ...      tokens      N × u32       the flat token arena
+//! ...      vocab       V × { len u64, len × u8 (UTF-8) }
+//! ```
+//!
+//! Document `d` occupies tokens `doc_offsets[d] .. doc_offsets[d+1]`;
+//! a contiguous *document block* is therefore a contiguous *byte
+//! range* of the token section, which is what
+//! [`PackedCorpusFile::read_block`] exploits for out-of-core sweeps.
+//! Readers return a clean `Err` (never panic) on truncated files, bad
+//! magic, unsupported versions, or inconsistent offsets; all claimed
+//! section sizes are checked against the file length *before* any
+//! allocation.
 
-use super::Corpus;
-use std::io::{BufRead, BufWriter, Read, Write};
+use super::{Corpus, PackedCorpus};
+use std::io::{BufRead, BufWriter, Read, Seek, SeekFrom, Write};
 use std::path::Path;
+use std::sync::Mutex;
 
 /// Read UCI bag-of-words (`docword` stream + `vocab` stream).
 ///
@@ -172,6 +205,230 @@ fn read_u64(f: &mut impl Read) -> anyhow::Result<u64> {
     Ok(u64::from_le_bytes(b))
 }
 
+fn read_u32(f: &mut impl Read) -> anyhow::Result<u32> {
+    let mut b = [0u8; 4];
+    f.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+/// Read `n` little-endian u64s.
+fn read_u64s(f: &mut impl Read, n: usize) -> anyhow::Result<Vec<u64>> {
+    let mut out = Vec::with_capacity(n);
+    let mut bytes = [0u8; 4096];
+    let mut left = n;
+    while left > 0 {
+        let take = (left * 8).min(bytes.len());
+        f.read_exact(&mut bytes[..take])?;
+        for c in bytes[..take].chunks_exact(8) {
+            out.push(u64::from_le_bytes(c.try_into().unwrap()));
+        }
+        left -= take / 8;
+    }
+    Ok(out)
+}
+
+/// Read `n` little-endian u32s, appending to `out`.
+pub(crate) fn read_u32s_into(
+    f: &mut impl Read,
+    n: usize,
+    out: &mut Vec<u32>,
+) -> std::io::Result<()> {
+    out.reserve(n);
+    let mut bytes = [0u8; 4096];
+    let mut left = n;
+    while left > 0 {
+        let take = (left * 4).min(bytes.len());
+        f.read_exact(&mut bytes[..take])?;
+        for c in bytes[..take].chunks_exact(4) {
+            out.push(u32::from_le_bytes([c[0], c[1], c[2], c[3]]));
+        }
+        left -= take / 4;
+    }
+    Ok(())
+}
+
+/// Write a u32 slice as little-endian bytes.
+pub(crate) fn write_u32s(f: &mut impl Write, xs: &[u32]) -> std::io::Result<()> {
+    let mut bytes = [0u8; 4096];
+    for chunk in xs.chunks(bytes.len() / 4) {
+        for (i, &x) in chunk.iter().enumerate() {
+            bytes[i * 4..i * 4 + 4].copy_from_slice(&x.to_le_bytes());
+        }
+        f.write_all(&bytes[..chunk.len() * 4])?;
+    }
+    Ok(())
+}
+
+/// Magic of the packed corpus format (see the module docs).
+pub const PACKED_MAGIC: &[u8; 8] = b"HDPPACK\0";
+/// Current packed format version.
+pub const PACKED_VERSION: u32 = 1;
+/// Fixed header size in bytes; `doc_offsets` starts here.
+pub const PACKED_HEADER_BYTES: u64 = 40;
+
+/// Write a [`PackedCorpus`] in the packed on-disk format (parent
+/// directories created).
+pub fn write_packed(corpus: &PackedCorpus, path: &Path) -> anyhow::Result<()> {
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    let mut f = BufWriter::new(std::fs::File::create(path)?);
+    f.write_all(PACKED_MAGIC)?;
+    f.write_all(&PACKED_VERSION.to_le_bytes())?;
+    f.write_all(&0u32.to_le_bytes())?; // flags
+    write_u64(&mut f, corpus.num_docs() as u64)?;
+    write_u64(&mut f, corpus.vocab.len() as u64)?;
+    write_u64(&mut f, corpus.num_tokens())?;
+    for &o in corpus.doc_offsets() {
+        write_u64(&mut f, o)?;
+    }
+    write_u32s(&mut f, corpus.tokens())?;
+    for w in &corpus.vocab {
+        let bytes = w.as_bytes();
+        write_u64(&mut f, bytes.len() as u64)?;
+        f.write_all(bytes)?;
+    }
+    f.flush()?;
+    Ok(())
+}
+
+/// Parsed packed header: `(D, V, N)`. Checks magic, version, and that
+/// the fixed sections fit inside `file_len` before anything allocates.
+fn read_packed_header(f: &mut impl Read, file_len: u64, path: &Path) -> anyhow::Result<(u64, u64, u64)> {
+    let mut magic = [0u8; 8];
+    f.read_exact(&mut magic)?;
+    anyhow::ensure!(
+        &magic == PACKED_MAGIC,
+        "not a packed hdp corpus: {}",
+        path.display()
+    );
+    let version = read_u32(f)?;
+    anyhow::ensure!(
+        version == PACKED_VERSION,
+        "unsupported packed corpus version {version} (expected {PACKED_VERSION}): {}",
+        path.display()
+    );
+    let _flags = read_u32(f)?;
+    let d = read_u64(f)?;
+    let v = read_u64(f)?;
+    let n = read_u64(f)?;
+    // Fixed-size sections must fit in the file — this bounds every
+    // allocation below by the actual file size (a corrupt header can
+    // not trigger an absurd reservation).
+    let need: u128 = PACKED_HEADER_BYTES as u128 + (d as u128 + 1) * 8 + n as u128 * 4;
+    anyhow::ensure!(
+        need <= file_len as u128,
+        "truncated packed corpus: header claims D={d} N={n} ({need} bytes) but file has {file_len}"
+    );
+    Ok((d, v, n))
+}
+
+/// Read a packed corpus fully into memory.
+pub fn read_packed(path: &Path) -> anyhow::Result<PackedCorpus> {
+    let file = std::fs::File::open(path)
+        .map_err(|e| anyhow::anyhow!("open {}: {e}", path.display()))?;
+    let file_len = file.metadata()?.len();
+    let mut f = std::io::BufReader::new(file);
+    let (d, v, n) = read_packed_header(&mut f, file_len, path)?;
+    let doc_offsets = read_u64s(&mut f, d as usize + 1)?;
+    let mut tokens = Vec::new();
+    read_u32s_into(&mut f, n as usize, &mut tokens)?;
+    let mut vocab = Vec::with_capacity((v as usize).min(file_len as usize / 8 + 1));
+    for _ in 0..v {
+        let len = read_u64(&mut f)? as usize;
+        anyhow::ensure!(len as u64 <= file_len, "corrupt vocab entry length {len}");
+        let mut buf = vec![0u8; len];
+        f.read_exact(&mut buf)?;
+        vocab.push(String::from_utf8(buf)?);
+    }
+    let corpus = PackedCorpus::from_parts(tokens, doc_offsets, vocab)?;
+    corpus.validate()?;
+    Ok(corpus)
+}
+
+/// An opened packed corpus served **out of core**: only the header and
+/// `doc_offsets` are resident (8 bytes per document); token blocks are
+/// read on demand with [`PackedCorpusFile::read_block`]. This is the
+/// token source of the streamed z sweep when the arena does not fit in
+/// RAM (PubMed scale: 768M tokens ≈ 3 GB of arena vs 64 MB of
+/// offsets).
+///
+/// Reads are serialized through an internal lock — the streamed sweep
+/// overlaps one slot's I/O with the other slots' compute, which is the
+/// intended pattern.
+pub struct PackedCorpusFile {
+    file: Mutex<std::fs::File>,
+    doc_offsets: Vec<u64>,
+    vocab_entries: u64,
+}
+
+impl PackedCorpusFile {
+    /// Open and validate the header + offsets of a packed corpus file.
+    pub fn open(path: &Path) -> anyhow::Result<Self> {
+        let file = std::fs::File::open(path)
+            .map_err(|e| anyhow::anyhow!("open {}: {e}", path.display()))?;
+        let file_len = file.metadata()?.len();
+        let mut f = std::io::BufReader::new(file);
+        let (d, v, n) = read_packed_header(&mut f, file_len, path)?;
+        let doc_offsets = read_u64s(&mut f, d as usize + 1)?;
+        anyhow::ensure!(
+            doc_offsets[0] == 0
+                && doc_offsets.windows(2).all(|w| w[0] <= w[1])
+                && *doc_offsets.last().unwrap() == n,
+            "corrupt doc_offsets in {}",
+            path.display()
+        );
+        Ok(Self {
+            file: Mutex::new(f.into_inner()),
+            doc_offsets,
+            vocab_entries: v,
+        })
+    }
+
+    /// Number of documents `D`.
+    pub fn num_docs(&self) -> usize {
+        self.doc_offsets.len() - 1
+    }
+
+    /// Total token count `N`.
+    pub fn num_tokens(&self) -> u64 {
+        *self.doc_offsets.last().unwrap()
+    }
+
+    /// Vocabulary entries recorded in the header (strings stay on
+    /// disk).
+    pub fn vocab_entries(&self) -> u64 {
+        self.vocab_entries
+    }
+
+    /// Document offsets (length `D + 1`), resident.
+    pub fn doc_offsets(&self) -> &[u64] {
+        &self.doc_offsets
+    }
+
+    /// Read the token block of documents `[start_doc, end_doc)` into
+    /// `buf` (cleared first). One seek + one contiguous read.
+    pub fn read_block(
+        &self,
+        start_doc: usize,
+        end_doc: usize,
+        buf: &mut Vec<u32>,
+    ) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            start_doc <= end_doc && end_doc < self.doc_offsets.len(),
+            "doc block {start_doc}..{end_doc} out of range"
+        );
+        let t0 = self.doc_offsets[start_doc];
+        let t1 = self.doc_offsets[end_doc];
+        buf.clear();
+        let mut file = self.file.lock().unwrap();
+        let byte0 = PACKED_HEADER_BYTES + self.doc_offsets.len() as u64 * 8 + t0 * 4;
+        file.seek(SeekFrom::Start(byte0))?;
+        read_u32s_into(&mut *file, (t1 - t0) as usize, buf)?;
+        Ok(())
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -247,5 +504,113 @@ mod tests {
         std::fs::write(&path, b"not a corpus").unwrap();
         assert!(read_binary(&path).is_err());
         std::fs::remove_dir_all(path.parent().unwrap()).ok();
+    }
+
+    /// Packed corpus exercising the edge cases the format must honor:
+    /// leading/trailing/interior empty docs and max-u32 word ids in a
+    /// vocabless arena.
+    fn packed_edge() -> PackedCorpus {
+        PackedCorpus::from_parts(
+            vec![0, u32::MAX, 7, 7, u32::MAX],
+            vec![0, 0, 2, 2, 5, 5],
+            vec![],
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn packed_roundtrip_exact() {
+        let dir = std::env::temp_dir().join("hdp_packed_test_rt");
+        // Edge-case arena (empty docs, max ids, no vocab).
+        let c = packed_edge();
+        let p = dir.join("edge.hdpp");
+        write_packed(&c, &p).unwrap();
+        assert_eq!(read_packed(&p).unwrap(), c);
+        // Regular corpus with vocab, via conversion.
+        let c = sample().to_packed();
+        let p = dir.join("sample.hdpp");
+        write_packed(&c, &p).unwrap();
+        let back = read_packed(&p).unwrap();
+        assert_eq!(back, c);
+        assert_eq!(back.to_nested().docs, sample().docs);
+        // Empty corpus.
+        let c = PackedCorpus::default();
+        let p = dir.join("empty.hdpp");
+        write_packed(&c, &p).unwrap();
+        assert_eq!(read_packed(&p).unwrap(), c);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn packed_rejects_bad_magic_and_version() {
+        let dir = std::env::temp_dir().join("hdp_packed_test_bad");
+        let path = dir.join("c.hdpp");
+        write_packed(&packed_edge(), &path).unwrap();
+        let good = std::fs::read(&path).unwrap();
+        // Bad magic.
+        let mut bad = good.clone();
+        bad[0] ^= 0xff;
+        std::fs::write(&path, &bad).unwrap();
+        let err = read_packed(&path).unwrap_err().to_string();
+        assert!(err.contains("not a packed"), "{err}");
+        assert!(PackedCorpusFile::open(&path).is_err());
+        // Wrong version.
+        let mut bad = good.clone();
+        bad[8] = 99;
+        std::fs::write(&path, &bad).unwrap();
+        let err = read_packed(&path).unwrap_err().to_string();
+        assert!(err.contains("version"), "{err}");
+        assert!(PackedCorpusFile::open(&path).is_err());
+        // Total garbage / too short for a header.
+        std::fs::write(&path, b"HDP").unwrap();
+        assert!(read_packed(&path).is_err());
+        assert!(PackedCorpusFile::open(&path).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn packed_rejects_truncation_cleanly() {
+        // Every strict prefix of a valid file must yield Err, not a
+        // panic, OOM, or silent short read.
+        let dir = std::env::temp_dir().join("hdp_packed_test_trunc");
+        let path = dir.join("c.hdpp");
+        write_packed(&sample().to_packed(), &path).unwrap();
+        let good = std::fs::read(&path).unwrap();
+        let cut = dir.join("cut.hdpp");
+        for len in [0, 4, 8, 12, 39, 40, 41, good.len() / 2, good.len() - 1] {
+            std::fs::write(&cut, &good[..len.min(good.len())]).unwrap();
+            assert!(read_packed(&cut).is_err(), "prefix of {len} bytes accepted");
+        }
+        // A header whose claimed N exceeds the file must not allocate
+        // N tokens: corrupt the token count field (bytes 32..40).
+        let mut bad = good.clone();
+        bad[32..40].copy_from_slice(&u64::MAX.to_le_bytes());
+        std::fs::write(&cut, &bad).unwrap();
+        let err = read_packed(&cut).unwrap_err().to_string();
+        assert!(err.contains("truncated"), "{err}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn packed_file_blocks_match_resident_arena() {
+        let dir = std::env::temp_dir().join("hdp_packed_test_blocks");
+        let path = dir.join("c.hdpp");
+        let c = sample().to_packed();
+        write_packed(&c, &path).unwrap();
+        let f = PackedCorpusFile::open(&path).unwrap();
+        assert_eq!(f.num_docs(), c.num_docs());
+        assert_eq!(f.num_tokens(), c.num_tokens());
+        assert_eq!(f.vocab_entries(), c.vocab.len() as u64);
+        assert_eq!(f.doc_offsets(), c.doc_offsets());
+        let mut buf = Vec::new();
+        // Every contiguous block agrees with the resident arena.
+        for start in 0..=c.num_docs() {
+            for end in start..=c.num_docs() {
+                f.read_block(start, end, &mut buf).unwrap();
+                assert_eq!(&buf[..], &c.tokens()[c.token_range(start, end)]);
+            }
+        }
+        assert!(f.read_block(0, c.num_docs() + 1, &mut buf).is_err());
+        std::fs::remove_dir_all(&dir).ok();
     }
 }

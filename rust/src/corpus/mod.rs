@@ -1,7 +1,24 @@
 //! Corpus substrate: document storage, I/O, preprocessing, synthesis.
 //!
-//! The samplers see a [`Corpus`]: a bag-of-words token stream per
-//! document over an integer vocabulary. Sources:
+//! Two in-memory document layouts, one logical corpus:
+//!
+//! * [`Corpus`] — the nested `Vec<Vec<u32>>` interchange form used by
+//!   ingest, preprocessing, and synthesis (cheap to build a document at
+//!   a time).
+//! * [`PackedCorpus`] — the packed CSR token arena the samplers run on:
+//!   one flat `tokens` vector plus `doc_offsets` (length `D + 1`), so a
+//!   document is a contiguous slice of the arena, token storage is a
+//!   single allocation, and contiguous *document blocks* are contiguous
+//!   *token ranges* — the property the streamed/out-of-core z sweep
+//!   ([`crate::hdp::pc::zstep::ZSweep::run_streamed`]) is built on. Its
+//!   on-disk twin ([`io::write_packed`] / [`io::PackedCorpusFile`]) has
+//!   the same layout, so blocks can be served straight from disk.
+//!
+//! The [`DocAccess`] trait abstracts "give me document `d`'s tokens"
+//! over both layouts (and over `&[Vec<u32>]` directly), which is what
+//! lets the sweep and diagnostics take either without copies.
+//!
+//! Sources:
 //!
 //! * [`io`] — the UCI "bag of words" interchange format used by the
 //!   paper's NeurIPS/PubMed downloads (`docword.txt` + `vocab.txt`),
@@ -105,6 +122,223 @@ impl Corpus {
     }
 }
 
+/// Read access to per-document token slices, implemented by the nested
+/// [`Corpus`] (and raw `Vec<Vec<u32>>` document lists) and by the
+/// packed arena [`PackedCorpus`]. `Sync` so parallel sweeps can share
+/// the source across shards.
+pub trait DocAccess: Sync {
+    /// Number of documents `D`.
+    fn num_docs(&self) -> usize;
+    /// Tokens of document `d`.
+    fn doc(&self, d: usize) -> &[u32];
+}
+
+impl DocAccess for [Vec<u32>] {
+    fn num_docs(&self) -> usize {
+        self.len()
+    }
+    fn doc(&self, d: usize) -> &[u32] {
+        &self[d]
+    }
+}
+
+impl DocAccess for Vec<Vec<u32>> {
+    fn num_docs(&self) -> usize {
+        self.len()
+    }
+    fn doc(&self, d: usize) -> &[u32] {
+        &self[d]
+    }
+}
+
+impl DocAccess for Corpus {
+    fn num_docs(&self) -> usize {
+        self.docs.len()
+    }
+    fn doc(&self, d: usize) -> &[u32] {
+        &self.docs[d]
+    }
+}
+
+impl DocAccess for PackedCorpus {
+    fn num_docs(&self) -> usize {
+        PackedCorpus::num_docs(self)
+    }
+    fn doc(&self, d: usize) -> &[u32] {
+        PackedCorpus::doc(self, d)
+    }
+}
+
+impl<T: DocAccess + Send> DocAccess for std::sync::Arc<T> {
+    fn num_docs(&self) -> usize {
+        (**self).num_docs()
+    }
+    fn doc(&self, d: usize) -> &[u32] {
+        (**self).doc(d)
+    }
+}
+
+/// A bag-of-words corpus in packed CSR layout: one flat token arena
+/// plus per-document offsets.
+///
+/// Invariants (enforced by [`PackedCorpus::from_parts`] and preserved
+/// by every constructor):
+///
+/// * `doc_offsets.len() == num_docs + 1`, `doc_offsets[0] == 0`;
+/// * `doc_offsets` is non-decreasing (empty documents are *retained*
+///   as zero-length ranges — unlike preprocessing, conversion never
+///   drops documents);
+/// * `doc_offsets[num_docs] == tokens.len()`.
+///
+/// The vocabulary may be empty even when tokens exist: benches and
+/// intermediate arenas are "vocabless", and [`PackedCorpus::validate`]
+/// only range-checks word ids against a non-empty vocabulary.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct PackedCorpus {
+    tokens: Vec<u32>,
+    doc_offsets: Vec<u64>,
+    /// Word strings, indexed by word id (possibly empty; see above).
+    pub vocab: Vec<String>,
+}
+
+impl Default for PackedCorpus {
+    fn default() -> Self {
+        Self { tokens: Vec::new(), doc_offsets: vec![0], vocab: Vec::new() }
+    }
+}
+
+impl PackedCorpus {
+    /// Assemble from raw parts, checking the CSR invariants.
+    pub fn from_parts(
+        tokens: Vec<u32>,
+        doc_offsets: Vec<u64>,
+        vocab: Vec<String>,
+    ) -> anyhow::Result<Self> {
+        anyhow::ensure!(!doc_offsets.is_empty(), "doc_offsets must have D+1 entries");
+        anyhow::ensure!(doc_offsets[0] == 0, "doc_offsets must start at 0");
+        anyhow::ensure!(
+            doc_offsets.windows(2).all(|w| w[0] <= w[1]),
+            "doc_offsets must be non-decreasing"
+        );
+        anyhow::ensure!(
+            *doc_offsets.last().unwrap() == tokens.len() as u64,
+            "doc_offsets end {} != token count {}",
+            doc_offsets.last().unwrap(),
+            tokens.len()
+        );
+        Ok(Self { tokens, doc_offsets, vocab })
+    }
+
+    /// Number of documents `D`.
+    pub fn num_docs(&self) -> usize {
+        self.doc_offsets.len() - 1
+    }
+
+    /// Vocabulary size `V`.
+    pub fn vocab_size(&self) -> usize {
+        self.vocab.len()
+    }
+
+    /// Total token count `N`.
+    pub fn num_tokens(&self) -> u64 {
+        *self.doc_offsets.last().unwrap()
+    }
+
+    /// Length of document `d`.
+    pub fn doc_len(&self, d: usize) -> usize {
+        (self.doc_offsets[d + 1] - self.doc_offsets[d]) as usize
+    }
+
+    /// Tokens of document `d` (a slice of the arena).
+    pub fn doc(&self, d: usize) -> &[u32] {
+        &self.tokens[self.doc_offsets[d] as usize..self.doc_offsets[d + 1] as usize]
+    }
+
+    /// The whole token arena.
+    pub fn tokens(&self) -> &[u32] {
+        &self.tokens
+    }
+
+    /// Document offsets into the arena (length `D + 1`).
+    pub fn doc_offsets(&self) -> &[u64] {
+        &self.doc_offsets
+    }
+
+    /// Arena token range of the contiguous document block
+    /// `[start_doc, end_doc)`.
+    pub fn token_range(&self, start_doc: usize, end_doc: usize) -> std::ops::Range<usize> {
+        self.doc_offsets[start_doc] as usize..self.doc_offsets[end_doc] as usize
+    }
+
+    /// Longest document length `max_d N_d`.
+    pub fn max_doc_len(&self) -> usize {
+        (0..self.num_docs()).map(|d| self.doc_len(d)).max().unwrap_or(0)
+    }
+
+    /// Per-document lengths as weights for load-balanced sharding.
+    pub fn doc_weights(&self) -> Vec<u64> {
+        self.doc_offsets.windows(2).map(|w| w[1] - w[0]).collect()
+    }
+
+    /// Validate internal consistency. Word ids are range-checked only
+    /// against a non-empty vocabulary (vocabless arenas are legal).
+    pub fn validate(&self) -> anyhow::Result<()> {
+        if !self.vocab.is_empty() {
+            let v = self.vocab.len() as u32;
+            for (i, &w) in self.tokens.iter().enumerate() {
+                anyhow::ensure!(w < v, "token {i}: word id {w} out of range (V={v})");
+            }
+        }
+        Ok(())
+    }
+
+    /// One-line summary (Table-2 style).
+    pub fn summary(&self) -> String {
+        format!(
+            "D={} V={} N={} max_Nd={} (packed)",
+            self.num_docs(),
+            self.vocab_size(),
+            self.num_tokens(),
+            self.max_doc_len()
+        )
+    }
+
+    /// Convert back to the nested interchange form (token order and
+    /// empty documents preserved exactly).
+    pub fn to_nested(&self) -> Corpus {
+        Corpus {
+            docs: (0..self.num_docs()).map(|d| self.doc(d).to_vec()).collect(),
+            vocab: self.vocab.clone(),
+        }
+    }
+}
+
+impl Corpus {
+    /// Convert to the packed CSR arena form. Token order and empty
+    /// documents are preserved exactly, so the conversion round-trips
+    /// ([`PackedCorpus::to_nested`]) bit-for-bit.
+    pub fn to_packed(&self) -> PackedCorpus {
+        let mut doc_offsets = Vec::with_capacity(self.docs.len() + 1);
+        let mut off = 0u64;
+        doc_offsets.push(0);
+        for doc in &self.docs {
+            off += doc.len() as u64;
+            doc_offsets.push(off);
+        }
+        let mut tokens = Vec::with_capacity(off as usize);
+        for doc in &self.docs {
+            tokens.extend_from_slice(doc);
+        }
+        PackedCorpus { tokens, doc_offsets, vocab: self.vocab.clone() }
+    }
+}
+
+impl From<&Corpus> for PackedCorpus {
+    fn from(c: &Corpus) -> Self {
+        c.to_packed()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -133,5 +367,69 @@ mod tests {
     fn validate_catches_out_of_range() {
         let c = Corpus { docs: vec![vec![5]], vocab: vec!["a".into()] };
         assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn packed_conversion_roundtrips_and_matches_stats() {
+        let c = tiny();
+        let p = c.to_packed();
+        assert_eq!(p.num_docs(), c.num_docs());
+        assert_eq!(p.num_tokens(), c.num_tokens());
+        assert_eq!(p.vocab_size(), c.vocab_size());
+        assert_eq!(p.max_doc_len(), c.max_doc_len());
+        assert_eq!(p.doc_weights(), c.doc_weights());
+        for d in 0..c.num_docs() {
+            assert_eq!(p.doc(d), &c.docs[d][..], "doc {d}");
+        }
+        // Empty docs retained as zero-length ranges.
+        assert_eq!(p.doc_len(2), 0);
+        assert_eq!(p.to_nested().docs, c.docs);
+        assert_eq!(p.to_nested().vocab, c.vocab);
+        p.validate().unwrap();
+        // DocAccess agreement across all three layouts.
+        fn via<D: DocAccess + ?Sized>(a: &D, d: usize) -> Vec<u32> {
+            a.doc(d).to_vec()
+        }
+        for d in 0..c.num_docs() {
+            assert_eq!(via(&c, d), via(&p, d));
+            assert_eq!(via(&c.docs, d), via(&p, d));
+        }
+    }
+
+    #[test]
+    fn packed_token_ranges_are_contiguous_blocks() {
+        let c = tiny();
+        let p = c.to_packed();
+        assert_eq!(p.token_range(0, 3), 0..4);
+        assert_eq!(p.token_range(1, 2), 3..4);
+        assert_eq!(p.token_range(2, 3), 4..4); // empty doc, empty range
+        assert_eq!(&p.tokens()[p.token_range(0, 1)], &[0, 1, 1]);
+        assert_eq!(p.doc_offsets(), &[0, 3, 4, 4]);
+    }
+
+    #[test]
+    fn packed_from_parts_enforces_invariants() {
+        // Valid, including a vocabless arena with max word ids.
+        let p = PackedCorpus::from_parts(vec![u32::MAX], vec![0, 0, 1, 1], vec![]).unwrap();
+        assert_eq!(p.num_docs(), 3);
+        assert_eq!(p.num_tokens(), 1);
+        p.validate().unwrap(); // empty vocab: no range check
+        // Bad shapes are rejected, never panic.
+        assert!(PackedCorpus::from_parts(vec![], vec![], vec![]).is_err());
+        assert!(PackedCorpus::from_parts(vec![1], vec![1, 1], vec![]).is_err());
+        assert!(PackedCorpus::from_parts(vec![1, 2], vec![0, 2, 1], vec![]).is_err());
+        assert!(PackedCorpus::from_parts(vec![1, 2], vec![0, 1], vec![]).is_err());
+        // Non-empty vocab does range-check.
+        let p = PackedCorpus::from_parts(vec![3], vec![0, 1], vec!["a".into()]).unwrap();
+        assert!(p.validate().is_err());
+    }
+
+    #[test]
+    fn packed_default_is_empty() {
+        let p = PackedCorpus::default();
+        assert_eq!(p.num_docs(), 0);
+        assert_eq!(p.num_tokens(), 0);
+        assert_eq!(p.max_doc_len(), 0);
+        p.validate().unwrap();
     }
 }

@@ -127,6 +127,17 @@ pub fn preprocess(corpus: &Corpus, cfg: &PreprocessConfig) -> (Corpus, Preproces
     (Corpus { docs, vocab }, report)
 }
 
+/// [`preprocess`] straight into the packed arena form the samplers
+/// consume. Identical filtering/renumbering (it is the same pass),
+/// identical report; only the output layout differs.
+pub fn preprocess_packed(
+    corpus: &Corpus,
+    cfg: &PreprocessConfig,
+) -> (super::PackedCorpus, PreprocessReport) {
+    let (clean, report) = preprocess(corpus, cfg);
+    (clean.to_packed(), report)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -191,5 +202,37 @@ mod tests {
         };
         let (out, _) = preprocess(&c, &cfg);
         assert_eq!(out.num_docs(), 1); // empty doc dropped even with min 0
+    }
+
+    #[test]
+    fn packed_conversion_preserves_preprocess_output() {
+        // preprocess filters; conversion must then be lossless: doc and
+        // token counts match the report, ids stay dense, token order
+        // and per-doc boundaries survive the round-trip.
+        let cfg = PreprocessConfig {
+            stopwords: ["the"].iter().map(|s| s.to_string()).collect(),
+            rare_word_limit: 2,
+            min_doc_size: 2,
+        };
+        let (nested, report) = preprocess(&corpus(), &cfg);
+        let (packed, report2) = preprocess_packed(&corpus(), &cfg);
+        assert_eq!(report2, report);
+        assert_eq!(packed.num_docs(), report.docs_out);
+        assert_eq!(packed.num_tokens(), report.tokens_out);
+        assert_eq!(packed.vocab_size(), report.vocab_out);
+        assert_eq!(packed.to_nested().docs, nested.docs);
+        assert_eq!(packed.vocab, nested.vocab);
+        packed.validate().unwrap();
+        // Unlike preprocessing, *conversion* retains empty documents —
+        // the CSR layout represents them as zero-length ranges.
+        let with_empty = Corpus {
+            docs: vec![vec![], vec![0], vec![]],
+            vocab: vec!["w".into()],
+        };
+        let p = with_empty.to_packed();
+        assert_eq!(p.num_docs(), 3);
+        assert_eq!(p.doc_len(0), 0);
+        assert_eq!(p.doc_len(2), 0);
+        assert_eq!(p.to_nested().docs, with_empty.docs);
     }
 }

@@ -238,6 +238,13 @@ pub fn load(name: &str, seed: u64) -> anyhow::Result<Corpus> {
     Ok(corpus)
 }
 
+/// [`load`] straight into the packed arena form (same resolution
+/// order, same cache files — the packing is a conversion of the loaded
+/// corpus, so nested and packed loads always agree).
+pub fn load_packed(name: &str, seed: u64) -> anyhow::Result<super::PackedCorpus> {
+    Ok(load(name, seed)?.to_packed())
+}
+
 /// Registered names.
 pub fn names() -> Vec<&'static str> {
     all().into_iter().map(|e| e.name).collect()
@@ -246,6 +253,10 @@ pub fn names() -> Vec<&'static str> {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    /// `HDP_CACHE_DIR` is process-global; every test that mutates it
+    /// must hold this lock or they race under the parallel harness.
+    static ENV_LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
 
     #[test]
     fn registry_contains_paper_corpora() {
@@ -270,6 +281,7 @@ mod tests {
 
     #[test]
     fn tiny_loads_and_caches() {
+        let _env = ENV_LOCK.lock().unwrap_or_else(|e| e.into_inner());
         let dir = std::env::temp_dir().join("hdp_registry_test");
         std::env::set_var("HDP_CACHE_DIR", &dir);
         let c1 = load("tiny", 1).unwrap();
@@ -281,9 +293,34 @@ mod tests {
     }
 
     #[test]
+    fn packed_load_matches_registry_metadata() {
+        // Corpus→PackedCorpus conversion must preserve the registry's
+        // metadata-level counts exactly: D from the generator spec, and
+        // N/V/doc boundaries from the nested load.
+        let _env = ENV_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+        let dir = std::env::temp_dir().join("hdp_registry_test3");
+        std::env::set_var("HDP_CACHE_DIR", &dir);
+        let entry = find("tiny").unwrap();
+        let nested = load("tiny", 4).unwrap();
+        let packed = load_packed("tiny", 4).unwrap();
+        assert_eq!(packed.num_docs(), entry.spec.docs);
+        assert_eq!(packed.num_docs(), nested.num_docs());
+        assert_eq!(packed.num_tokens(), nested.num_tokens());
+        assert_eq!(packed.vocab_size(), nested.vocab_size());
+        assert_eq!(packed.max_doc_len(), nested.max_doc_len());
+        assert_eq!(packed.doc_weights(), nested.doc_weights());
+        for d in 0..nested.num_docs() {
+            assert_eq!(packed.doc(d), &nested.docs[d][..], "doc {d}");
+        }
+        std::env::remove_var("HDP_CACHE_DIR");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
     fn analog_statistics_close_to_paper() {
         // Mean doc length of the generator matches the paper's N/D
         // within 20% (stochastic).
+        let _env = ENV_LOCK.lock().unwrap_or_else(|e| e.into_inner());
         let dir = std::env::temp_dir().join("hdp_registry_test2");
         std::env::set_var("HDP_CACHE_DIR", &dir);
         let e = find("ap").unwrap();

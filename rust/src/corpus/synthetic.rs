@@ -19,7 +19,7 @@
 //! ([`pseudo_word`]) so top-word tables in the experiment output read
 //! like the paper's appendices.
 
-use super::Corpus;
+use super::{Corpus, PackedCorpus};
 use crate::alias::AliasTable;
 use crate::rng::{dist, Pcg64};
 
@@ -94,6 +94,33 @@ impl ZipfCorpusSpec {
             docs.push(doc);
         }
         Corpus { docs, vocab: pseudo_vocab(self.vocab) }
+    }
+
+    /// Generate straight into the packed arena — same RNG consumption
+    /// as [`ZipfCorpusSpec::generate`], so the token stream is
+    /// identical, but without the nested per-document vectors (the
+    /// form the ingest benches use at scale).
+    pub fn generate_packed(&self, seed: u64) -> PackedCorpus {
+        let mut rng = Pcg64::new(seed);
+        let weights: Vec<f64> =
+            (1..=self.vocab).map(|r| 1.0 / (r as f64).powf(self.exponent)).collect();
+        let zipf = AliasTable::new(&weights);
+        let sigma = self.len_sigma;
+        let mu = self.mean_doc_len.ln() - 0.5 * sigma * sigma;
+        let mut tokens = Vec::new();
+        let mut doc_offsets = Vec::with_capacity(self.docs + 1);
+        doc_offsets.push(0u64);
+        for _ in 0..self.docs {
+            let len = (mu + sigma * dist::std_normal(&mut rng)).exp().round() as usize;
+            let len = len.max(self.min_doc_len);
+            tokens.reserve(len);
+            for _ in 0..len {
+                tokens.push(zipf.sample(&mut rng) as u32);
+            }
+            doc_offsets.push(tokens.len() as u64);
+        }
+        PackedCorpus::from_parts(tokens, doc_offsets, pseudo_vocab(self.vocab))
+            .expect("generator preserves CSR invariants")
     }
 }
 
@@ -178,6 +205,14 @@ impl HdpCorpusSpec {
             HdpGroundTruth { psi, phi, z: zs },
         )
     }
+
+    /// Generate corpus + ground truth with the corpus in packed arena
+    /// form (a conversion of [`HdpCorpusSpec::generate`], so the two
+    /// always agree token-for-token).
+    pub fn generate_packed(&self, seed: u64) -> (PackedCorpus, HdpGroundTruth) {
+        let (c, truth) = self.generate(seed);
+        (c.to_packed(), truth)
+    }
 }
 
 #[cfg(test)]
@@ -235,6 +270,41 @@ mod tests {
         let (vb, nb) = (big.observed_vocab() as f64, big.num_tokens() as f64);
         let zeta = (vb / vs).ln() / (nb / ns).ln();
         assert!(zeta > 0.3 && zeta < 0.95, "heaps exponent {zeta}");
+    }
+
+    #[test]
+    fn packed_generators_match_nested() {
+        let zspec = ZipfCorpusSpec {
+            vocab: 800,
+            exponent: 1.05,
+            docs: 60,
+            mean_doc_len: 30.0,
+            len_sigma: 0.4,
+            min_doc_len: 5,
+        };
+        let nested = zspec.generate(9);
+        let packed = zspec.generate_packed(9);
+        assert_eq!(packed.num_docs(), nested.num_docs());
+        assert_eq!(packed.num_tokens(), nested.num_tokens());
+        assert_eq!(packed.vocab, nested.vocab);
+        for d in 0..nested.num_docs() {
+            assert_eq!(packed.doc(d), &nested.docs[d][..], "zipf doc {d}");
+        }
+        let hspec = HdpCorpusSpec {
+            vocab: 300,
+            topics: 5,
+            gamma: 2.0,
+            alpha: 1.5,
+            topic_beta: 0.05,
+            docs: 40,
+            mean_doc_len: 25.0,
+            len_sigma: 0.3,
+            min_doc_len: 5,
+        };
+        let (nested, t1) = hspec.generate(5);
+        let (packed, t2) = hspec.generate_packed(5);
+        assert_eq!(packed.to_nested().docs, nested.docs);
+        assert_eq!(t1.z, t2.z);
     }
 
     #[test]

@@ -8,7 +8,7 @@
 //! sampler's z conditional (eq. 24), so this module doubles as a
 //! consumer of the dense `zscore` XLA artifact for cross-validation.
 
-use crate::corpus::Corpus;
+use crate::corpus::DocAccess;
 use crate::rng::{dist, Pcg64};
 use crate::sparse::PhiMatrix;
 
@@ -25,8 +25,11 @@ pub struct HeldoutResult {
 
 /// Evaluate document-completion perplexity of `(phi, psi)` on held-out
 /// documents. `gibbs_passes` sweeps estimate θ̂ from the observed half.
-pub fn document_completion(
-    corpus: &Corpus,
+/// `corpus` is any [`DocAccess`] source (nested [`crate::corpus::Corpus`]
+/// or packed [`crate::corpus::PackedCorpus`]) — the RNG consumption is
+/// per-document, so the result is bit-identical across layouts.
+pub fn document_completion<C: DocAccess + ?Sized>(
+    corpus: &C,
     docs: &[usize],
     phi: &PhiMatrix,
     psi: &[f64],
@@ -41,7 +44,7 @@ pub fn document_completion(
     let mut skipped = 0u64;
     let mut weights = vec![0.0f64; k_max];
     for &d in docs {
-        let doc = &corpus.docs[d];
+        let doc = corpus.doc(d);
         if doc.len() < 2 {
             continue;
         }
@@ -131,6 +134,39 @@ mod tests {
     use crate::hdp::pc::{phi::sample_phi, PcSampler};
     use crate::hdp::Trainer;
     use std::sync::Arc;
+
+    #[test]
+    fn packed_corpus_scores_bit_identically() {
+        // Same model, same held-out ids, nested vs packed corpus: the
+        // per-document RNG consumption is layout-independent, so the
+        // perplexity must match to the bit.
+        let (c, _) = HdpCorpusSpec {
+            vocab: 200,
+            topics: 4,
+            gamma: 2.0,
+            alpha: 0.8,
+            topic_beta: 0.05,
+            docs: 60,
+            mean_doc_len: 30.0,
+            len_sigma: 0.3,
+            min_doc_len: 10,
+        }
+        .generate(91);
+        let packed = c.to_packed();
+        let cfg = HdpConfig { alpha: 0.3, beta: 0.05, gamma: 1.0, k_max: 16, init_topics: 1 };
+        let mut s = PcSampler::new(Arc::new(c.clone()), cfg, 1, 3).unwrap();
+        for _ in 0..20 {
+            s.step().unwrap();
+        }
+        let root = crate::rng::Pcg64::new(8);
+        let phi = sample_phi(&root, s.n(), cfg.beta, c.vocab_size(), 1usize);
+        let (_, test) = train_test_split(c.num_docs(), 0.3, 5);
+        let a = document_completion(&c, &test, &phi, s.psi(), cfg.alpha, 3, 17);
+        let b = document_completion(&packed, &test, &phi, s.psi(), cfg.alpha, 3, 17);
+        assert_eq!(a.perplexity.to_bits(), b.perplexity.to_bits());
+        assert_eq!(a.tokens, b.tokens);
+        assert_eq!(a.skipped, b.skipped);
+    }
 
     #[test]
     fn split_partitions() {

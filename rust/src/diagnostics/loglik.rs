@@ -68,6 +68,40 @@ pub fn crp_loglik(z: &[Vec<u32>], psi: &[f64], alpha: f64, exec: impl par::Execu
     partials.into_iter().sum()
 }
 
+/// Packed-arena form of [`crp_loglik`]: assignments as one flat `z`
+/// arena with CSR `doc_offsets` (the layout of
+/// [`crate::corpus::PackedCorpus`], checkpoint v2, and the streamed
+/// sweep's z stores). Per-document math, iteration order, and the
+/// shard plan are identical to the nested form, so the result is
+/// **bit-identical** for equal content — out-of-core pipelines can
+/// score a chain without materializing nested vectors.
+pub fn crp_loglik_packed(
+    z: &[u32],
+    doc_offsets: &[u64],
+    psi: &[f64],
+    alpha: f64,
+    exec: impl par::Executor,
+) -> f64 {
+    let num_docs = doc_offsets.len().saturating_sub(1);
+    let plan = par::Sharding::even(num_docs, exec.slots());
+    let partials = par::exec_shards(exec, &plan, |_, shard| {
+        let mut acc = 0.0f64;
+        let mut m = DocTopics::with_capacity(16);
+        for d in shard.start..shard.end {
+            m.clear();
+            let zd = &z[doc_offsets[d] as usize..doc_offsets[d + 1] as usize];
+            for (i, &k) in zd.iter().enumerate() {
+                let num = alpha * psi[k as usize] + m.get(k) as f64;
+                let den = alpha + i as f64;
+                acc += (num / den).ln();
+                m.inc(k);
+            }
+        }
+        acc
+    });
+    partials.into_iter().sum()
+}
+
 /// Joint metric: `word_loglik + crp_loglik`.
 pub fn joint_loglik(
     rows: &[Vec<(u32, u32)>],
@@ -177,6 +211,30 @@ mod tests {
         let a = crp_loglik(&z, &psi, 0.7, 1usize);
         let b = crp_loglik(&z, &psi, 0.7, 4usize);
         assert!((a - b).abs() < 1e-9);
+    }
+
+    #[test]
+    fn crp_loglik_packed_bit_identical_to_nested() {
+        // Uneven docs, an empty doc, several thread counts: the packed
+        // form must reproduce the nested result to the bit.
+        let mut z: Vec<Vec<u32>> = (0..23)
+            .map(|d| (0..(d * 7) % 19).map(|i| ((d + i) % 6) as u32).collect())
+            .collect();
+        z[4].clear();
+        let flat: Vec<u32> = z.iter().flatten().copied().collect();
+        let mut offsets = vec![0u64];
+        for zd in &z {
+            offsets.push(offsets.last().unwrap() + zd.len() as u64);
+        }
+        let psi = [0.3, 0.2, 0.2, 0.1, 0.1, 0.1];
+        for threads in [1usize, 3, 5] {
+            let nested = crp_loglik(&z, &psi, 0.7, threads);
+            let packed = crp_loglik_packed(&flat, &offsets, &psi, 0.7, threads);
+            assert_eq!(packed.to_bits(), nested.to_bits(), "threads={threads}");
+        }
+        // Degenerate: no documents.
+        assert_eq!(crp_loglik_packed(&[], &[0], &psi, 0.7, 2usize), 0.0);
+        assert_eq!(crp_loglik_packed(&[], &[], &psi, 0.7, 2usize), 0.0);
     }
 
     #[test]

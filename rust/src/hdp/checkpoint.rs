@@ -3,6 +3,14 @@
 //! the assignments `z`, the global distribution `Ψ`, and run metadata;
 //! sufficient statistics (`m`, `n`) are rebuilt on load, so the file
 //! stays small and version-robust.
+//!
+//! Since version 2 (`HDPCKPT2`) the assignments are stored in the
+//! **packed CSR layout** — `(D+1)` u64 doc offsets followed by the
+//! flat `N × u32` z arena — mirroring the packed corpus format
+//! ([`crate::corpus::io`]), so a checkpoint's z section can be block-read
+//! (or streamed straight into a [`crate::hdp::pc::zstep::FileZ`] store)
+//! without parsing per-document records. Version-1 files (per-document
+//! length-prefixed vectors) are still read.
 
 use crate::corpus::Corpus;
 use crate::sparse::DocTopics;
@@ -10,7 +18,8 @@ use anyhow::{Context, Result};
 use std::io::{BufReader, BufWriter, Read, Write};
 use std::path::Path;
 
-const MAGIC: &[u8; 8] = b"HDPCKPT1";
+const MAGIC: &[u8; 8] = b"HDPCKPT2";
+const MAGIC_V1: &[u8; 8] = b"HDPCKPT1";
 
 /// A serializable snapshot of a trained topic-model state.
 #[derive(Clone, Debug, PartialEq)]
@@ -26,7 +35,8 @@ pub struct Checkpoint {
 }
 
 impl Checkpoint {
-    /// Write to `path` (parent directories created).
+    /// Write to `path` (parent directories created). The z section is
+    /// the packed CSR layout (offsets + flat arena; module docs).
     pub fn save(&self, path: &Path) -> Result<()> {
         if let Some(dir) = path.parent() {
             std::fs::create_dir_all(dir)?;
@@ -42,31 +52,43 @@ impl Checkpoint {
             f.write_all(&p.to_le_bytes())?;
         }
         write_u64(&mut f, self.z.len() as u64)?;
+        let mut off = 0u64;
+        write_u64(&mut f, 0)?;
         for zd in &self.z {
-            write_u64(&mut f, zd.len() as u64)?;
-            for &k in zd {
-                f.write_all(&k.to_le_bytes())?;
-            }
+            off += zd.len() as u64;
+            write_u64(&mut f, off)?;
+        }
+        for zd in &self.z {
+            crate::corpus::io::write_u32s(&mut f, zd)?;
         }
         f.flush()?;
         Ok(())
     }
 
-    /// Read from `path`.
+    /// Read from `path` (packed version-2 layout, or the legacy
+    /// version-1 per-document layout).
     pub fn load(path: &Path) -> Result<Self> {
-        let mut f = BufReader::new(
-            std::fs::File::open(path)
-                .with_context(|| format!("open {}", path.display()))?,
-        );
+        let file = std::fs::File::open(path)
+            .with_context(|| format!("open {}", path.display()))?;
+        let file_len = file.metadata()?.len();
+        let mut f = BufReader::new(file);
         let mut magic = [0u8; 8];
         f.read_exact(&mut magic)?;
-        anyhow::ensure!(&magic == MAGIC, "not an hdp checkpoint: {}", path.display());
+        let v2 = match &magic {
+            m if m == MAGIC => true,
+            m if m == MAGIC_V1 => false,
+            _ => anyhow::bail!("not an hdp checkpoint: {}", path.display()),
+        };
         let iteration = read_u64(&mut f)?;
         let name_len = read_u64(&mut f)? as usize;
         anyhow::ensure!(name_len < 1024, "corrupt sampler name");
         let mut name = vec![0u8; name_len];
         f.read_exact(&mut name)?;
         let psi_len = read_u64(&mut f)? as usize;
+        anyhow::ensure!(
+            psi_len as u128 * 8 <= file_len as u128,
+            "corrupt checkpoint: psi length {psi_len} exceeds file size"
+        );
         let mut psi = Vec::with_capacity(psi_len);
         let mut b8 = [0u8; 8];
         for _ in 0..psi_len {
@@ -74,17 +96,47 @@ impl Checkpoint {
             psi.push(f64::from_le_bytes(b8));
         }
         let docs = read_u64(&mut f)? as usize;
-        let mut z = Vec::with_capacity(docs);
-        for _ in 0..docs {
-            let len = read_u64(&mut f)? as usize;
-            let mut buf = vec![0u8; len * 4];
-            f.read_exact(&mut buf)?;
-            z.push(
-                buf.chunks_exact(4)
-                    .map(|c| u32::from_le_bytes([c[0], c[1], c[2], c[3]]))
-                    .collect(),
+        anyhow::ensure!(
+            docs as u128 * 8 <= file_len as u128,
+            "corrupt checkpoint: doc count {docs} exceeds file size"
+        );
+        let z = if v2 {
+            // Packed layout: (D+1) offsets then the flat arena.
+            let mut offsets = Vec::with_capacity(docs + 1);
+            for _ in 0..=docs {
+                offsets.push(read_u64(&mut f)?);
+            }
+            anyhow::ensure!(
+                offsets.first() == Some(&0)
+                    && offsets.windows(2).all(|w| w[0] <= w[1])
+                    && *offsets.last().unwrap() as u128 * 4 <= file_len as u128,
+                "corrupt checkpoint z offsets"
             );
-        }
+            let mut flat = Vec::new();
+            crate::corpus::io::read_u32s_into(
+                &mut f,
+                *offsets.last().unwrap() as usize,
+                &mut flat,
+            )?;
+            offsets
+                .windows(2)
+                .map(|w| flat[w[0] as usize..w[1] as usize].to_vec())
+                .collect()
+        } else {
+            // Legacy per-document layout.
+            let mut z: Vec<Vec<u32>> = Vec::with_capacity(docs);
+            for _ in 0..docs {
+                let len = read_u64(&mut f)? as usize;
+                anyhow::ensure!(
+                    len as u128 * 4 <= file_len as u128,
+                    "corrupt checkpoint: doc length {len} exceeds file size"
+                );
+                let mut doc = Vec::new();
+                crate::corpus::io::read_u32s_into(&mut f, len, &mut doc)?;
+                z.push(doc);
+            }
+            z
+        };
         Ok(Self {
             iteration,
             sampler: String::from_utf8(name)?,
@@ -265,5 +317,71 @@ mod tests {
         std::fs::write(&path, b"nope").unwrap();
         assert!(Checkpoint::load(&path).is_err());
         std::fs::remove_dir_all(path.parent().unwrap()).ok();
+    }
+
+    /// Write `ckpt` in the legacy version-1 layout (per-document
+    /// length-prefixed vectors) — the format PR ≤ 3 binaries produced.
+    fn save_v1(ckpt: &Checkpoint, path: &Path) {
+        use std::io::Write;
+        let mut f = std::io::BufWriter::new(std::fs::File::create(path).unwrap());
+        f.write_all(b"HDPCKPT1").unwrap();
+        f.write_all(&ckpt.iteration.to_le_bytes()).unwrap();
+        let name = ckpt.sampler.as_bytes();
+        f.write_all(&(name.len() as u64).to_le_bytes()).unwrap();
+        f.write_all(name).unwrap();
+        f.write_all(&(ckpt.psi.len() as u64).to_le_bytes()).unwrap();
+        for &p in &ckpt.psi {
+            f.write_all(&p.to_le_bytes()).unwrap();
+        }
+        f.write_all(&(ckpt.z.len() as u64).to_le_bytes()).unwrap();
+        for zd in &ckpt.z {
+            f.write_all(&(zd.len() as u64).to_le_bytes()).unwrap();
+            for &k in zd {
+                f.write_all(&k.to_le_bytes()).unwrap();
+            }
+        }
+        f.flush().unwrap();
+    }
+
+    fn sample_ckpt() -> Checkpoint {
+        Checkpoint {
+            iteration: 12,
+            sampler: "pc-hdp".to_string(),
+            psi: vec![0.5, 0.25, 0.25],
+            // Includes an empty document — the packed layout must
+            // retain it as a zero-length range.
+            z: vec![vec![0, 1, 1, 2], vec![], vec![2, 0]],
+        }
+    }
+
+    #[test]
+    fn packed_layout_roundtrips_and_v1_still_loads() {
+        let dir = std::env::temp_dir().join("hdp_ckpt_test3");
+        std::fs::create_dir_all(&dir).unwrap();
+        let ckpt = sample_ckpt();
+        // v2 (packed) roundtrip.
+        let p2 = dir.join("v2.ckpt");
+        ckpt.save(&p2).unwrap();
+        assert_eq!(Checkpoint::load(&p2).unwrap(), ckpt);
+        // The file really is the packed layout: magic + the z section
+        // is offsets [0,4,4,6] followed by the flat arena.
+        let bytes = std::fs::read(&p2).unwrap();
+        assert_eq!(&bytes[..8], b"HDPCKPT2");
+        // Legacy v1 loads to the same snapshot.
+        let p1 = dir.join("v1.ckpt");
+        save_v1(&ckpt, &p1);
+        assert_eq!(Checkpoint::load(&p1).unwrap(), ckpt);
+        // Unknown version is rejected.
+        let mut bad = bytes.clone();
+        bad[7] = b'9';
+        let pbad = dir.join("bad.ckpt");
+        std::fs::write(&pbad, &bad).unwrap();
+        assert!(Checkpoint::load(&pbad).is_err());
+        // Truncations never panic.
+        for cut in [0, 7, 8, 20, bytes.len() / 2, bytes.len() - 1] {
+            std::fs::write(&pbad, &bytes[..cut]).unwrap();
+            assert!(Checkpoint::load(&pbad).is_err(), "prefix {cut} accepted");
+        }
+        std::fs::remove_dir_all(&dir).ok();
     }
 }

@@ -51,7 +51,7 @@ pub mod psi;
 pub mod zstep;
 
 use crate::config::HdpConfig;
-use crate::corpus::Corpus;
+use crate::corpus::{Corpus, PackedCorpus};
 use crate::diagnostics::loglik;
 use crate::metrics::PhaseTimers;
 use crate::par::{self, Schedule, Sharding, WorkerPool};
@@ -65,6 +65,13 @@ use super::{DiagSnapshot, Trainer};
 /// The Algorithm-2 sampler.
 pub struct PcSampler {
     corpus: Arc<Corpus>,
+    /// Packed CSR twin of `corpus`: the token arena every z sweep reads
+    /// (contiguous per-document slices; contiguous blocks for the
+    /// streamed path). The nested form stays for the `Trainer` API, so
+    /// tokens are currently held twice (+4 B/token); retiring the
+    /// nested copy behind `DocAccess` is the "out-of-core sampler
+    /// state" ROADMAP follow-on.
+    packed: Arc<PackedCorpus>,
     cfg: HdpConfig,
     threads: usize,
     root: Pcg64,
@@ -106,6 +113,10 @@ pub struct PcSampler {
     pipelined: bool,
     /// Hand shard `i` to pool slot `i % slots` every z sweep.
     slot_affine: bool,
+    /// Streamed z: max documents per block (None = resident sweep).
+    stream_block_docs: Option<usize>,
+    /// Block plan derived from `doc_plan.refine(stream_block_docs)`.
+    block_plan: Option<Sharding>,
     /// Double-buffer slot for the in-flight Φ job.
     phi_pipe: phi::PhiPipeline,
 }
@@ -150,21 +161,24 @@ impl PcSampler {
         let mut psi = vec![0.0; cfg.k_max];
         let mut rng = root.stream(0x7051);
         psi::sample_psi(&mut rng, &l, cfg.gamma, &mut psi);
-        let doc_plan = Sharding::weighted(&corpus.doc_weights(), threads);
+        let weights = corpus.doc_weights();
+        let doc_plan = Sharding::weighted(&weights, threads);
         let pool = Arc::new(WorkerPool::new(threads));
+        let packed = Arc::new(corpus.to_packed());
         // One scratch per pool slot — the pool's slot bound is
         // independent of the shard plan, so no resizing on plan swaps.
-        // The accumulator hint is the tokens-per-slot estimate with 25%
-        // headroom: a slot sees at most one distinct (topic, word) pair
-        // per token it processes, so under balanced (or slot-affine)
+        // The accumulator hint comes from the plan's affine stripe
+        // (tokens-per-slot with 25% headroom, see `plan_pair_hint`):
+        // a slot records at most one distinct (topic, word) pair per
+        // token it processes, so under balanced (or slot-affine)
         // sharding the table never regrows after construction.
-        let per_slot = corpus.num_tokens() as usize / pool.slots();
-        let pair_hint = (per_slot + per_slot / 4 + 32).min(1 << 22);
+        let pair_hint = zstep::plan_pair_hint(&doc_plan, &weights, pool.slots());
         let scratch = (0..pool.slots())
             .map(|_| zstep::ShardScratch::with_pair_hint(cfg.k_max, pair_hint))
             .collect();
         Ok(Self {
             corpus,
+            packed,
             cfg,
             threads,
             root,
@@ -186,6 +200,8 @@ impl PcSampler {
             merge_scratch: MergeScratch::new(),
             pipelined: true,
             slot_affine: false,
+            stream_block_docs: None,
+            block_plan: None,
             phi_pipe: phi::PhiPipeline::new(0x0f1),
         })
     }
@@ -256,8 +272,15 @@ impl PcSampler {
         self.slot_affine
     }
 
+    /// The packed CSR arena the sweeps run on.
+    pub fn packed(&self) -> &PackedCorpus {
+        &self.packed
+    }
+
     /// Replace the document shard plan (tests and tuning: the chain is
     /// bit-identical under any plan that covers `0..D` contiguously).
+    /// The streamed block plan, if any, is re-derived from the new
+    /// plan.
     pub fn set_doc_plan(&mut self, plan: Sharding) {
         let mut next = 0usize;
         for s in plan.shards() {
@@ -266,6 +289,50 @@ impl PcSampler {
         }
         assert_eq!(next, self.corpus.num_docs(), "plan must cover all documents");
         self.doc_plan = plan;
+        self.rebuild_stream_state();
+    }
+
+    /// Enable/disable the streamed (out-of-core-shaped) z sweep:
+    /// `Some(b)` refines the document shard plan into blocks of at
+    /// most `b` documents and sweeps them through per-slot block
+    /// buffers, so hot per-token state is `slots × max_block` instead
+    /// of the whole corpus; `None` restores the resident sweep. Chains
+    /// are **bit-identical** under every setting (per-document RNG
+    /// streams), so this is purely a residency/scheduling choice and
+    /// may be flipped mid-chain.
+    pub fn set_streaming(&mut self, block_docs: Option<usize>) {
+        self.stream_block_docs = block_docs.map(|b| b.max(1));
+        self.rebuild_stream_state();
+    }
+
+    /// Streamed-mode block size (documents), if streaming is enabled.
+    pub fn streaming(&self) -> Option<usize> {
+        self.stream_block_docs
+    }
+
+    /// The active streamed block plan, if streaming is enabled.
+    pub fn stream_block_plan(&self) -> Option<&Sharding> {
+        self.block_plan.as_ref()
+    }
+
+    /// Bytes currently held by the per-slot streamed block buffers
+    /// (0 for resident sweeps) — the hot-z residency the streaming
+    /// tests bound.
+    pub fn stream_buf_bytes(&self) -> usize {
+        self.scratch.iter().map(|s| s.stream_buf_bytes()).sum()
+    }
+
+    /// Re-derive the block plan and re-size the per-slot accumulators
+    /// from the plan actually in effect (config-time only — sweeps
+    /// never resize).
+    fn rebuild_stream_state(&mut self) {
+        self.block_plan = self.stream_block_docs.map(|b| self.doc_plan.refine(b));
+        let plan = self.block_plan.as_ref().unwrap_or(&self.doc_plan);
+        let weights = self.corpus.doc_weights();
+        let pair_hint = zstep::plan_pair_hint(plan, &weights, self.pool.slots());
+        self.scratch = (0..self.pool.slots())
+            .map(|_| zstep::ShardScratch::with_pair_hint(self.cfg.k_max, pair_hint))
+            .collect();
     }
 
     /// Mean per-token sparse work of the last iteration (eq. 29 audit).
@@ -329,15 +396,29 @@ impl Trainer for PcSampler {
         let schedule =
             if self.slot_affine { Schedule::SlotAffine } else { Schedule::Steal };
         let t0 = Instant::now();
-        sweep.run_with_scratch_sched(
-            &self.corpus.docs,
-            &mut self.assign.z,
-            &mut self.assign.m,
-            &self.doc_plan,
-            &*self.pool,
-            &mut self.scratch,
-            schedule,
-        );
+        match &self.block_plan {
+            // Streamed: block-refined plan, per-slot hot z buffers over
+            // the resident assignments. Bit-identical to the resident
+            // sweep (per-document RNG streams).
+            Some(blocks) => sweep.run_streamed(
+                &*self.packed,
+                &zstep::NestedZ::new(&mut self.assign.z),
+                &mut self.assign.m,
+                blocks,
+                &*self.pool,
+                &mut self.scratch,
+                schedule,
+            ),
+            None => sweep.run_with_scratch_sched(
+                &*self.packed,
+                &mut self.assign.z,
+                &mut self.assign.m,
+                &self.doc_plan,
+                &*self.pool,
+                &mut self.scratch,
+                schedule,
+            ),
+        }
         self.timers.add("z", t0.elapsed());
         // 4. Merge the slot outputs (draining the scratch in place so
         // its allocations survive into the next sweep). The n merge is
@@ -639,7 +720,7 @@ mod tests {
         // tokens-per-slot pair hint, which slot-affine scheduling makes
         // a deterministic bound.)
         let corpus = tiny_corpus(7);
-        let mut s = PcSampler::new(corpus, cfg(), 3, 23).unwrap();
+        let mut s = PcSampler::new(corpus.clone(), cfg(), 3, 23).unwrap();
         s.set_slot_affine(true);
         for _ in 0..3 {
             s.step().unwrap();
@@ -652,6 +733,89 @@ mod tests {
         let caps_after: Vec<usize> =
             s.scratch.iter().map(|sc| sc.out.n_acc.capacity()).collect();
         assert_eq!(caps_after, caps, "steady-state sweeps must not regrow n_acc");
+        // Pool-accounting of the accumulator sizing: the pre-size must
+        // come from the plan in effect, not whole-corpus totals. The
+        // open-addressing table doubles, so capacity(hint) < 2·hint —
+        // assert both the resident plan hint and, after enabling
+        // 1-doc-block streaming, the refined-plan hint bound it.
+        let weights = corpus.doc_weights();
+        let hint =
+            zstep::plan_pair_hint(&s.doc_plan, &weights, s.pool.slots());
+        for sc in &s.scratch {
+            assert!(
+                sc.out.n_acc.capacity() < 2 * hint.max(64),
+                "slot accumulator ({}) over-allocated vs plan hint {hint}",
+                sc.out.n_acc.capacity()
+            );
+        }
+        s.set_streaming(Some(1));
+        let blocks = s.stream_block_plan().unwrap().clone();
+        let hint_blocks = zstep::plan_pair_hint(&blocks, &weights, s.pool.slots());
+        for _ in 0..2 {
+            s.step().unwrap();
+        }
+        for sc in &s.scratch {
+            assert!(
+                sc.out.n_acc.capacity() < 2 * hint_blocks.max(64),
+                "streamed slot accumulator ({}) over-allocated vs block-plan hint {hint_blocks}",
+                sc.out.n_acc.capacity()
+            );
+        }
+    }
+
+    #[test]
+    fn streamed_chain_matches_resident() {
+        // Sampler-level streamed-vs-resident bit-identity, including a
+        // mid-chain flip into (and out of) streaming — the full matrix
+        // lives in tests/statistical.rs.
+        let corpus = tiny_corpus(10);
+        let mut resident = PcSampler::new(corpus.clone(), cfg(), 3, 55).unwrap();
+        let mut streamed = PcSampler::new(corpus.clone(), cfg(), 3, 55).unwrap();
+        streamed.set_streaming(Some(3));
+        assert_eq!(streamed.streaming(), Some(3));
+        for it in 0..3 {
+            resident.step().unwrap();
+            streamed.step().unwrap();
+            assert_eq!(streamed.assignments(), resident.assignments(), "iter={it}");
+            assert_eq!(streamed.l(), resident.l(), "iter={it}");
+            assert_eq!(streamed.psi(), resident.psi(), "iter={it}");
+        }
+        // Hot streamed z is bounded by slots × max block, far below
+        // the corpus arena.
+        let weights = corpus.doc_weights();
+        let max_block: u64 = streamed
+            .stream_block_plan()
+            .unwrap()
+            .shards()
+            .iter()
+            .map(|b| weights[b.start..b.end].iter().sum())
+            .max()
+            .unwrap();
+        let bound = 2 * 2 * 4 * max_block as usize * streamed.pool.slots();
+        assert!(
+            streamed.stream_buf_bytes() <= bound,
+            "hot z {} exceeds blocks-in-flight bound {bound}",
+            streamed.stream_buf_bytes()
+        );
+        assert!(
+            (streamed.stream_buf_bytes() as u64) < corpus.num_tokens() * 4,
+            "streamed sweep materialized corpus-scale z"
+        );
+        // Flip back to resident mid-chain: still bit-identical, and the
+        // chain state is already in place (NestedZ streams through it).
+        streamed.set_streaming(None);
+        for it in 0..2 {
+            resident.step().unwrap();
+            streamed.step().unwrap();
+            assert_eq!(streamed.assignments(), resident.assignments(), "post-flip iter={it}");
+            assert_eq!(streamed.psi(), resident.psi(), "post-flip iter={it}");
+        }
+        s_consistency(&streamed, &corpus);
+    }
+
+    fn s_consistency(s: &PcSampler, corpus: &Arc<Corpus>) {
+        s.assign.check_consistency(corpus).unwrap();
+        assert_eq!(s.n().total(), corpus.num_tokens());
     }
 
     #[test]

@@ -17,9 +17,13 @@
 //! chain is bit-identical under any shard layout or thread count.
 
 use crate::alias::SparseAlias;
-use crate::par::{self, Sharding};
+use crate::corpus::io::PackedCorpusFile;
+use crate::corpus::{DocAccess, PackedCorpus};
+use crate::par::pool::SendPtr;
+use crate::par::{self, Shard, Sharding};
 use crate::rng::Pcg64;
 use crate::sparse::{DocCountHist, DocTopics, PhiMatrix, TopicWordAcc};
+use std::marker::PhantomData;
 
 /// Reusable per-executor-slot buffers for [`WordTables::build_into`]:
 /// the bucket-(a) weight vector for the word currently being processed
@@ -240,29 +244,66 @@ impl ZScratch {
 /// workspaces ([`ZScratch`]) plus the shard-local sweep outputs
 /// ([`ZShardResult`]), all reused — cleared, not reallocated — across
 /// sweeps. The sampler owns one per pool slot.
+///
+/// The streamed sweep additionally parks its per-slot **block
+/// buffers** here: the hot copies of the current block's `z` (and, for
+/// non-resident token sources, its tokens). They are the only
+/// per-token state a streamed slot keeps, so total hot z is bounded by
+/// `slots × max_block_tokens` — the "blocks in flight" residency bound
+/// — instead of the corpus size.
 pub struct ShardScratch {
     /// Sweep outputs accumulated by this slot (possibly over several
     /// shards when the pool has fewer slots than the plan has shards).
     pub out: ZShardResult,
     scratch: ZScratch,
+    /// Streamed mode: the current block's assignments.
+    z_buf: Vec<u32>,
+    /// Streamed mode: the current block's tokens (unused — left empty —
+    /// when the token source is memory-resident).
+    tok_buf: Vec<u32>,
 }
 
 impl ShardScratch {
     /// Fresh scratch for a `k_max`-topic model (default `n_acc` size;
     /// see [`ShardScratch::with_pair_hint`]).
     pub fn new(k_max: usize) -> Self {
-        Self { out: ZShardResult::new(k_max), scratch: ZScratch::new(k_max) }
+        Self::with_pair_hint(k_max, 1 << 10)
     }
 
     /// Fresh scratch whose accumulator is pre-sized for ~`pair_hint`
     /// distinct `(topic, word)` pairs — the samplers pass their
-    /// tokens-per-slot estimate here.
+    /// plan-derived tokens-per-slot estimate here (see
+    /// [`plan_pair_hint`]).
     pub fn with_pair_hint(k_max: usize, pair_hint: usize) -> Self {
         Self {
             out: ZShardResult::with_pair_hint(k_max, pair_hint),
             scratch: ZScratch::new(k_max),
+            z_buf: Vec::new(),
+            tok_buf: Vec::new(),
         }
     }
+
+    /// Bytes currently held by this slot's streamed block buffers
+    /// (z + tokens). Stays 0 for resident sweeps; bounded by the
+    /// largest block a slot has seen for streamed ones — the number
+    /// the residency tests and `benches/stream_ingest.rs` assert on.
+    pub fn stream_buf_bytes(&self) -> usize {
+        (self.z_buf.capacity() + self.tok_buf.capacity()) * std::mem::size_of::<u32>()
+    }
+}
+
+/// Per-slot accumulator pre-size derived from the plan actually swept:
+/// the [`Sharding::max_stripe_weight`] tokens-per-slot bound plus 25%
+/// headroom, capped. A slot records at most one distinct
+/// `(topic, word)` pair per token it processes, so under slot-affine
+/// (or balanced stolen) scheduling the accumulator never regrows after
+/// construction — and, unlike the old whole-corpus `N / slots`
+/// estimate, a block-refined streamed plan is sized from its own
+/// stripe, not from totals that assume every slot sees `1/slots` of
+/// the corpus.
+pub fn plan_pair_hint(plan: &Sharding, doc_weights: &[u64], slots: usize) -> usize {
+    let per_slot = plan.max_stripe_weight(doc_weights, slots) as usize;
+    (per_slot + per_slot / 4 + 32).min(1 << 22)
 }
 
 /// Parameters of one z sweep.
@@ -394,13 +435,15 @@ impl<'a> ZSweep<'a> {
 
     /// Run the sweep over all documents with the given shard plan,
     /// mutating `z`/`m` in place and returning the per-shard results.
+    /// `docs` is any [`DocAccess`] source — the nested `Vec<Vec<u32>>`
+    /// document list or a [`PackedCorpus`] arena.
     ///
     /// One-shot form: allocates fresh per-shard scratch and runs on
     /// scoped threads (one per shard). The samplers use
     /// [`ZSweep::run_with_scratch`] with a persistent pool instead.
-    pub fn run(
+    pub fn run<D: DocAccess + ?Sized>(
         &self,
-        docs: &[Vec<u32>],
+        docs: &D,
         z: &mut [Vec<u32>],
         m: &mut [DocTopics],
         plan: &Sharding,
@@ -422,9 +465,9 @@ impl<'a> ZSweep<'a> {
     /// the same plan because every document owns its RNG stream; only
     /// the grouping of outputs across `scratch` slots differs, and the
     /// shard merges are order-independent.
-    pub fn run_with_scratch(
+    pub fn run_with_scratch<D: DocAccess + ?Sized>(
         &self,
-        docs: &[Vec<u32>],
+        docs: &D,
         z: &mut [Vec<u32>],
         m: &mut [DocTopics],
         plan: &Sharding,
@@ -441,9 +484,9 @@ impl<'a> ZSweep<'a> {
     /// bit-identical under either schedule because per-document RNG
     /// streams make placement irrelevant.
     #[allow(clippy::too_many_arguments)]
-    pub fn run_with_scratch_sched(
+    pub fn run_with_scratch_sched<D: DocAccess + ?Sized>(
         &self,
-        docs: &[Vec<u32>],
+        docs: &D,
         z: &mut [Vec<u32>],
         m: &mut [DocTopics],
         plan: &Sharding,
@@ -491,12 +534,339 @@ impl<'a> ZSweep<'a> {
                 guard[shard_idx].take().expect("shard taken once")
             };
             debug_assert_eq!(start, shard.start);
-            let ShardScratch { out, scratch: zs } = slot;
+            let ShardScratch { out, scratch: zs, .. } = slot;
             for (off, (zd, md)) in zp.iter_mut().zip(mp.iter_mut()).enumerate() {
                 let d = shard.start + off;
-                self.resample_doc(d, &docs[d], zd, md, zs, out);
+                self.resample_doc(d, docs.doc(d), zd, md, zs, out);
             }
         });
+    }
+
+    /// Run the sweep **streamed**: documents arrive as contiguous
+    /// blocks — `blocks` must cover `0..D` contiguously, normally a
+    /// [`Sharding::refine`] refinement of the document shard plan — and
+    /// each executor slot materializes only its *current* block's `z`
+    /// (and, for out-of-core token sources, tokens) in its
+    /// [`ShardScratch`] block buffers. Hot per-token state is therefore
+    /// bounded by `slots × max_block_tokens`, never by the corpus.
+    ///
+    /// `tokens` is a [`TokenBlocks`] source ([`PackedCorpus`] serves
+    /// arena slices zero-copy; [`PackedCorpusFile`] reads blocks from
+    /// disk) and `z` a [`ZStore`] ([`NestedZ`] over the samplers'
+    /// resident assignments, [`ArenaZ`] over a packed arena, [`FileZ`]
+    /// fully out of core). The per-document sparse statistic `m` stays
+    /// resident: it is `O(K_d)` per document — offsets-scale, not
+    /// token-scale.
+    ///
+    /// The chain is **bit-identical** to the resident
+    /// [`ZSweep::run_with_scratch_sched`] for any block size, thread
+    /// count, schedule, or store: every document owns its RNG stream
+    /// keyed by `(iteration, doc id)`, and block boundaries only decide
+    /// *where* a document's resample runs.
+    #[allow(clippy::too_many_arguments)]
+    pub fn run_streamed<T, S>(
+        &self,
+        tokens: &T,
+        z: &S,
+        m: &mut [DocTopics],
+        blocks: &Sharding,
+        exec: impl par::Executor,
+        scratch: &mut [ShardScratch],
+        schedule: par::Schedule,
+    ) where
+        T: TokenBlocks + ?Sized,
+        S: ZStore + ?Sized,
+    {
+        if blocks.is_empty() {
+            return;
+        }
+        let offsets = tokens.doc_offsets();
+        // Real (release-mode) asserts: the per-block raw-pointer writes
+        // below are sound only under these invariants, and the checks
+        // are O(D + blocks) once per sweep — noise next to the sweep.
+        assert_eq!(offsets.len(), m.len() + 1, "offsets must cover m");
+        assert!(
+            {
+                let mut next = 0usize;
+                blocks.shards().iter().all(|b| {
+                    let ok = b.start == next;
+                    next = b.end;
+                    ok
+                }) && next + 1 == offsets.len()
+            },
+            "blocks must cover 0..D contiguously"
+        );
+        for s in scratch.iter_mut() {
+            s.out.reset(self.k_max);
+            s.scratch.ensure(self.k_max);
+        }
+        // Disjoint per-block doc ranges: each task owns its documents'
+        // `m` entries.
+        let mbase = SendPtr(m.as_mut_ptr());
+        par::exec_shards_with_sched(exec, blocks, scratch, schedule, |slot, _bi, block| {
+            let ShardScratch { out, scratch: zs, z_buf, tok_buf } = slot;
+            let ntok = (offsets[block.end] - offsets[block.start]) as usize;
+            z.load(block, ntok, z_buf);
+            debug_assert_eq!(z_buf.len(), ntok, "z store returned a short block");
+            tokens.with_block(block, tok_buf, &mut |toks| {
+                debug_assert_eq!(toks.len(), ntok, "token source returned a short block");
+                let mut pos = 0usize;
+                for d in block.start..block.end {
+                    let len = (offsets[d + 1] - offsets[d]) as usize;
+                    // SAFETY: blocks cover disjoint document ranges, so
+                    // `m[d]` is touched by exactly one task.
+                    let md = unsafe { &mut *mbase.0.add(d) };
+                    self.resample_doc(
+                        d,
+                        &toks[pos..pos + len],
+                        &mut z_buf[pos..pos + len],
+                        md,
+                        zs,
+                        out,
+                    );
+                    pos += len;
+                }
+            });
+            z.store(block, z_buf);
+        });
+    }
+}
+
+/// Clear `buf` and make room for `n` values, counting real growth via
+/// the substrate scratch-alloc counter. `reserve_exact` keeps the
+/// steady-state capacity at the largest block seen instead of the
+/// doubling growth a plain `reserve` would leave behind.
+fn ensure_u32_buf(buf: &mut Vec<u32>, n: usize) {
+    buf.clear();
+    if buf.capacity() < n {
+        crate::par::stats::note_scratch_alloc();
+        buf.reserve_exact(n);
+    }
+}
+
+/// Read-only source of packed token blocks for the streamed z sweep.
+///
+/// Implementors keep `doc_offsets` resident (8 bytes/document) and
+/// serve the tokens of a contiguous document block either in place
+/// (memory-resident arenas) or through the caller's per-slot buffer
+/// (out-of-core files).
+pub trait TokenBlocks: Sync {
+    /// Document offsets into the token arena (length `D + 1`).
+    fn doc_offsets(&self) -> &[u64];
+
+    /// Call `f` with the packed tokens of documents
+    /// `[docs.start, docs.end)`. `buf` is the calling slot's reusable
+    /// scratch; resident sources ignore it and pass an arena slice.
+    fn with_block(&self, docs: Shard, buf: &mut Vec<u32>, f: &mut dyn FnMut(&[u32]));
+}
+
+impl TokenBlocks for PackedCorpus {
+    fn doc_offsets(&self) -> &[u64] {
+        PackedCorpus::doc_offsets(self)
+    }
+
+    fn with_block(&self, docs: Shard, _buf: &mut Vec<u32>, f: &mut dyn FnMut(&[u32])) {
+        f(&self.tokens()[self.token_range(docs.start, docs.end)])
+    }
+}
+
+impl TokenBlocks for PackedCorpusFile {
+    fn doc_offsets(&self) -> &[u64] {
+        PackedCorpusFile::doc_offsets(self)
+    }
+
+    fn with_block(&self, docs: Shard, buf: &mut Vec<u32>, f: &mut dyn FnMut(&[u32])) {
+        let ntok =
+            (self.doc_offsets()[docs.end] - self.doc_offsets()[docs.start]) as usize;
+        ensure_u32_buf(buf, ntok);
+        // I/O mid-sweep has no recovery path that preserves the chain;
+        // fail loudly (the sweep is re-runnable from the last
+        // checkpoint).
+        self.read_block(docs.start, docs.end, buf).expect("corpus block read");
+        f(buf)
+    }
+}
+
+/// Mutable store of packed z blocks for the streamed z sweep.
+///
+/// The sweep calls [`ZStore::load`] / [`ZStore::store`] once per block
+/// with **disjoint** contiguous document ranges; implementations may
+/// therefore hand out overlapping-free interior mutability without
+/// locking (resident stores) or serialize on a file lock (out-of-core).
+pub trait ZStore: Sync {
+    /// Copy the assignments of documents `[docs.start, docs.end)`
+    /// (`ntokens` total, packed in document order) into `buf`.
+    fn load(&self, docs: Shard, ntokens: usize, buf: &mut Vec<u32>);
+
+    /// Write the mutated block back.
+    fn store(&self, docs: Shard, buf: &[u32]);
+}
+
+/// [`ZStore`] view over the samplers' resident nested assignments:
+/// streaming machinery, resident storage. This is what lets a sampler
+/// flip between resident and streamed sweeps mid-chain with no data
+/// migration (and what the equivalence tests pin).
+pub struct NestedZ<'a> {
+    base: SendPtr<Vec<u32>>,
+    len: usize,
+    _borrow: PhantomData<&'a mut [Vec<u32>]>,
+}
+
+impl<'a> NestedZ<'a> {
+    /// Wrap the nested assignments for block streaming.
+    pub fn new(z: &'a mut [Vec<u32>]) -> Self {
+        Self { base: SendPtr(z.as_mut_ptr()), len: z.len(), _borrow: PhantomData }
+    }
+}
+
+impl ZStore for NestedZ<'_> {
+    fn load(&self, docs: Shard, ntokens: usize, buf: &mut Vec<u32>) {
+        assert!(docs.end <= self.len, "z block {docs:?} out of range");
+        ensure_u32_buf(buf, ntokens);
+        for d in docs.start..docs.end {
+            // SAFETY: the sweep hands out disjoint doc ranges.
+            let zd = unsafe { &*self.base.0.add(d) };
+            buf.extend_from_slice(zd);
+        }
+    }
+
+    fn store(&self, docs: Shard, buf: &[u32]) {
+        let mut pos = 0usize;
+        for d in docs.start..docs.end {
+            // SAFETY: as above — this range belongs to one task.
+            let zd = unsafe { &mut *self.base.0.add(d) };
+            zd.copy_from_slice(&buf[pos..pos + zd.len()]);
+            pos += zd.len();
+        }
+    }
+}
+
+/// [`ZStore`] over a packed resident z arena aligned with the corpus
+/// `doc_offsets` (z stored exactly like the token arena).
+pub struct ArenaZ<'a> {
+    base: SendPtr<u32>,
+    offsets: &'a [u64],
+    len: usize,
+    _borrow: PhantomData<&'a mut [u32]>,
+}
+
+impl<'a> ArenaZ<'a> {
+    /// Wrap a flat z arena; `offsets` is the corpus `doc_offsets`
+    /// (length `D + 1`) and `z.len()` must equal the token count.
+    pub fn new(z: &'a mut [u32], offsets: &'a [u64]) -> Self {
+        assert_eq!(z.len() as u64, *offsets.last().expect("offsets non-empty"));
+        Self { base: SendPtr(z.as_mut_ptr()), offsets, len: z.len(), _borrow: PhantomData }
+    }
+
+    /// Arena range of a doc block, bounds-checked against the wrapped
+    /// slice (release-mode: the raw slices below rely on it).
+    fn range(&self, docs: Shard, ntokens: usize) -> usize {
+        let start = self.offsets[docs.start] as usize;
+        assert!(start + ntokens <= self.len, "z block {docs:?} out of range");
+        start
+    }
+}
+
+impl ZStore for ArenaZ<'_> {
+    fn load(&self, docs: Shard, ntokens: usize, buf: &mut Vec<u32>) {
+        ensure_u32_buf(buf, ntokens);
+        let start = self.range(docs, ntokens);
+        // SAFETY: disjoint doc ranges map to disjoint arena ranges
+        // (offsets are monotone), bounds-checked in `range`.
+        let src = unsafe { std::slice::from_raw_parts(self.base.0.add(start), ntokens) };
+        buf.extend_from_slice(src);
+    }
+
+    fn store(&self, docs: Shard, buf: &[u32]) {
+        let start = self.range(docs, buf.len());
+        // SAFETY: as above.
+        let dst =
+            unsafe { std::slice::from_raw_parts_mut(self.base.0.add(start), buf.len()) };
+        dst.copy_from_slice(buf);
+    }
+}
+
+/// Fully out-of-core [`ZStore`]: the z arena lives in a file (raw
+/// little-endian u32s at the corpus token offsets), blocks are read
+/// and written through an internal lock. Combined with
+/// [`PackedCorpusFile`] this makes the whole z phase's RAM footprint
+/// `O(D)` offsets + `O(slots × block)` buffers.
+pub struct FileZ {
+    file: std::sync::Mutex<std::fs::File>,
+    offsets: Vec<u64>,
+}
+
+impl FileZ {
+    /// Create (truncating) at `path`, initialized from nested
+    /// assignments; `offsets` are derived from the document lengths.
+    pub fn from_nested(path: &std::path::Path, z: &[Vec<u32>]) -> anyhow::Result<Self> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let file = std::fs::OpenOptions::new()
+            .read(true)
+            .write(true)
+            .create(true)
+            .truncate(true)
+            .open(path)?;
+        let mut offsets = Vec::with_capacity(z.len() + 1);
+        let mut off = 0u64;
+        offsets.push(0);
+        {
+            let mut w = std::io::BufWriter::new(&file);
+            for zd in z {
+                off += zd.len() as u64;
+                offsets.push(off);
+                crate::corpus::io::write_u32s(&mut w, zd)?;
+            }
+            use std::io::Write;
+            w.flush()?;
+        }
+        Ok(Self { file: std::sync::Mutex::new(file), offsets })
+    }
+
+    /// The document offsets (length `D + 1`).
+    pub fn offsets(&self) -> &[u64] {
+        &self.offsets
+    }
+
+    /// Read the whole store back as nested assignments (tests and
+    /// checkpointing).
+    pub fn to_nested(&self) -> anyhow::Result<Vec<Vec<u32>>> {
+        use std::io::Seek;
+        let mut file = self.file.lock().unwrap();
+        file.seek(std::io::SeekFrom::Start(0))?;
+        let mut flat = Vec::new();
+        crate::corpus::io::read_u32s_into(
+            &mut *file,
+            *self.offsets.last().unwrap() as usize,
+            &mut flat,
+        )?;
+        Ok(self
+            .offsets
+            .windows(2)
+            .map(|w| flat[w[0] as usize..w[1] as usize].to_vec())
+            .collect())
+    }
+}
+
+impl ZStore for FileZ {
+    fn load(&self, docs: Shard, ntokens: usize, buf: &mut Vec<u32>) {
+        use std::io::Seek;
+        ensure_u32_buf(buf, ntokens);
+        let mut file = self.file.lock().unwrap();
+        file.seek(std::io::SeekFrom::Start(self.offsets[docs.start] * 4))
+            .expect("z block seek");
+        crate::corpus::io::read_u32s_into(&mut *file, ntokens, buf).expect("z block read");
+    }
+
+    fn store(&self, docs: Shard, buf: &[u32]) {
+        use std::io::{Seek, Write};
+        let mut file = self.file.lock().unwrap();
+        file.seek(std::io::SeekFrom::Start(self.offsets[docs.start] * 4))
+            .expect("z block seek");
+        crate::corpus::io::write_u32s(&mut *file, buf).expect("z block write");
+        file.flush().expect("z block flush");
     }
 }
 
@@ -789,6 +1159,247 @@ mod tests {
         for _ in 0..200 {
             assert_eq!(reused.sample(1, &mut r1), fresh.sample(1, &mut r2));
         }
+    }
+
+    /// Frozen sweep state shared by the streaming tests.
+    struct Frozen {
+        corpus: crate::corpus::Corpus,
+        phi: PhiMatrix,
+        psi: [f64; 8],
+        z0: Vec<Vec<u32>>,
+        m0: Vec<DocTopics>,
+    }
+
+    fn frozen_state(seed: u64) -> Frozen {
+        use crate::corpus::synthetic::HdpCorpusSpec;
+        let (corpus, _) = HdpCorpusSpec {
+            vocab: 130,
+            topics: 5,
+            gamma: 2.0,
+            alpha: 1.0,
+            topic_beta: 0.1,
+            docs: 47,
+            mean_doc_len: 24.0,
+            len_sigma: 0.3,
+            min_doc_len: 5,
+        }
+        .generate(seed);
+        let mut acc = TopicWordAcc::with_capacity(256);
+        let mut rng = Pcg64::new(seed ^ 0xf00);
+        let z0: Vec<Vec<u32>> = corpus
+            .docs
+            .iter()
+            .map(|d| d.iter().map(|_| rng.below(6) as u32).collect())
+            .collect();
+        for (doc, zd) in corpus.docs.iter().zip(&z0) {
+            for (&v, &k) in doc.iter().zip(zd) {
+                acc.add(k, v, 1);
+            }
+        }
+        let n = TopicWordRows::merge_from(8, &mut [acc]);
+        let root = Pcg64::new(seed ^ 0xbeef);
+        let phi = super::super::phi::sample_phi(&root, &n, 0.05, 130, 1usize);
+        let m0: Vec<DocTopics> =
+            z0.iter().map(|zd| zd.iter().copied().collect()).collect();
+        Frozen { corpus, phi, psi: [0.3, 0.2, 0.15, 0.1, 0.1, 0.05, 0.05, 0.05], z0, m0 }
+    }
+
+    fn frozen_sweep<'a>(f: &'a Frozen, tables: &'a WordTables, root: &'a Pcg64) -> ZSweep<'a> {
+        ZSweep {
+            phi: &f.phi,
+            psi: &f.psi,
+            tables,
+            alpha: 0.5,
+            k_max: 8,
+            seed_root: root,
+            iteration: 1,
+        }
+    }
+
+    #[test]
+    fn streamed_sweep_matches_resident_for_every_store() {
+        // One frozen state swept five ways — resident, streamed over
+        // nested z, streamed over a packed z arena, and fully
+        // out-of-core (packed corpus file + z file) — with 1-doc and
+        // uneven blocks. All chains must be bit-identical and the
+        // merged statistics equal.
+        use crate::par::{Schedule, WorkerPool};
+        let f = frozen_state(31);
+        let root = Pcg64::new(77);
+        let tables = WordTables::build(&f.phi, &f.psi, 0.5, 1usize);
+        let sweep = frozen_sweep(&f, &tables, &root);
+        let packed = f.corpus.to_packed();
+        let d = f.corpus.num_docs();
+        let plan = Sharding::weighted(&f.corpus.doc_weights(), 3);
+        let pool = WorkerPool::new(3);
+
+        // Reference: resident sweep.
+        let (mut z_ref, mut m_ref) = (f.z0.clone(), f.m0.clone());
+        let mut scratch: Vec<ShardScratch> =
+            (0..pool.slots()).map(|_| ShardScratch::new(8)).collect();
+        sweep.run_with_scratch_sched(
+            &packed,
+            &mut z_ref,
+            &mut m_ref,
+            &plan,
+            &pool,
+            &mut scratch,
+            Schedule::Steal,
+        );
+        let n_ref = TopicWordRows::merge_from_iter(
+            8,
+            scratch.iter_mut().map(|s| &mut s.out.n_acc),
+        );
+
+        let check = |z: &[Vec<u32>], m: &[DocTopics], n: &TopicWordRows, tag: &str| {
+            assert_eq!(z, &z_ref[..], "{tag}: z diverged");
+            for (d, (ma, mb)) in m.iter().zip(&m_ref).enumerate() {
+                assert_eq!(ma.total(), mb.total(), "{tag}: m total, doc {d}");
+                for (k, c) in ma.iter() {
+                    assert_eq!(mb.get(k), c, "{tag}: m[{d}][{k}]");
+                }
+            }
+            for k in 0..8 {
+                assert_eq!(n.row(k), n_ref.row(k), "{tag}: topic {k}");
+            }
+        };
+
+        for block_docs in [1usize, 5, usize::MAX] {
+            let blocks = plan.refine(block_docs);
+            for schedule in [Schedule::Steal, Schedule::SlotAffine] {
+                let tag = format!("blocks={block_docs} schedule={schedule:?}");
+                // Streamed over the nested resident z.
+                let (mut z, mut m) = (f.z0.clone(), f.m0.clone());
+                let mut scratch: Vec<ShardScratch> =
+                    (0..pool.slots()).map(|_| ShardScratch::new(8)).collect();
+                sweep.run_streamed(
+                    &packed,
+                    &NestedZ::new(&mut z),
+                    &mut m,
+                    &blocks,
+                    &pool,
+                    &mut scratch,
+                    schedule,
+                );
+                let n = TopicWordRows::merge_from_iter(
+                    8,
+                    scratch.iter_mut().map(|s| &mut s.out.n_acc),
+                );
+                check(&z, &m, &n, &format!("nested {tag}"));
+
+                // Streamed over a packed z arena.
+                let mut z_arena: Vec<u32> =
+                    f.z0.iter().flat_map(|zd| zd.iter().copied()).collect();
+                let mut m = f.m0.clone();
+                let mut scratch: Vec<ShardScratch> =
+                    (0..pool.slots()).map(|_| ShardScratch::new(8)).collect();
+                sweep.run_streamed(
+                    &packed,
+                    &ArenaZ::new(&mut z_arena, packed.doc_offsets()),
+                    &mut m,
+                    &blocks,
+                    &pool,
+                    &mut scratch,
+                    schedule,
+                );
+                let n = TopicWordRows::merge_from_iter(
+                    8,
+                    scratch.iter_mut().map(|s| &mut s.out.n_acc),
+                );
+                let z: Vec<Vec<u32>> = packed
+                    .doc_offsets()
+                    .windows(2)
+                    .map(|w| z_arena[w[0] as usize..w[1] as usize].to_vec())
+                    .collect();
+                check(&z, &m, &n, &format!("arena {tag}"));
+            }
+        }
+
+        // Fully out of core: tokens and z both file-backed.
+        let dir = std::env::temp_dir().join("hdp_zstep_ooc_test");
+        let cpath = dir.join("corpus.hdpp");
+        crate::corpus::io::write_packed(&packed, &cpath).unwrap();
+        let cfile = PackedCorpusFile::open(&cpath).unwrap();
+        let zfile = FileZ::from_nested(&dir.join("z.bin"), &f.z0).unwrap();
+        let blocks = plan.refine(4);
+        let mut m = f.m0.clone();
+        let mut scratch: Vec<ShardScratch> =
+            (0..pool.slots()).map(|_| ShardScratch::new(8)).collect();
+        sweep.run_streamed(
+            &cfile,
+            &zfile,
+            &mut m,
+            &blocks,
+            &pool,
+            &mut scratch,
+            Schedule::Steal,
+        );
+        let n = TopicWordRows::merge_from_iter(
+            8,
+            scratch.iter_mut().map(|s| &mut s.out.n_acc),
+        );
+        let z = zfile.to_nested().unwrap();
+        check(&z, &m, &n, "out-of-core");
+        // Residency: per-slot hot state is bounded by the largest
+        // block, not the corpus (×2 slack for allocator rounding).
+        let weights = f.corpus.doc_weights();
+        let max_block: u64 = blocks
+            .shards()
+            .iter()
+            .map(|b| weights[b.start..b.end].iter().sum())
+            .max()
+            .unwrap();
+        let bound = 2 * 2 * 4 * max_block as usize; // z + tok buffers
+        for (i, s) in scratch.iter().enumerate() {
+            assert!(
+                s.stream_buf_bytes() <= bound,
+                "slot {i} holds {} bytes (> {bound})",
+                s.stream_buf_bytes()
+            );
+        }
+        assert_eq!(d, z.len());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn resident_sweep_ignores_block_buffers() {
+        // The resident path must never touch the streamed block
+        // buffers: their capacity stays zero.
+        let f = frozen_state(32);
+        let root = Pcg64::new(5);
+        let tables = WordTables::build(&f.phi, &f.psi, 0.5, 1usize);
+        let sweep = frozen_sweep(&f, &tables, &root);
+        let plan = Sharding::even(f.corpus.num_docs(), 3);
+        let pool = crate::par::WorkerPool::new(2);
+        let mut scratch: Vec<ShardScratch> =
+            (0..pool.slots()).map(|_| ShardScratch::new(8)).collect();
+        let (mut z, mut m) = (f.z0.clone(), f.m0.clone());
+        sweep.run_with_scratch(&f.corpus, &mut z, &mut m, &plan, &pool, &mut scratch);
+        for s in &scratch {
+            assert_eq!(s.stream_buf_bytes(), 0);
+        }
+    }
+
+    #[test]
+    fn plan_pair_hint_tracks_the_plan_not_the_corpus() {
+        // Even plan over 1000 docs of weight 10: stripe of 4 slots is
+        // a quarter of the corpus, so the hint must be ~N/4 + headroom,
+        // far below whole-corpus totals.
+        let weights = vec![10u64; 1000];
+        let plan = Sharding::even(1000, 8);
+        let hint = plan_pair_hint(&plan, &weights, 4);
+        assert!(hint >= 2500, "hint {hint} below the stripe bound");
+        assert!(hint < 5000, "hint {hint} should not approach corpus totals");
+        // A block-refined plan keeps the same stripe mass, so the hint
+        // stays plan-scale after refinement.
+        let refined = plan.refine(7);
+        let hint_refined = plan_pair_hint(&refined, &weights, 4);
+        assert!(hint_refined < 5000, "refined hint {hint_refined} over-allocates");
+        // Single slot sees everything.
+        assert!(plan_pair_hint(&plan, &weights, 1) >= 10_000);
+        // Cap holds.
+        let huge = vec![u32::MAX as u64; 8];
+        assert_eq!(plan_pair_hint(&Sharding::even(8, 1), &huge, 1), 1 << 22);
     }
 
     #[test]

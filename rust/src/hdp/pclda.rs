@@ -11,7 +11,7 @@
 //! [`super::pc`], which is exactly the paper's point: conditional on
 //! `Ψ`, the HDP's z step *is* the LDA z step.
 
-use crate::corpus::Corpus;
+use crate::corpus::{Corpus, PackedCorpus};
 use crate::diagnostics::loglik;
 use crate::metrics::PhaseTimers;
 use crate::par::{Schedule, Sharding, WorkerPool};
@@ -26,6 +26,8 @@ use super::{DiagSnapshot, Trainer};
 /// The fixed-K Pólya urn LDA sampler.
 pub struct PcLdaSampler {
     corpus: Arc<Corpus>,
+    /// Packed CSR twin of `corpus` (the arena the z sweeps read).
+    packed: Arc<PackedCorpus>,
     /// Number of topics K.
     k: usize,
     alpha: f64,
@@ -50,6 +52,10 @@ pub struct PcLdaSampler {
     merge_scratch: MergeScratch,
     pipelined: bool,
     slot_affine: bool,
+    /// Streamed z: max documents per block (None = resident sweep).
+    stream_block_docs: Option<usize>,
+    /// Block plan derived from `doc_plan.refine(stream_block_docs)`.
+    block_plan: Option<Sharding>,
     /// Double-buffer slot for the in-flight Φ job.
     phi_pipe: phi::PhiPipeline,
 }
@@ -75,15 +81,18 @@ impl PcLdaSampler {
             }
         }
         let n = Arc::new(TopicWordRows::merge_from(k, &mut [acc]));
-        let doc_plan = Sharding::weighted(&corpus.doc_weights(), threads);
+        let weights = corpus.doc_weights();
+        let doc_plan = Sharding::weighted(&weights, threads);
         let pool = Arc::new(WorkerPool::new(threads));
-        let per_slot = corpus.num_tokens() as usize / pool.slots();
-        let pair_hint = (per_slot + per_slot / 4 + 32).min(1 << 22);
+        let packed = Arc::new(corpus.to_packed());
+        // Plan-derived accumulator pre-size (see `zstep::plan_pair_hint`).
+        let pair_hint = zstep::plan_pair_hint(&doc_plan, &weights, pool.slots());
         let scratch = (0..pool.slots())
             .map(|_| zstep::ShardScratch::with_pair_hint(k, pair_hint))
             .collect();
         Ok(Self {
             corpus,
+            packed,
             k,
             alpha,
             beta,
@@ -102,6 +111,8 @@ impl PcLdaSampler {
             merge_scratch: MergeScratch::new(),
             pipelined: true,
             slot_affine: false,
+            stream_block_docs: None,
+            block_plan: None,
             phi_pipe: phi::PhiPipeline::new(0x1f1),
         })
     }
@@ -133,6 +144,26 @@ impl PcLdaSampler {
     /// Enable/disable slot-affine z scheduling (default off).
     pub fn set_slot_affine(&mut self, slot_affine: bool) {
         self.slot_affine = slot_affine;
+    }
+
+    /// Enable/disable the streamed z sweep (blocks of at most
+    /// `block_docs` documents through per-slot buffers; `None` =
+    /// resident). Chains are bit-identical under every setting — see
+    /// [`super::pc::PcSampler::set_streaming`].
+    pub fn set_streaming(&mut self, block_docs: Option<usize>) {
+        self.stream_block_docs = block_docs.map(|b| b.max(1));
+        self.block_plan = self.stream_block_docs.map(|b| self.doc_plan.refine(b));
+        let plan = self.block_plan.as_ref().unwrap_or(&self.doc_plan);
+        let weights = self.corpus.doc_weights();
+        let pair_hint = zstep::plan_pair_hint(plan, &weights, self.pool.slots());
+        self.scratch = (0..self.pool.slots())
+            .map(|_| zstep::ShardScratch::with_pair_hint(self.k, pair_hint))
+            .collect();
+    }
+
+    /// Streamed-mode block size (documents), if streaming is enabled.
+    pub fn streaming(&self) -> Option<usize> {
+        self.stream_block_docs
     }
 }
 
@@ -182,15 +213,26 @@ impl Trainer for PcLdaSampler {
         let schedule =
             if self.slot_affine { Schedule::SlotAffine } else { Schedule::Steal };
         let t0 = Instant::now();
-        sweep.run_with_scratch_sched(
-            &self.corpus.docs,
-            &mut self.assign.z,
-            &mut self.assign.m,
-            &self.doc_plan,
-            &*self.pool,
-            &mut self.scratch,
-            schedule,
-        );
+        match &self.block_plan {
+            Some(blocks) => sweep.run_streamed(
+                &*self.packed,
+                &zstep::NestedZ::new(&mut self.assign.z),
+                &mut self.assign.m,
+                blocks,
+                &*self.pool,
+                &mut self.scratch,
+                schedule,
+            ),
+            None => sweep.run_with_scratch_sched(
+                &*self.packed,
+                &mut self.assign.z,
+                &mut self.assign.m,
+                &self.doc_plan,
+                &*self.pool,
+                &mut self.scratch,
+                schedule,
+            ),
+        }
         self.timers.add("z", t0.elapsed());
         let t0 = Instant::now();
         self.n = Arc::new(TopicWordRows::merge_par(
@@ -318,6 +360,23 @@ mod tests {
             assert_eq!(pip.assignments(), seq.assignments(), "iter={it}");
             let (ds, dp) = (seq.diagnostics(), pip.diagnostics());
             assert_eq!(dp.log_likelihood.to_bits(), ds.log_likelihood.to_bits());
+        }
+    }
+
+    #[test]
+    fn streamed_matches_resident() {
+        // The LDA sampler shares the streamed z machinery: 2-doc
+        // blocks, pipelined, must stay bit-identical to the resident
+        // sweep.
+        let corpus = tiny();
+        let mut res = PcLdaSampler::new(corpus.clone(), 8, 0.1, 0.05, 2, 13).unwrap();
+        let mut str8 = PcLdaSampler::new(corpus, 8, 0.1, 0.05, 2, 13).unwrap();
+        str8.set_streaming(Some(2));
+        assert_eq!(str8.streaming(), Some(2));
+        for it in 0..4 {
+            res.step().unwrap();
+            str8.step().unwrap();
+            assert_eq!(str8.assignments(), res.assignments(), "iter={it}");
         }
     }
 }

@@ -110,6 +110,44 @@ impl Sharding {
         Self { shards }
     }
 
+    /// Refine every shard into contiguous blocks of at most
+    /// `max_items` items. Block boundaries nest inside the original
+    /// shard boundaries, so the refined plan covers exactly the same
+    /// index space in the same order — any consumer whose per-item work
+    /// is keyed by item id (like the z sweep's per-document RNG
+    /// streams) computes a bit-identical result on the refined plan.
+    /// This is how the streamed z phase derives its block plan from the
+    /// document shard plan.
+    pub fn refine(&self, max_items: usize) -> Sharding {
+        let max_items = max_items.max(1);
+        let mut blocks = Vec::new();
+        for s in &self.shards {
+            let mut start = s.start;
+            while start < s.end {
+                let end = start.saturating_add(max_items).min(s.end);
+                blocks.push(Shard { start, end });
+                start = end;
+            }
+        }
+        Sharding { shards: blocks }
+    }
+
+    /// Largest total weight any executor slot receives when shard `i`
+    /// runs on slot `i % slots` — the [`Schedule::SlotAffine`] stripe
+    /// bound, and the expected per-slot share under balanced stealing.
+    /// Used to pre-size per-slot sweep accumulators from the plan
+    /// actually in effect instead of whole-corpus totals (which
+    /// over-allocate streamed sweeps whose plans are block-refined).
+    pub fn max_stripe_weight(&self, weights: &[u64], slots: usize) -> u64 {
+        let slots = slots.max(1);
+        let mut per = vec![0u64; slots];
+        for (i, s) in self.shards.iter().enumerate() {
+            let w: u64 = weights[s.start..s.end].iter().sum();
+            per[i % slots] += w;
+        }
+        per.into_iter().max().unwrap_or(0)
+    }
+
     /// The shards.
     pub fn shards(&self) -> &[Shard] {
         &self.shards
@@ -272,6 +310,54 @@ mod tests {
                 .collect();
             assert_weighted_plan_valid(&w, parts);
         }
+    }
+
+    #[test]
+    fn refine_nests_inside_shards_and_covers() {
+        for n in [0usize, 1, 9, 100] {
+            for parts in [1usize, 3, 7] {
+                for max_items in [1usize, 2, 5, 1000, usize::MAX] {
+                    let plan = Sharding::even(n, parts);
+                    let blocks = plan.refine(max_items);
+                    // Coverage: contiguous from 0..n, in order.
+                    let mut next = 0usize;
+                    for b in blocks.shards() {
+                        assert_eq!(b.start, next);
+                        assert!(!b.is_empty());
+                        assert!(b.len() <= max_items);
+                        next = b.end;
+                    }
+                    assert_eq!(next, n);
+                    // Nesting: every block lies inside exactly one shard.
+                    for b in blocks.shards() {
+                        assert!(
+                            plan.shards()
+                                .iter()
+                                .any(|s| s.start <= b.start && b.end <= s.end),
+                            "block {b:?} crosses a shard boundary"
+                        );
+                    }
+                }
+            }
+        }
+        // max_items = 0 is clamped to 1-doc blocks, not a panic.
+        let plan = Sharding::even(5, 2);
+        assert_eq!(plan.refine(0).len(), 5);
+    }
+
+    #[test]
+    fn max_stripe_weight_matches_manual_striping() {
+        let weights: Vec<u64> = vec![5, 1, 1, 1, 10, 1, 1, 1, 1, 1];
+        let plan = Sharding::even(10, 5); // shards of 2 docs each
+        // shard weights: [6, 2, 11, 2, 2]; stripes over 2 slots:
+        // slot0 = 6 + 11 + 2 = 19, slot1 = 2 + 2 = 4.
+        assert_eq!(plan.max_stripe_weight(&weights, 2), 19);
+        // One slot gets everything.
+        assert_eq!(plan.max_stripe_weight(&weights, 1), 23);
+        // More slots than shards: max single shard weight.
+        assert_eq!(plan.max_stripe_weight(&weights, 16), 11);
+        // Empty plan.
+        assert_eq!(Sharding::even(0, 4).max_stripe_weight(&[], 4), 0);
     }
 
     #[test]

@@ -13,7 +13,9 @@
 use hdp_sparse::alias::{AliasTable, SparseAlias};
 use hdp_sparse::config::HdpConfig;
 use hdp_sparse::corpus::synthetic::HdpCorpusSpec;
+use hdp_sparse::corpus::Corpus;
 use hdp_sparse::hdp::{exact::ExactSampler, pc::PcSampler, Trainer};
+use hdp_sparse::par::Sharding;
 use hdp_sparse::rng::Pcg64;
 use std::sync::Arc;
 
@@ -73,6 +75,124 @@ fn pc_and_exact_agree_across_seeds() {
         (tp - te).abs() < 8.0,
         "stationary active-topic count: pc {tp:.1} vs exact {te:.1}"
     );
+}
+
+/// Streamed-vs-resident axis of the invariance matrix: streaming the z
+/// phase through document blocks (out-of-core machinery: block plan,
+/// per-slot hot z buffers, load/store round trips) must leave the
+/// chain — z, l, and Ψ — bit-identical to the resident reference for
+/// every block size {1 doc, uneven, whole corpus} × thread count
+/// {1, 2, 7} × pipelining {off, on}, and must never materialize more
+/// than the blocks-in-flight bound of hot z.
+#[test]
+fn streamed_and_resident_chains_are_bit_identical() {
+    let (c, _) = HdpCorpusSpec {
+        vocab: 180,
+        topics: 5,
+        gamma: 2.0,
+        alpha: 1.2,
+        topic_beta: 0.05,
+        docs: 58,
+        mean_doc_len: 26.0,
+        len_sigma: 0.4,
+        min_doc_len: 6,
+    }
+    .generate(4040);
+    let c = Arc::new(c);
+    let cfg = HdpConfig { alpha: 0.5, beta: 0.05, gamma: 1.0, k_max: 24, init_topics: 1 };
+    let steps = 4usize;
+
+    #[derive(Clone, Copy, Debug)]
+    enum Blocks {
+        Resident,
+        /// Refine the (weighted → uneven) doc plan to ≤ this many docs.
+        Stream(usize),
+    }
+
+    let run = |threads: usize, pipelined: bool, blocks: Blocks| {
+        let mut s = PcSampler::new(c.clone(), cfg, threads, 616).unwrap();
+        s.set_pipelined(pipelined);
+        // A token-weighted plan gives uneven shards, hence uneven
+        // blocks after refinement.
+        s.set_doc_plan(Sharding::weighted(&c.doc_weights(), threads));
+        if let Blocks::Stream(b) = blocks {
+            s.set_streaming(Some(b));
+        }
+        for _ in 0..steps {
+            s.step().unwrap();
+        }
+        let hot = s.stream_buf_bytes();
+        if let Blocks::Stream(_) = blocks {
+            // Residency: hot z is bounded by slots × the largest block
+            // (×2 for z+token buffers, ×2 allocator slack), and the
+            // resident corpus arena is never duplicated into buffers.
+            let weights = c.doc_weights();
+            let max_block: u64 = s
+                .stream_block_plan()
+                .unwrap()
+                .shards()
+                .iter()
+                .map(|b| weights[b.start..b.end].iter().sum())
+                .max()
+                .unwrap();
+            let bound = threads * 2 * 2 * 4 * max_block as usize;
+            assert!(
+                hot <= bound,
+                "threads={threads} blocks={blocks:?}: hot z {hot} B > bound {bound} B"
+            );
+        } else {
+            assert_eq!(hot, 0, "resident sweep must not touch block buffers");
+        }
+        (s.assignments().to_vec(), s.l().to_vec(), s.psi().to_vec())
+    };
+
+    let (z_ref, l_ref, psi_ref) = run(1, false, Blocks::Resident);
+    for &threads in &[1usize, 2, 7] {
+        for &pipelined in &[false, true] {
+            for &blocks in &[
+                Blocks::Resident,
+                Blocks::Stream(1),       // one document per block
+                Blocks::Stream(5),       // uneven blocks (weighted plan tails)
+                Blocks::Stream(usize::MAX), // whole-corpus blocks (= shards)
+            ] {
+                let (z, l, psi) = run(threads, pipelined, blocks);
+                let tag = format!("threads={threads} pipelined={pipelined} blocks={blocks:?}");
+                assert_eq!(z, z_ref, "z diverged: {tag}");
+                assert_eq!(l, l_ref, "l diverged: {tag}");
+                assert_eq!(psi, psi_ref, "psi diverged: {tag}");
+            }
+        }
+    }
+}
+
+/// The streamed path serves PubMed-scale ingest from the packed
+/// on-disk format; the chain must survive a full out-of-core round
+/// trip of the *corpus* too (write → reopen → sweep from file blocks),
+/// not just in-RAM block streaming. Sampler-level coverage of the
+/// file-backed z store lives in `zstep`'s unit tests.
+#[test]
+fn packed_corpus_file_roundtrip_preserves_docs() {
+    let (c, _) = HdpCorpusSpec {
+        vocab: 150,
+        topics: 4,
+        gamma: 1.5,
+        alpha: 1.0,
+        topic_beta: 0.05,
+        docs: 30,
+        mean_doc_len: 20.0,
+        len_sigma: 0.3,
+        min_doc_len: 5,
+    }
+    .generate(777);
+    let packed = c.to_packed();
+    let dir = std::env::temp_dir().join("hdp_statistical_packed");
+    let path = dir.join("c.hdpp");
+    hdp_sparse::corpus::io::write_packed(&packed, &path).unwrap();
+    let reread = hdp_sparse::corpus::io::read_packed(&path).unwrap();
+    let nested: Corpus = reread.to_nested();
+    assert_eq!(nested.docs, c.docs);
+    assert_eq!(nested.vocab, c.vocab);
+    std::fs::remove_dir_all(&dir).ok();
 }
 
 /// χ² of `draws` samples from `table` against `weights`; returns
