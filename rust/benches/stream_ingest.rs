@@ -11,7 +11,11 @@
 //! * `streamed_nested_b*` — block-streamed sweep (per-slot z block
 //!   buffers) over the resident nested assignments, two block sizes;
 //! * `ooc_file_b*` — tokens *and* z served from disk
-//!   ([`PackedCorpusFile`] + [`FileZ`]), the true out-of-core shape.
+//!   ([`PackedCorpusFile`] + [`FileZ`]), the true out-of-core shape;
+//! * `*_pf` — the same sweeps with the double-buffered block
+//!   prefetcher on (next block's I/O submitted as a front-queued async
+//!   pool job while the current block sweeps), the inline-vs-prefetch
+//!   comparison; per-sweep hit/stall counts are printed alongside.
 //!
 //! Peak hot-z bytes per case come from the per-slot block buffers
 //! ([`ShardScratch::stream_buf_bytes`]); steady-state allocation
@@ -50,7 +54,7 @@ fn main() {
     let packed = corpus.to_packed();
     let tokens = packed.num_tokens() as f64;
     let plan = Sharding::weighted(&corpus.doc_weights(), THREADS);
-    let pool = WorkerPool::new(THREADS);
+    let pool = std::sync::Arc::new(WorkerPool::new(THREADS));
     let root = Pcg64::new(41);
     let psi: Vec<f64> = vec![1.0 / K_MAX as f64; K_MAX];
 
@@ -71,8 +75,8 @@ fn main() {
         }
     }
     let n = TopicWordRows::merge_from(K_MAX, &mut [acc]);
-    let phi = sample_phi(&root, &n, BETA, corpus.vocab_size(), &pool);
-    let tables = WordTables::build(&phi, &psi, ALPHA, &pool);
+    let phi = sample_phi(&root, &n, BETA, corpus.vocab_size(), &*pool);
+    let tables = WordTables::build(&phi, &psi, ALPHA, &*pool);
 
     let iter = std::cell::Cell::new(0u64);
     let sweep_iter = || {
@@ -103,12 +107,18 @@ fn main() {
             &mut z,
             &mut m,
             &plan,
-            &pool,
+            &*pool,
             &mut scratch,
             Schedule::Steal,
         );
     });
     println!("    resident hot-z buffer bytes: {}", peak_bytes(&scratch));
+
+    let hit_stall = |scratch: &[ShardScratch]| {
+        let h: u64 = scratch.iter().map(|s| s.out.prefetch_hits).sum();
+        let st: u64 = scratch.iter().map(|s| s.out.prefetch_stalls).sum();
+        (h, st)
+    };
 
     // --- streamed over resident storage -----------------------------
     for block_docs in [16usize, 256] {
@@ -122,7 +132,7 @@ fn main() {
                 &NestedZ::new(&mut z),
                 &mut m,
                 &blocks,
-                &pool,
+                &*pool,
                 &mut scratch,
                 Schedule::Steal,
             );
@@ -132,6 +142,26 @@ fn main() {
             peak_bytes(&scratch),
             blocks.len(),
             100.0 * peak_bytes(&scratch) as f64 / (4.0 * tokens),
+        );
+
+        // Prefetched twin: double-buffered async block loads.
+        let (mut z, mut m) = (z0.clone(), m0.clone());
+        let mut scratch = fresh_scratch();
+        bench.run(&format!("streamed_nested_b{block_docs}_pf"), Some(tokens), || {
+            let sweep = sweep_iter();
+            sweep.run_streamed_prefetched(
+                &packed,
+                &NestedZ::new(&mut z),
+                &mut m,
+                &blocks,
+                &pool,
+                &mut scratch,
+            );
+        });
+        let (h, st) = hit_stall(&scratch);
+        println!(
+            "    streamed b{block_docs}_pf hot bytes: {} (last sweep: {h} hits / {st} stalls)",
+            peak_bytes(&scratch),
         );
     }
 
@@ -153,7 +183,7 @@ fn main() {
                 &zfile,
                 &mut m,
                 &blocks,
-                &pool,
+                &*pool,
                 &mut scratch,
                 Schedule::Steal,
             );
@@ -162,6 +192,23 @@ fn main() {
             "    ooc b{block_docs} hot bytes (z + tokens): {} ({:.2}% of arena+z)",
             peak_bytes(&scratch),
             100.0 * peak_bytes(&scratch) as f64 / (8.0 * tokens),
+        );
+
+        // Prefetched twin: where the overlap actually pays — both the
+        // token and z loads of block t+1 run while block t sweeps.
+        let zfile = FileZ::from_nested(&dir.join(format!("z_b{block_docs}_pf.bin")), &z0)
+            .expect("z file");
+        let mut m = m0.clone();
+        let mut scratch = fresh_scratch();
+        bench.run(&format!("ooc_file_b{block_docs}_pf"), Some(tokens), || {
+            let sweep = sweep_iter();
+            sweep.run_streamed_prefetched(&cfile, &zfile, &mut m, &blocks, &pool, &mut scratch);
+        });
+        zfile.sync().expect("z file sync");
+        let (h, st) = hit_stall(&scratch);
+        println!(
+            "    ooc b{block_docs}_pf hot bytes: {} (last sweep: {h} hits / {st} stalls)",
+            peak_bytes(&scratch),
         );
     }
 
@@ -185,6 +232,21 @@ fn main() {
         ooc * 1e3,
         100.0 * (ooc - res) / res,
     );
+    // Inline vs prefetched, per block size.
+    for (inline, pf) in [
+        ("streamed_nested_b16", "streamed_nested_b16_pf"),
+        ("streamed_nested_b256", "streamed_nested_b256_pf"),
+        ("ooc_file_b64", "ooc_file_b64_pf"),
+        ("ooc_file_b512", "ooc_file_b512_pf"),
+    ] {
+        let (a, b) = (median(inline), median(pf));
+        println!(
+            "prefetch: {inline} {:.3} ms -> {pf} {:.3} ms ({:+.1}%)",
+            a * 1e3,
+            b * 1e3,
+            100.0 * (b - a) / a,
+        );
+    }
 
     bench
         .write_csv(std::path::Path::new("results/bench_stream_ingest.csv"))

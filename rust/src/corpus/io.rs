@@ -38,17 +38,48 @@
 //! magic, unsupported versions, or inconsistent offsets; all claimed
 //! section sizes are checked against the file length *before* any
 //! allocation.
+//!
+//! ## Positioned-I/O contract
+//!
+//! All three sections are written once and never mutated in place, and
+//! the token bytes of documents `[d0, d1)` are the contiguous range
+//!
+//! ```text
+//! [40 + (D+1)·8 + doc_offsets[d0]·4,  40 + (D+1)·8 + doc_offsets[d1]·4)
+//! ```
+//!
+//! Because `doc_offsets` is monotone, **disjoint document blocks map to
+//! disjoint byte ranges**: readers may issue concurrent positioned
+//! reads (`pread`) against one shared descriptor with no locking and no
+//! shared cursor. [`PackedCorpusFile::read_block`] does exactly that on
+//! unix (a `Seek`-based mutex fallback covers other platforms), which
+//! is what lets every streamed-sweep slot — and the block prefetcher's
+//! async loads — serve blocks from a single open file in parallel. The
+//! file-backed z arena ([`crate::hdp::pc::zstep::FileZ`]) stores raw
+//! little-endian u32s at `doc_offsets[d]·4` with no header and honors
+//! the same contract for both reads and writes.
 
 use super::{Corpus, PackedCorpus};
-use std::io::{BufRead, BufWriter, Read, Seek, SeekFrom, Write};
+use std::io::{BufRead, BufWriter, Read, Write};
 use std::path::Path;
+#[cfg(not(unix))]
 use std::sync::Mutex;
+
+/// Cap on the total expanded token count accepted from a UCI stream:
+/// each token occupies 4 resident bytes, so 2³² tokens ≈ 16 GiB of
+/// arena — beyond anything this in-memory loader should expand (the
+/// paper's PubMed is 768M tokens) and low enough to reject a corrupt
+/// count field *before* `repeat(..).take(c)` tries to materialize it.
+const MAX_UCI_TOKENS: u64 = 1 << 32;
 
 /// Read UCI bag-of-words (`docword` stream + `vocab` stream).
 ///
 /// Expansion note: counts are expanded into individual tokens, grouped
 /// by document, preserving word-id order within a document — the
-/// sampler is exchangeable so any stable order is fine.
+/// sampler is exchangeable so any stable order is fine. Triples must
+/// carry a positive count (`c == 0` would silently skew the `NNZ`
+/// accounting) and the running token total is validated against
+/// [`MAX_UCI_TOKENS`] before any expansion.
 pub fn read_uci(docword: impl Read, vocab: impl Read) -> anyhow::Result<Corpus> {
     let mut lines = std::io::BufReader::new(docword).lines();
     let mut header = |name: &str| -> anyhow::Result<usize> {
@@ -62,6 +93,7 @@ pub fn read_uci(docword: impl Read, vocab: impl Read) -> anyhow::Result<Corpus> 
     let nnz = header("NNZ")?;
     let mut docs: Vec<Vec<u32>> = vec![Vec::new(); d];
     let mut seen = 0usize;
+    let mut total_tokens = 0u64;
     for line in lines {
         let line = line?;
         let t = line.trim();
@@ -77,6 +109,15 @@ pub fn read_uci(docword: impl Read, vocab: impl Read) -> anyhow::Result<Corpus> 
         let c: usize = cs.parse()?;
         anyhow::ensure!(di >= 1 && di <= d, "doc id {di} out of range 1..={d}");
         anyhow::ensure!(wi >= 1 && wi <= v, "word id {wi} out of range 1..={v}");
+        anyhow::ensure!(c >= 1, "zero-count triple: `{t}`");
+        // checked_add: a count near 2^64 must hit this Err, not wrap
+        // past the bound (release) or panic (debug).
+        total_tokens = match total_tokens.checked_add(c as u64) {
+            Some(tot) if tot <= MAX_UCI_TOKENS => tot,
+            _ => anyhow::bail!(
+                "token total exceeds the {MAX_UCI_TOKENS} sanity bound at `{t}`"
+            ),
+        };
         let doc = &mut docs[di - 1];
         doc.extend(std::iter::repeat((wi - 1) as u32).take(c));
         seen += 1;
@@ -346,6 +387,126 @@ pub fn read_packed(path: &Path) -> anyhow::Result<PackedCorpus> {
     Ok(corpus)
 }
 
+/// Positioned block I/O over an open file.
+///
+/// On unix every call is a single lock-free `pread`/`pwrite`
+/// ([`std::os::unix::fs::FileExt`]): concurrent callers serving
+/// **disjoint** byte ranges never touch a shared cursor or a lock,
+/// which is what lets every streamed-sweep slot (and the prefetcher's
+/// async loads) hit one descriptor in parallel. Elsewhere a
+/// `Seek`-based fallback serializes on an internal mutex with the same
+/// semantics. Callers guarantee range disjointness (the positioned-I/O
+/// contract in the module docs); overlapping concurrent writes would
+/// race at the OS level exactly as they would with `pwrite`.
+pub(crate) struct PositionedFile {
+    #[cfg(unix)]
+    file: std::fs::File,
+    #[cfg(not(unix))]
+    file: Mutex<std::fs::File>,
+}
+
+impl PositionedFile {
+    /// Wrap an open file for positioned access (the current cursor
+    /// position is irrelevant from here on).
+    pub(crate) fn new(file: std::fs::File) -> Self {
+        #[cfg(not(unix))]
+        let file = Mutex::new(file);
+        Self { file }
+    }
+
+    /// Read exactly `n` little-endian u32s at byte `offset` into `out`
+    /// (cleared first), as one positioned read.
+    pub(crate) fn read_u32s_at(
+        &self,
+        offset: u64,
+        n: usize,
+        out: &mut Vec<u32>,
+    ) -> std::io::Result<()> {
+        out.clear();
+        out.resize(n, 0);
+        // SAFETY: `out` is an initialized, uniquely borrowed u32
+        // buffer; u8 has no alignment requirement, and the
+        // little-endian fixup below restores the value contract.
+        let bytes =
+            unsafe { std::slice::from_raw_parts_mut(out.as_mut_ptr().cast::<u8>(), n * 4) };
+        self.read_exact_at(bytes, offset)?;
+        if cfg!(target_endian = "big") {
+            for x in out.iter_mut() {
+                *x = u32::from_le(*x);
+            }
+        }
+        Ok(())
+    }
+
+    /// Write `xs` as little-endian bytes at byte `offset`.
+    pub(crate) fn write_u32s_at(&self, offset: u64, xs: &[u32]) -> std::io::Result<()> {
+        if cfg!(target_endian = "little") {
+            // In-memory layout == on-disk layout: one positioned
+            // write of the whole block.
+            // SAFETY: plain shared reinterpret of initialized u32s.
+            let bytes =
+                unsafe { std::slice::from_raw_parts(xs.as_ptr().cast::<u8>(), xs.len() * 4) };
+            return self.write_all_at(bytes, offset);
+        }
+        // Big-endian fallback: convert through a stack chunk.
+        let mut bytes = [0u8; 4096];
+        let mut pos = offset;
+        for chunk in xs.chunks(bytes.len() / 4) {
+            for (i, &x) in chunk.iter().enumerate() {
+                bytes[i * 4..i * 4 + 4].copy_from_slice(&x.to_le_bytes());
+            }
+            self.write_all_at(&bytes[..chunk.len() * 4], pos)?;
+            pos += chunk.len() as u64 * 4;
+        }
+        Ok(())
+    }
+
+    /// One positioned exact read at `offset` (lock-free `pread`).
+    #[cfg(unix)]
+    fn read_exact_at(&self, bytes: &mut [u8], offset: u64) -> std::io::Result<()> {
+        use std::os::unix::fs::FileExt;
+        self.file.read_exact_at(bytes, offset)
+    }
+
+    /// One positioned exact read at `offset` (seek + read under the
+    /// fallback mutex).
+    #[cfg(not(unix))]
+    fn read_exact_at(&self, bytes: &mut [u8], offset: u64) -> std::io::Result<()> {
+        let mut f = self.file.lock().unwrap();
+        std::io::Seek::seek(&mut *f, std::io::SeekFrom::Start(offset))?;
+        std::io::Read::read_exact(&mut *f, bytes)
+    }
+
+    /// One positioned `write_all` at `offset` (lock-free `pwrite`).
+    #[cfg(unix)]
+    fn write_all_at(&self, bytes: &[u8], offset: u64) -> std::io::Result<()> {
+        use std::os::unix::fs::FileExt;
+        self.file.write_all_at(bytes, offset)
+    }
+
+    /// One positioned `write_all` at `offset` (seek + write under the
+    /// fallback mutex).
+    #[cfg(not(unix))]
+    fn write_all_at(&self, bytes: &[u8], offset: u64) -> std::io::Result<()> {
+        let mut f = self.file.lock().unwrap();
+        std::io::Seek::seek(&mut *f, std::io::SeekFrom::Start(offset))?;
+        std::io::Write::write_all(&mut *f, bytes)
+    }
+
+    /// `fdatasync` the file — the durability point for stores whose
+    /// block writes only hand data to the page cache.
+    #[cfg(unix)]
+    pub(crate) fn sync_data(&self) -> std::io::Result<()> {
+        self.file.sync_data()
+    }
+
+    /// `fdatasync` the file (fallback-mutex form).
+    #[cfg(not(unix))]
+    pub(crate) fn sync_data(&self) -> std::io::Result<()> {
+        self.file.lock().unwrap().sync_data()
+    }
+}
+
 /// An opened packed corpus served **out of core**: only the header and
 /// `doc_offsets` are resident (8 bytes per document); token blocks are
 /// read on demand with [`PackedCorpusFile::read_block`]. This is the
@@ -353,11 +514,13 @@ pub fn read_packed(path: &Path) -> anyhow::Result<PackedCorpus> {
 /// RAM (PubMed scale: 768M tokens ≈ 3 GB of arena vs 64 MB of
 /// offsets).
 ///
-/// Reads are serialized through an internal lock — the streamed sweep
-/// overlaps one slot's I/O with the other slots' compute, which is the
-/// intended pattern.
+/// Block reads are **positioned** ([`PositionedFile`]): on unix,
+/// concurrent slots serving disjoint blocks issue lock-free `pread`s
+/// against the shared descriptor, so disk latency lands only on the
+/// requesting slot while the others compute (and the streamed sweep's
+/// prefetcher can load the next block from another thread).
 pub struct PackedCorpusFile {
-    file: Mutex<std::fs::File>,
+    file: PositionedFile,
     doc_offsets: Vec<u64>,
     vocab_entries: u64,
 }
@@ -379,7 +542,7 @@ impl PackedCorpusFile {
             path.display()
         );
         Ok(Self {
-            file: Mutex::new(f.into_inner()),
+            file: PositionedFile::new(f.into_inner()),
             doc_offsets,
             vocab_entries: v,
         })
@@ -407,7 +570,9 @@ impl PackedCorpusFile {
     }
 
     /// Read the token block of documents `[start_doc, end_doc)` into
-    /// `buf` (cleared first). One seek + one contiguous read.
+    /// `buf` (cleared first). One positioned read; safe to call from
+    /// any number of threads concurrently (disjoint or not — reads
+    /// never conflict).
     pub fn read_block(
         &self,
         start_doc: usize,
@@ -420,11 +585,8 @@ impl PackedCorpusFile {
         );
         let t0 = self.doc_offsets[start_doc];
         let t1 = self.doc_offsets[end_doc];
-        buf.clear();
-        let mut file = self.file.lock().unwrap();
         let byte0 = PACKED_HEADER_BYTES + self.doc_offsets.len() as u64 * 8 + t0 * 4;
-        file.seek(SeekFrom::Start(byte0))?;
-        read_u32s_into(&mut *file, (t1 - t0) as usize, buf)?;
+        self.file.read_u32s_at(byte0, (t1 - t0) as usize, buf)?;
         Ok(())
     }
 }
@@ -484,6 +646,20 @@ mod tests {
         // vocab length mismatch
         let bad = "1\n2\n1\n1 1 1\n";
         assert!(read_uci(bad.as_bytes(), "x\n".as_bytes()).is_err());
+        // zero-count triple (would count toward NNZ but append nothing)
+        let bad = "1\n2\n1\n1 1 0\n";
+        let err = read_uci(bad.as_bytes(), "x\ny\n".as_bytes()).unwrap_err();
+        assert!(err.to_string().contains("zero-count"), "{err}");
+        // absurd count: rejected by the token-total bound BEFORE any
+        // expansion is attempted (this must not try to allocate)
+        let bad = "1\n2\n2\n1 1 1\n1 2 999999999999\n";
+        let err = read_uci(bad.as_bytes(), "x\ny\n".as_bytes()).unwrap_err();
+        assert!(err.to_string().contains("sanity bound"), "{err}");
+        // a count near 2^64 must not wrap the running total past the
+        // bound (release) or panic (debug) — clean Err either way
+        let bad = "1\n2\n2\n1 1 100\n1 2 18446744073709551585\n";
+        let err = read_uci(bad.as_bytes(), "x\ny\n".as_bytes()).unwrap_err();
+        assert!(err.to_string().contains("sanity bound"), "{err}");
     }
 
     #[test]
@@ -611,6 +787,47 @@ mod tests {
             }
         }
         assert!(f.read_block(0, c.num_docs() + 1, &mut buf).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn concurrent_block_reads_match_the_arena() {
+        // The positioned-read path serves many threads from one shared
+        // descriptor with no lock. Hammer disjoint (and overlapping)
+        // blocks from 8 threads and require every read to match the
+        // resident arena — pins the lock-free `pread` contract.
+        let docs: Vec<Vec<u32>> = (0..64u32)
+            .map(|d| (0..(d % 7 + 1)).map(|i| d * 100 + i).collect())
+            .collect();
+        let c = Corpus { docs, vocab: vec![] };
+        let packed = c.to_packed();
+        let dir = std::env::temp_dir().join("hdp_packed_test_conc");
+        let path = dir.join("c.hdpp");
+        write_packed(&packed, &path).unwrap();
+        let f = PackedCorpusFile::open(&path).unwrap();
+        std::thread::scope(|scope| {
+            for t in 0..8usize {
+                let f = &f;
+                let packed = &packed;
+                scope.spawn(move || {
+                    let mut buf = Vec::new();
+                    for round in 0..50 {
+                        // A stride-8 stripe of disjoint 1-doc blocks,
+                        // plus one deliberately overlapping wide read.
+                        for start in (t..packed.num_docs()).step_by(8) {
+                            f.read_block(start, start + 1, &mut buf).unwrap();
+                            assert_eq!(
+                                &buf[..],
+                                &packed.tokens()[packed.token_range(start, start + 1)],
+                                "thread {t} round {round} doc {start}"
+                            );
+                        }
+                        f.read_block(0, packed.num_docs(), &mut buf).unwrap();
+                        assert_eq!(&buf[..], packed.tokens());
+                    }
+                });
+            }
+        });
         std::fs::remove_dir_all(&dir).ok();
     }
 }

@@ -170,6 +170,28 @@ impl Checkpoint {
             self.z.iter().map(|zd| zd.iter().copied().collect()).collect();
         super::state::Assignments { z: self.z.clone(), m }
     }
+
+    /// Snapshot a **file-backed** z store at the checkpoint boundary.
+    /// This is where durability for streamed chains lives:
+    /// [`crate::hdp::pc::zstep::FileZ::store`] only hands blocks to
+    /// the OS page cache, so this syncs the store once
+    /// ([`crate::hdp::pc::zstep::FileZ::sync`], `fdatasync`) before
+    /// reading the assignments back for the snapshot — one sync per
+    /// checkpoint instead of one per block.
+    pub fn from_filez(
+        iteration: u64,
+        sampler: &str,
+        psi: &[f64],
+        z: &crate::hdp::pc::zstep::FileZ,
+    ) -> Result<Self> {
+        z.sync()?;
+        Ok(Self {
+            iteration,
+            sampler: sampler.to_string(),
+            psi: psi.to_vec(),
+            z: z.to_nested()?,
+        })
+    }
 }
 
 fn write_u64(f: &mut impl Write, x: u64) -> std::io::Result<()> {
@@ -308,6 +330,25 @@ mod tests {
         }
         .generate(72);
         assert!(ckpt.validate(&other).is_err());
+    }
+
+    #[test]
+    fn from_filez_syncs_and_roundtrips() {
+        // Checkpointing a streamed chain: the file-backed z store is
+        // synced at the boundary and its contents land in the snapshot
+        // exactly (including the empty doc).
+        use crate::hdp::pc::zstep::FileZ;
+        let z: Vec<Vec<u32>> = vec![vec![0, 1, 1, 2], vec![], vec![2, 0]];
+        let dir = std::env::temp_dir().join("hdp_ckpt_filez_test");
+        let zfile = FileZ::from_nested(&dir.join("z.bin"), &z).unwrap();
+        let ckpt =
+            Checkpoint::from_filez(7, "pc-hdp", &[0.5, 0.25, 0.25], &zfile).unwrap();
+        assert_eq!(ckpt.z, z);
+        assert_eq!(ckpt.iteration, 7);
+        let path = dir.join("model.ckpt");
+        ckpt.save(&path).unwrap();
+        assert_eq!(Checkpoint::load(&path).unwrap(), ckpt);
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

@@ -117,6 +117,9 @@ pub struct PcSampler {
     stream_block_docs: Option<usize>,
     /// Block plan derived from `doc_plan.refine(stream_block_docs)`.
     block_plan: Option<Sharding>,
+    /// Streamed z: double-buffered block prefetch (next block's I/O
+    /// overlaps the current block's sweep).
+    stream_prefetch: bool,
     /// Double-buffer slot for the in-flight Φ job.
     phi_pipe: phi::PhiPipeline,
 }
@@ -202,6 +205,7 @@ impl PcSampler {
             slot_affine: false,
             stream_block_docs: None,
             block_plan: None,
+            stream_prefetch: false,
             phi_pipe: phi::PhiPipeline::new(0x0f1),
         })
     }
@@ -310,6 +314,22 @@ impl PcSampler {
         self.stream_block_docs
     }
 
+    /// The prefetch knob of [`PcSampler::set_streaming`]: when on (and
+    /// streaming is enabled), block `t+1`'s token/z loads run as an
+    /// async front-queued pool job while block `t` sweeps, double
+    /// buffered per slot ([`zstep::ZSweep::run_streamed_prefetched`]).
+    /// Per-sweep hit/stall counts surface through the
+    /// [`PhaseTimers::PREFETCH_HITS`] / [`PhaseTimers::PREFETCH_STALLS`]
+    /// counters. Chains are **bit-identical** with the knob on or off.
+    pub fn set_stream_prefetch(&mut self, prefetch: bool) {
+        self.stream_prefetch = prefetch;
+    }
+
+    /// Whether streamed sweeps prefetch the next block.
+    pub fn stream_prefetch(&self) -> bool {
+        self.stream_prefetch
+    }
+
     /// The active streamed block plan, if streaming is enabled.
     pub fn stream_block_plan(&self) -> Option<&Sharding> {
         self.block_plan.as_ref()
@@ -397,6 +417,17 @@ impl Trainer for PcSampler {
             if self.slot_affine { Schedule::SlotAffine } else { Schedule::Steal };
         let t0 = Instant::now();
         match &self.block_plan {
+            // Streamed + prefetched: block t+1's I/O cooks on the pool
+            // while block t sweeps. Bit-identical to every other form
+            // (per-document RNG streams).
+            Some(blocks) if self.stream_prefetch => sweep.run_streamed_prefetched(
+                &*self.packed,
+                &zstep::NestedZ::new(&mut self.assign.z),
+                &mut self.assign.m,
+                blocks,
+                &self.pool,
+                &mut self.scratch,
+            ),
             // Streamed: block-refined plan, per-slot hot z buffers over
             // the resident assignments. Bit-identical to the resident
             // sweep (per-document RNG streams).
@@ -428,10 +459,17 @@ impl Trainer for PcSampler {
         self.zero_mass_tokens = 0;
         self.flag_tokens = 0;
         self.sparse_work = 0;
+        let (mut pf_hits, mut pf_stalls) = (0u64, 0u64);
         for s in &self.scratch {
             self.zero_mass_tokens += s.out.zero_mass_tokens;
             self.flag_tokens += s.out.flag_tokens;
             self.sparse_work += s.out.sparse_work;
+            pf_hits += s.out.prefetch_hits;
+            pf_stalls += s.out.prefetch_stalls;
+        }
+        if pf_hits + pf_stalls > 0 {
+            self.timers.incr(PhaseTimers::PREFETCH_HITS, pf_hits);
+            self.timers.incr(PhaseTimers::PREFETCH_STALLS, pf_stalls);
         }
         self.n = Arc::new(TopicWordRows::merge_par(
             self.cfg.k_max,
@@ -773,13 +811,30 @@ mod tests {
         let mut streamed = PcSampler::new(corpus.clone(), cfg(), 3, 55).unwrap();
         streamed.set_streaming(Some(3));
         assert_eq!(streamed.streaming(), Some(3));
+        let mut prefetched = PcSampler::new(corpus.clone(), cfg(), 3, 55).unwrap();
+        prefetched.set_streaming(Some(3));
+        prefetched.set_stream_prefetch(true);
         for it in 0..3 {
             resident.step().unwrap();
             streamed.step().unwrap();
+            prefetched.step().unwrap();
             assert_eq!(streamed.assignments(), resident.assignments(), "iter={it}");
             assert_eq!(streamed.l(), resident.l(), "iter={it}");
             assert_eq!(streamed.psi(), resident.psi(), "iter={it}");
+            assert_eq!(
+                prefetched.assignments(),
+                resident.assignments(),
+                "prefetched iter={it}"
+            );
+            assert_eq!(prefetched.psi(), resident.psi(), "prefetched iter={it}");
         }
+        // Every prefetched block was accounted a hit xor a stall.
+        let accounted = prefetched.timers.counter("prefetch_hits")
+            + prefetched.timers.counter("prefetch_stalls");
+        assert_eq!(
+            accounted,
+            3 * prefetched.stream_block_plan().unwrap().len() as u64
+        );
         // Hot streamed z is bounded by slots × max block, far below
         // the corpus arena.
         let weights = corpus.doc_weights();

@@ -17,13 +17,14 @@
 //! chain is bit-identical under any shard layout or thread count.
 
 use crate::alias::SparseAlias;
-use crate::corpus::io::PackedCorpusFile;
+use crate::corpus::io::{PackedCorpusFile, PositionedFile};
 use crate::corpus::{DocAccess, PackedCorpus};
 use crate::par::pool::SendPtr;
-use crate::par::{self, Shard, Sharding};
+use crate::par::{self, Executor, JobHandle, Schedule, Shard, Sharding, WorkerPool};
 use crate::rng::Pcg64;
 use crate::sparse::{DocCountHist, DocTopics, PhiMatrix, TopicWordAcc};
 use std::marker::PhantomData;
+use std::sync::Arc;
 
 /// Reusable per-executor-slot buffers for [`WordTables::build_into`]:
 /// the bucket-(a) weight vector for the word currently being processed
@@ -164,6 +165,13 @@ pub struct ZShardResult {
     pub flag_tokens: u64,
     /// Work counter: Σ min(K^m, K^Φ) over tokens (eq. 29 audit).
     pub sparse_work: u64,
+    /// Prefetched streamed sweeps: blocks whose token/z loads were
+    /// already complete when the sweep joined them (the overlap won).
+    pub prefetch_hits: u64,
+    /// Prefetched streamed sweeps: blocks the sweep had to wait for
+    /// (or load inline — each slot stripe's cold first block counts
+    /// here). `hits + stalls` equals the blocks this slot swept.
+    pub prefetch_stalls: u64,
 }
 
 impl ZShardResult {
@@ -185,6 +193,8 @@ impl ZShardResult {
             zero_mass_tokens: 0,
             flag_tokens: 0,
             sparse_work: 0,
+            prefetch_hits: 0,
+            prefetch_stalls: 0,
         }
     }
 
@@ -196,6 +206,8 @@ impl ZShardResult {
         self.zero_mass_tokens = 0;
         self.flag_tokens = 0;
         self.sparse_work = 0;
+        self.prefetch_hits = 0;
+        self.prefetch_stalls = 0;
     }
 }
 
@@ -261,6 +273,11 @@ pub struct ShardScratch {
     /// Streamed mode: the current block's tokens (unused — left empty —
     /// when the token source is memory-resident).
     tok_buf: Vec<u32>,
+    /// Prefetched streamed mode: the **back** buffer pair the async
+    /// load of the slot's next block fills while the front pair
+    /// sweeps; swapped at join. Empty for non-prefetched sweeps.
+    z_buf2: Vec<u32>,
+    tok_buf2: Vec<u32>,
 }
 
 impl ShardScratch {
@@ -280,15 +297,22 @@ impl ShardScratch {
             scratch: ZScratch::new(k_max),
             z_buf: Vec::new(),
             tok_buf: Vec::new(),
+            z_buf2: Vec::new(),
+            tok_buf2: Vec::new(),
         }
     }
 
     /// Bytes currently held by this slot's streamed block buffers
-    /// (z + tokens). Stays 0 for resident sweeps; bounded by the
-    /// largest block a slot has seen for streamed ones — the number
-    /// the residency tests and `benches/stream_ingest.rs` assert on.
+    /// (z + tokens, both double-buffer pairs). Stays 0 for resident
+    /// sweeps; bounded by the largest block a slot has seen for
+    /// streamed ones (×2 with prefetch on) — the number the residency
+    /// tests and `benches/stream_ingest.rs` assert on.
     pub fn stream_buf_bytes(&self) -> usize {
-        (self.z_buf.capacity() + self.tok_buf.capacity()) * std::mem::size_of::<u32>()
+        (self.z_buf.capacity()
+            + self.tok_buf.capacity()
+            + self.z_buf2.capacity()
+            + self.tok_buf2.capacity())
+            * std::mem::size_of::<u32>()
     }
 }
 
@@ -581,21 +605,7 @@ impl<'a> ZSweep<'a> {
             return;
         }
         let offsets = tokens.doc_offsets();
-        // Real (release-mode) asserts: the per-block raw-pointer writes
-        // below are sound only under these invariants, and the checks
-        // are O(D + blocks) once per sweep — noise next to the sweep.
-        assert_eq!(offsets.len(), m.len() + 1, "offsets must cover m");
-        assert!(
-            {
-                let mut next = 0usize;
-                blocks.shards().iter().all(|b| {
-                    let ok = b.start == next;
-                    next = b.end;
-                    ok
-                }) && next + 1 == offsets.len()
-            },
-            "blocks must cover 0..D contiguously"
-        );
+        assert_stream_invariants(offsets, m.len(), blocks);
         for s in scratch.iter_mut() {
             s.out.reset(self.k_max);
             s.scratch.ensure(self.k_max);
@@ -604,12 +614,15 @@ impl<'a> ZSweep<'a> {
         // `m` entries.
         let mbase = SendPtr(m.as_mut_ptr());
         par::exec_shards_with_sched(exec, blocks, scratch, schedule, |slot, _bi, block| {
-            let ShardScratch { out, scratch: zs, z_buf, tok_buf } = slot;
+            let ShardScratch { out, scratch: zs, z_buf, tok_buf, .. } = slot;
             let ntok = (offsets[block.end] - offsets[block.start]) as usize;
             z.load(block, ntok, z_buf);
-            debug_assert_eq!(z_buf.len(), ntok, "z store returned a short block");
+            // Real (release-mode) asserts: a short block would silently
+            // corrupt the `pos`-based slicing below, and the check is
+            // O(1) per block — noise next to the sweep.
+            assert_eq!(z_buf.len(), ntok, "z store returned a short block");
             tokens.with_block(block, tok_buf, &mut |toks| {
-                debug_assert_eq!(toks.len(), ntok, "token source returned a short block");
+                assert_eq!(toks.len(), ntok, "token source returned a short block");
                 let mut pos = 0usize;
                 for d in block.start..block.end {
                     let len = (offsets[d + 1] - offsets[d]) as usize;
@@ -630,6 +643,201 @@ impl<'a> ZSweep<'a> {
             z.store(block, z_buf);
         });
     }
+
+    /// [`ZSweep::run_streamed`] with a **double-buffered block
+    /// prefetcher**: while a slot sweeps block *t* of its stripe, the
+    /// token + z loads of block *t + slots* run as a front-queued
+    /// async pool job ([`WorkerPool::submit_unowned`]) filling the
+    /// slot's back buffer pair, so by the time the slot gets there the
+    /// data is (usually) already resident — disk latency overlaps
+    /// other slots' compute instead of extending the critical path.
+    ///
+    /// Blocks are placed on the deterministic [`Schedule::SlotAffine`]
+    /// stripe map (block `i` → slot `i mod slots`), which is what
+    /// makes "this slot's next block" well defined; the chain is
+    /// **bit-identical** to every other sweep form regardless of
+    /// placement (per-document RNG streams). Per-sweep accounting
+    /// lands in [`ZShardResult::prefetch_hits`] /
+    /// [`ZShardResult::prefetch_stalls`].
+    pub fn run_streamed_prefetched<T, S>(
+        &self,
+        tokens: &T,
+        z: &S,
+        m: &mut [DocTopics],
+        blocks: &Sharding,
+        pool: &Arc<WorkerPool>,
+        scratch: &mut [ShardScratch],
+    ) where
+        T: TokenBlocks + ?Sized,
+        S: ZStore + ?Sized,
+    {
+        if blocks.is_empty() {
+            return;
+        }
+        let offsets = tokens.doc_offsets();
+        assert_stream_invariants(offsets, m.len(), blocks);
+        for s in scratch.iter_mut() {
+            s.out.reset(self.k_max);
+            s.scratch.ensure(self.k_max);
+        }
+        let nslots = pool.slots();
+        assert!(
+            scratch.len() >= nslots,
+            "scratch slots {} must cover the pool's {nslots} slots",
+            scratch.len()
+        );
+        let shards = blocks.shards();
+        let nblocks = shards.len();
+        let resident_tokens = tokens.resident();
+        let mbase = SendPtr(m.as_mut_ptr());
+        let sbase = SendPtr(scratch.as_mut_ptr());
+        // One in-flight prefetch per slot: the async load job plus the
+        // closure it runs, kept alive here (outliving every task) until
+        // the join — the pool borrows the closure unowned.
+        let mut pending: Vec<Option<PendingLoad<'_>>> = (0..nslots).map(|_| None).collect();
+        let pbase = SendPtr(pending.as_mut_ptr());
+        let task = |slot: usize, bi: usize| {
+            let block = shards[bi];
+            // SAFETY: the Executor slot contract — no two concurrent
+            // tasks share `slot` — makes this slot's prefetch cell
+            // exclusively ours for the task's duration.
+            let pend = unsafe { &mut *pbase.0.add(slot) };
+            let ntok = (offsets[block.end] - offsets[block.start]) as usize;
+            // 1. Join the load submitted while the stripe's previous
+            // block swept — BEFORE touching the slot scratch: until
+            // the join, that job is still writing the back buffer pair
+            // through its own pointers, and creating a whole-struct
+            // `&mut ShardScratch` while a foreign write is in flight
+            // would violate the aliasing rules even though the fields
+            // are disjoint.
+            let prefetched = pend.take();
+            let was_hit = prefetched.as_ref().map(|(h, _)| h.is_done());
+            if let Some((mut h, _load)) = prefetched {
+                // `wait_as`: we own `slot`; the plain `wait` would
+                // take the dispatch gate the enclosing blocking sweep
+                // dispatch holds.
+                h.wait_as(slot);
+            }
+            // SAFETY: slot contract as above; the only other writer
+            // (the prefetch load) has been joined, so this slot's
+            // scratch is quiescent and exclusively ours.
+            let slot_scratch = unsafe { &mut *sbase.0.add(slot) };
+            // 2. Materialize block `bi`: the prefetched data sits in
+            // the back pair (swap it to the front), or load inline on
+            // the stripe's cold first block.
+            match was_hit {
+                Some(hit) => {
+                    if hit {
+                        slot_scratch.out.prefetch_hits += 1;
+                    } else {
+                        slot_scratch.out.prefetch_stalls += 1;
+                    }
+                    std::mem::swap(&mut slot_scratch.z_buf, &mut slot_scratch.z_buf2);
+                    std::mem::swap(&mut slot_scratch.tok_buf, &mut slot_scratch.tok_buf2);
+                }
+                None => {
+                    slot_scratch.out.prefetch_stalls += 1;
+                    z.load(block, ntok, &mut slot_scratch.z_buf);
+                    if !resident_tokens {
+                        tokens.read_block_into(block, &mut slot_scratch.tok_buf);
+                    }
+                }
+            }
+            // 3. Submit the load of this stripe's next block into the
+            // (now free) back pair before sweeping — the overlap
+            // window. Front-queued: whichever participant finishes a
+            // block first performs it between bulk tasks.
+            let nb = bi + nslots;
+            if nb < nblocks {
+                let nblock = shards[nb];
+                let nntok = (offsets[nblock.end] - offsets[nblock.start]) as usize;
+                let zdst = SendPtr(std::ptr::addr_of_mut!(slot_scratch.z_buf2));
+                let tdst = SendPtr(std::ptr::addr_of_mut!(slot_scratch.tok_buf2));
+                let load: Box<dyn Fn(usize, usize) + Send + Sync + '_> =
+                    Box::new(move |_s, _t| {
+                        // SAFETY: this slot's back pair is untouched by
+                        // the sweep until the next stripe task joins
+                        // this job (or the drain below does).
+                        let zb = unsafe { &mut *zdst.0 };
+                        z.load(nblock, nntok, zb);
+                        if !resident_tokens {
+                            let tb = unsafe { &mut *tdst.0 };
+                            tokens.read_block_into(nblock, tb);
+                        }
+                    });
+                // SAFETY: the closure lives in `pending[slot]` (whose
+                // heap address is stable across the move below) until
+                // the job is joined — by the next stripe task's
+                // `wait_as` or by the post-dispatch drain.
+                let h = unsafe {
+                    WorkerPool::submit_unowned(pool, 1, Schedule::Steal, true, &*load)
+                };
+                *pend = Some((h, load));
+            }
+            // 4. Sweep the front pair, then write the block back
+            // (positioned, lock-free on unix).
+            let ShardScratch { out, scratch: zs, z_buf, tok_buf, .. } = slot_scratch;
+            assert_eq!(z_buf.len(), ntok, "z store returned a short block");
+            let mut sweep_block = |toks: &[u32]| {
+                assert_eq!(toks.len(), ntok, "token source returned a short block");
+                let mut pos = 0usize;
+                for d in block.start..block.end {
+                    let len = (offsets[d + 1] - offsets[d]) as usize;
+                    // SAFETY: blocks cover disjoint document ranges, so
+                    // `m[d]` is touched by exactly one task.
+                    let md = unsafe { &mut *mbase.0.add(d) };
+                    self.resample_doc(
+                        d,
+                        &toks[pos..pos + len],
+                        &mut z_buf[pos..pos + len],
+                        md,
+                        zs,
+                        out,
+                    );
+                    pos += len;
+                }
+            };
+            if resident_tokens {
+                tokens.with_block(block, tok_buf, &mut sweep_block);
+            } else {
+                sweep_block(tok_buf);
+            }
+            z.store(block, z_buf);
+        };
+        let exec: &WorkerPool = pool;
+        exec.run_tasks_scheduled(nblocks, Schedule::SlotAffine, &task);
+        // On a panic-free run every handle was consumed by its stripe
+        // successor; drain any leftovers (we are outside the dispatch
+        // now, so the gate-taking join is safe).
+        for p in pending.iter_mut() {
+            if let Some((h, _load)) = p.take() {
+                h.join();
+            }
+        }
+    }
+}
+
+/// An in-flight prefetch: the async load job plus the closure it runs,
+/// kept alive by the sweep until the join (the pool borrows it
+/// unowned).
+type PendingLoad<'a> = (JobHandle, Box<dyn Fn(usize, usize) + Send + Sync + 'a>);
+
+/// Release-mode invariants shared by the streamed sweep forms: the
+/// per-block raw-pointer writes are sound only under these, and the
+/// checks are O(D + blocks) once per sweep — noise next to the sweep.
+fn assert_stream_invariants(offsets: &[u64], m_len: usize, blocks: &Sharding) {
+    assert_eq!(offsets.len(), m_len + 1, "offsets must cover m");
+    assert!(
+        {
+            let mut next = 0usize;
+            blocks.shards().iter().all(|b| {
+                let ok = b.start == next;
+                next = b.end;
+                ok
+            }) && next + 1 == offsets.len()
+        },
+        "blocks must cover 0..D contiguously"
+    );
 }
 
 /// Clear `buf` and make room for `n` values, counting real growth via
@@ -658,6 +866,22 @@ pub trait TokenBlocks: Sync {
     /// `[docs.start, docs.end)`. `buf` is the calling slot's reusable
     /// scratch; resident sources ignore it and pass an arena slice.
     fn with_block(&self, docs: Shard, buf: &mut Vec<u32>, f: &mut dyn FnMut(&[u32]));
+
+    /// True when blocks are served zero-copy from resident memory.
+    /// The streamed prefetcher skips token I/O for resident sources;
+    /// out-of-core sources return false and must implement
+    /// [`TokenBlocks::read_block_into`].
+    fn resident(&self) -> bool {
+        true
+    }
+
+    /// Materialize the block's tokens into `buf` (cleared first) — the
+    /// prefetch path, which needs owned data it can load ahead of time
+    /// on another thread. Only called when [`TokenBlocks::resident`]
+    /// is false.
+    fn read_block_into(&self, _docs: Shard, _buf: &mut Vec<u32>) {
+        unreachable!("read_block_into is only called on non-resident token sources")
+    }
 }
 
 impl TokenBlocks for PackedCorpus {
@@ -676,6 +900,15 @@ impl TokenBlocks for PackedCorpusFile {
     }
 
     fn with_block(&self, docs: Shard, buf: &mut Vec<u32>, f: &mut dyn FnMut(&[u32])) {
+        self.read_block_into(docs, buf);
+        f(buf)
+    }
+
+    fn resident(&self) -> bool {
+        false
+    }
+
+    fn read_block_into(&self, docs: Shard, buf: &mut Vec<u32>) {
         let ntok =
             (self.doc_offsets()[docs.end] - self.doc_offsets()[docs.start]) as usize;
         ensure_u32_buf(buf, ntok);
@@ -683,7 +916,6 @@ impl TokenBlocks for PackedCorpusFile {
         // fail loudly (the sweep is re-runnable from the last
         // checkpoint).
         self.read_block(docs.start, docs.end, buf).expect("corpus block read");
-        f(buf)
     }
 }
 
@@ -692,7 +924,8 @@ impl TokenBlocks for PackedCorpusFile {
 /// The sweep calls [`ZStore::load`] / [`ZStore::store`] once per block
 /// with **disjoint** contiguous document ranges; implementations may
 /// therefore hand out overlapping-free interior mutability without
-/// locking (resident stores) or serialize on a file lock (out-of-core).
+/// locking — resident stores through raw pointers, the out-of-core
+/// [`FileZ`] through positioned reads/writes on disjoint byte ranges.
 pub trait ZStore: Sync {
     /// Copy the assignments of documents `[docs.start, docs.end)`
     /// (`ntokens` total, packed in document order) into `buf`.
@@ -759,9 +992,17 @@ impl<'a> ArenaZ<'a> {
     }
 
     /// Arena range of a doc block, bounds-checked against the wrapped
-    /// slice (release-mode: the raw slices below rely on it).
+    /// slice (release-mode: the raw slices below rely on it). The
+    /// caller's `ntokens` claim must equal the offsets span exactly —
+    /// a wrong hint would read/write a misaligned arena range that the
+    /// `start + ntokens` bound alone cannot catch.
     fn range(&self, docs: Shard, ntokens: usize) -> usize {
         let start = self.offsets[docs.start] as usize;
+        let span = (self.offsets[docs.end] - self.offsets[docs.start]) as usize;
+        assert_eq!(
+            span, ntokens,
+            "z block {docs:?}: caller claims {ntokens} tokens, offsets span {span}"
+        );
         assert!(start + ntokens <= self.len, "z block {docs:?} out of range");
         start
     }
@@ -788,11 +1029,17 @@ impl ZStore for ArenaZ<'_> {
 
 /// Fully out-of-core [`ZStore`]: the z arena lives in a file (raw
 /// little-endian u32s at the corpus token offsets), blocks are read
-/// and written through an internal lock. Combined with
-/// [`PackedCorpusFile`] this makes the whole z phase's RAM footprint
-/// `O(D)` offsets + `O(slots × block)` buffers.
+/// and written with **positioned** I/O ([`PositionedFile`]) — on unix,
+/// concurrent slots serving disjoint blocks never touch a lock or a
+/// shared cursor. Combined with [`PackedCorpusFile`] this makes the
+/// whole z phase's RAM footprint `O(D)` offsets + `O(slots × block)`
+/// buffers.
+///
+/// Durability: [`FileZ::store`] only hands blocks to the OS page
+/// cache; [`FileZ::sync`] (`fdatasync`) is the durability point,
+/// called once at the checkpoint boundary instead of per block.
 pub struct FileZ {
-    file: std::sync::Mutex<std::fs::File>,
+    file: PositionedFile,
     offsets: Vec<u64>,
 }
 
@@ -822,7 +1069,7 @@ impl FileZ {
             use std::io::Write;
             w.flush()?;
         }
-        Ok(Self { file: std::sync::Mutex::new(file), offsets })
+        Ok(Self { file: PositionedFile::new(file), offsets })
     }
 
     /// The document offsets (length `D + 1`).
@@ -830,18 +1077,20 @@ impl FileZ {
         &self.offsets
     }
 
+    /// Flush every stored block to stable storage (`fdatasync`) — the
+    /// checkpoint-boundary durability point. Block stores only reach
+    /// the page cache; paying one sync per checkpoint instead of one
+    /// per block keeps I/O off the sweep's critical path.
+    pub fn sync(&self) -> anyhow::Result<()> {
+        Ok(self.file.sync_data()?)
+    }
+
     /// Read the whole store back as nested assignments (tests and
     /// checkpointing).
     pub fn to_nested(&self) -> anyhow::Result<Vec<Vec<u32>>> {
-        use std::io::Seek;
-        let mut file = self.file.lock().unwrap();
-        file.seek(std::io::SeekFrom::Start(0))?;
         let mut flat = Vec::new();
-        crate::corpus::io::read_u32s_into(
-            &mut *file,
-            *self.offsets.last().unwrap() as usize,
-            &mut flat,
-        )?;
+        self.file
+            .read_u32s_at(0, *self.offsets.last().unwrap() as usize, &mut flat)?;
         Ok(self
             .offsets
             .windows(2)
@@ -852,21 +1101,19 @@ impl FileZ {
 
 impl ZStore for FileZ {
     fn load(&self, docs: Shard, ntokens: usize, buf: &mut Vec<u32>) {
-        use std::io::Seek;
         ensure_u32_buf(buf, ntokens);
-        let mut file = self.file.lock().unwrap();
-        file.seek(std::io::SeekFrom::Start(self.offsets[docs.start] * 4))
-            .expect("z block seek");
-        crate::corpus::io::read_u32s_into(&mut *file, ntokens, buf).expect("z block read");
+        self.file
+            .read_u32s_at(self.offsets[docs.start] * 4, ntokens, buf)
+            .expect("z block read");
     }
 
     fn store(&self, docs: Shard, buf: &[u32]) {
-        use std::io::{Seek, Write};
-        let mut file = self.file.lock().unwrap();
-        file.seek(std::io::SeekFrom::Start(self.offsets[docs.start] * 4))
-            .expect("z block seek");
-        crate::corpus::io::write_u32s(&mut *file, buf).expect("z block write");
-        file.flush().expect("z block flush");
+        // Positioned write straight to the page cache — no lock, no
+        // per-block flush (durability is FileZ::sync's job at the
+        // checkpoint boundary).
+        self.file
+            .write_u32s_at(self.offsets[docs.start] * 4, buf)
+            .expect("z block write");
     }
 }
 
@@ -1231,7 +1478,7 @@ mod tests {
         let packed = f.corpus.to_packed();
         let d = f.corpus.num_docs();
         let plan = Sharding::weighted(&f.corpus.doc_weights(), 3);
-        let pool = WorkerPool::new(3);
+        let pool = Arc::new(WorkerPool::new(3));
 
         // Reference: resident sweep.
         let (mut z_ref, mut m_ref) = (f.z0.clone(), f.m0.clone());
@@ -1242,7 +1489,7 @@ mod tests {
             &mut z_ref,
             &mut m_ref,
             &plan,
-            &pool,
+            &*pool,
             &mut scratch,
             Schedule::Steal,
         );
@@ -1277,7 +1524,7 @@ mod tests {
                     &NestedZ::new(&mut z),
                     &mut m,
                     &blocks,
-                    &pool,
+                    &*pool,
                     &mut scratch,
                     schedule,
                 );
@@ -1298,7 +1545,7 @@ mod tests {
                     &ArenaZ::new(&mut z_arena, packed.doc_offsets()),
                     &mut m,
                     &blocks,
-                    &pool,
+                    &*pool,
                     &mut scratch,
                     schedule,
                 );
@@ -1313,6 +1560,56 @@ mod tests {
                     .collect();
                 check(&z, &m, &n, &format!("arena {tag}"));
             }
+
+            // Prefetched double-buffered sweep (nested + arena): the
+            // async block loads must leave the chain bit-identical,
+            // and every block must be accounted a hit xor a stall.
+            let tag = format!("blocks={block_docs} prefetched");
+            let (mut z, mut m) = (f.z0.clone(), f.m0.clone());
+            let mut scratch: Vec<ShardScratch> =
+                (0..pool.slots()).map(|_| ShardScratch::new(8)).collect();
+            sweep.run_streamed_prefetched(
+                &packed,
+                &NestedZ::new(&mut z),
+                &mut m,
+                &blocks,
+                &pool,
+                &mut scratch,
+            );
+            let n = TopicWordRows::merge_from_iter(
+                8,
+                scratch.iter_mut().map(|s| &mut s.out.n_acc),
+            );
+            check(&z, &m, &n, &format!("nested {tag}"));
+            let accounted: u64 = scratch
+                .iter()
+                .map(|s| s.out.prefetch_hits + s.out.prefetch_stalls)
+                .sum();
+            assert_eq!(accounted, blocks.len() as u64, "{tag}: block accounting");
+
+            let mut z_arena: Vec<u32> =
+                f.z0.iter().flat_map(|zd| zd.iter().copied()).collect();
+            let mut m = f.m0.clone();
+            let mut scratch: Vec<ShardScratch> =
+                (0..pool.slots()).map(|_| ShardScratch::new(8)).collect();
+            sweep.run_streamed_prefetched(
+                &packed,
+                &ArenaZ::new(&mut z_arena, packed.doc_offsets()),
+                &mut m,
+                &blocks,
+                &pool,
+                &mut scratch,
+            );
+            let n = TopicWordRows::merge_from_iter(
+                8,
+                scratch.iter_mut().map(|s| &mut s.out.n_acc),
+            );
+            let z: Vec<Vec<u32>> = packed
+                .doc_offsets()
+                .windows(2)
+                .map(|w| z_arena[w[0] as usize..w[1] as usize].to_vec())
+                .collect();
+            check(&z, &m, &n, &format!("arena {tag}"));
         }
 
         // Fully out of core: tokens and z both file-backed.
@@ -1330,7 +1627,7 @@ mod tests {
             &zfile,
             &mut m,
             &blocks,
-            &pool,
+            &*pool,
             &mut scratch,
             Schedule::Steal,
         );
@@ -1340,8 +1637,29 @@ mod tests {
         );
         let z = zfile.to_nested().unwrap();
         check(&z, &m, &n, "out-of-core");
+
+        // Out of core *with* the prefetcher: tokens and z both loaded
+        // ahead by async jobs, synced at the end — still bit-identical.
+        let zfile2 = FileZ::from_nested(&dir.join("z_pf.bin"), &f.z0).unwrap();
+        let mut m = f.m0.clone();
+        let mut scratch: Vec<ShardScratch> =
+            (0..pool.slots()).map(|_| ShardScratch::new(8)).collect();
+        sweep.run_streamed_prefetched(&cfile, &zfile2, &mut m, &blocks, &pool, &mut scratch);
+        zfile2.sync().unwrap();
+        let n = TopicWordRows::merge_from_iter(
+            8,
+            scratch.iter_mut().map(|s| &mut s.out.n_acc),
+        );
+        let z = zfile2.to_nested().unwrap();
+        check(&z, &m, &n, "out-of-core prefetched");
+        let accounted: u64 = scratch
+            .iter()
+            .map(|s| s.out.prefetch_hits + s.out.prefetch_stalls)
+            .sum();
+        assert_eq!(accounted, blocks.len() as u64, "ooc prefetch accounting");
         // Residency: per-slot hot state is bounded by the largest
-        // block, not the corpus (×2 slack for allocator rounding).
+        // block, not the corpus (×2 buffer pairs for the prefetched
+        // double buffer, ×2 slack for allocator rounding).
         let weights = f.corpus.doc_weights();
         let max_block: u64 = blocks
             .shards()
@@ -1349,7 +1667,7 @@ mod tests {
             .map(|b| weights[b.start..b.end].iter().sum())
             .max()
             .unwrap();
-        let bound = 2 * 2 * 4 * max_block as usize; // z + tok buffers
+        let bound = 2 * 2 * 2 * 4 * max_block as usize; // (z + tok) × 2 pairs
         for (i, s) in scratch.iter().enumerate() {
             assert!(
                 s.stream_buf_bytes() <= bound,
@@ -1378,6 +1696,69 @@ mod tests {
         for s in &scratch {
             assert_eq!(s.stream_buf_bytes(), 0);
         }
+    }
+
+    #[test]
+    #[should_panic(expected = "offsets span")]
+    fn arena_z_rejects_a_wrong_token_hint() {
+        // A caller claiming the wrong token count for a block must hit
+        // the offsets-span equality assert, not silently read a
+        // misaligned arena range.
+        let offsets = [0u64, 3, 5, 9];
+        let mut arena = vec![0u32; 9];
+        let z = ArenaZ::new(&mut arena, &offsets);
+        let mut buf = Vec::new();
+        // Block [1, 3) spans 6 tokens; claim 4.
+        z.load(Shard { start: 1, end: 3 }, 4, &mut buf);
+    }
+
+    #[test]
+    fn filez_concurrent_disjoint_blocks_and_sync() {
+        // Post-pread/pwrite contract: many threads loading and storing
+        // DISJOINT blocks of one FileZ concurrently must round-trip
+        // every value exactly (no lock, no shared cursor). Each thread
+        // owns a stride of 1-doc blocks: it re-reads and rewrites them
+        // for several rounds, then stamps a distinct final pattern that
+        // must read back exactly.
+        let docs: Vec<Vec<u32>> = (0..48u32)
+            .map(|d| (0..(d % 5 + 1)).map(|i| d * 1000 + i).collect())
+            .collect();
+        let dir = std::env::temp_dir().join("hdp_zstep_filez_conc");
+        let zfile = FileZ::from_nested(&dir.join("z.bin"), &docs).unwrap();
+        std::thread::scope(|scope| {
+            for t in 0..8usize {
+                let zfile = &zfile;
+                let docs = &docs;
+                scope.spawn(move || {
+                    let mut buf = Vec::new();
+                    for _round in 0..30 {
+                        for d in (t..docs.len()).step_by(8) {
+                            let block = Shard { start: d, end: d + 1 };
+                            zfile.load(block, docs[d].len(), &mut buf);
+                            assert_eq!(&buf[..], &docs[d][..], "thread {t} doc {d}");
+                            // Rewrite the same values (idempotent, so
+                            // racing rounds of this thread are fine;
+                            // other threads never touch doc d).
+                            zfile.store(block, &buf);
+                        }
+                    }
+                    // Last word: a distinct per-doc pattern.
+                    for d in (t..docs.len()).step_by(8) {
+                        let block = Shard { start: d, end: d + 1 };
+                        let new: Vec<u32> =
+                            docs[d].iter().map(|&x| x ^ 0xdead_beef).collect();
+                        zfile.store(block, &new);
+                    }
+                });
+            }
+        });
+        zfile.sync().unwrap();
+        let back = zfile.to_nested().unwrap();
+        for (d, zd) in back.iter().enumerate() {
+            let want: Vec<u32> = docs[d].iter().map(|&x| x ^ 0xdead_beef).collect();
+            assert_eq!(zd, &want, "doc {d}");
+        }
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

@@ -56,6 +56,9 @@ pub struct PcLdaSampler {
     stream_block_docs: Option<usize>,
     /// Block plan derived from `doc_plan.refine(stream_block_docs)`.
     block_plan: Option<Sharding>,
+    /// Streamed z: double-buffered block prefetch (next block's I/O
+    /// overlaps the current block's sweep).
+    stream_prefetch: bool,
     /// Double-buffer slot for the in-flight Φ job.
     phi_pipe: phi::PhiPipeline,
 }
@@ -113,6 +116,7 @@ impl PcLdaSampler {
             slot_affine: false,
             stream_block_docs: None,
             block_plan: None,
+            stream_prefetch: false,
             phi_pipe: phi::PhiPipeline::new(0x1f1),
         })
     }
@@ -165,6 +169,19 @@ impl PcLdaSampler {
     pub fn streaming(&self) -> Option<usize> {
         self.stream_block_docs
     }
+
+    /// The prefetch knob of [`PcLdaSampler::set_streaming`]: overlap
+    /// block `t+1`'s token/z I/O with block `t`'s sweep (see
+    /// [`super::pc::PcSampler::set_stream_prefetch`]). Bit-identical
+    /// chains either way.
+    pub fn set_stream_prefetch(&mut self, prefetch: bool) {
+        self.stream_prefetch = prefetch;
+    }
+
+    /// Whether streamed sweeps prefetch the next block.
+    pub fn stream_prefetch(&self) -> bool {
+        self.stream_prefetch
+    }
 }
 
 impl Trainer for PcLdaSampler {
@@ -214,6 +231,14 @@ impl Trainer for PcLdaSampler {
             if self.slot_affine { Schedule::SlotAffine } else { Schedule::Steal };
         let t0 = Instant::now();
         match &self.block_plan {
+            Some(blocks) if self.stream_prefetch => sweep.run_streamed_prefetched(
+                &*self.packed,
+                &zstep::NestedZ::new(&mut self.assign.z),
+                &mut self.assign.m,
+                blocks,
+                &self.pool,
+                &mut self.scratch,
+            ),
             Some(blocks) => sweep.run_streamed(
                 &*self.packed,
                 &zstep::NestedZ::new(&mut self.assign.z),
@@ -234,6 +259,15 @@ impl Trainer for PcLdaSampler {
             ),
         }
         self.timers.add("z", t0.elapsed());
+        let (mut pf_hits, mut pf_stalls) = (0u64, 0u64);
+        for s in &self.scratch {
+            pf_hits += s.out.prefetch_hits;
+            pf_stalls += s.out.prefetch_stalls;
+        }
+        if pf_hits + pf_stalls > 0 {
+            self.timers.incr(PhaseTimers::PREFETCH_HITS, pf_hits);
+            self.timers.incr(PhaseTimers::PREFETCH_STALLS, pf_stalls);
+        }
         let t0 = Instant::now();
         self.n = Arc::new(TopicWordRows::merge_par(
             self.k,
@@ -366,17 +400,28 @@ mod tests {
     #[test]
     fn streamed_matches_resident() {
         // The LDA sampler shares the streamed z machinery: 2-doc
-        // blocks, pipelined, must stay bit-identical to the resident
-        // sweep.
+        // blocks, pipelined, with and without the block prefetcher,
+        // must stay bit-identical to the resident sweep.
         let corpus = tiny();
         let mut res = PcLdaSampler::new(corpus.clone(), 8, 0.1, 0.05, 2, 13).unwrap();
-        let mut str8 = PcLdaSampler::new(corpus, 8, 0.1, 0.05, 2, 13).unwrap();
+        let mut str8 = PcLdaSampler::new(corpus.clone(), 8, 0.1, 0.05, 2, 13).unwrap();
         str8.set_streaming(Some(2));
         assert_eq!(str8.streaming(), Some(2));
+        let mut pf = PcLdaSampler::new(corpus, 8, 0.1, 0.05, 2, 13).unwrap();
+        pf.set_streaming(Some(2));
+        pf.set_stream_prefetch(true);
+        assert!(pf.stream_prefetch());
         for it in 0..4 {
             res.step().unwrap();
             str8.step().unwrap();
+            pf.step().unwrap();
             assert_eq!(str8.assignments(), res.assignments(), "iter={it}");
+            assert_eq!(pf.assignments(), res.assignments(), "prefetched iter={it}");
         }
+        // Hit/stall accounting reached the timers.
+        let accounted =
+            pf.timers.counter("prefetch_hits") + pf.timers.counter("prefetch_stalls");
+        assert!(accounted > 0, "prefetch counters must be recorded");
+        assert_eq!(str8.timers.counter("prefetch_hits"), 0);
     }
 }

@@ -32,6 +32,17 @@ impl PhaseTimers {
     /// [`PhaseTimers::phase_seconds`]).
     pub const CRITICAL_PATH: &'static str = "critical_path";
 
+    /// Counter name: streamed-sweep blocks whose prefetched token/z
+    /// loads were already complete when the sweep joined them — the
+    /// I/O the double buffer hid behind compute.
+    pub const PREFETCH_HITS: &'static str = "prefetch_hits";
+
+    /// Counter name: streamed-sweep blocks whose data was not ready at
+    /// join time (the sweep waited or loaded inline; each slot
+    /// stripe's cold first block lands here). `hits + stalls` equals
+    /// the blocks swept with prefetch enabled.
+    pub const PREFETCH_STALLS: &'static str = "prefetch_stalls";
+
     /// Create with no phases registered.
     pub fn new() -> Self {
         Self::default()
@@ -342,6 +353,13 @@ mod tests {
         assert_eq!(t.counter_rows(), vec![("pool_jobs", 7), ("scratch_allocs", 1)]);
         let s = t.summary();
         assert!(s.contains("pool_jobs") && s.contains("scratch_allocs"));
+        // The streamed-prefetch counters flow through the same
+        // machinery under their reserved names.
+        t.incr(PhaseTimers::PREFETCH_HITS, 10);
+        t.incr(PhaseTimers::PREFETCH_STALLS, 3);
+        assert_eq!(t.counter("prefetch_hits"), 10);
+        assert_eq!(t.counter("prefetch_stalls"), 3);
+        assert!(t.summary().contains("prefetch_hits"));
     }
 
     #[test]

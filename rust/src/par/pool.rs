@@ -40,6 +40,17 @@
 //! blocking phase dispatch coexist: workers drain the queue in order,
 //! and the blocking publisher always participates as slot 0.
 //!
+//! Workers claim **one task at a time** and re-scan the queue between
+//! claims, so a job published at the queue *front*
+//! ([`WorkerPool::submit_unowned`] with `front = true`) is served
+//! between the bulk tasks of a long-running job instead of after them.
+//! The streamed z sweep's block prefetcher is built on exactly this:
+//! block `t+1`'s I/O is a front-queued single-task job that whichever
+//! worker finishes a block first performs, overlapping the other
+//! slots' compute; the slot that needs the data joins it with
+//! [`JobHandle::wait_as`] — the in-task join form that helps as the
+//! caller's own slot instead of taking the slot-0 dispatch gate.
+//!
 //! # Scheduling modes
 //!
 //! A job runs under a [`Schedule`]:
@@ -191,9 +202,11 @@ impl Executor for usize {
 
 /// Type-erased borrowed task closure. Only dereferenced while the
 /// closure is guaranteed alive: blocking publishers keep it on their
-/// stack until `run_tasks` returns, and async submitters box it into
-/// the [`JobHandle`], which joins (waits for `remaining == 0`) before
-/// releasing the box. Exhausted jobs never touch the pointer again.
+/// stack until `run_tasks` returns; async submitters either box it
+/// into the [`JobHandle`] ([`WorkerPool::submit`]) or keep it alive in
+/// caller-owned storage ([`WorkerPool::submit_unowned`]'s contract) —
+/// both join (wait for `remaining == 0`) before releasing it.
+/// Exhausted jobs never touch the pointer again.
 struct TaskRef(*const (dyn Fn(usize, usize) + Sync));
 
 // SAFETY: the pointee is `Sync` (callable from any thread through a
@@ -211,9 +224,13 @@ struct Job {
     schedule: Schedule,
     /// Steal: next task index to claim (may overshoot `ntasks`).
     next: AtomicUsize,
-    /// SlotAffine: whether slot `s` has begun its task stripe
-    /// (`nslots` entries; empty for steal jobs).
-    started: Vec<AtomicBool>,
+    /// SlotAffine: per-slot stripe cursors — slot `s` claims tasks
+    /// `s, s + nslots, …` one at a time (`nslots` entries; empty for
+    /// steal jobs). Claiming singly instead of running the whole
+    /// stripe in one go lets participants re-scan the queue between
+    /// tasks, which is what lets front-queued prefetch I/O interleave
+    /// with a long sweep.
+    affine_next: Vec<AtomicUsize>,
     /// Tasks not yet completed; waiters block until 0.
     remaining: AtomicUsize,
     /// Set when any task panicked (re-raised by the waiter).
@@ -224,9 +241,9 @@ struct Job {
 
 impl Job {
     fn new(task: TaskRef, ntasks: usize, nslots: usize, schedule: Schedule) -> Self {
-        let started = match schedule {
+        let affine_next = match schedule {
             Schedule::Steal => Vec::new(),
-            Schedule::SlotAffine => (0..nslots).map(|_| AtomicBool::new(false)).collect(),
+            Schedule::SlotAffine => (0..nslots).map(AtomicUsize::new).collect(),
         };
         Self {
             task,
@@ -234,7 +251,7 @@ impl Job {
             nslots,
             schedule,
             next: AtomicUsize::new(0),
-            started,
+            affine_next,
             remaining: AtomicUsize::new(ntasks),
             panicked: AtomicBool::new(false),
             // A zero-task job is born complete (nothing will ever
@@ -245,14 +262,15 @@ impl Job {
     }
 
     /// Could `slot` still contribute work to this job? (Queue-scan
-    /// predicate; a false positive is harmless — `run_on` re-checks.)
+    /// predicate; a false positive is harmless — `try_run_one`
+    /// re-checks.)
     fn can_contribute(&self, slot: usize) -> bool {
         match self.schedule {
             Schedule::Steal => self.next.load(Ordering::Relaxed) < self.ntasks,
             Schedule::SlotAffine => {
                 slot < self.nslots
                     && slot < self.ntasks
-                    && !self.started[slot].load(Ordering::Acquire)
+                    && self.affine_next[slot].load(Ordering::Relaxed) < self.ntasks
             }
         }
     }
@@ -272,32 +290,32 @@ impl Job {
         }
     }
 
-    /// Claim-and-run loop shared by workers and publishing/joining
-    /// threads. Under `Steal`, claims from the shared counter; under
-    /// `SlotAffine`, runs exactly the stripe `slot, slot + nslots, …`.
-    fn run_on(&self, slot: usize) {
-        match self.schedule {
-            Schedule::Steal => loop {
-                let i = self.next.fetch_add(1, Ordering::Relaxed);
-                if i >= self.ntasks {
-                    return;
-                }
-                self.run_one(slot, i);
-            },
+    /// Claim and run at most one task as `slot`; false when the job
+    /// has nothing (left) for this slot. Under `Steal`, claims from
+    /// the shared counter; under `SlotAffine`, advances the slot's
+    /// stripe cursor `slot, slot + nslots, …` (only the thread that
+    /// owns `slot` touches its cursor — the Executor slot contract).
+    fn try_run_one(&self, slot: usize) -> bool {
+        let i = match self.schedule {
+            Schedule::Steal => self.next.fetch_add(1, Ordering::Relaxed),
             Schedule::SlotAffine => {
-                if slot >= self.nslots
-                    || slot >= self.ntasks
-                    || self.started[slot].swap(true, Ordering::AcqRel)
-                {
-                    return;
+                if slot >= self.nslots || slot >= self.ntasks {
+                    return false;
                 }
-                let mut i = slot;
-                while i < self.ntasks {
-                    self.run_one(slot, i);
-                    i += self.nslots;
-                }
+                self.affine_next[slot].fetch_add(self.nslots, Ordering::Relaxed)
             }
+        };
+        if i >= self.ntasks {
+            return false;
         }
+        self.run_one(slot, i);
+        true
+    }
+
+    /// Claim-and-run until the job has nothing left for `slot` (the
+    /// publisher/joiner drain loop).
+    fn run_on(&self, slot: usize) {
+        while self.try_run_one(slot) {}
     }
 
     /// Block until every task has completed.
@@ -338,7 +356,10 @@ fn worker_loop(shared: &PoolShared, slot: usize) {
                 st = shared.work_cv.wait(st).unwrap();
             }
         };
-        job.run_on(slot);
+        // One task per claim, then re-scan front-to-back: a job pushed
+        // at the queue front (streamed-sweep prefetch I/O) gets served
+        // between a long job's bulk tasks instead of after them.
+        job.try_run_one(slot);
     }
 }
 
@@ -402,9 +423,13 @@ impl WorkerPool {
         self.jobs.load(Ordering::Relaxed)
     }
 
-    fn push_job(&self, job: &Arc<Job>) {
+    fn push_job(&self, job: &Arc<Job>, front: bool) {
         let mut st = self.shared.state.lock().unwrap();
-        st.queue.push_back(Arc::clone(job));
+        if front {
+            st.queue.push_front(Arc::clone(job));
+        } else {
+            st.queue.push_back(Arc::clone(job));
+        }
         self.shared.work_cv.notify_all();
     }
 
@@ -431,7 +456,7 @@ impl WorkerPool {
             return;
         }
         let job = Arc::new(Job::new(TaskRef(f as *const _), ntasks, self.slots(), schedule));
-        self.push_job(&job);
+        self.push_job(&job, false);
         // Participate as slot 0, then wait for stragglers.
         job.run_on(0);
         job.wait_done();
@@ -459,18 +484,51 @@ impl WorkerPool {
         schedule: Schedule,
         task: Box<dyn Fn(usize, usize) + Send + Sync + 'static>,
     ) -> JobHandle {
-        pool.jobs.fetch_add(1, Ordering::Relaxed);
         let task_ref: &(dyn Fn(usize, usize) + Sync) = &*task;
+        // SAFETY: the closure box moves into the handle below, so the
+        // pointee outlives the job (boxes are heap-stable across the
+        // move); the handle joins before releasing it.
+        let mut handle =
+            unsafe { Self::submit_unowned(pool, ntasks, schedule, false, task_ref) };
+        handle._task = Some(task);
+        handle
+    }
+
+    /// Publish an asynchronous job whose closure the **caller** keeps
+    /// alive — the [`WorkerPool::submit`] shape without the `'static`
+    /// bound, for jobs that borrow from the submitting stack frame
+    /// (the blocking-publisher protocol, made async). `front = true`
+    /// pushes the job at the queue *front*, so workers between bulk
+    /// tasks serve it before claiming more bulk work — the knob the
+    /// streamed z sweep's block prefetcher uses to keep its I/O off
+    /// the critical path.
+    ///
+    /// # Safety
+    ///
+    /// The caller must keep `task` (and everything it borrows) alive
+    /// until the returned handle observes completion, and must join it
+    /// explicitly: [`JobHandle::wait`] / [`JobHandle::join`] from
+    /// outside the pool, or [`JobHandle::wait_as`] from inside a pool
+    /// task — the implicit drop-join takes the slot-0 dispatch gate
+    /// and would deadlock there.
+    pub unsafe fn submit_unowned(
+        pool: &Arc<WorkerPool>,
+        ntasks: usize,
+        schedule: Schedule,
+        front: bool,
+        task: &(dyn Fn(usize, usize) + Sync),
+    ) -> JobHandle {
+        pool.jobs.fetch_add(1, Ordering::Relaxed);
         let job = Arc::new(Job::new(
-            TaskRef(task_ref as *const _),
+            TaskRef(task as *const _),
             ntasks,
             pool.slots(),
             schedule,
         ));
         if ntasks > 0 {
-            pool.push_job(&job);
+            pool.push_job(&job, front);
         }
-        JobHandle { pool: Arc::clone(pool), job, _task: task, joined: false }
+        JobHandle { pool: Arc::clone(pool), job, _task: None, joined: false }
     }
 
     /// Async parallel map over `0..n` in index order, chunked into
@@ -525,8 +583,10 @@ impl Drop for WorkerPool {
 pub struct JobHandle {
     pool: Arc<WorkerPool>,
     job: Arc<Job>,
-    /// Keeps the type-erased closure alive until the job completes.
-    _task: Box<dyn Fn(usize, usize) + Send + Sync>,
+    /// Keeps the type-erased closure alive until the job completes
+    /// (`None` for [`WorkerPool::submit_unowned`] jobs, whose closure
+    /// lives in caller-owned storage).
+    _task: Option<Box<dyn Fn(usize, usize) + Send + Sync>>,
     joined: bool,
 }
 
@@ -548,6 +608,26 @@ impl JobHandle {
             let _gate = self.pool.dispatch_gate.lock().unwrap_or_else(|e| e.into_inner());
             self.job.run_on(0);
         }
+        self.job.wait_done();
+        self.pool.remove_job(&self.job);
+        if self.job.panicked.load(Ordering::SeqCst) && !std::thread::panicking() {
+            panic!("worker pool task panicked");
+        }
+    }
+
+    /// Block until the job completes, helping with unclaimed tasks as
+    /// `slot` — the join form for callers that already **own** an
+    /// executor slot (code running inside a pool task). Unlike
+    /// [`JobHandle::wait`] it does not take the slot-0 dispatch gate
+    /// (which the enclosing blocking dispatch holds), so it cannot
+    /// deadlock from inside a task; the caller's exclusive ownership
+    /// of `slot` upholds the slot contract instead. Idempotent.
+    pub fn wait_as(&mut self, slot: usize) {
+        if self.joined {
+            return;
+        }
+        self.joined = true;
+        self.job.run_on(slot);
         self.job.wait_done();
         self.pool.remove_job(&self.job);
         if self.job.panicked.load(Ordering::SeqCst) && !std::thread::panicking() {
@@ -961,6 +1041,52 @@ mod tests {
             // handle dropped here without an explicit join
         }
         assert_eq!(counter.load(Ordering::SeqCst), 8, "drop must join");
+    }
+
+    #[test]
+    fn unowned_front_job_joins_from_inside_a_task() {
+        // The prefetcher protocol: a pool task submits a borrowed,
+        // front-queued job and joins it with `wait_as` on its own slot
+        // while the blocking dispatch (and its slot-0 gate) is still in
+        // flight. Must complete without deadlock, with the written data
+        // visible after the join, on pools with and without workers.
+        for threads in [1usize, 3] {
+            let pool = Arc::new(WorkerPool::new(threads));
+            let results: Vec<AtomicUsize> = (0..8).map(|_| AtomicUsize::new(0)).collect();
+            let pool2 = Arc::clone(&pool);
+            (&*pool).run_tasks(8, &|slot, i| {
+                let cell = AtomicUsize::new(0);
+                let load = |_s: usize, _t: usize| {
+                    cell.store(i + 1, Ordering::SeqCst);
+                };
+                // SAFETY: `load` (and `cell`) outlive the join below.
+                let mut h = unsafe {
+                    WorkerPool::submit_unowned(&pool2, 1, Schedule::Steal, true, &load)
+                };
+                h.wait_as(slot);
+                results[i].store(cell.load(Ordering::SeqCst), Ordering::SeqCst);
+            });
+            for (i, r) in results.iter().enumerate() {
+                assert_eq!(r.load(Ordering::SeqCst), i + 1, "threads={threads} task {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn front_submission_is_served_and_removed() {
+        // A front-pushed job completes and is removed from the queue
+        // by its waiter; the pool stays usable for ordinary dispatch.
+        let pool = Arc::new(WorkerPool::new(2));
+        let hits = AtomicUsize::new(0);
+        let task = |_s: usize, _t: usize| {
+            hits.fetch_add(1, Ordering::SeqCst);
+        };
+        // SAFETY: joined (wait) before `task`/`hits` go out of scope.
+        let mut h = unsafe { WorkerPool::submit_unowned(&pool, 4, Schedule::Steal, true, &task) };
+        h.wait();
+        assert_eq!(hits.load(Ordering::SeqCst), 4);
+        let out = exec_map(&*pool, 8, |i| i);
+        assert_eq!(out.len(), 8);
     }
 
     #[test]

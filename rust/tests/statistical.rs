@@ -82,8 +82,11 @@ fn pc_and_exact_agree_across_seeds() {
 /// per-slot hot z buffers, load/store round trips) must leave the
 /// chain — z, l, and Ψ — bit-identical to the resident reference for
 /// every block size {1 doc, uneven, whole corpus} × thread count
-/// {1, 2, 7} × pipelining {off, on}, and must never materialize more
-/// than the blocks-in-flight bound of hot z.
+/// {1, 2, 7} × pipelining {off, on} × prefetch {off, on} (the
+/// double-buffered async block loader), and must never materialize
+/// more than the blocks-in-flight bound of hot z. With prefetch on,
+/// every block of every sweep must be accounted exactly once in the
+/// `prefetch_hits`/`prefetch_stalls` counters.
 #[test]
 fn streamed_and_resident_chains_are_bit_identical() {
     let (c, _) = HdpCorpusSpec {
@@ -105,8 +108,10 @@ fn streamed_and_resident_chains_are_bit_identical() {
     #[derive(Clone, Copy, Debug)]
     enum Blocks {
         Resident,
-        /// Refine the (weighted → uneven) doc plan to ≤ this many docs.
-        Stream(usize),
+        /// Refine the (weighted → uneven) doc plan to ≤ `docs` docs
+        /// per block; `prefetch` turns on the double-buffered async
+        /// block loader.
+        Stream { docs: usize, prefetch: bool },
     }
 
     let run = |threads: usize, pipelined: bool, blocks: Blocks| {
@@ -115,17 +120,20 @@ fn streamed_and_resident_chains_are_bit_identical() {
         // A token-weighted plan gives uneven shards, hence uneven
         // blocks after refinement.
         s.set_doc_plan(Sharding::weighted(&c.doc_weights(), threads));
-        if let Blocks::Stream(b) = blocks {
-            s.set_streaming(Some(b));
+        if let Blocks::Stream { docs, prefetch } = blocks {
+            s.set_streaming(Some(docs));
+            s.set_stream_prefetch(prefetch);
+            assert_eq!(s.stream_prefetch(), prefetch);
         }
         for _ in 0..steps {
             s.step().unwrap();
         }
         let hot = s.stream_buf_bytes();
-        if let Blocks::Stream(_) = blocks {
+        if let Blocks::Stream { prefetch, .. } = blocks {
             // Residency: hot z is bounded by slots × the largest block
-            // (×2 for z+token buffers, ×2 allocator slack), and the
-            // resident corpus arena is never duplicated into buffers.
+            // (×2 for z+token buffers, ×2 buffer pairs when
+            // prefetching, ×2 allocator slack), and the resident
+            // corpus arena is never duplicated into buffers.
             let weights = c.doc_weights();
             let max_block: u64 = s
                 .stream_block_plan()
@@ -135,11 +143,22 @@ fn streamed_and_resident_chains_are_bit_identical() {
                 .map(|b| weights[b.start..b.end].iter().sum())
                 .max()
                 .unwrap();
-            let bound = threads * 2 * 2 * 4 * max_block as usize;
+            let pairs = if prefetch { 2 } else { 1 };
+            let bound = threads * pairs * 2 * 2 * 4 * max_block as usize;
             assert!(
                 hot <= bound,
                 "threads={threads} blocks={blocks:?}: hot z {hot} B > bound {bound} B"
             );
+            // Prefetch accounting: every block of every sweep is a hit
+            // xor a stall; with prefetch off the counters stay silent.
+            let accounted = s.timers.counter("prefetch_hits")
+                + s.timers.counter("prefetch_stalls");
+            let want = if prefetch {
+                (steps * s.stream_block_plan().unwrap().len()) as u64
+            } else {
+                0
+            };
+            assert_eq!(accounted, want, "threads={threads} blocks={blocks:?}");
         } else {
             assert_eq!(hot, 0, "resident sweep must not touch block buffers");
         }
@@ -151,9 +170,15 @@ fn streamed_and_resident_chains_are_bit_identical() {
         for &pipelined in &[false, true] {
             for &blocks in &[
                 Blocks::Resident,
-                Blocks::Stream(1),       // one document per block
-                Blocks::Stream(5),       // uneven blocks (weighted plan tails)
-                Blocks::Stream(usize::MAX), // whole-corpus blocks (= shards)
+                // one document per block
+                Blocks::Stream { docs: 1, prefetch: false },
+                Blocks::Stream { docs: 1, prefetch: true },
+                // uneven blocks (weighted plan tails)
+                Blocks::Stream { docs: 5, prefetch: false },
+                Blocks::Stream { docs: 5, prefetch: true },
+                // whole-corpus blocks (= shards)
+                Blocks::Stream { docs: usize::MAX, prefetch: false },
+                Blocks::Stream { docs: usize::MAX, prefetch: true },
             ] {
                 let (z, l, psi) = run(threads, pipelined, blocks);
                 let tag = format!("threads={threads} pipelined={pipelined} blocks={blocks:?}");
