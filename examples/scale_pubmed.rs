@@ -20,13 +20,55 @@
 use hdp_sparse::config::HdpConfig;
 use hdp_sparse::corpus::registry;
 use hdp_sparse::diagnostics::topics;
-use hdp_sparse::hdp::pc::{phi::sample_phi, PcSampler};
+use hdp_sparse::hdp::pc::PcSampler;
 use hdp_sparse::hdp::Trainer;
 use hdp_sparse::metrics::{IterRecord, TraceWriter};
-use hdp_sparse::rng::Pcg64;
-use hdp_sparse::runtime::{phi_loglik_sparse, Engine};
 use std::sync::Arc;
 use std::time::Instant;
+
+/// XLA cross-check: dense tiled loglik == rust-native sparse value.
+/// Compiled only with the off-by-default `xla` feature; skipped
+/// gracefully when the AOT artifacts are absent.
+#[cfg(feature = "xla")]
+fn xla_cross_check(
+    sampler: &PcSampler,
+    beta: f64,
+    vocab: usize,
+    threads: usize,
+) -> anyhow::Result<()> {
+    use hdp_sparse::hdp::pc::phi::sample_phi;
+    use hdp_sparse::rng::Pcg64;
+    use hdp_sparse::runtime::{phi_loglik_sparse, Engine};
+    let engine_dir = Engine::default_dir();
+    if !engine_dir.join("manifest.txt").exists() {
+        println!("note: no artifacts/ — XLA cross-check disabled (run `make artifacts`)");
+        return Ok(());
+    }
+    let mut engine = Engine::load(&engine_dir)?;
+    let root = Pcg64::new(1);
+    let phi = sample_phi(&root, sampler.n(), beta, vocab, threads);
+    let t0 = Instant::now();
+    let dense = engine.loglik(sampler.n(), &phi)?;
+    let xla_time = t0.elapsed();
+    let sparse = phi_loglik_sparse(sampler.n(), &phi);
+    let rel = (dense - sparse).abs() / sparse.abs().max(1.0);
+    println!(
+        "\nXLA cross-check: sparse {sparse:.1} vs PJRT-tiled {dense:.1} (rel {rel:.2e}, {xla_time:?})"
+    );
+    anyhow::ensure!(rel < 1e-4, "XLA/native mismatch");
+    Ok(())
+}
+
+#[cfg(not(feature = "xla"))]
+fn xla_cross_check(
+    _sampler: &PcSampler,
+    _beta: f64,
+    _vocab: usize,
+    _threads: usize,
+) -> anyhow::Result<()> {
+    println!("note: built without the `xla` feature — cross-check skipped");
+    Ok(())
+}
 
 fn main() -> anyhow::Result<()> {
     let iterations: usize = std::env::args()
@@ -41,15 +83,6 @@ fn main() -> anyhow::Result<()> {
 
     let cfg = HdpConfig { alpha: 0.1, beta: 0.01, gamma: 1.0, k_max: 1000, init_topics: 1 };
     let mut sampler = PcSampler::new(corpus.clone(), cfg, threads, 2020)?;
-
-    // Optional XLA engine (skipped gracefully without artifacts).
-    let engine_dir = Engine::default_dir();
-    let mut engine = if engine_dir.join("manifest.txt").exists() {
-        Some(Engine::load(&engine_dir)?)
-    } else {
-        println!("note: no artifacts/ — XLA cross-check disabled (run `make artifacts`)");
-        None
-    };
 
     std::fs::create_dir_all("results")?;
     let mut trace = TraceWriter::to_file(std::path::Path::new(
@@ -84,20 +117,7 @@ fn main() -> anyhow::Result<()> {
     let elapsed = start.elapsed().as_secs_f64();
     let tput = corpus.num_tokens() as f64 * iterations as f64 / elapsed;
 
-    // XLA cross-check: dense tiled loglik == rust-native sparse value.
-    if let Some(engine) = engine.as_mut() {
-        let root = Pcg64::new(1);
-        let phi = sample_phi(&root, sampler.n(), cfg.beta, corpus.vocab_size(), threads);
-        let t0 = Instant::now();
-        let dense = engine.loglik(sampler.n(), &phi)?;
-        let xla_time = t0.elapsed();
-        let sparse = phi_loglik_sparse(sampler.n(), &phi);
-        let rel = (dense - sparse).abs() / sparse.abs().max(1.0);
-        println!(
-            "\nXLA cross-check: sparse {sparse:.1} vs PJRT-tiled {dense:.1} (rel {rel:.2e}, {xla_time:?})"
-        );
-        anyhow::ensure!(rel < 1e-4, "XLA/native mismatch");
-    }
+    xla_cross_check(&sampler, cfg.beta, corpus.vocab_size(), threads)?;
 
     // Fig-2-style topic table.
     let rows = sampler.topic_word_rows();

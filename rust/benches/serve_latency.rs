@@ -1,0 +1,189 @@
+//! Bench: frozen-snapshot serving latency.
+//!
+//! Trains a PC-HDP model on the shared bench corpus, freezes a
+//! [`ModelSnapshot`], and reports per-request inference latency
+//! (p50/p99) at 1, 8, and 32 concurrent client streams, plus a
+//! pool-batched dispatch and an 8-stream run under continuous
+//! hot-swapping — the serving layer's headline numbers.
+
+mod common;
+
+use hdp_sparse::benchkit::fmt_time;
+use hdp_sparse::hdp::pc::PcSampler;
+use hdp_sparse::hdp::Trainer;
+use hdp_sparse::serve::{InferMode, InferRequest, ModelSnapshot, Server};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::time::{Duration, Instant};
+
+/// Nearest-rank percentile of an ascending-sorted sample.
+fn percentile(sorted: &[f64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    sorted[((sorted.len() - 1) as f64 * q).round() as usize]
+}
+
+/// Serve every request once across `streams` client threads (thread t
+/// takes indices t, t+streams, ...). Returns (sorted latencies, wall
+/// seconds, total tokens scored).
+fn run_streams(
+    server: &Server,
+    reqs: &[InferRequest],
+    streams: usize,
+) -> (Vec<f64>, f64, u64) {
+    let t0 = Instant::now();
+    let mut lat: Vec<f64> = Vec::with_capacity(reqs.len());
+    let mut scored = 0u64;
+    std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..streams)
+            .map(|t| {
+                scope.spawn(move || {
+                    let mut lats = Vec::new();
+                    let mut tok = 0u64;
+                    let mut i = t;
+                    while i < reqs.len() {
+                        let q0 = Instant::now();
+                        let r = server.serve_one(&reqs[i]);
+                        lats.push(q0.elapsed().as_secs_f64());
+                        tok += r.tokens_scored;
+                        i += streams;
+                    }
+                    (lats, tok)
+                })
+            })
+            .collect();
+        for h in handles {
+            let (l, t) = h.join().unwrap();
+            lat.extend(l);
+            scored += t;
+        }
+    });
+    let wall = t0.elapsed().as_secs_f64();
+    lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    (lat, wall, scored)
+}
+
+fn row(case: &str, lat: &[f64], wall: f64, n: usize) {
+    println!(
+        "{:>28} {:>12} {:>12} {:>10.0}",
+        case,
+        fmt_time(percentile(lat, 0.50)),
+        fmt_time(percentile(lat, 0.99)),
+        n as f64 / wall
+    );
+}
+
+fn main() {
+    let corpus = common::bench_corpus();
+    let cfg = common::paper_cfg(200);
+    let threads = 4usize;
+    let mut s = PcSampler::new(corpus.clone(), cfg, threads, 2024).unwrap();
+    for _ in 0..30 {
+        s.step().unwrap();
+    }
+    let pool = s.pool_handle();
+
+    let num_requests = 512usize;
+    let reqs: Vec<InferRequest> = (0..num_requests)
+        .map(|i| InferRequest {
+            id: i as u64,
+            tokens: corpus.docs[i % corpus.num_docs()].clone(),
+            seed: 7,
+            passes: 3,
+            mode: InferMode::Mixture,
+        })
+        .collect();
+
+    let server = Server::new(pool, ModelSnapshot::from_pc(&s, 1));
+    {
+        let snap = server.snapshot();
+        println!(
+            "serve_latency: {} requests on {} ({} threads)",
+            reqs.len(),
+            snap.describe(),
+            threads
+        );
+    }
+    println!(
+        "{:>28} {:>12} {:>12} {:>10}",
+        "case", "p50", "p99", "req/s"
+    );
+
+    let mut total_scored = 0u64;
+    for &streams in &[1usize, 8, 32] {
+        let (lat, wall, scored) = run_streams(&server, &reqs, streams);
+        total_scored += scored;
+        row(&format!("inline_{streams}_streams"), &lat, wall, reqs.len());
+    }
+
+    // One pool dispatch, one task per request (batch-level latency
+    // only — individual requests share the pool's slots).
+    let t0 = Instant::now();
+    let batch = server.serve_batch(&reqs);
+    let wall = t0.elapsed().as_secs_f64();
+    total_scored += batch.iter().map(|r| r.tokens_scored).sum::<u64>();
+    println!(
+        "{:>28} {:>12} {:>12} {:>10.0}",
+        "pool_batch",
+        "-",
+        fmt_time(wall),
+        batch.len() as f64 / wall
+    );
+
+    // 8 streams served while a writer hot-swaps pre-frozen snapshots:
+    // the publish path must not dent tail latency.
+    let snaps: Vec<ModelSnapshot> =
+        (0..16u64).map(|i| ModelSnapshot::from_pc(&s, 100 + i)).collect();
+    let stop = AtomicBool::new(false);
+    let t0 = Instant::now();
+    let mut lat: Vec<f64> = Vec::new();
+    let mut served = 0usize;
+    std::thread::scope(|scope| {
+        let writer = {
+            let server = &server;
+            let stop = &stop;
+            scope.spawn(move || {
+                for snap in snaps {
+                    server.publish(snap);
+                    std::thread::sleep(Duration::from_millis(5));
+                }
+                stop.store(true, Ordering::Release);
+            })
+        };
+        let handles: Vec<_> = (0..8usize)
+            .map(|t| {
+                let server = &server;
+                let reqs = &reqs;
+                let stop = &stop;
+                scope.spawn(move || {
+                    let mut lats = Vec::new();
+                    let mut tok = 0u64;
+                    let mut i = t;
+                    while !stop.load(Ordering::Acquire) {
+                        let q0 = Instant::now();
+                        let r = server.serve_one(&reqs[i % reqs.len()]);
+                        lats.push(q0.elapsed().as_secs_f64());
+                        tok += r.tokens_scored;
+                        i += 8;
+                    }
+                    (lats, tok)
+                })
+            })
+            .collect();
+        writer.join().unwrap();
+        for h in handles {
+            let (l, t) = h.join().unwrap();
+            served += l.len();
+            total_scored += t;
+            lat.extend(l);
+        }
+    });
+    let wall = t0.elapsed().as_secs_f64();
+    lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    row("hot_swap_8_streams", &lat, wall, served);
+    println!(
+        "final generation {}, {} tokens scored overall",
+        server.generation(),
+        total_scored
+    );
+}

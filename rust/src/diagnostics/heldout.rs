@@ -23,11 +23,123 @@ pub struct HeldoutResult {
     pub skipped: u64,
 }
 
+/// Stream id of the fold-in RNG. Shared with the serving layer
+/// ([`crate::serve`]): a server request and a direct
+/// [`document_completion`] call with the same derived seed construct
+/// the same generator and therefore consume identical randomness.
+pub const FOLD_IN_STREAM: u64 = 0x4e1d;
+
+/// Running accumulators of a completion-scoring pass. Kept as one
+/// mutable value (rather than per-call returns) so multi-document
+/// evaluations add `ln p` terms in exactly the caller's document
+/// order — float summation order is part of the bit-reproducibility
+/// contract.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct CompletionScore {
+    /// `Σ ln p(w)` over scored tokens.
+    pub log_p: f64,
+    /// Tokens scored.
+    pub scored: u64,
+    /// Tokens with zero mass under the model (skipped).
+    pub skipped: u64,
+}
+
+/// Fold-in Gibbs: estimate the θ̂ count vector `m` for `tokens` by
+/// `passes` sweeps of the sampler's z conditional (eq. 24) against the
+/// *fixed* `(Φ, Ψ)`. `weights` is caller scratch of length ≥ `psi.len()`;
+/// `m` is resized to `psi.len()` and overwritten.
+///
+/// RNG contract (the serving layer's determinism guarantee leans on
+/// this): one `below(k_max)` draw per token for the uniform
+/// initialization, then per pass per token either exactly one
+/// categorical draw, or none when the word has zero mass in every
+/// topic. Nothing else touches `rng`.
+#[allow(clippy::too_many_arguments)]
+pub fn fold_in_gibbs(
+    rng: &mut Pcg64,
+    tokens: &[u32],
+    phi: &PhiMatrix,
+    psi: &[f64],
+    alpha: f64,
+    passes: usize,
+    weights: &mut [f64],
+    m: &mut Vec<u32>,
+) {
+    let k_max = psi.len();
+    debug_assert!(weights.len() >= k_max);
+    m.clear();
+    m.resize(k_max, 0);
+    let mut z: Vec<u32> =
+        tokens.iter().map(|_| rng.below(k_max as u64) as u32).collect();
+    for &k in &z {
+        m[k as usize] += 1;
+    }
+    for _ in 0..passes {
+        for (i, &v) in tokens.iter().enumerate() {
+            let kold = z[i] as usize;
+            m[kold] -= 1;
+            let (col_topics, col_probs) = phi.col(v);
+            let mut total = 0.0;
+            weights[..k_max].iter_mut().for_each(|w| *w = 0.0);
+            for (&k, &p) in col_topics.iter().zip(col_probs) {
+                let w = p * (alpha * psi[k as usize] + m[k as usize] as f64);
+                weights[k as usize] = w;
+                total += w;
+            }
+            let knew = if total <= 0.0 {
+                kold
+            } else {
+                dist::categorical(rng, &weights[..k_max])
+            };
+            z[i] = knew as u32;
+            m[knew] += 1;
+        }
+    }
+}
+
+/// Score `held` tokens under the θ̂ point estimate implied by `m`
+/// (posterior mean given the folded-in assignments):
+/// `p(w) = Σ_k θ̂_k φ_{k,w}` with `θ̂_k = (m_k + α Ψ_k) / denom`.
+/// Accumulates into `acc` in token order.
+pub fn score_completion(
+    held: &[u32],
+    phi: &PhiMatrix,
+    psi: &[f64],
+    alpha: f64,
+    m: &[u32],
+    denom: f64,
+    acc: &mut CompletionScore,
+) {
+    for &v in held {
+        let (col_topics, col_probs) = phi.col(v);
+        if col_topics.is_empty() {
+            acc.skipped += 1;
+            continue;
+        }
+        let mut p = 0.0f64;
+        for (&k, &pw) in col_topics.iter().zip(col_probs) {
+            let theta =
+                (m[k as usize] as f64 + alpha * psi[k as usize]) / denom;
+            p += theta * pw;
+        }
+        if p > 0.0 {
+            acc.log_p += p.ln();
+            acc.scored += 1;
+        } else {
+            acc.skipped += 1;
+        }
+    }
+}
+
 /// Evaluate document-completion perplexity of `(phi, psi)` on held-out
 /// documents. `gibbs_passes` sweeps estimate θ̂ from the observed half.
 /// `corpus` is any [`DocAccess`] source (nested [`crate::corpus::Corpus`]
 /// or packed [`crate::corpus::PackedCorpus`]) — the RNG consumption is
 /// per-document, so the result is bit-identical across layouts.
+///
+/// Built on [`fold_in_gibbs`] + [`score_completion`], the same core the
+/// serving layer answers requests with: one `Completion`-mode request
+/// per document reproduces this evaluation bit-for-bit.
 pub fn document_completion<C: DocAccess + ?Sized>(
     corpus: &C,
     docs: &[usize],
@@ -38,11 +150,10 @@ pub fn document_completion<C: DocAccess + ?Sized>(
     seed: u64,
 ) -> HeldoutResult {
     let k_max = psi.len();
-    let mut rng = Pcg64::with_stream(seed, 0x4e1d);
-    let mut log_p = 0.0f64;
-    let mut scored = 0u64;
-    let mut skipped = 0u64;
+    let mut rng = Pcg64::with_stream(seed, FOLD_IN_STREAM);
+    let mut acc = CompletionScore::default();
     let mut weights = vec![0.0f64; k_max];
+    let mut m: Vec<u32> = Vec::new();
     for &d in docs {
         let doc = corpus.doc(d);
         if doc.len() < 2 {
@@ -51,63 +162,18 @@ pub fn document_completion<C: DocAccess + ?Sized>(
         let half = doc.len() / 2;
         let (observed, held) = doc.split_at(half);
         // θ̂ estimation: collapsed Gibbs on the observed half with Φ, Ψ
-        // fixed (the PC z conditional).
-        let mut z: Vec<u32> = observed
-            .iter()
-            .map(|_| rng.below(k_max as u64) as u32)
-            .collect();
-        let mut m = vec![0u32; k_max];
-        for &k in &z {
-            m[k as usize] += 1;
-        }
-        for _ in 0..gibbs_passes {
-            for (i, &v) in observed.iter().enumerate() {
-                let kold = z[i] as usize;
-                m[kold] -= 1;
-                let (col_topics, col_probs) = phi.col(v);
-                let mut total = 0.0;
-                weights[..k_max].iter_mut().for_each(|w| *w = 0.0);
-                for (&k, &p) in col_topics.iter().zip(col_probs) {
-                    let w = p * (alpha * psi[k as usize] + m[k as usize] as f64);
-                    weights[k as usize] = w;
-                    total += w;
-                }
-                let knew = if total <= 0.0 {
-                    kold
-                } else {
-                    dist::categorical(&mut rng, &weights)
-                };
-                z[i] = knew as u32;
-                m[knew] += 1;
-            }
-        }
-        // θ̂ point estimate (posterior mean given the final z).
+        // fixed (the PC z conditional), then score the held-out half.
+        fold_in_gibbs(
+            &mut rng, observed, phi, psi, alpha, gibbs_passes, &mut weights,
+            &mut m,
+        );
         let denom = observed.len() as f64 + alpha;
-        // score the held-out half
-        for &v in held {
-            let (col_topics, col_probs) = phi.col(v);
-            if col_topics.is_empty() {
-                skipped += 1;
-                continue;
-            }
-            let mut p = 0.0f64;
-            for (&k, &pw) in col_topics.iter().zip(col_probs) {
-                let theta =
-                    (m[k as usize] as f64 + alpha * psi[k as usize]) / denom;
-                p += theta * pw;
-            }
-            if p > 0.0 {
-                log_p += p.ln();
-                scored += 1;
-            } else {
-                skipped += 1;
-            }
-        }
+        score_completion(held, phi, psi, alpha, &m, denom, &mut acc);
     }
     HeldoutResult {
-        perplexity: (-log_p / scored.max(1) as f64).exp(),
-        tokens: scored,
-        skipped,
+        perplexity: (-acc.log_p / acc.scored.max(1) as f64).exp(),
+        tokens: acc.scored,
+        skipped: acc.skipped,
     }
 }
 

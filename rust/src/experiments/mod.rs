@@ -226,6 +226,160 @@ pub fn cmd_eval_xla(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
+/// Nearest-rank percentile of an ascending-sorted sample.
+fn percentile(sorted: &[f64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let idx = ((sorted.len() - 1) as f64 * q).round() as usize;
+    sorted[idx]
+}
+
+/// `repro serve ...` — freeze a snapshot (from a fresh training run or
+/// a saved checkpoint) and measure topic-inference latency: inline
+/// `serve_one` at several client-stream counts (p50/p99), then one
+/// pooled `serve_batch` dispatch.
+pub fn cmd_serve(args: &Args) -> anyhow::Result<()> {
+    use crate::benchkit::fmt_time;
+    use crate::diagnostics::heldout;
+    use crate::serve::{InferMode, InferRequest, ModelSnapshot, Server};
+    let corpus_name = args.value("corpus").unwrap_or("tiny").to_string();
+    let ckpt_path = args.value("checkpoint").map(PathBuf::from);
+    let cfg = HdpConfig {
+        alpha: args.get_or("alpha", 0.1)?,
+        beta: args.get_or("beta", 0.01)?,
+        gamma: args.get_or("gamma", 1.0)?,
+        k_max: args.get_or("k-max", 200)?,
+        init_topics: 1,
+    };
+    let iterations: usize = args.get_or("iterations", 50)?;
+    let threads: usize = args.get_or("threads", 4)?;
+    let seed: u64 = args.get_or("seed", 2020)?;
+    let num_requests: usize = args.get_or("requests", 256)?;
+    let passes: usize = args.get_or("passes", 3)?;
+    let streams_spec = args.value("streams").unwrap_or("1,8,32").to_string();
+    args.finish()?;
+    anyhow::ensure!(num_requests > 0, "--requests must be > 0");
+    let streams_list: Vec<usize> = streams_spec
+        .split(',')
+        .map(|s| s.trim().parse::<usize>())
+        .collect::<Result<_, _>>()
+        .map_err(|e| anyhow::anyhow!("bad --streams `{streams_spec}`: {e}"))?;
+    anyhow::ensure!(
+        streams_list.iter().all(|&s| s > 0),
+        "--streams entries must be > 0"
+    );
+
+    let corpus = Arc::new(registry::load(&corpus_name, seed)?);
+    let (snapshot, pool) = if let Some(path) = ckpt_path {
+        let ckpt = crate::hdp::checkpoint::Checkpoint::load(&path)?;
+        let pool = Arc::new(crate::par::WorkerPool::new(threads));
+        let snap = ModelSnapshot::from_checkpoint(
+            &ckpt,
+            &corpus,
+            cfg.alpha,
+            cfg.beta,
+            seed ^ 0xf00d,
+            &*pool,
+        )?;
+        println!("checkpoint {} -> {}", path.display(), snap.describe());
+        (snap, pool)
+    } else {
+        let mut s = PcSampler::new(corpus.clone(), cfg, threads, seed)?;
+        for _ in 0..iterations {
+            s.step()?;
+        }
+        let pool = s.pool_handle();
+        let snap = ModelSnapshot::from_pc(&s, seed ^ 0xf00d);
+        println!(
+            "trained {iterations} iterations on `{corpus_name}` -> {}",
+            snap.describe()
+        );
+        (snap, pool)
+    };
+    let server = Server::new(pool, snapshot);
+
+    // Completion-mode requests drawn from a held-out document split
+    // (cycled if the split is smaller than --requests).
+    let (_, test) = heldout::train_test_split(corpus.num_docs(), 0.5, seed);
+    anyhow::ensure!(!test.is_empty(), "corpus too small for a held-out split");
+    let reqs: Vec<InferRequest> = (0..num_requests)
+        .map(|i| InferRequest {
+            id: i as u64,
+            tokens: corpus.docs[test[i % test.len()]].clone(),
+            seed,
+            passes,
+            mode: InferMode::Completion,
+        })
+        .collect();
+
+    println!(
+        "serving {} completion requests, {} fold-in passes, gen {}",
+        reqs.len(),
+        passes,
+        server.generation()
+    );
+    println!(
+        "{:>8} {:>12} {:>12} {:>10} {:>12}",
+        "streams", "p50", "p99", "req/s", "tokens"
+    );
+    for &streams in &streams_list {
+        let t0 = std::time::Instant::now();
+        let mut lat: Vec<f64> = Vec::with_capacity(reqs.len());
+        let mut scored = 0u64;
+        std::thread::scope(|scope| {
+            let handles: Vec<_> = (0..streams)
+                .map(|t| {
+                    let server = &server;
+                    let reqs = &reqs;
+                    scope.spawn(move || {
+                        let mut lats = Vec::new();
+                        let mut tok = 0u64;
+                        let mut i = t;
+                        while i < reqs.len() {
+                            let q0 = std::time::Instant::now();
+                            let r = server.serve_one(&reqs[i]);
+                            lats.push(q0.elapsed().as_secs_f64());
+                            tok += r.tokens_scored;
+                            i += streams;
+                        }
+                        (lats, tok)
+                    })
+                })
+                .collect();
+            for h in handles {
+                let (l, t) = h.join().unwrap();
+                lat.extend(l);
+                scored += t;
+            }
+        });
+        let wall = t0.elapsed().as_secs_f64();
+        lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        println!(
+            "{:>8} {:>12} {:>12} {:>10.0} {:>12}",
+            streams,
+            fmt_time(percentile(&lat, 0.50)),
+            fmt_time(percentile(&lat, 0.99)),
+            reqs.len() as f64 / wall,
+            scored
+        );
+    }
+
+    let t0 = std::time::Instant::now();
+    let batch = server.serve_batch(&reqs);
+    let wall = t0.elapsed().as_secs_f64();
+    let batch_scored: u64 = batch.iter().map(|r| r.tokens_scored).sum();
+    println!(
+        "pool batch: {} requests in {} ({:.0} req/s, {} tokens, gen {})",
+        batch.len(),
+        fmt_time(wall),
+        batch.len() as f64 / wall,
+        batch_scored,
+        batch[0].generation
+    );
+    Ok(())
+}
+
 /// `repro exp <which>` dispatcher.
 pub fn cmd_exp(args: &Args) -> anyhow::Result<()> {
     let which = args.positional(1).unwrap_or("all").to_string();

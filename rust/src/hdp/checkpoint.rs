@@ -13,7 +13,7 @@
 //! length-prefixed vectors) are still read.
 
 use crate::corpus::Corpus;
-use crate::sparse::DocTopics;
+use crate::sparse::{DocTopics, TopicWordAcc, TopicWordRows};
 use anyhow::{Context, Result};
 use std::io::{BufReader, BufWriter, Read, Write};
 use std::path::Path;
@@ -169,6 +169,54 @@ impl Checkpoint {
         let m: Vec<DocTopics> =
             self.z.iter().map(|zd| zd.iter().copied().collect()).collect();
         super::state::Assignments { z: self.z.clone(), m }
+    }
+
+    /// Rebuild the merged topic-word statistic `n` from the stored
+    /// assignments against `corpus`' tokens. The result is the
+    /// canonical sorted/merged form ([`TopicWordRows::merge_from`]),
+    /// value-identical to a live sampler's `n` in the same state —
+    /// which is what lets a snapshot frozen from a checkpoint
+    /// ([`crate::serve::ModelSnapshot::from_checkpoint`]) predict
+    /// bit-identically to one frozen off the live chain.
+    pub fn topic_word_rows(&self, corpus: &Corpus) -> Result<TopicWordRows> {
+        self.validate(corpus)?;
+        let k = self.psi.len();
+        let mut acc =
+            TopicWordAcc::with_capacity(corpus.num_tokens() as usize / 2 + 16);
+        for (doc, zd) in corpus.docs.iter().zip(&self.z) {
+            for (&v, &kk) in doc.iter().zip(zd) {
+                acc.add(kk, v, 1);
+            }
+        }
+        Ok(TopicWordRows::merge_from(k, &mut [acc]))
+    }
+
+    /// Write the **legacy version-1 layout** (per-document
+    /// length-prefixed z vectors) — the format PR ≤ 3 binaries
+    /// produced. Kept as a public writer so format-compatibility
+    /// tests can mint v1 fixtures; new code should use
+    /// [`Checkpoint::save`].
+    pub fn save_v1(&self, path: &Path) -> Result<()> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let mut f = BufWriter::new(std::fs::File::create(path)?);
+        f.write_all(MAGIC_V1)?;
+        write_u64(&mut f, self.iteration)?;
+        let name = self.sampler.as_bytes();
+        write_u64(&mut f, name.len() as u64)?;
+        f.write_all(name)?;
+        write_u64(&mut f, self.psi.len() as u64)?;
+        for &p in &self.psi {
+            f.write_all(&p.to_le_bytes())?;
+        }
+        write_u64(&mut f, self.z.len() as u64)?;
+        for zd in &self.z {
+            write_u64(&mut f, zd.len() as u64)?;
+            crate::corpus::io::write_u32s(&mut f, zd)?;
+        }
+        f.flush()?;
+        Ok(())
     }
 
     /// Snapshot a **file-backed** z store at the checkpoint boundary.
@@ -360,30 +408,6 @@ mod tests {
         std::fs::remove_dir_all(path.parent().unwrap()).ok();
     }
 
-    /// Write `ckpt` in the legacy version-1 layout (per-document
-    /// length-prefixed vectors) — the format PR ≤ 3 binaries produced.
-    fn save_v1(ckpt: &Checkpoint, path: &Path) {
-        use std::io::Write;
-        let mut f = std::io::BufWriter::new(std::fs::File::create(path).unwrap());
-        f.write_all(b"HDPCKPT1").unwrap();
-        f.write_all(&ckpt.iteration.to_le_bytes()).unwrap();
-        let name = ckpt.sampler.as_bytes();
-        f.write_all(&(name.len() as u64).to_le_bytes()).unwrap();
-        f.write_all(name).unwrap();
-        f.write_all(&(ckpt.psi.len() as u64).to_le_bytes()).unwrap();
-        for &p in &ckpt.psi {
-            f.write_all(&p.to_le_bytes()).unwrap();
-        }
-        f.write_all(&(ckpt.z.len() as u64).to_le_bytes()).unwrap();
-        for zd in &ckpt.z {
-            f.write_all(&(zd.len() as u64).to_le_bytes()).unwrap();
-            for &k in zd {
-                f.write_all(&k.to_le_bytes()).unwrap();
-            }
-        }
-        f.flush().unwrap();
-    }
-
     fn sample_ckpt() -> Checkpoint {
         Checkpoint {
             iteration: 12,
@@ -408,9 +432,12 @@ mod tests {
         // is offsets [0,4,4,6] followed by the flat arena.
         let bytes = std::fs::read(&p2).unwrap();
         assert_eq!(&bytes[..8], b"HDPCKPT2");
-        // Legacy v1 loads to the same snapshot.
+        // Legacy v1 (the public compat writer) loads to the same
+        // snapshot.
         let p1 = dir.join("v1.ckpt");
-        save_v1(&ckpt, &p1);
+        ckpt.save_v1(&p1).unwrap();
+        let bytes1 = std::fs::read(&p1).unwrap();
+        assert_eq!(&bytes1[..8], b"HDPCKPT1");
         assert_eq!(Checkpoint::load(&p1).unwrap(), ckpt);
         // Unknown version is rejected.
         let mut bad = bytes.clone();

@@ -248,6 +248,14 @@ impl PcSampler {
         &self.pool
     }
 
+    /// An owning handle to the sampler's pool, for components that
+    /// outlive a borrow of the sampler — e.g. a [`crate::serve::Server`]
+    /// answering queries on the training pool between (never during)
+    /// steps.
+    pub fn pool_handle(&self) -> Arc<WorkerPool> {
+        self.pool.clone()
+    }
+
     /// Enable/disable the phase pipeline (default on). Disabling joins
     /// and discards any in-flight Φ job; the chain is bit-identical
     /// either way, so this is purely a scheduling choice.

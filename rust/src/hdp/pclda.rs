@@ -136,6 +136,33 @@ impl PcLdaSampler {
         &self.pool
     }
 
+    /// An owning handle to the sampler's pool (see
+    /// [`super::pc::PcSampler::pool_handle`]).
+    pub fn pool_handle(&self) -> Arc<WorkerPool> {
+        self.pool.clone()
+    }
+
+    /// The fixed uniform `Ψ` over the K topics — the implicit prior
+    /// assumption LDA makes (paper §2.4).
+    pub fn psi(&self) -> &[f64] {
+        &self.psi
+    }
+
+    /// Number of topics K.
+    pub fn num_topics(&self) -> usize {
+        self.k
+    }
+
+    /// Document-side concentration α.
+    pub fn alpha(&self) -> f64 {
+        self.alpha
+    }
+
+    /// Topic-word prior mass β.
+    pub fn beta(&self) -> f64 {
+        self.beta
+    }
+
     /// Enable/disable the phase pipeline (default on); chains are
     /// bit-identical either way.
     pub fn set_pipelined(&mut self, pipelined: bool) {

@@ -38,4 +38,5 @@ pub mod rng;
 /// `Cargo.toml`). The default build is pure rust + std.
 #[cfg(feature = "xla")]
 pub mod runtime;
+pub mod serve;
 pub mod sparse;

@@ -7,6 +7,7 @@
 //! repro exp all   [--scale 1.0] [--out-dir results] [--quick]
 //! repro exp table2 | fig1-small | fig1-neurips | fig1-pubmed | topics
 //! repro corpus    --name pubmed
+//! repro serve     --corpus ap --requests 256 --streams 1,8,32
 //! repro eval-xla  --corpus tiny         # PJRT artifact cross-check
 //! ```
 
@@ -25,6 +26,9 @@ USAGE:
                  [--scale F] [--threads N] [--seed N] [--out-dir DIR] [--quick]
                  [--corpus NAME] [--all]           (topics only)
   repro corpus   --name NAME [--seed N]
+  repro serve    [--corpus NAME] [--checkpoint CKPT] [--iterations N]
+                 [--threads N] [--seed N] [--requests N] [--streams 1,8,32]
+                 [--passes N] [--alpha F] [--beta F] [--gamma F] [--k-max N]
   repro eval-xla [--corpus NAME] [--iterations N]
   repro help
 
@@ -39,6 +43,7 @@ fn main() {
         "train" => experiments::cmd_train(&args),
         "exp" => experiments::cmd_exp(&args),
         "corpus" => experiments::cmd_corpus(&args),
+        "serve" => experiments::cmd_serve(&args),
         "eval-xla" => experiments::cmd_eval_xla(&args),
         "help" | "--help" | "-h" => {
             print!("{USAGE}");

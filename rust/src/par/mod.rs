@@ -25,8 +25,9 @@
 pub mod pool;
 
 pub use pool::{
-    exec_for, exec_map, exec_shards, exec_shards_with, exec_shards_with_sched, stats,
-    Executor, JobHandle, MapJob, Schedule, WorkerPool,
+    exec_each, exec_for, exec_map, exec_shards, exec_shards_with,
+    exec_shards_with_sched, stats, Executor, JobHandle, MapJob, Schedule,
+    WorkerPool,
 };
 
 /// A contiguous shard `[start, end)` of some index space.

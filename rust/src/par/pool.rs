@@ -810,6 +810,41 @@ pub fn exec_map<R: Send>(
     out.into_iter().map(|r| r.expect("task completed")).collect()
 }
 
+/// Parallel map over `0..n` with **one task per index** — no chunking.
+/// This is the serving shape: many small, independently sized jobs
+/// (one per request) where [`exec_map`]'s contiguous ranges would
+/// convoy a slow item behind its chunk-mates. Work-stealing balances
+/// the tail. Results come back in index order.
+///
+/// Meant for pool executors; on the scoped `usize` strategy every
+/// index spawns its own thread, so keep `n` small there. Concurrent
+/// blocking dispatches from many client threads are safe (the pool's
+/// dispatch gate serializes them), but — like every blocking dispatch
+/// — calling this from *inside* a pool task deadlocks.
+pub fn exec_each<R: Send>(
+    exec: impl Executor,
+    n: usize,
+    f: impl Fn(usize) -> R + Sync,
+) -> Vec<R> {
+    if n == 0 {
+        return Vec::new();
+    }
+    let mut out: Vec<Option<R>> = Vec::with_capacity(n);
+    out.resize_with(n, || None);
+    {
+        let base = SendPtr(out.as_mut_ptr());
+        let task = move |_slot: usize, i: usize| {
+            let r = f(i);
+            // SAFETY: each task id writes only its own index.
+            unsafe {
+                *base.0.add(i) = Some(r);
+            }
+        };
+        exec.run_tasks(n, &task);
+    }
+    out.into_iter().map(|r| r.expect("task completed")).collect()
+}
+
 /// Parallel for over `0..n`, chunked into `exec.slots()` ranges.
 pub fn exec_for(exec: impl Executor, n: usize, f: impl Fn(usize) + Sync) {
     if n == 0 {

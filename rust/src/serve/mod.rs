@@ -1,0 +1,140 @@
+//! Frozen-snapshot topic-inference serving.
+//!
+//! Training samplers mutate `(Φ, Ψ, z)` in place every iteration —
+//! useless for answering queries. This module freezes one posterior
+//! draw into an immutable [`ModelSnapshot`] and answers per-document
+//! inference requests against it, concurrently and reproducibly, while
+//! training continues elsewhere.
+//!
+//! # Snapshot lifecycle: freeze → publish → retire
+//!
+//! 1. **Freeze.** [`ModelSnapshot::from_pc`] /
+//!    [`ModelSnapshot::from_pclda`] /
+//!    [`ModelSnapshot::from_checkpoint`] sample `Φ̂` from the current
+//!    topic-word counts with a *fresh* RNG root (never the training
+//!    chain's — see the bugfix note below), normalize it into a
+//!    [`crate::sparse::PhiMatrix`], and prebuild the bucket-(a) alias
+//!    tables (`φ·α·Ψ` per word, §2.5 of the paper). The snapshot owns
+//!    everything it needs; the sampler can keep training or drop.
+//! 2. **Publish.** [`Server::publish`] (backed by [`SnapshotCell`])
+//!    swaps the served `Arc<ModelSnapshot>` atomically and stamps a
+//!    monotonically increasing *generation*. Readers that loaded the
+//!    previous snapshot finish on it — in-flight requests never observe
+//!    a torn or mixed state, because a snapshot is immutable after
+//!    construction and the swap replaces the whole `Arc`.
+//! 3. **Retire.** When the last in-flight request drops its clone, the
+//!    old snapshot's refcount hits zero and it frees itself. There is
+//!    no epoch machinery to drive; `Arc` is the reclamation scheme.
+//!
+//! # Determinism contract
+//!
+//! Every response is a pure function of
+//! `(request tokens, request seed, request id, snapshot)`:
+//!
+//! * The per-request generator is
+//!   `Pcg64::with_stream(request_seed(seed, id, generation), FOLD_IN_STREAM)`
+//!   — derived from the request *and the snapshot generation it ran
+//!   against*, never shared with the training chain. Re-issuing the
+//!   same `(request, seed)` against the same snapshot reproduces the
+//!   response bit-for-bit; the same request against a different
+//!   generation draws an unrelated stream.
+//! * [`InferMode::Completion`] consumes randomness exactly like
+//!   [`crate::diagnostics::heldout::document_completion`], so a served
+//!   completion request and a direct heldout evaluation with the same
+//!   derived seed agree to the bit (pinned in `tests/statistical.rs`).
+//! * Serving never touches sampler state: snapshots are frozen copies
+//!   and request RNGs are derived, so interleaving queries with
+//!   training steps leaves the training chain bit-identical (pinned in
+//!   `tests/serving.rs`).
+
+pub mod server;
+pub mod snapshot;
+
+pub use server::{Server, SnapshotCell};
+pub use snapshot::ModelSnapshot;
+
+use crate::rng::SplitMix64;
+
+/// How [`ModelSnapshot::infer`] turns tokens into a response.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum InferMode {
+    /// Fold in *all* tokens with the dense-column Gibbs scan and report
+    /// the topic mixture `θ̂` (plus the full-document likelihood under
+    /// it — observed and scored sets coincide).
+    Mixture,
+    /// Same posterior as [`InferMode::Mixture`], but the per-token draw
+    /// uses the snapshot's prebuilt alias tables and the sparse
+    /// bucket-(b) walk — the sampler's own doubly sparse z kernel
+    /// shape. Different RNG consumption, same stationary conditional.
+    SparseMixture,
+    /// Document-completion protocol: fold in the first half, score the
+    /// second. Bit-compatible with
+    /// [`crate::diagnostics::heldout::document_completion`].
+    Completion,
+}
+
+/// One independent inference job.
+#[derive(Clone, Debug)]
+pub struct InferRequest {
+    /// Caller-chosen id; echoed in the response and mixed into the
+    /// per-request RNG stream.
+    pub id: u64,
+    /// The document's word ids (must be `< snapshot.vocab()`).
+    pub tokens: Vec<u32>,
+    /// Base seed for this request's private randomness.
+    pub seed: u64,
+    /// Fold-in Gibbs sweeps over the observed tokens.
+    pub passes: usize,
+    /// Inference protocol.
+    pub mode: InferMode,
+}
+
+/// Result of serving one [`InferRequest`].
+#[derive(Clone, Debug)]
+pub struct InferResponse {
+    /// Echo of [`InferRequest::id`].
+    pub id: u64,
+    /// Generation of the snapshot that answered (attribution: exactly
+    /// one published snapshot produced this response).
+    pub generation: u64,
+    /// Sparse posterior-mean mixture: `(k, (m_k + α Ψ_k) / denom)` for
+    /// topics with `m_k > 0`, sorted by topic id.
+    pub theta: Vec<(u32, f64)>,
+    /// Raw fold-in counts `(k, m_k)` for topics with `m_k > 0`.
+    pub topic_counts: Vec<(u32, u32)>,
+    /// `Σ ln p(w)` over the scored tokens.
+    pub log_likelihood: f64,
+    /// Tokens scored.
+    pub tokens_scored: u64,
+    /// Tokens with zero mass under the snapshot (skipped).
+    pub tokens_skipped: u64,
+}
+
+/// Derive the per-request RNG seed from `(base seed, request id,
+/// snapshot generation)`.
+///
+/// Two SplitMix64 mixes so that id and generation each diffuse through
+/// the full 64 bits independently: requests differing in any one of
+/// the three inputs get unrelated `Pcg64` streams, and a request
+/// re-run against a *new* generation re-draws rather than replaying.
+/// Public so tests (and callers cross-checking against
+/// [`crate::diagnostics::heldout::document_completion`]) can derive
+/// the exact seed a server used.
+pub fn request_seed(seed: u64, request_id: u64, generation: u64) -> u64 {
+    let a = SplitMix64::new(seed ^ request_id.rotate_left(21)).next_u64();
+    SplitMix64::new(a ^ generation.rotate_left(42)).next_u64()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn request_seed_sensitivity() {
+        let base = request_seed(7, 11, 1);
+        assert_ne!(base, request_seed(8, 11, 1), "seed must matter");
+        assert_ne!(base, request_seed(7, 12, 1), "id must matter");
+        assert_ne!(base, request_seed(7, 11, 2), "generation must matter");
+        assert_eq!(base, request_seed(7, 11, 1), "pure function");
+    }
+}

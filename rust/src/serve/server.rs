@@ -1,0 +1,202 @@
+//! The publish cell and the request-serving front end.
+//!
+//! Hot-swap scheme (hand-rolled arc-swap): the served snapshot lives in
+//! a [`SnapshotCell`] as an `Arc<ModelSnapshot>` behind a mutex that is
+//! held only for the duration of an `Arc` clone or store — never while
+//! inference runs. Readers `load()` a clone and work on it unlocked;
+//! a publisher swaps in a new `Arc` and bumps the generation counter.
+//! In-flight requests keep the snapshot they loaded alive through its
+//! refcount and finish on it; the retired snapshot frees itself when
+//! the last clone drops.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::par::{self, WorkerPool};
+
+use super::{InferRequest, InferResponse, ModelSnapshot};
+
+/// Atomically swappable `Arc<ModelSnapshot>` with a monotonically
+/// increasing generation stamp.
+///
+/// The mutex is a publication primitive only: the critical section is
+/// an `Arc` clone (load) or an `Arc` store (publish), both O(1) and
+/// never blocking on inference work. The separate [`AtomicU64`] lets
+/// callers poll the published generation without touching the lock.
+pub struct SnapshotCell {
+    current: Mutex<Arc<ModelSnapshot>>,
+    generation: AtomicU64,
+}
+
+impl SnapshotCell {
+    /// Wrap the first snapshot, stamping it generation 1.
+    pub fn new(mut first: ModelSnapshot) -> Self {
+        first.generation = 1;
+        Self {
+            current: Mutex::new(Arc::new(first)),
+            generation: AtomicU64::new(1),
+        }
+    }
+
+    /// Publish a new snapshot: stamp it with the next generation and
+    /// swap it in. Readers that already loaded the previous `Arc` are
+    /// unaffected; subsequent loads see the new one. Returns the
+    /// generation assigned.
+    pub fn publish(&self, mut snap: ModelSnapshot) -> u64 {
+        let mut guard = self.current.lock().unwrap();
+        let next = guard.generation + 1;
+        snap.generation = next;
+        *guard = Arc::new(snap);
+        drop(guard);
+        self.generation.store(next, Ordering::Release);
+        next
+    }
+
+    /// Clone the current snapshot handle (short lock, no copying of
+    /// model state). The returned snapshot is immutable and valid for
+    /// as long as the caller holds it, regardless of later publishes.
+    pub fn load(&self) -> Arc<ModelSnapshot> {
+        self.current.lock().unwrap().clone()
+    }
+
+    /// The most recently published generation (lock-free).
+    pub fn generation(&self) -> u64 {
+        self.generation.load(Ordering::Acquire)
+    }
+}
+
+/// Batched topic-inference server over a [`SnapshotCell`].
+///
+/// Shares a [`WorkerPool`] with (or borrows one from) training: a batch
+/// is dispatched as one pool job with one task per request — many small
+/// independent jobs rather than one sweep-shaped job. Do not call
+/// [`Server::serve_batch`] from *inside* a pool task (the pool's
+/// dispatch gate would deadlock); concurrent batches from multiple
+/// client threads are fine — dispatches serialize on the gate.
+pub struct Server {
+    pool: Arc<WorkerPool>,
+    cell: SnapshotCell,
+}
+
+impl Server {
+    /// Serve `first` (stamped generation 1) using `pool` for batches.
+    pub fn new(pool: Arc<WorkerPool>, first: ModelSnapshot) -> Self {
+        Self { pool, cell: SnapshotCell::new(first) }
+    }
+
+    /// Hot-swap the served model. See [`SnapshotCell::publish`].
+    pub fn publish(&self, snap: ModelSnapshot) -> u64 {
+        self.cell.publish(snap)
+    }
+
+    /// Handle on the currently served snapshot (e.g. to pin a sequence
+    /// of requests to one generation, or to cross-check responses).
+    pub fn snapshot(&self) -> Arc<ModelSnapshot> {
+        self.cell.load()
+    }
+
+    /// The currently served generation.
+    pub fn generation(&self) -> u64 {
+        self.cell.generation()
+    }
+
+    /// Answer one request inline on the calling thread. Loads the
+    /// current snapshot and runs on it to completion — a concurrent
+    /// publish does not affect this response.
+    pub fn serve_one(&self, req: &InferRequest) -> InferResponse {
+        self.cell.load().infer(req)
+    }
+
+    /// Answer a batch on the worker pool, one task per request. The
+    /// snapshot is loaded **once**, so every response in the batch
+    /// carries the same generation even if a publish lands mid-batch.
+    pub fn serve_batch(&self, reqs: &[InferRequest]) -> Vec<InferResponse> {
+        let snap = self.cell.load();
+        par::exec_each(&*self.pool, reqs.len(), |i| snap.infer(&reqs[i]))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::HdpConfig;
+    use crate::corpus::synthetic::HdpCorpusSpec;
+    use crate::hdp::pc::PcSampler;
+    use crate::hdp::Trainer;
+    use crate::serve::{InferMode, ModelSnapshot};
+
+    fn sampler() -> PcSampler {
+        let (c, _) = HdpCorpusSpec {
+            vocab: 120,
+            topics: 3,
+            gamma: 2.0,
+            alpha: 0.8,
+            topic_beta: 0.05,
+            docs: 40,
+            mean_doc_len: 20.0,
+            len_sigma: 0.3,
+            min_doc_len: 6,
+        }
+        .generate(23);
+        let cfg = HdpConfig {
+            alpha: 0.3,
+            beta: 0.05,
+            gamma: 1.0,
+            k_max: 10,
+            init_topics: 1,
+        };
+        let mut s = PcSampler::new(Arc::new(c), cfg, 2, 9).unwrap();
+        for _ in 0..10 {
+            s.step().unwrap();
+        }
+        s
+    }
+
+    fn requests(n: u64) -> Vec<InferRequest> {
+        (0..n)
+            .map(|i| InferRequest {
+                id: i,
+                tokens: (0..30u32).map(|t| (t * 7 + i as u32) % 120).collect(),
+                seed: 1000 + i,
+                passes: 3,
+                mode: InferMode::Mixture,
+            })
+            .collect()
+    }
+
+    #[test]
+    fn publish_bumps_generation_and_old_handles_survive() {
+        let s = sampler();
+        let server = Server::new(s.pool_handle(), ModelSnapshot::from_pc(&s, 1));
+        assert_eq!(server.generation(), 1);
+        let old = server.snapshot();
+        let g2 = server.publish(ModelSnapshot::from_pc(&s, 2));
+        assert_eq!(g2, 2);
+        assert_eq!(server.generation(), 2);
+        // The retired handle still answers, attributed to generation 1.
+        let r = old.infer(&requests(1)[0]);
+        assert_eq!(r.generation, 1);
+        assert_eq!(server.snapshot().generation(), 2);
+    }
+
+    #[test]
+    fn serve_batch_matches_serial_and_is_single_generation() {
+        let s = sampler();
+        let server = Server::new(s.pool_handle(), ModelSnapshot::from_pc(&s, 4));
+        let reqs = requests(24);
+        let batch = server.serve_batch(&reqs);
+        let snap = server.snapshot();
+        assert_eq!(batch.len(), reqs.len());
+        for (r, req) in batch.iter().zip(&reqs) {
+            assert_eq!(r.generation, 1);
+            let direct = snap.infer(req);
+            assert_eq!(r.id, direct.id);
+            assert_eq!(
+                r.log_likelihood.to_bits(),
+                direct.log_likelihood.to_bits()
+            );
+            assert_eq!(r.theta, direct.theta);
+            assert_eq!(r.topic_counts, direct.topic_counts);
+        }
+    }
+}

@@ -1,0 +1,459 @@
+//! Immutable, self-contained model state for serving.
+//!
+//! A [`ModelSnapshot`] is one posterior draw of `Φ̂` (sampled from the
+//! topic-word counts through the same PPU kernel training uses) plus
+//! the `Ψ` vector, the prebuilt bucket-(a) alias tables, and enough
+//! metadata to attribute responses. Once constructed it never changes,
+//! which is what makes the serving layer's lock-free hot swap safe:
+//! concurrency is handled entirely by `Arc` + the publish cell, never
+//! by interior mutability here.
+
+use crate::diagnostics::heldout::{
+    fold_in_gibbs, score_completion, CompletionScore, FOLD_IN_STREAM,
+};
+use crate::hdp::checkpoint::Checkpoint;
+use crate::hdp::pc::phi::sample_phi;
+use crate::hdp::pc::zstep::WordTables;
+use crate::hdp::pc::PcSampler;
+use crate::hdp::pclda::PcLdaSampler;
+use crate::hdp::Trainer;
+use crate::par;
+use crate::rng::Pcg64;
+use crate::sparse::{PhiMatrix, TopicWordRows};
+
+use super::{InferMode, InferRequest, InferResponse};
+
+/// Stream id of the freeze-time `Φ̂` root. A *fresh* generator derived
+/// from the caller's `phi_seed` — deliberately not the training chain's
+/// RNG, so freezing a snapshot consumes nothing from the chain and two
+/// freezes of the same counts with the same seed are bit-identical
+/// regardless of where training has moved on to.
+const PHI_FREEZE_STREAM: u64 = 0xf5ee;
+
+/// A frozen model: everything needed to answer inference requests,
+/// immutable after construction.
+pub struct ModelSnapshot {
+    /// Generation stamped at publish time (0 = never published).
+    pub(crate) generation: u64,
+    phi: PhiMatrix,
+    psi: Vec<f64>,
+    /// Bucket-(a) alias tables over `φ·α·Ψ`, prebuilt at freeze time
+    /// for [`InferMode::SparseMixture`] requests.
+    tables: WordTables,
+    alpha: f64,
+    beta: f64,
+    vocab: usize,
+    k_max: usize,
+    /// Training iterations completed when the state was frozen.
+    iteration: u64,
+    /// Provenance label (`"pc-hdp"`, `"pclda"`, or a checkpoint's
+    /// recorded sampler name).
+    source: String,
+}
+
+impl ModelSnapshot {
+    /// Freeze a snapshot from raw model state: sample `Φ̂ ~ PPU(β + n)`
+    /// with a fresh root derived from `phi_seed`, normalize, and
+    /// prebuild the alias tables. `psi.len()` fixes the topic capacity
+    /// and must equal `n.num_topics()`.
+    #[allow(clippy::too_many_arguments)]
+    pub fn freeze<E: par::Executor + Copy>(
+        n: &TopicWordRows,
+        psi: &[f64],
+        alpha: f64,
+        beta: f64,
+        vocab: usize,
+        iteration: u64,
+        source: &str,
+        phi_seed: u64,
+        exec: E,
+    ) -> Self {
+        assert_eq!(
+            psi.len(),
+            n.num_topics(),
+            "psi length must match topic-word row count"
+        );
+        let root = Pcg64::with_stream(phi_seed, PHI_FREEZE_STREAM);
+        let phi = sample_phi(&root, n, beta, vocab, exec);
+        let tables = WordTables::build(&phi, psi, alpha, exec);
+        Self {
+            generation: 0,
+            phi,
+            psi: psi.to_vec(),
+            tables,
+            alpha,
+            beta,
+            vocab,
+            k_max: n.num_topics(),
+            iteration,
+            source: source.to_string(),
+        }
+    }
+
+    /// Freeze the live state of a PC-HDP sampler (no training RNG is
+    /// consumed; the sampler is free to keep stepping afterwards).
+    pub fn from_pc(s: &PcSampler, phi_seed: u64) -> Self {
+        let cfg = *s.config();
+        Self::freeze(
+            s.n(),
+            s.psi(),
+            cfg.alpha,
+            cfg.beta,
+            Trainer::corpus(s).vocab_size(),
+            Trainer::iterations_done(s) as u64,
+            "pc-hdp",
+            phi_seed,
+            s.pool(),
+        )
+    }
+
+    /// Freeze the live state of the fixed-K Pólya urn LDA sampler.
+    pub fn from_pclda(s: &PcLdaSampler, phi_seed: u64) -> Self {
+        Self::freeze(
+            s.n(),
+            s.psi(),
+            s.alpha(),
+            s.beta(),
+            Trainer::corpus(s).vocab_size(),
+            Trainer::iterations_done(s) as u64,
+            "pclda",
+            phi_seed,
+            s.pool(),
+        )
+    }
+
+    /// Rebuild a snapshot from a saved [`Checkpoint`] plus the corpus
+    /// it was trained on. The topic-word counts recovered from `z` are
+    /// canonical (identical to the live sampler's merged rows), so a
+    /// checkpoint round trip freezes to bit-identical state as
+    /// [`ModelSnapshot::from_pc`] on the live sampler — given the same
+    /// `phi_seed`. `alpha`/`beta` are not stored in checkpoints and
+    /// must be supplied by the caller.
+    pub fn from_checkpoint<E: par::Executor + Copy>(
+        ckpt: &Checkpoint,
+        corpus: &crate::corpus::Corpus,
+        alpha: f64,
+        beta: f64,
+        phi_seed: u64,
+        exec: E,
+    ) -> anyhow::Result<Self> {
+        let n = ckpt.topic_word_rows(corpus)?;
+        Ok(Self::freeze(
+            &n,
+            &ckpt.psi,
+            alpha,
+            beta,
+            corpus.vocab_size(),
+            ckpt.iteration,
+            &ckpt.sampler,
+            phi_seed,
+            exec,
+        ))
+    }
+
+    /// Generation stamped by the publish cell (0 if never published).
+    pub fn generation(&self) -> u64 {
+        self.generation
+    }
+
+    /// The frozen `Φ̂`.
+    pub fn phi(&self) -> &PhiMatrix {
+        &self.phi
+    }
+
+    /// The frozen `Ψ`.
+    pub fn psi(&self) -> &[f64] {
+        &self.psi
+    }
+
+    /// Document-side concentration α used for fold-in.
+    pub fn alpha(&self) -> f64 {
+        self.alpha
+    }
+
+    /// Topic-word prior mass β used when `Φ̂` was sampled.
+    pub fn beta(&self) -> f64 {
+        self.beta
+    }
+
+    /// Vocabulary size the snapshot serves.
+    pub fn vocab(&self) -> usize {
+        self.vocab
+    }
+
+    /// Topic capacity (length of `Ψ`).
+    pub fn k_max(&self) -> usize {
+        self.k_max
+    }
+
+    /// Training iterations completed at freeze time.
+    pub fn iteration(&self) -> u64 {
+        self.iteration
+    }
+
+    /// Provenance label.
+    pub fn source(&self) -> &str {
+        &self.source
+    }
+
+    /// One-line human-readable description.
+    pub fn describe(&self) -> String {
+        format!(
+            "gen {} [{} @ iter {}] K={} V={} nnz(phi)={}",
+            self.generation,
+            self.source,
+            self.iteration,
+            self.k_max,
+            self.vocab,
+            self.phi.nnz()
+        )
+    }
+
+    /// Answer one request against this snapshot. Pure: the response is
+    /// a function of `(request, snapshot)` only — the RNG is a private
+    /// stream derived via [`super::request_seed`] from the request id,
+    /// seed, and this snapshot's generation.
+    pub fn infer(&self, req: &InferRequest) -> InferResponse {
+        let derived = super::request_seed(req.seed, req.id, self.generation);
+        let mut rng = Pcg64::with_stream(derived, FOLD_IN_STREAM);
+        // Completion mode mirrors `document_completion`: fold in the
+        // first half, score the second; documents shorter than 2
+        // tokens are skipped entirely (no randomness consumed).
+        let (observed, held): (&[u32], &[u32]) = match req.mode {
+            InferMode::Completion => {
+                if req.tokens.len() < 2 {
+                    (&[], &[])
+                } else {
+                    req.tokens.split_at(req.tokens.len() / 2)
+                }
+            }
+            _ => (&req.tokens, &req.tokens),
+        };
+        let mut weights = vec![0.0f64; self.k_max];
+        let mut m: Vec<u32> = Vec::new();
+        match req.mode {
+            InferMode::SparseMixture => self.fold_in_sparse(
+                &mut rng,
+                observed,
+                req.passes,
+                &mut m,
+            ),
+            _ => fold_in_gibbs(
+                &mut rng,
+                observed,
+                &self.phi,
+                &self.psi,
+                self.alpha,
+                req.passes,
+                &mut weights,
+                &mut m,
+            ),
+        }
+        let denom = observed.len() as f64 + self.alpha;
+        let mut acc = CompletionScore::default();
+        score_completion(
+            held, &self.phi, &self.psi, self.alpha, &m, denom, &mut acc,
+        );
+        let mut theta = Vec::new();
+        let mut topic_counts = Vec::new();
+        for (k, &c) in m.iter().enumerate() {
+            if c > 0 {
+                let th =
+                    (c as f64 + self.alpha * self.psi[k]) / denom;
+                theta.push((k as u32, th));
+                topic_counts.push((k as u32, c));
+            }
+        }
+        InferResponse {
+            id: req.id,
+            generation: self.generation,
+            theta,
+            topic_counts,
+            log_likelihood: acc.log_p,
+            tokens_scored: acc.scored,
+            tokens_skipped: acc.skipped,
+        }
+    }
+
+    /// Doubly sparse fold-in: the sampler's own two-bucket z draw
+    /// (bucket (a) via the snapshot's prebuilt alias tables over
+    /// `φ·α·Ψ`, bucket (b) via a linear walk over the document's
+    /// nonzero `φ·m` terms). Same stationary conditional as
+    /// [`fold_in_gibbs`], different randomness consumption — so it is
+    /// *not* bit-compatible with the dense scan, only
+    /// distribution-compatible (pinned statistically in
+    /// `tests/statistical.rs`).
+    fn fold_in_sparse(
+        &self,
+        rng: &mut Pcg64,
+        tokens: &[u32],
+        passes: usize,
+        m: &mut Vec<u32>,
+    ) {
+        let k_max = self.k_max;
+        m.clear();
+        m.resize(k_max, 0);
+        let mut z: Vec<u32> =
+            tokens.iter().map(|_| rng.below(k_max as u64) as u32).collect();
+        // Topics with m > 0, unordered, no duplicates.
+        let mut active: Vec<u32> = Vec::new();
+        for &k in &z {
+            if m[k as usize] == 0 {
+                active.push(k);
+            }
+            m[k as usize] += 1;
+        }
+        let mut partials: Vec<(u32, f64)> = Vec::new();
+        for _ in 0..passes {
+            for (i, &v) in tokens.iter().enumerate() {
+                let kold = z[i] as usize;
+                m[kold] -= 1;
+                if m[kold] == 0 {
+                    let pos = active
+                        .iter()
+                        .position(|&k| k as usize == kold)
+                        .expect("active topic tracked");
+                    active.swap_remove(pos);
+                }
+                // Bucket (b): cumulative φ_{k,v}·m_k over the doc's
+                // active topics.
+                partials.clear();
+                let mut s_b = 0.0f64;
+                for &k in &active {
+                    let w = self.phi.get(k, v) * m[k as usize] as f64;
+                    if w > 0.0 {
+                        s_b += w;
+                        partials.push((k, s_b));
+                    }
+                }
+                // Bucket (a): prebuilt alias mass Σ_k φ_{k,v}·α·Ψ_k.
+                let q_a = self.tables.mass(v);
+                let total = s_b + q_a;
+                let knew = if total <= 0.0 {
+                    kold as u32
+                } else {
+                    let u = rng.f64() * total;
+                    if u < s_b {
+                        // rng.f64() < 1 ⇒ when q_a == 0 this branch is
+                        // always taken, so `tables.sample` is never
+                        // reached for a word with an empty column.
+                        partials
+                            .iter()
+                            .find(|&&(_, cum)| u < cum)
+                            .map(|&(k, _)| k)
+                            .unwrap_or(partials.last().unwrap().0)
+                    } else {
+                        self.tables.sample(v, rng)
+                    }
+                };
+                z[i] = knew;
+                if m[knew as usize] == 0 {
+                    active.push(knew);
+                }
+                m[knew as usize] += 1;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::HdpConfig;
+    use crate::corpus::synthetic::HdpCorpusSpec;
+    use std::sync::Arc;
+
+    fn small_sampler() -> (Arc<crate::corpus::Corpus>, PcSampler) {
+        let (c, _) = HdpCorpusSpec {
+            vocab: 150,
+            topics: 4,
+            gamma: 2.0,
+            alpha: 0.8,
+            topic_beta: 0.05,
+            docs: 50,
+            mean_doc_len: 25.0,
+            len_sigma: 0.3,
+            min_doc_len: 8,
+        }
+        .generate(41);
+        let corpus = Arc::new(c);
+        let cfg = HdpConfig {
+            alpha: 0.3,
+            beta: 0.05,
+            gamma: 1.0,
+            k_max: 12,
+            init_topics: 1,
+        };
+        let mut s = PcSampler::new(corpus.clone(), cfg, 1, 5).unwrap();
+        for _ in 0..15 {
+            s.step().unwrap();
+        }
+        (corpus, s)
+    }
+
+    #[test]
+    fn freeze_is_deterministic_and_consumes_no_chain_rng() {
+        let (_, mut s) = small_sampler();
+        let a = ModelSnapshot::from_pc(&s, 99);
+        let b = ModelSnapshot::from_pc(&s, 99);
+        assert_eq!(a.phi().nnz(), b.phi().nnz());
+        for k in 0..a.k_max() {
+            assert_eq!(a.phi().row(k), b.phi().row(k), "topic {k}");
+        }
+        // Freezing must not perturb the chain: stepping after two
+        // freezes matches stepping without them on a twin sampler.
+        let (_, mut twin) = small_sampler();
+        s.step().unwrap();
+        twin.step().unwrap();
+        assert_eq!(s.psi(), twin.psi());
+        assert_eq!(Trainer::assignments(&s), Trainer::assignments(&twin));
+    }
+
+    #[test]
+    fn infer_modes_are_sane() {
+        let (_, s) = small_sampler();
+        let snap = ModelSnapshot::from_pc(&s, 7);
+        let doc: Vec<u32> = (0..40u32).map(|i| (i * 3) % 150).collect();
+        for mode in
+            [InferMode::Mixture, InferMode::SparseMixture, InferMode::Completion]
+        {
+            let r = snap.infer(&InferRequest {
+                id: 1,
+                tokens: doc.clone(),
+                seed: 11,
+                passes: 4,
+                mode,
+            });
+            assert_eq!(r.generation, 0);
+            let mass: f64 = r.theta.iter().map(|&(_, t)| t).sum();
+            assert!(mass > 0.0 && mass <= 1.0 + 1e-9, "{mode:?}: {mass}");
+            let counts: u32 = r.topic_counts.iter().map(|&(_, c)| c).sum();
+            let folded = match mode {
+                InferMode::Completion => doc.len() / 2,
+                _ => doc.len(),
+            };
+            assert_eq!(counts as usize, folded, "{mode:?}");
+            assert!(r.log_likelihood <= 0.0, "{mode:?}");
+            assert!(
+                r.theta.windows(2).all(|w| w[0].0 < w[1].0),
+                "theta sorted by topic"
+            );
+        }
+    }
+
+    #[test]
+    fn short_completion_doc_scores_nothing() {
+        let (_, s) = small_sampler();
+        let snap = ModelSnapshot::from_pc(&s, 7);
+        let r = snap.infer(&InferRequest {
+            id: 2,
+            tokens: vec![3],
+            seed: 5,
+            passes: 3,
+            mode: InferMode::Completion,
+        });
+        assert_eq!(r.tokens_scored, 0);
+        assert_eq!(r.log_likelihood, 0.0);
+        assert!(r.topic_counts.is_empty());
+    }
+}

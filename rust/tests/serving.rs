@@ -1,0 +1,327 @@
+//! Serving-layer lockdown: hot-swap safety under concurrency, bitwise
+//! reproducibility, checkpoint/live snapshot equivalence, and the
+//! guarantee that serving never perturbs the training chain.
+
+use hdp_sparse::config::HdpConfig;
+use hdp_sparse::corpus::synthetic::HdpCorpusSpec;
+use hdp_sparse::corpus::Corpus;
+use hdp_sparse::hdp::checkpoint::Checkpoint;
+use hdp_sparse::hdp::pc::PcSampler;
+use hdp_sparse::hdp::pclda::PcLdaSampler;
+use hdp_sparse::hdp::Trainer;
+use hdp_sparse::serve::{
+    InferMode, InferRequest, InferResponse, ModelSnapshot, Server,
+};
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+fn corpus() -> Arc<Corpus> {
+    let (c, _) = HdpCorpusSpec {
+        vocab: 180,
+        topics: 4,
+        gamma: 2.0,
+        alpha: 0.8,
+        topic_beta: 0.05,
+        docs: 60,
+        mean_doc_len: 25.0,
+        len_sigma: 0.3,
+        min_doc_len: 8,
+    }
+    .generate(37);
+    Arc::new(c)
+}
+
+fn cfg() -> HdpConfig {
+    HdpConfig { alpha: 0.3, beta: 0.05, gamma: 1.0, k_max: 14, init_topics: 1 }
+}
+
+fn trained(corpus: &Arc<Corpus>, threads: usize, seed: u64) -> PcSampler {
+    let mut s = PcSampler::new(corpus.clone(), cfg(), threads, seed).unwrap();
+    for _ in 0..15 {
+        s.step().unwrap();
+    }
+    s
+}
+
+fn requests(corpus: &Corpus, n: usize, mode: InferMode) -> Vec<InferRequest> {
+    (0..n)
+        .map(|i| InferRequest {
+            id: i as u64,
+            tokens: corpus.docs[i % corpus.num_docs()].clone(),
+            seed: 5000 + (i as u64 % 7),
+            passes: 3,
+            mode,
+        })
+        .collect()
+}
+
+/// Full bitwise equality of two responses.
+fn assert_same(a: &InferResponse, b: &InferResponse, ctx: &str) {
+    assert_eq!(a.id, b.id, "{ctx}: id");
+    assert_eq!(a.generation, b.generation, "{ctx}: generation");
+    assert_eq!(a.topic_counts, b.topic_counts, "{ctx}: topic_counts");
+    assert_eq!(a.theta.len(), b.theta.len(), "{ctx}: theta len");
+    for ((ka, ta), (kb, tb)) in a.theta.iter().zip(&b.theta) {
+        assert_eq!(ka, kb, "{ctx}: theta topic");
+        assert_eq!(ta.to_bits(), tb.to_bits(), "{ctx}: theta value");
+    }
+    assert_eq!(
+        a.log_likelihood.to_bits(),
+        b.log_likelihood.to_bits(),
+        "{ctx}: log_likelihood"
+    );
+    assert_eq!(a.tokens_scored, b.tokens_scored, "{ctx}: scored");
+    assert_eq!(a.tokens_skipped, b.tokens_skipped, "{ctx}: skipped");
+}
+
+/// 8 reader threads hammer `serve_one` while a writer hot-swaps 30
+/// snapshots. Afterwards every recorded response must replay
+/// bit-identically on the exact published snapshot its generation
+/// names — no torn reads, exact attribution.
+#[test]
+fn hot_swap_stress_attributes_every_response() {
+    let c = corpus();
+    let s = trained(&c, 2, 11);
+    let reqs = requests(&c, 48, InferMode::Mixture);
+    // Pre-freeze everything on the main thread; the writer only
+    // publishes (distinct phi seeds -> distinct models).
+    let pending: Vec<ModelSnapshot> =
+        (0..30u64).map(|i| ModelSnapshot::from_pc(&s, 200 + i)).collect();
+    let server = Server::new(s.pool_handle(), ModelSnapshot::from_pc(&s, 199));
+    let stop = AtomicBool::new(false);
+    let readers = 8usize;
+
+    let mut published: Vec<Arc<ModelSnapshot>> = vec![server.snapshot()];
+    let mut recorded: Vec<(usize, InferResponse)> = Vec::new();
+    std::thread::scope(|scope| {
+        let writer = {
+            let server = &server;
+            let stop = &stop;
+            scope.spawn(move || {
+                let mut seen = Vec::new();
+                for snap in pending {
+                    server.publish(snap);
+                    // Single writer: this load returns exactly the
+                    // snapshot just published.
+                    seen.push(server.snapshot());
+                    std::thread::sleep(std::time::Duration::from_millis(2));
+                }
+                stop.store(true, Ordering::Release);
+                seen
+            })
+        };
+        let handles: Vec<_> = (0..readers)
+            .map(|t| {
+                let server = &server;
+                let reqs = &reqs;
+                let stop = &stop;
+                scope.spawn(move || {
+                    let mut out = Vec::new();
+                    let mut i = t;
+                    while !stop.load(Ordering::Acquire) {
+                        let idx = i % reqs.len();
+                        out.push((idx, server.serve_one(&reqs[idx])));
+                        i += 1;
+                    }
+                    out
+                })
+            })
+            .collect();
+        published.extend(writer.join().unwrap());
+        for h in handles {
+            recorded.extend(h.join().unwrap());
+        }
+    });
+
+    assert_eq!(published.len(), 31);
+    let by_gen: HashMap<u64, &Arc<ModelSnapshot>> =
+        published.iter().map(|p| (p.generation(), p)).collect();
+    assert_eq!(by_gen.len(), 31, "generations are unique");
+    let mut gens_seen = std::collections::HashSet::new();
+    assert!(!recorded.is_empty());
+    for (idx, resp) in &recorded {
+        let snap = by_gen
+            .get(&resp.generation)
+            .unwrap_or_else(|| panic!("unpublished generation {}", resp.generation));
+        let replay = snap.infer(&reqs[*idx]);
+        assert_same(resp, &replay, "replay");
+        gens_seen.insert(resp.generation);
+    }
+    assert!(
+        gens_seen.len() >= 2,
+        "stress run observed only {} generation(s)",
+        gens_seen.len()
+    );
+}
+
+/// Identical (request, snapshot, seed) triples reproduce bit-for-bit;
+/// changing any leg of the triple changes the draw.
+#[test]
+fn identical_triples_reproduce_bitwise() {
+    let c = corpus();
+    let s = trained(&c, 1, 13);
+    let server = Server::new(s.pool_handle(), ModelSnapshot::from_pc(&s, 300));
+    for mode in
+        [InferMode::Mixture, InferMode::SparseMixture, InferMode::Completion]
+    {
+        let reqs = requests(&c, 8, mode);
+        let mut any_diff = false;
+        for req in &reqs {
+            let a = server.serve_one(req);
+            let b = server.serve_one(req);
+            assert_same(&a, &b, "same triple");
+            let mut other_seed = req.clone();
+            other_seed.seed ^= 1;
+            let d = server.serve_one(&other_seed);
+            any_diff |= a.topic_counts != d.topic_counts
+                || a.log_likelihood.to_bits() != d.log_likelihood.to_bits();
+        }
+        assert!(any_diff, "{mode:?}: flipping the seed never redrew");
+    }
+    // New generation, same request: attributed differently AND redrawn.
+    let req = &requests(&c, 1, InferMode::Mixture)[0];
+    let a = server.serve_one(req);
+    server.publish(ModelSnapshot::from_pc(&s, 300));
+    let e = server.serve_one(req);
+    assert_eq!(e.generation, 2);
+    assert_ne!(a.generation, e.generation);
+}
+
+/// Concurrent batched clients: each batch is answered by exactly one
+/// generation and matches direct inference on that snapshot.
+#[test]
+fn concurrent_batches_are_single_generation() {
+    let c = corpus();
+    let s = trained(&c, 3, 17);
+    let server = Server::new(s.pool_handle(), ModelSnapshot::from_pc(&s, 400));
+    let reqs = requests(&c, 40, InferMode::Completion);
+    let batches: Vec<Vec<InferResponse>> = std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..2)
+            .map(|_| {
+                let server = &server;
+                let reqs = &reqs;
+                scope.spawn(move || server.serve_batch(reqs))
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+    let snap = server.snapshot();
+    for batch in &batches {
+        assert_eq!(batch.len(), reqs.len());
+        for (resp, req) in batch.iter().zip(&reqs) {
+            assert_eq!(resp.generation, 1, "single snapshot per batch");
+            assert_same(resp, &snap.infer(req), "batch vs direct");
+        }
+    }
+}
+
+/// Checkpoint round trips (v2 packed and legacy v1) freeze to
+/// snapshots whose predictions are bit-identical to freezing straight
+/// off the live sampler.
+#[test]
+fn checkpoint_freeze_matches_live() {
+    let c = corpus();
+    let s = trained(&c, 2, 19);
+    let hp = cfg();
+    let live = ModelSnapshot::from_pc(&s, 500);
+    let ckpt = s.checkpoint();
+
+    let dir = std::env::temp_dir().join(format!(
+        "hdp_serving_ckpt_{}",
+        std::process::id()
+    ));
+    std::fs::create_dir_all(&dir).unwrap();
+    let p2 = dir.join("m.ckpt2");
+    let p1 = dir.join("m.ckpt1");
+    ckpt.save(&p2).unwrap();
+    ckpt.save_v1(&p1).unwrap();
+    let r2 = Checkpoint::load(&p2).unwrap();
+    let r1 = Checkpoint::load(&p1).unwrap();
+    std::fs::remove_dir_all(&dir).ok();
+    assert_eq!(ckpt, r2);
+    assert_eq!(ckpt, r1);
+
+    let from_v2 =
+        ModelSnapshot::from_checkpoint(&r2, &c, hp.alpha, hp.beta, 500, 2usize)
+            .unwrap();
+    let from_v1 =
+        ModelSnapshot::from_checkpoint(&r1, &c, hp.alpha, hp.beta, 500, 1usize)
+            .unwrap();
+    let reqs = requests(&c, 20, InferMode::Completion);
+    for req in &reqs {
+        let a = live.infer(req);
+        assert_same(&a, &from_v2.infer(req), "live vs v2 roundtrip");
+        assert_same(&a, &from_v1.infer(req), "live vs v1 roundtrip");
+    }
+
+    // Same story for the fixed-K LDA sampler via a hand-built
+    // checkpoint (uniform psi is what its checkpoints carry).
+    let k = 12usize;
+    let mut lda = PcLdaSampler::new(c.clone(), k, 0.3, 0.05, 2, 21).unwrap();
+    for _ in 0..10 {
+        lda.step().unwrap();
+    }
+    let lda_live = ModelSnapshot::from_pclda(&lda, 600);
+    let lda_ckpt = Checkpoint {
+        iteration: lda.iterations_done() as u64,
+        sampler: "pclda".to_string(),
+        psi: lda.psi().to_vec(),
+        z: lda.assignments().to_vec(),
+    };
+    let lda_rebuilt = ModelSnapshot::from_checkpoint(
+        &lda_ckpt,
+        &c,
+        lda.alpha(),
+        lda.beta(),
+        600,
+        2usize,
+    )
+    .unwrap();
+    for req in &requests(&c, 10, InferMode::Mixture) {
+        assert_same(
+            &lda_live.infer(req),
+            &lda_rebuilt.infer(req),
+            "pclda live vs checkpoint",
+        );
+    }
+}
+
+/// Interleaving serving with training must leave the training chain
+/// bit-identical to an undisturbed twin: request RNG streams are
+/// derived per (request, generation), never borrowed from the chain.
+#[test]
+fn serving_never_perturbs_training() {
+    let c = corpus();
+    let mut a = PcSampler::new(c.clone(), cfg(), 2, 23).unwrap();
+    let mut b = PcSampler::new(c.clone(), cfg(), 2, 23).unwrap();
+    for _ in 0..8 {
+        a.step().unwrap();
+        b.step().unwrap();
+    }
+    let server = Server::new(a.pool_handle(), ModelSnapshot::from_pc(&a, 700));
+    let reqs = requests(&c, 16, InferMode::Mixture);
+    for round in 0..4 {
+        // Serve between `a`'s steps (on `a`'s own pool), publish a
+        // fresh freeze each round; `b` just trains.
+        for req in &reqs {
+            server.serve_one(req);
+        }
+        server.serve_batch(&reqs);
+        server.publish(ModelSnapshot::from_pc(&a, 700 + round));
+        a.step().unwrap();
+        b.step().unwrap();
+    }
+    assert_eq!(a.psi().len(), b.psi().len());
+    for (x, y) in a.psi().iter().zip(b.psi()) {
+        assert_eq!(x.to_bits(), y.to_bits(), "psi diverged");
+    }
+    assert_eq!(
+        Trainer::assignments(&a),
+        Trainer::assignments(&b),
+        "z diverged"
+    );
+    for k in 0..cfg().k_max {
+        assert_eq!(a.n().row(k), b.n().row(k), "n row {k} diverged");
+    }
+}

@@ -297,3 +297,150 @@ fn sparse_alias_chi_square_on_support() {
     // 5 dof: mean 5, sd sqrt(10); allow 5σ.
     assert!(chi2 < 5.0 + 5.0 * 10.0f64.sqrt(), "chi2 {chi2:.1}");
 }
+
+/// Fixture shared by the serving-agreement tests: a trained PC-HDP
+/// model plus its corpus and config.
+fn serving_fixture() -> (Arc<Corpus>, HdpConfig, PcSampler) {
+    let (c, _) = HdpCorpusSpec {
+        vocab: 200,
+        topics: 4,
+        gamma: 2.0,
+        alpha: 0.8,
+        topic_beta: 0.05,
+        docs: 70,
+        mean_doc_len: 28.0,
+        len_sigma: 0.3,
+        min_doc_len: 10,
+    }
+    .generate(909);
+    let c = Arc::new(c);
+    let cfg = HdpConfig { alpha: 0.3, beta: 0.05, gamma: 1.0, k_max: 14, init_topics: 1 };
+    let mut s = PcSampler::new(c.clone(), cfg, 2, 31).unwrap();
+    for _ in 0..20 {
+        s.step().unwrap();
+    }
+    (c, cfg, s)
+}
+
+/// Completion-mode requests through the [`Server`] agree *bit-for-bit*
+/// with `document_completion` run directly against the same frozen
+/// snapshot: same derived seed → identical per-document log-likelihood
+/// accumulation, scored and skipped counts, and perplexity bits.
+#[test]
+fn server_matches_document_completion() {
+    use hdp_sparse::diagnostics::heldout;
+    use hdp_sparse::serve::{
+        request_seed, InferMode, InferRequest, ModelSnapshot, Server,
+    };
+    let (c, _cfg, s) = serving_fixture();
+    let server = Server::new(s.pool_handle(), ModelSnapshot::from_pc(&s, 55));
+    let snap = server.snapshot();
+    let (_, test) = heldout::train_test_split(c.num_docs(), 0.4, 21);
+    let passes = 3usize;
+    let base_seed = 4242u64;
+    let reqs: Vec<InferRequest> = test
+        .iter()
+        .map(|&d| InferRequest {
+            id: d as u64,
+            tokens: c.docs[d].clone(),
+            seed: base_seed,
+            passes,
+            mode: InferMode::Completion,
+        })
+        .collect();
+    let responses = server.serve_batch(&reqs);
+    assert_eq!(responses.len(), test.len());
+    let mut agree = 0usize;
+    for (resp, &d) in responses.iter().zip(&test) {
+        // The server's RNG stream is pinned to (seed, id, generation);
+        // reconstruct it and run the heldout evaluator on just this
+        // document against the same frozen (Φ̂, Ψ).
+        let derived = request_seed(base_seed, d as u64, resp.generation);
+        let direct = heldout::document_completion(
+            &*c,
+            &[d],
+            snap.phi(),
+            snap.psi(),
+            snap.alpha(),
+            passes,
+            derived,
+        );
+        assert_eq!(resp.tokens_scored, direct.tokens, "doc {d}: scored");
+        assert_eq!(resp.tokens_skipped, direct.skipped, "doc {d}: skipped");
+        let resp_ppx = (-resp.log_likelihood
+            / resp.tokens_scored.max(1) as f64)
+            .exp();
+        assert_eq!(
+            resp_ppx.to_bits(),
+            direct.perplexity.to_bits(),
+            "doc {d}: perplexity bits"
+        );
+        if resp.tokens_scored > 0 {
+            agree += 1;
+        }
+    }
+    assert!(agree > test.len() / 2, "most held-out docs must score");
+}
+
+/// The dense fold-in scan and the alias-table two-bucket fold-in
+/// ([`InferMode::Mixture`] vs [`InferMode::SparseMixture`]) implement
+/// the *same* per-token conditional, so pooled topic-assignment counts
+/// over many seeded runs must agree: small L1 distance between the
+/// pooled distributions and a χ²-style two-sample statistic far below
+/// the gross-mismatch regime. (They consume randomness differently, so
+/// agreement is distributional, not bitwise.)
+#[test]
+fn sparse_and_dense_fold_in_agree() {
+    use hdp_sparse::serve::{InferMode, InferRequest, ModelSnapshot};
+    let (c, _cfg, s) = serving_fixture();
+    let snap = ModelSnapshot::from_pc(&s, 66);
+    let k = snap.k_max();
+    let docs = [0usize, 3, 7, 11];
+    let runs_per_doc = 100u64;
+    let mut dense = vec![0u64; k];
+    let mut sparse = vec![0u64; k];
+    for (pool, mode) in [
+        (&mut dense, InferMode::Mixture),
+        (&mut sparse, InferMode::SparseMixture),
+    ] {
+        for &d in &docs {
+            for r in 0..runs_per_doc {
+                let resp = snap.infer(&InferRequest {
+                    id: (d as u64) << 32 | r,
+                    tokens: c.docs[d].clone(),
+                    seed: 777 + r,
+                    passes: 5,
+                    mode,
+                });
+                for &(kk, cnt) in &resp.topic_counts {
+                    pool[kk as usize] += cnt as u64;
+                }
+            }
+        }
+    }
+    let (da, db) = (
+        dense.iter().sum::<u64>() as f64,
+        sparse.iter().sum::<u64>() as f64,
+    );
+    // Both modes fold in every token of every run, so the pooled
+    // totals are identical by construction.
+    assert_eq!(da, db, "pooled token totals");
+    let mut l1 = 0.0f64;
+    let mut chi2 = 0.0f64;
+    let mut df = 0usize;
+    for (&a, &b) in dense.iter().zip(&sparse) {
+        l1 += (a as f64 / da - b as f64 / db).abs();
+        if a + b > 0 {
+            let (af, bf) = (a as f64, b as f64);
+            chi2 += (af - bf).powi(2) / (af + bf);
+            df += 1;
+        }
+    }
+    // Within-document token assignments are correlated, so these
+    // bounds are deliberately loose: a broken conditional (wrong
+    // bucket split, unnormalized weights, mis-indexed alias column)
+    // lands orders of magnitude outside them.
+    assert!(l1 < 0.25, "pooled L1 {l1:.3} (dense {dense:?} sparse {sparse:?})");
+    let bound = 200.0 * (df as f64 + 1.0);
+    assert!(chi2 < bound, "chi2 {chi2:.1} over {df} topics (bound {bound:.0})");
+}
