@@ -30,6 +30,7 @@ fn main() -> anyhow::Result<()> {
         seed: 7,
         eval_every: 20,
         time_budget_secs: budget,
+        ..Default::default()
     };
     let mut trainers: Vec<Box<dyn Trainer>> = vec![
         Box::new(PcSampler::new(corpus.clone(), cfg, 2, 7)?),

@@ -32,13 +32,14 @@ fn main() -> anyhow::Result<()> {
         seed: 42,
         eval_every: 50,
         time_budget_secs: 0,
+        ..Default::default()
     };
     let mut trace = TraceWriter::in_memory();
     let summary = train(
         &mut sampler,
         &run,
         &mut trace,
-        &LoopOptions { verbose: true, eval_first: true },
+        &LoopOptions { verbose: true, eval_first: true, ..Default::default() },
     )?;
     println!(
         "\ntrained {} iterations in {:.1}s ({:.0} tokens/s)",

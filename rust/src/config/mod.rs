@@ -302,11 +302,21 @@ pub struct RunConfig {
     /// Optional wall-clock budget in seconds (0 = unlimited); used by
     /// the Fig-1(g–i) fixed-budget comparison.
     pub time_budget_secs: u64,
+    /// Write a durable checkpoint every this many iterations (0 = off;
+    /// the training loop also needs a checkpoint directory).
+    pub checkpoint_every: usize,
 }
 
 impl Default for RunConfig {
     fn default() -> Self {
-        Self { iterations: 100, threads: 1, seed: 2020, eval_every: 10, time_budget_secs: 0 }
+        Self {
+            iterations: 100,
+            threads: 1,
+            seed: 2020,
+            eval_every: 10,
+            time_budget_secs: 0,
+            checkpoint_every: 0,
+        }
     }
 }
 
@@ -320,6 +330,7 @@ impl RunConfig {
             seed: map.u64_or("run", "seed", d.seed),
             eval_every: map.usize_or("run", "eval_every", d.eval_every).max(1),
             time_budget_secs: map.u64_or("run", "time_budget_secs", 0),
+            checkpoint_every: map.usize_or("run", "checkpoint_every", 0),
         }
     }
 }

@@ -23,8 +23,13 @@ pub struct TrainSummary {
     pub final_log_likelihood: f64,
     /// Final active topic count.
     pub final_active_topics: usize,
-    /// Tokens per second over the whole run.
+    /// Tokens per second over the iterations this run performed.
     pub tokens_per_sec: f64,
+    /// Periodic checkpoints written durably this run.
+    pub checkpoints_written: usize,
+    /// Periodic checkpoint attempts that failed (training continued —
+    /// a checkpoint failure costs durability, never the chain).
+    pub checkpoints_failed: usize,
 }
 
 /// Options controlling the loop beyond [`RunConfig`].
@@ -32,13 +37,32 @@ pub struct TrainSummary {
 pub struct LoopOptions {
     /// Print progress lines to stdout.
     pub verbose: bool,
-    /// Evaluate diagnostics on iteration 1 regardless of `eval_every`.
+    /// Evaluate diagnostics on the first iteration this run performs
+    /// regardless of `eval_every`.
     pub eval_first: bool,
+    /// Directory for periodic checkpoints (`ckpt-NNNNNNNNNN.ckpt`,
+    /// written atomically + checksummed every
+    /// `run.checkpoint_every` iterations). `None` disables them even
+    /// when `checkpoint_every > 0`.
+    pub checkpoint_dir: Option<std::path::PathBuf>,
 }
 
-/// Run `trainer` for `run.iterations` (or until `run.time_budget_secs`
-/// elapses), pushing an [`IterRecord`] into `trace` every
-/// `run.eval_every` iterations (plus the final one).
+/// Run `trainer` from its current iteration up to `run.iterations` (or
+/// until `run.time_budget_secs` elapses), pushing an [`IterRecord`]
+/// into `trace` every `run.eval_every` iterations (plus the final one).
+///
+/// # Resume and crash safety
+///
+/// The loop starts at `trainer.iterations_done()`, so a sampler
+/// restored via [`crate::hdp::pc::PcSampler::resume_chain`] simply
+/// continues its chain — the combined trace covers
+/// `start + 1 ..= run.iterations` and is **bit-identical** to the
+/// uninterrupted run. With `run.checkpoint_every > 0` and
+/// [`LoopOptions::checkpoint_dir`] set, a durable checkpoint
+/// (atomic rename + checksum trailer) is written every
+/// `checkpoint_every` iterations; a failed write is reported and
+/// counted, never fatal. Pick the newest loadable snapshot back up
+/// with [`crate::hdp::checkpoint::latest_valid`].
 pub fn train(
     trainer: &mut dyn Trainer,
     run: &RunConfig,
@@ -47,9 +71,12 @@ pub fn train(
 ) -> anyhow::Result<TrainSummary> {
     let start = Instant::now();
     let tokens = trainer.corpus().num_tokens();
-    let mut completed = 0usize;
+    let start_iter = trainer.iterations_done();
+    let mut completed = start_iter;
     let mut last_rec: Option<IterRecord> = None;
-    for it in 1..=run.iterations {
+    let mut checkpoints_written = 0usize;
+    let mut checkpoints_failed = 0usize;
+    for it in (start_iter + 1)..=run.iterations {
         let iter_start = Instant::now();
         trainer.step()?;
         let iter_secs = iter_start.elapsed().as_secs_f64();
@@ -59,7 +86,7 @@ pub fn train(
         let eval_now = it % run.eval_every == 0
             || it == run.iterations
             || budget_hit
-            || (opts.eval_first && it == 1);
+            || (opts.eval_first && it == start_iter + 1);
         if eval_now {
             let d = trainer.diagnostics();
             let rec = IterRecord {
@@ -84,19 +111,45 @@ pub fn train(
             trace.push(rec.clone())?;
             last_rec = Some(rec);
         }
+        if run.checkpoint_every > 0 && it % run.checkpoint_every == 0 {
+            if let Some(dir) = &opts.checkpoint_dir {
+                let path = dir.join(crate::hdp::checkpoint::periodic_name(it as u64));
+                match trainer.checkpoint().save(&path) {
+                    Ok(()) => checkpoints_written += 1,
+                    Err(e) => {
+                        // Durability lost, chain intact: keep training.
+                        checkpoints_failed += 1;
+                        eprintln!(
+                            "warning: checkpoint at iteration {it} failed: {e:#}"
+                        );
+                    }
+                }
+            }
+        }
         if budget_hit {
             break;
         }
     }
     trace.flush()?;
     let elapsed = start.elapsed().as_secs_f64();
-    let last = last_rec.expect("at least one evaluation");
+    let (final_log_likelihood, final_active_topics) = match &last_rec {
+        Some(rec) => (rec.log_likelihood, rec.active_topics),
+        // Zero iterations this run (already at or past the target —
+        // e.g. resuming a finished chain): evaluate the state as-is.
+        None => {
+            let d = trainer.diagnostics();
+            (d.log_likelihood, d.active_topics)
+        }
+    };
     Ok(TrainSummary {
         iterations: completed,
         elapsed_secs: elapsed,
-        final_log_likelihood: last.log_likelihood,
-        final_active_topics: last.active_topics,
-        tokens_per_sec: tokens as f64 * completed as f64 / elapsed.max(1e-9),
+        final_log_likelihood,
+        final_active_topics,
+        tokens_per_sec: tokens as f64 * (completed - start_iter) as f64
+            / elapsed.max(1e-9),
+        checkpoints_written,
+        checkpoints_failed,
     })
 }
 
@@ -167,7 +220,7 @@ mod tests {
             &mut t,
             &run,
             &mut trace,
-            &LoopOptions { eval_first: true, verbose: false },
+            &LoopOptions { eval_first: true, ..Default::default() },
         )
         .unwrap();
         let iters: Vec<usize> = trace.records().iter().map(|r| r.iteration).collect();

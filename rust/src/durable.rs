@@ -1,0 +1,499 @@
+//! Durable, checksummed file writes — the crash-safety primitives
+//! shared by checkpoints ([`crate::hdp::checkpoint`]) and the packed
+//! corpus format ([`crate::corpus::io`]).
+//!
+//! # Atomic write protocol
+//!
+//! [`atomic_write`] writes a unique temp file **in the same
+//! directory** as the target, fsyncs the data (`fdatasync`), renames
+//! it over the target, then fsyncs the parent directory so the rename
+//! itself survives a crash. A failure at any point removes the temp
+//! file and leaves the previous target contents untouched — a reader
+//! can never observe a half-written file at the final path.
+//!
+//! # Checksum trailer
+//!
+//! Every payload gets an 8-byte trailer appended:
+//!
+//! ```text
+//! [crc32(payload) as u32 LE][tag b"HSUM"]
+//! ```
+//!
+//! where the CRC covers every payload byte (a vendored IEEE CRC-32;
+//! no crates). Verifying readers stream the payload through
+//! [`HashingReader`], require the consumed byte count to equal
+//! `file_len - 8`, and match the trailer — so *any* truncation,
+//! extension, or bit flip of the file fails closed with `Err`.
+
+use anyhow::{Context, Result};
+use std::io::{BufWriter, Read, Write};
+use std::path::{Path, PathBuf};
+
+/// Trailer size in bytes: u32 CRC + 4-byte tag.
+pub const TRAILER_LEN: u64 = 8;
+/// Trailer tag marking a checksummed file.
+pub const TRAILER_TAG: &[u8; 4] = b"HSUM";
+
+/// Failpoint site names for one atomic-write pipeline (see
+/// [`crate::fault`] for the registry).
+pub struct WriteSites {
+    /// Payload byte stream (supports [`crate::fault::FaultKind::Torn`]).
+    pub write: &'static str,
+    /// Data fsync before the rename.
+    pub sync: &'static str,
+    /// Temp → final rename.
+    pub rename: &'static str,
+    /// Parent-directory fsync after the rename.
+    pub dirsync: &'static str,
+}
+
+/// Checkpoint writes (`ckpt.*` sites).
+pub const CKPT_SITES: WriteSites = WriteSites {
+    write: "ckpt.write",
+    sync: "ckpt.sync",
+    rename: "ckpt.rename",
+    dirsync: "ckpt.dirsync",
+};
+
+/// Packed corpus writes (`packed.*` sites).
+pub const PACKED_SITES: WriteSites = WriteSites {
+    write: "packed.write",
+    sync: "packed.sync",
+    rename: "packed.rename",
+    dirsync: "packed.dirsync",
+};
+
+// ---------------------------------------------------------------------------
+// CRC-32 (IEEE 802.3, reflected, poly 0xEDB88320) — vendored, no crates.
+
+const CRC_TABLE: [u32; 256] = build_crc_table();
+
+const fn build_crc_table() -> [u32; 256] {
+    let mut table = [0u32; 256];
+    let mut i = 0;
+    while i < 256 {
+        let mut c = i as u32;
+        let mut k = 0;
+        while k < 8 {
+            c = if c & 1 != 0 { 0xEDB8_8320 ^ (c >> 1) } else { c >> 1 };
+            k += 1;
+        }
+        table[i] = c;
+        i += 1;
+    }
+    table
+}
+
+/// Incremental IEEE CRC-32.
+#[derive(Clone, Copy, Debug)]
+pub struct Crc32 {
+    state: u32,
+}
+
+impl Default for Crc32 {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Crc32 {
+    /// Fresh digest.
+    pub fn new() -> Self {
+        Self { state: 0xFFFF_FFFF }
+    }
+
+    /// Absorb `bytes`.
+    pub fn update(&mut self, bytes: &[u8]) {
+        let mut s = self.state;
+        for &b in bytes {
+            s = CRC_TABLE[((s ^ b as u32) & 0xFF) as usize] ^ (s >> 8);
+        }
+        self.state = s;
+    }
+
+    /// Final digest value (the digest may keep absorbing afterwards).
+    pub fn value(&self) -> u32 {
+        !self.state
+    }
+}
+
+/// One-shot CRC of a byte slice.
+pub fn crc32(bytes: &[u8]) -> u32 {
+    let mut c = Crc32::new();
+    c.update(bytes);
+    c.value()
+}
+
+// ---------------------------------------------------------------------------
+// Hashing adapters.
+
+/// A reader that hashes and counts exactly the bytes the caller
+/// consumes.
+///
+/// It must wrap **above** any `BufReader` (hashing the buffered
+/// source would absorb read-ahead bytes — including the trailer — that
+/// the parser never consumed).
+pub struct HashingReader<R> {
+    inner: R,
+    crc: Crc32,
+    consumed: u64,
+}
+
+impl<R: Read> HashingReader<R> {
+    /// Wrap `inner`.
+    pub fn new(inner: R) -> Self {
+        Self { inner, crc: Crc32::new(), consumed: 0 }
+    }
+
+    /// Bytes consumed through this reader so far.
+    pub fn consumed(&self) -> u64 {
+        self.consumed
+    }
+
+    /// CRC over the consumed bytes so far.
+    pub fn crc(&self) -> u32 {
+        self.crc.value()
+    }
+
+    /// Read exactly `buf.len()` bytes **without** hashing or counting
+    /// them — for the trailer, which the CRC must not cover.
+    pub fn read_exact_unhashed(&mut self, buf: &mut [u8]) -> std::io::Result<()> {
+        self.inner.read_exact(buf)
+    }
+}
+
+impl<R: Read> Read for HashingReader<R> {
+    fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+        let n = self.inner.read(buf)?;
+        self.crc.update(&buf[..n]);
+        self.consumed += n as u64;
+        Ok(n)
+    }
+}
+
+/// A writer that hashes everything written through it, with a raw
+/// (unhashed) escape hatch for the trailer.
+struct Crc32Writer<W> {
+    inner: W,
+    crc: Crc32,
+}
+
+impl<W: Write> Crc32Writer<W> {
+    fn new(inner: W) -> Self {
+        Self { inner, crc: Crc32::new() }
+    }
+
+    fn crc(&self) -> u32 {
+        self.crc.value()
+    }
+
+    /// Write without updating the digest (trailer bytes).
+    fn write_raw(&mut self, bytes: &[u8]) -> std::io::Result<()> {
+        self.inner.write_all(bytes)
+    }
+}
+
+impl<W: Write> Write for Crc32Writer<W> {
+    fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+        let n = self.inner.write(buf)?;
+        self.crc.update(&buf[..n]);
+        Ok(n)
+    }
+
+    fn flush(&mut self) -> std::io::Result<()> {
+        self.inner.flush()
+    }
+}
+
+/// A writer that consults a failpoint site per write, supporting exact
+/// torn-at-byte-offset cuts. Transparent when the `failpoints` feature
+/// is off or the site is unarmed.
+struct FaultWriter<W> {
+    inner: W,
+    #[cfg_attr(not(feature = "failpoints"), allow(dead_code))]
+    site: &'static str,
+}
+
+impl<W: Write> Write for FaultWriter<W> {
+    fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+        #[cfg(feature = "failpoints")]
+        {
+            let allowed = crate::fault::check_write(self.site, buf.len() as u64)? as usize;
+            if allowed < buf.len() {
+                // Torn cut: land exactly the allowed prefix, then fail.
+                self.inner.write_all(&buf[..allowed])?;
+                self.inner.flush()?;
+                return Err(crate::fault::injected_error(self.site));
+            }
+        }
+        self.inner.write(buf)
+    }
+
+    fn flush(&mut self) -> std::io::Result<()> {
+        self.inner.flush()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Atomic checksummed writes.
+
+fn tmp_sibling(path: &Path) -> PathBuf {
+    use std::sync::atomic::{AtomicU64, Ordering};
+    static COUNTER: AtomicU64 = AtomicU64::new(0);
+    let n = COUNTER.fetch_add(1, Ordering::Relaxed);
+    let name = path.file_name().map(|s| s.to_string_lossy()).unwrap_or_default();
+    path.with_file_name(format!(".{name}.{}-{n}.tmp", std::process::id()))
+}
+
+/// Atomically replace `path` with `payload`'s output plus the checksum
+/// trailer (module docs: temp in same dir → data fsync → rename →
+/// parent-dir fsync). On error the temp file is removed and any
+/// previous contents of `path` are untouched.
+///
+/// There is deliberately **no retry** anywhere in this pipeline: a
+/// failed save must surface as `Err` with the old file intact, not be
+/// papered over mid-protocol (retries for transient faults live in the
+/// positioned block-I/O layer).
+pub fn atomic_write(
+    path: &Path,
+    sites: &WriteSites,
+    payload: impl FnOnce(&mut dyn Write) -> Result<()>,
+) -> Result<()> {
+    if let Some(dir) = path.parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir)
+                .with_context(|| format!("create {}", dir.display()))?;
+        }
+    }
+    let tmp = tmp_sibling(path);
+    let res = write_tmp(&tmp, sites, payload).and_then(|()| {
+        crate::fault::check(sites.rename)?;
+        std::fs::rename(&tmp, path)
+            .with_context(|| format!("rename {} -> {}", tmp.display(), path.display()))?;
+        crate::fault::check(sites.dirsync)?;
+        if let Some(dir) = path.parent() {
+            if !dir.as_os_str().is_empty() {
+                // Durable rename: fsync the directory entry too.
+                std::fs::File::open(dir)?.sync_all()?;
+            }
+        }
+        Ok(())
+    });
+    if res.is_err() {
+        let _ = std::fs::remove_file(&tmp);
+    }
+    res.with_context(|| format!("atomic write of {}", path.display()))
+}
+
+fn write_tmp(
+    tmp: &Path,
+    sites: &WriteSites,
+    payload: impl FnOnce(&mut dyn Write) -> Result<()>,
+) -> Result<()> {
+    let file = std::fs::File::create(tmp)
+        .with_context(|| format!("create {}", tmp.display()))?;
+    {
+        let fw = FaultWriter { inner: &file, site: sites.write };
+        let mut w = Crc32Writer::new(BufWriter::with_capacity(1 << 16, fw));
+        payload(&mut w)?;
+        let crc = w.crc();
+        w.write_raw(&crc.to_le_bytes())?;
+        w.write_raw(TRAILER_TAG)?;
+        w.flush()?;
+    }
+    crate::fault::check(sites.sync)?;
+    // The data must be on disk before the rename publishes it.
+    file.sync_data()?;
+    Ok(())
+}
+
+/// Split a checksummed file's length into `payload_len`, rejecting
+/// files too short to carry a trailer.
+pub fn payload_len(file_len: u64, what: &str) -> Result<u64> {
+    anyhow::ensure!(
+        file_len >= TRAILER_LEN,
+        "corrupt {what}: {file_len} bytes is too short for a checksum trailer"
+    );
+    Ok(file_len - TRAILER_LEN)
+}
+
+/// Finish a verified read: require the parser to have consumed exactly
+/// the payload, then read the trailer via `r` and match tag + CRC.
+pub fn verify_trailer<R: Read>(
+    r: &mut HashingReader<R>,
+    expected_payload: u64,
+    what: &str,
+) -> Result<()> {
+    anyhow::ensure!(
+        r.consumed() == expected_payload,
+        "corrupt {what}: parsed {} payload bytes, expected {expected_payload}",
+        r.consumed()
+    );
+    let crc = r.crc();
+    let mut trailer = [0u8; TRAILER_LEN as usize];
+    r.read_exact_unhashed(&mut trailer)
+        .map_err(|e| anyhow::anyhow!("corrupt {what}: unreadable checksum trailer: {e}"))?;
+    anyhow::ensure!(
+        &trailer[4..8] == TRAILER_TAG,
+        "corrupt {what}: missing checksum trailer tag"
+    );
+    let stored = u32::from_le_bytes(trailer[0..4].try_into().unwrap());
+    anyhow::ensure!(
+        stored == crc,
+        "corrupt {what}: checksum mismatch (stored {stored:#010x}, computed {crc:#010x})"
+    );
+    Ok(())
+}
+
+/// Re-scan an already-open file from byte 0 and verify its checksum
+/// trailer (the last [`TRAILER_LEN`] bytes) over everything before it.
+/// Chunked 64 KiB reads; the cursor position afterwards is
+/// unspecified. For readers that keep the file open for positioned
+/// block I/O and therefore never stream the whole payload through a
+/// [`HashingReader`].
+pub fn verify_file_crc(
+    f: &mut (impl Read + std::io::Seek),
+    file_len: u64,
+    what: &str,
+) -> Result<()> {
+    let payload = payload_len(file_len, what)?;
+    f.seek(std::io::SeekFrom::Start(0))?;
+    let mut crc = Crc32::new();
+    let mut buf = vec![0u8; 64 * 1024];
+    let mut left = payload;
+    while left > 0 {
+        let take = (buf.len() as u64).min(left) as usize;
+        f.read_exact(&mut buf[..take])
+            .map_err(|e| anyhow::anyhow!("corrupt {what}: short payload read: {e}"))?;
+        crc.update(&buf[..take]);
+        left -= take as u64;
+    }
+    let mut trailer = [0u8; TRAILER_LEN as usize];
+    f.read_exact(&mut trailer)
+        .map_err(|e| anyhow::anyhow!("corrupt {what}: unreadable checksum trailer: {e}"))?;
+    anyhow::ensure!(
+        &trailer[4..8] == TRAILER_TAG,
+        "corrupt {what}: missing checksum trailer tag"
+    );
+    let stored = u32::from_le_bytes(trailer[0..4].try_into().unwrap());
+    anyhow::ensure!(
+        stored == crc.value(),
+        "corrupt {what}: checksum mismatch (stored {stored:#010x}, computed {:#010x})",
+        crc.value()
+    );
+    Ok(())
+}
+
+/// True if `name` looks like one of [`atomic_write`]'s temp files — a
+/// partial left behind only if the process died mid-save.
+pub fn is_tmp_partial(name: &str) -> bool {
+    name.ends_with(".tmp") && name.starts_with('.')
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn crc32_known_answer() {
+        // The classic IEEE CRC-32 check value.
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b""), 0);
+        // Incremental == one-shot.
+        let mut c = Crc32::new();
+        c.update(b"1234");
+        c.update(b"56789");
+        assert_eq!(c.value(), 0xCBF4_3926);
+    }
+
+    #[test]
+    fn atomic_write_roundtrip_and_trailer() {
+        let dir = std::env::temp_dir().join("hdp_durable_rt");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("blob.bin");
+        atomic_write(&p, &CKPT_SITES, |w| {
+            w.write_all(b"hello durable world")?;
+            Ok(())
+        })
+        .unwrap();
+        let bytes = std::fs::read(&p).unwrap();
+        assert_eq!(&bytes[..19], b"hello durable world");
+        assert_eq!(bytes.len(), 19 + TRAILER_LEN as usize);
+        assert_eq!(&bytes[23..27], TRAILER_TAG);
+        let stored = u32::from_le_bytes(bytes[19..23].try_into().unwrap());
+        assert_eq!(stored, crc32(b"hello durable world"));
+        // No temp files left behind.
+        let leftovers: Vec<_> = std::fs::read_dir(&dir)
+            .unwrap()
+            .filter_map(|e| e.ok())
+            .filter(|e| is_tmp_partial(&e.file_name().to_string_lossy()))
+            .collect();
+        assert!(leftovers.is_empty(), "temp files left: {leftovers:?}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn failed_payload_leaves_previous_contents() {
+        let dir = std::env::temp_dir().join("hdp_durable_fail");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("blob.bin");
+        atomic_write(&p, &CKPT_SITES, |w| {
+            w.write_all(b"version 1")?;
+            Ok(())
+        })
+        .unwrap();
+        let before = std::fs::read(&p).unwrap();
+        let err = atomic_write(&p, &CKPT_SITES, |w| {
+            w.write_all(b"version 2 partial")?;
+            anyhow::bail!("simulated payload failure")
+        });
+        assert!(err.is_err());
+        assert_eq!(std::fs::read(&p).unwrap(), before, "target was clobbered");
+        let leftovers: Vec<_> = std::fs::read_dir(&dir)
+            .unwrap()
+            .filter_map(|e| e.ok())
+            .filter(|e| is_tmp_partial(&e.file_name().to_string_lossy()))
+            .collect();
+        assert!(leftovers.is_empty(), "temp files left: {leftovers:?}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn hashing_reader_verifies_and_rejects() {
+        let payload = b"some payload bytes";
+        let mut file = payload.to_vec();
+        file.extend_from_slice(&crc32(payload).to_le_bytes());
+        file.extend_from_slice(TRAILER_TAG);
+
+        // Clean verify.
+        let mut r = HashingReader::new(&file[..]);
+        let mut buf = vec![0u8; payload.len()];
+        r.read_exact(&mut buf).unwrap();
+        verify_trailer(&mut r, payload.len() as u64, "blob").unwrap();
+
+        // Under-consumed payload is rejected.
+        let mut r = HashingReader::new(&file[..]);
+        let mut buf = vec![0u8; payload.len() - 1];
+        r.read_exact(&mut buf).unwrap();
+        assert!(verify_trailer(&mut r, payload.len() as u64, "blob").is_err());
+
+        // A flipped payload byte is rejected.
+        let mut bad = file.clone();
+        bad[3] ^= 0x40;
+        let mut r = HashingReader::new(&bad[..]);
+        let mut buf = vec![0u8; payload.len()];
+        r.read_exact(&mut buf).unwrap();
+        let err = verify_trailer(&mut r, payload.len() as u64, "blob").unwrap_err();
+        assert!(err.to_string().contains("checksum mismatch"), "{err}");
+
+        // A flipped tag byte is rejected.
+        let mut bad = file.clone();
+        let taglast = bad.len() - 1;
+        bad[taglast] ^= 0xff;
+        let mut r = HashingReader::new(&bad[..]);
+        let mut buf = vec![0u8; payload.len()];
+        r.read_exact(&mut buf).unwrap();
+        let err = verify_trailer(&mut r, payload.len() as u64, "blob").unwrap_err();
+        assert!(err.to_string().contains("trailer tag"), "{err}");
+    }
+}

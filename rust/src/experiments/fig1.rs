@@ -43,6 +43,7 @@ pub fn run_small(ctx: &ExpContext) -> anyhow::Result<()> {
             seed: ctx.seed,
             eval_every: (iters / 20).max(1),
             time_budget_secs: 0,
+            ..Default::default()
         };
         let cfg = ctx.paper_cfg(500);
         let (pc_sum, pc) = super::run_one(
@@ -105,6 +106,7 @@ pub fn run_neurips(ctx: &ExpContext) -> anyhow::Result<()> {
         seed: ctx.seed,
         eval_every: 1,
         time_budget_secs: budget,
+        ..Default::default()
     };
     let (pc_sum, _pc) = super::run_one(
         "pc",
@@ -151,6 +153,7 @@ pub fn run_pubmed(ctx: &ExpContext) -> anyhow::Result<()> {
         seed: ctx.seed,
         eval_every: (iters / 10).max(1),
         time_budget_secs: 0,
+        ..Default::default()
     };
     let cfg = ctx.paper_cfg(1000);
     let (summary, t) = super::run_one(

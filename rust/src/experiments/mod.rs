@@ -70,7 +70,7 @@ pub fn run_one(
         t.as_mut(),
         run,
         &mut trace,
-        &LoopOptions { verbose, eval_first: true },
+        &LoopOptions { verbose, eval_first: true, ..Default::default() },
     )?;
     Ok((summary, t))
 }
@@ -92,9 +92,15 @@ pub fn cmd_train(args: &Args) -> anyhow::Result<()> {
         seed: args.get_or("seed", 2020)?,
         eval_every: args.get_or("eval-every", 10)?,
         time_budget_secs: args.get_or("time-budget", 0)?,
+        checkpoint_every: args.get_or("checkpoint-every", 0)?,
     };
     let out_dir = PathBuf::from(args.value("out-dir").unwrap_or("results"));
     std::fs::create_dir_all(&out_dir)?;
+    let ckpt_dir = args
+        .value("checkpoint-dir")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| out_dir.join("checkpoints"));
+    let resume = args.flag("resume");
     let save_path = args.value("save").map(PathBuf::from);
     let heldout_frac: f64 = args.get_or("heldout", 0.0)?;
     args.finish()?;
@@ -102,9 +108,49 @@ pub fn cmd_train(args: &Args) -> anyhow::Result<()> {
         (0.0..0.9).contains(&heldout_frac),
         "--heldout must be in [0, 0.9)"
     );
+    let corpus = Arc::new(registry::load(&corpus_name, run.seed)?);
+    // --resume: pick the newest loadable checkpoint (partial/corrupt
+    // files are skipped with a warning) and continue the SAME chain —
+    // the resumed run is bit-identical to an uninterrupted one.
+    let mut t: Box<dyn Trainer> = if resume {
+        anyhow::ensure!(
+            sampler == "pc",
+            "--resume currently supports the pc sampler only (got `{sampler}`)"
+        );
+        match crate::hdp::checkpoint::latest_valid(&ckpt_dir)? {
+            Some((path, ckpt)) => {
+                println!(
+                    "resuming from {} (iteration {})",
+                    path.display(),
+                    ckpt.iteration
+                );
+                Box::new(PcSampler::resume_chain(
+                    corpus.clone(),
+                    cfg,
+                    run.threads,
+                    run.seed,
+                    &ckpt,
+                )?)
+            }
+            None => {
+                println!(
+                    "no usable checkpoint under {}; starting fresh",
+                    ckpt_dir.display()
+                );
+                make_sampler(&sampler, corpus.clone(), cfg, run.threads, run.seed)?
+            }
+        }
+    } else {
+        make_sampler(&sampler, corpus.clone(), cfg, run.threads, run.seed)?
+    };
     let tag = format!("train_{corpus_name}_{sampler}");
-    let (summary, t) =
-        run_one(&sampler, &corpus_name, cfg, &run, &out_dir, &tag, true)?;
+    let mut trace = TraceWriter::to_file(&out_dir.join(format!("{tag}.csv")))?;
+    let opts = LoopOptions {
+        verbose: true,
+        eval_first: true,
+        checkpoint_dir: (run.checkpoint_every > 0).then(|| ckpt_dir.clone()),
+    };
+    let summary = train(t.as_mut(), &run, &mut trace, &opts)?;
     println!(
         "\n{} on {corpus_name}: {} iterations in {:.1}s ({:.0} tokens/s), final ll {:.1}, {} topics",
         t.name(),
@@ -114,17 +160,22 @@ pub fn cmd_train(args: &Args) -> anyhow::Result<()> {
         summary.final_log_likelihood,
         summary.final_active_topics
     );
-    // Optional checkpoint (PC sampler state is what checkpoints carry;
-    // other samplers save their z + a uniform psi over their slots).
+    if summary.checkpoints_written + summary.checkpoints_failed > 0 {
+        println!(
+            "checkpoints: {} written to {}{}",
+            summary.checkpoints_written,
+            ckpt_dir.display(),
+            if summary.checkpoints_failed > 0 {
+                format!(" ({} FAILED)", summary.checkpoints_failed)
+            } else {
+                String::new()
+            }
+        );
+    }
+    // Optional final checkpoint (PC-family samplers store their real
+    // Ψ; others record z + a uniform Ψ over their topic rows).
     if let Some(path) = save_path {
-        let rows = t.topic_word_rows();
-        let ckpt = crate::hdp::checkpoint::Checkpoint {
-            iteration: t.iterations_done() as u64,
-            sampler: t.name().to_string(),
-            psi: vec![1.0 / rows.len().max(1) as f64; rows.len()],
-            z: t.assignments().to_vec(),
-        };
-        ckpt.save(&path)?;
+        t.checkpoint().save(&path)?;
         println!("checkpoint -> {}", path.display());
     }
     // Optional held-out document-completion perplexity on a fresh

@@ -34,6 +34,7 @@ pub fn run(ctx: &ExpContext) -> anyhow::Result<()> {
             seed: ctx.seed,
             eval_every: (iters / 5).max(1),
             time_budget_secs: 0,
+            ..Default::default()
         };
         let cfg = ctx.paper_cfg(if name == "pubmed" { 1000 } else { 500 });
         let (summary, t) = super::run_one(

@@ -21,6 +21,7 @@ pub fn run(ctx: &ExpContext, corpus: &str, all_topics: bool) -> anyhow::Result<(
         seed: ctx.seed,
         eval_every: iters.max(1),
         time_budget_secs: 0,
+        ..Default::default()
     };
     let cfg = ctx.paper_cfg(500);
     let (_summary, t) = super::run_one(

@@ -1,0 +1,408 @@
+//! Deterministic, seedable I/O fault injection (failpoints).
+//!
+//! A process-global registry maps **site names** to fault specs; the
+//! I/O layers consult it at well-known points. Everything is behind the
+//! `failpoints` cargo feature: in a default build every check compiles
+//! to an inlined `Ok(())` and the registry does not exist, so the hot
+//! paths pay nothing. With the feature on, the disarmed fast path is a
+//! single relaxed atomic load.
+//!
+//! # Sites
+//!
+//! | site            | where                                             |
+//! |-----------------|---------------------------------------------------|
+//! | `ckpt.write`    | checkpoint payload bytes ([`crate::durable`])     |
+//! | `ckpt.sync`     | checkpoint data fsync                             |
+//! | `ckpt.rename`   | checkpoint temp → final rename                    |
+//! | `ckpt.dirsync`  | checkpoint parent-directory fsync                 |
+//! | `packed.*`      | same four points for `.hdpp` corpus writes        |
+//! | `corpus.pread`  | [`PackedCorpusFile`] positioned block reads       |
+//! | `filez.pread`   | [`FileZ`] positioned block reads                  |
+//! | `filez.pwrite`  | [`FileZ`] positioned block writes                 |
+//! | `prefetch.load` | the streamed sweep's async block-prefetch job     |
+//!
+//! [`PackedCorpusFile`]: crate::corpus::io::PackedCorpusFile
+//! [`FileZ`]: crate::hdp::pc::zstep::FileZ
+//!
+//! # Determinism
+//!
+//! Counted specs ([`FaultSpec::after`]/[`FaultSpec::times`]) fire on an
+//! exact check sequence; probabilistic specs draw from a private
+//! [`crate::rng::Pcg64`] seeded per site, so a given (seed, check
+//! sequence) always fires identically. [`FaultKind::Torn`] accounts
+//! bytes through a write site and cuts at an exact byte offset — a
+//! simulated crash/torn write. Nothing here consults wall-clock time
+//! or ambient randomness.
+
+use std::io;
+
+/// What an armed failpoint does when it fires.
+#[derive(Clone, Copy, Debug)]
+pub enum FaultKind {
+    /// Return an injected I/O error (EIO-like) from the site.
+    Error,
+    /// Write sites only: let exactly `at` bytes through the site in
+    /// total, then fail persistently — the on-disk effect of a crash
+    /// or torn write at byte offset `at`.
+    Torn {
+        /// Byte offset at which the write stream is cut.
+        at: u64,
+    },
+    /// Abort the process at the trigger point (real `kill -9`
+    /// semantics; subprocess harnesses only).
+    Abort,
+}
+
+/// An armed fault: what fires, when, and how often.
+#[derive(Clone, Copy, Debug)]
+pub struct FaultSpec {
+    /// The injected behavior.
+    pub kind: FaultKind,
+    /// Successful passes through the site before the fault arms
+    /// (counted kinds).
+    pub after: u64,
+    /// Triggers before the site self-heals (`u64::MAX` = persistent).
+    pub times: u64,
+    /// Seeded coin instead of counting: `(p, seed)` fires each check
+    /// with probability `p`, deterministically per (seed, sequence).
+    pub probability: Option<(f64, u64)>,
+}
+
+impl FaultSpec {
+    /// Persistent injected error from the first check on.
+    pub fn error() -> Self {
+        Self { kind: FaultKind::Error, after: 0, times: u64::MAX, probability: None }
+    }
+
+    /// Injected error on checks `after..after + times`, healed after.
+    pub fn error_after(after: u64, times: u64) -> Self {
+        Self { kind: FaultKind::Error, after, times, probability: None }
+    }
+
+    /// Torn write: cut the site's byte stream at offset `at`.
+    pub fn torn(at: u64) -> Self {
+        Self { kind: FaultKind::Torn { at }, after: 0, times: u64::MAX, probability: None }
+    }
+
+    /// Seeded probabilistic error: each check fails with probability
+    /// `p` (deterministic for a fixed seed and check sequence).
+    pub fn random_error(p: f64, seed: u64) -> Self {
+        Self { kind: FaultKind::Error, after: 0, times: u64::MAX, probability: Some((p, seed)) }
+    }
+}
+
+/// Marker payload carried inside every injected [`io::Error`], so
+/// callers (and retry policies) can tell injected faults from real
+/// ones.
+#[derive(Debug)]
+pub struct InjectedFault {
+    /// The failpoint site that fired.
+    pub site: String,
+}
+
+impl std::fmt::Display for InjectedFault {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "injected fault at failpoint `{}`", self.site)
+    }
+}
+
+impl std::error::Error for InjectedFault {}
+
+/// Build the injected error for `site`.
+pub fn injected_error(site: &str) -> io::Error {
+    io::Error::new(io::ErrorKind::Other, InjectedFault { site: site.to_string() })
+}
+
+/// True iff `e` was manufactured by this module.
+pub fn is_injected(e: &io::Error) -> bool {
+    e.get_ref().is_some_and(|r| r.is::<InjectedFault>())
+}
+
+#[cfg(feature = "failpoints")]
+mod registry {
+    use super::*;
+    use std::collections::HashMap;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::sync::{Mutex, MutexGuard, OnceLock};
+
+    /// Armed-site count: the fast path is one relaxed load of this.
+    static ARMED: AtomicUsize = AtomicUsize::new(0);
+
+    struct SiteState {
+        spec: FaultSpec,
+        rng: crate::rng::Pcg64,
+        /// Successful passes so far (counted kinds, pre-arm).
+        passes: u64,
+        /// Times the fault has fired.
+        triggered: u64,
+        /// Bytes allowed through a write site ([`FaultKind::Torn`]).
+        written: u64,
+    }
+
+    fn table() -> MutexGuard<'static, HashMap<String, SiteState>> {
+        static TABLE: OnceLock<Mutex<HashMap<String, SiteState>>> = OnceLock::new();
+        TABLE
+            .get_or_init(|| Mutex::new(HashMap::new()))
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+    }
+
+    /// Arm `site` with `spec`, replacing any previous arming (and its
+    /// counters).
+    pub fn arm(site: &str, spec: FaultSpec) {
+        let mut t = table();
+        let seed = spec.probability.map(|(_, s)| s).unwrap_or(0);
+        let prev = t.insert(
+            site.to_string(),
+            SiteState {
+                spec,
+                rng: crate::rng::Pcg64::new(seed),
+                passes: 0,
+                triggered: 0,
+                written: 0,
+            },
+        );
+        if prev.is_none() {
+            ARMED.fetch_add(1, Ordering::SeqCst);
+        }
+    }
+
+    /// Disarm `site` (no-op if not armed).
+    pub fn disarm(site: &str) {
+        if table().remove(site).is_some() {
+            ARMED.fetch_sub(1, Ordering::SeqCst);
+        }
+    }
+
+    /// Disarm everything.
+    pub fn reset() {
+        let mut t = table();
+        let n = t.len();
+        t.clear();
+        ARMED.fetch_sub(n, Ordering::SeqCst);
+    }
+
+    /// How many times `site` has fired since arming.
+    pub fn triggered(site: &str) -> u64 {
+        table().get(site).map_or(0, |s| s.triggered)
+    }
+
+    /// Registry tests and fault-matrix tests share one process-global
+    /// registry; serialize them on this.
+    pub fn serial_guard() -> MutexGuard<'static, ()> {
+        static LOCK: Mutex<()> = Mutex::new(());
+        LOCK.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    /// Should this check fire? Advances the per-site counters/RNG.
+    fn decide(st: &mut SiteState) -> bool {
+        if let Some((p, _)) = st.spec.probability {
+            let fire = st.triggered < st.spec.times && st.rng.f64() < p;
+            if fire {
+                st.triggered += 1;
+            }
+            return fire;
+        }
+        if st.passes < st.spec.after {
+            st.passes += 1;
+            return false;
+        }
+        let fire = st.triggered < st.spec.times;
+        if fire {
+            st.triggered += 1;
+        }
+        fire
+    }
+
+    /// Generic (read/sync/rename) failpoint check.
+    pub fn check(site: &str) -> io::Result<()> {
+        if ARMED.load(Ordering::Relaxed) == 0 {
+            return Ok(());
+        }
+        let mut t = table();
+        let Some(st) = t.get_mut(site) else { return Ok(()) };
+        match st.spec.kind {
+            FaultKind::Error => {
+                if decide(st) {
+                    return Err(injected_error(site));
+                }
+            }
+            // Torn is byte-accounted through write sites; a plain
+            // check never advances the byte counter, so it only fires
+            // once the companion write site has hit the cut.
+            FaultKind::Torn { at } => {
+                if st.written >= at {
+                    st.triggered += 1;
+                    return Err(injected_error(site));
+                }
+            }
+            FaultKind::Abort => {
+                if decide(st) {
+                    std::process::abort();
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Write-site check for a `len`-byte write. Returns how many bytes
+    /// may pass (`== len` normally); a short return means the caller
+    /// must write exactly that prefix and then fail with
+    /// [`injected_error`].
+    pub fn check_write(site: &str, len: u64) -> io::Result<u64> {
+        if ARMED.load(Ordering::Relaxed) == 0 {
+            return Ok(len);
+        }
+        let mut t = table();
+        let Some(st) = t.get_mut(site) else { return Ok(len) };
+        match st.spec.kind {
+            FaultKind::Error => {
+                if decide(st) {
+                    return Err(injected_error(site));
+                }
+                Ok(len)
+            }
+            FaultKind::Torn { at } => {
+                if st.written >= at {
+                    st.triggered += 1;
+                    return Err(injected_error(site));
+                }
+                let allowed = (at - st.written).min(len);
+                st.written += allowed;
+                if allowed < len {
+                    st.triggered += 1;
+                }
+                Ok(allowed)
+            }
+            FaultKind::Abort => {
+                if decide(st) {
+                    std::process::abort();
+                }
+                Ok(len)
+            }
+        }
+    }
+}
+
+#[cfg(feature = "failpoints")]
+pub use registry::{arm, check, check_write, disarm, reset, serial_guard, triggered};
+
+/// No-op check (feature off): compiles away entirely.
+#[cfg(not(feature = "failpoints"))]
+#[inline(always)]
+pub fn check(_site: &str) -> io::Result<()> {
+    Ok(())
+}
+
+/// No-op write check (feature off): all bytes pass.
+#[cfg(not(feature = "failpoints"))]
+#[inline(always)]
+pub fn check_write(_site: &str, len: u64) -> io::Result<u64> {
+    Ok(len)
+}
+
+/// Retries for a transient fault at an async prefetch site before the
+/// job gives up and dies (its supervisor degrades to the inline path).
+pub const PREFETCH_RETRIES: u32 = 3;
+
+/// Check `site` with bounded backoff retries — the prefetch-job
+/// policy. Panics when the fault persists past [`PREFETCH_RETRIES`];
+/// the pool's panic capture plus the streamed sweep's inline fallback
+/// take over from there, so a dead prefetch never aborts a sweep.
+#[cfg(feature = "failpoints")]
+pub fn check_or_die(site: &str) {
+    for attempt in 0..=PREFETCH_RETRIES {
+        match check(site) {
+            Ok(()) => return,
+            Err(_) if attempt < PREFETCH_RETRIES => {
+                // 0, 1, 2 → 100 µs, 200 µs, 400 µs
+                std::thread::sleep(std::time::Duration::from_micros(100 << attempt));
+            }
+            Err(e) => panic!("{e} ({attempt} retries exhausted)"),
+        }
+    }
+}
+
+/// No-op (feature off).
+#[cfg(not(feature = "failpoints"))]
+#[inline(always)]
+pub fn check_or_die(_site: &str) {}
+
+#[cfg(all(test, feature = "failpoints"))]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counted_error_fires_exact_window() {
+        let _g = serial_guard();
+        let site = "test.fault.counted";
+        arm(site, FaultSpec::error_after(2, 3));
+        let results: Vec<bool> = (0..8).map(|_| check(site).is_ok()).collect();
+        // passes 0,1 succeed; checks 2,3,4 fail; healed after.
+        assert_eq!(results, vec![true, true, false, false, false, true, true, true]);
+        assert_eq!(triggered(site), 3);
+        disarm(site);
+        assert!(check(site).is_ok());
+    }
+
+    #[test]
+    fn torn_write_accounts_bytes_exactly() {
+        let _g = serial_guard();
+        let site = "test.fault.torn";
+        arm(site, FaultSpec::torn(10));
+        assert_eq!(check_write(site, 4).unwrap(), 4);
+        assert_eq!(check_write(site, 4).unwrap(), 4);
+        // 8 bytes through; a 5-byte write passes only 2.
+        assert_eq!(check_write(site, 5).unwrap(), 2);
+        // Persistently dead afterwards.
+        assert!(check_write(site, 1).is_err());
+        assert!(check(site).is_err());
+        assert!(triggered(site) >= 2);
+        disarm(site);
+    }
+
+    #[test]
+    fn torn_at_zero_cuts_immediately() {
+        let _g = serial_guard();
+        let site = "test.fault.torn0";
+        arm(site, FaultSpec::torn(0));
+        assert!(check_write(site, 1).is_err());
+        disarm(site);
+    }
+
+    #[test]
+    fn seeded_probability_is_deterministic() {
+        let _g = serial_guard();
+        let site = "test.fault.random";
+        let fire_pattern = |seed: u64| -> Vec<bool> {
+            arm(site, FaultSpec::random_error(0.5, seed));
+            let v = (0..64).map(|_| check(site).is_err()).collect();
+            disarm(site);
+            v
+        };
+        let a = fire_pattern(7);
+        let b = fire_pattern(7);
+        let c = fire_pattern(8);
+        assert_eq!(a, b, "same seed must fire identically");
+        assert_ne!(a, c, "different seeds should differ");
+        let fails = a.iter().filter(|&&f| f).count();
+        assert!((10..=54).contains(&fails), "p=0.5 fired {fails}/64");
+    }
+
+    #[test]
+    fn injected_errors_are_recognizable() {
+        let e = injected_error("test.site");
+        assert!(is_injected(&e));
+        assert!(e.to_string().contains("test.site"));
+        assert!(!is_injected(&io::Error::new(io::ErrorKind::Other, "plain")));
+    }
+
+    #[test]
+    fn unarmed_sites_pass() {
+        let _g = serial_guard();
+        reset();
+        assert!(check("test.fault.never-armed").is_ok());
+        assert_eq!(check_write("test.fault.never-armed", 9).unwrap(), 9);
+        assert_eq!(triggered("test.fault.never-armed"), 0);
+    }
+}

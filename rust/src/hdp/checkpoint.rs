@@ -11,12 +11,39 @@
 //! (or streamed straight into a [`crate::hdp::pc::zstep::FileZ`] store)
 //! without parsing per-document records. Version-1 files (per-document
 //! length-prefixed vectors) are still read.
+//!
+//! # Crash-recovery contract
+//!
+//! Both writers ([`Checkpoint::save`], [`Checkpoint::save_v1`]) go
+//! through [`crate::durable::atomic_write`]: temp file in the same
+//! directory, data fsync, rename, parent-directory fsync — a crash at
+//! *any byte offset* of a save leaves the previous checkpoint at the
+//! target path intact, and the only possible debris is a uniquely
+//! named `.…tmp` sibling. Every file ends in the 8-byte CRC-32
+//! trailer ([`crate::durable`]); [`Checkpoint::load`] verifies it for
+//! both format versions and returns `Err` — never a panic or a
+//! partial snapshot — on any truncation, extension, or bit flip.
+//!
+//! Resumable training sits on top: the coordinator saves periodic
+//! checkpoints under [`periodic_name`], and [`latest_valid`] scans a
+//! directory for the newest one that still loads (deleting temp
+//! partials, skipping corrupt files) so a crash between saves falls
+//! back to the previous valid snapshot.
+//! [`PcSampler::resume_chain`] then restores the sampler with the
+//! run's original seed and iteration counter, which makes the
+//! recovered chain **bit-identical** to the uninterrupted one (the
+//! per-iteration RNG streams are keyed by `(seed, iteration)`).
+//!
+//! With the `failpoints` feature the save pipeline checks the
+//! `ckpt.write` / `ckpt.sync` / `ckpt.rename` / `ckpt.dirsync` sites
+//! ([`crate::fault`]); there is no retry anywhere on this path — a
+//! failed save surfaces as `Err` with the old file intact.
 
 use crate::corpus::Corpus;
 use crate::sparse::{DocTopics, TopicWordAcc, TopicWordRows};
 use anyhow::{Context, Result};
-use std::io::{BufReader, BufWriter, Read, Write};
-use std::path::Path;
+use std::io::{BufReader, Read, Write};
+use std::path::{Path, PathBuf};
 
 const MAGIC: &[u8; 8] = b"HDPCKPT2";
 const MAGIC_V1: &[u8; 8] = b"HDPCKPT1";
@@ -35,43 +62,46 @@ pub struct Checkpoint {
 }
 
 impl Checkpoint {
-    /// Write to `path` (parent directories created). The z section is
-    /// the packed CSR layout (offsets + flat arena; module docs).
+    /// Write to `path` (parent directories created) — atomically and
+    /// with the checksum trailer (module docs). The z section is the
+    /// packed CSR layout (offsets + flat arena).
     pub fn save(&self, path: &Path) -> Result<()> {
-        if let Some(dir) = path.parent() {
-            std::fs::create_dir_all(dir)?;
-        }
-        let mut f = BufWriter::new(std::fs::File::create(path)?);
-        f.write_all(MAGIC)?;
-        write_u64(&mut f, self.iteration)?;
-        let name = self.sampler.as_bytes();
-        write_u64(&mut f, name.len() as u64)?;
-        f.write_all(name)?;
-        write_u64(&mut f, self.psi.len() as u64)?;
-        for &p in &self.psi {
-            f.write_all(&p.to_le_bytes())?;
-        }
-        write_u64(&mut f, self.z.len() as u64)?;
-        let mut off = 0u64;
-        write_u64(&mut f, 0)?;
-        for zd in &self.z {
-            off += zd.len() as u64;
-            write_u64(&mut f, off)?;
-        }
-        for zd in &self.z {
-            crate::corpus::io::write_u32s(&mut f, zd)?;
-        }
-        f.flush()?;
-        Ok(())
+        crate::durable::atomic_write(path, &crate::durable::CKPT_SITES, |f| {
+            f.write_all(MAGIC)?;
+            write_u64(f, self.iteration)?;
+            let name = self.sampler.as_bytes();
+            write_u64(f, name.len() as u64)?;
+            f.write_all(name)?;
+            write_u64(f, self.psi.len() as u64)?;
+            for &p in &self.psi {
+                f.write_all(&p.to_le_bytes())?;
+            }
+            write_u64(f, self.z.len() as u64)?;
+            let mut off = 0u64;
+            write_u64(f, 0)?;
+            for zd in &self.z {
+                off += zd.len() as u64;
+                write_u64(f, off)?;
+            }
+            for zd in &self.z {
+                crate::corpus::io::write_u32s(f, zd)?;
+            }
+            Ok(())
+        })
     }
 
     /// Read from `path` (packed version-2 layout, or the legacy
-    /// version-1 per-document layout).
+    /// version-1 per-document layout), verifying the checksum trailer.
+    /// Any truncation or corruption yields `Err`, never a panic.
     pub fn load(path: &Path) -> Result<Self> {
         let file = std::fs::File::open(path)
             .with_context(|| format!("open {}", path.display()))?;
         let file_len = file.metadata()?.len();
-        let mut f = BufReader::new(file);
+        let payload = crate::durable::payload_len(file_len, "checkpoint")
+            .with_context(|| path.display().to_string())?;
+        // Hash above the buffering so the digest covers exactly the
+        // bytes the parser consumes.
+        let mut f = crate::durable::HashingReader::new(BufReader::new(file));
         let mut magic = [0u8; 8];
         f.read_exact(&mut magic)?;
         let v2 = match &magic {
@@ -86,7 +116,7 @@ impl Checkpoint {
         f.read_exact(&mut name)?;
         let psi_len = read_u64(&mut f)? as usize;
         anyhow::ensure!(
-            psi_len as u128 * 8 <= file_len as u128,
+            psi_len as u128 * 8 <= payload as u128,
             "corrupt checkpoint: psi length {psi_len} exceeds file size"
         );
         let mut psi = Vec::with_capacity(psi_len);
@@ -97,7 +127,7 @@ impl Checkpoint {
         }
         let docs = read_u64(&mut f)? as usize;
         anyhow::ensure!(
-            docs as u128 * 8 <= file_len as u128,
+            docs as u128 * 8 <= payload as u128,
             "corrupt checkpoint: doc count {docs} exceeds file size"
         );
         let z = if v2 {
@@ -109,7 +139,7 @@ impl Checkpoint {
             anyhow::ensure!(
                 offsets.first() == Some(&0)
                     && offsets.windows(2).all(|w| w[0] <= w[1])
-                    && *offsets.last().unwrap() as u128 * 4 <= file_len as u128,
+                    && *offsets.last().unwrap() as u128 * 4 <= payload as u128,
                 "corrupt checkpoint z offsets"
             );
             let mut flat = Vec::new();
@@ -128,7 +158,7 @@ impl Checkpoint {
             for _ in 0..docs {
                 let len = read_u64(&mut f)? as usize;
                 anyhow::ensure!(
-                    len as u128 * 4 <= file_len as u128,
+                    len as u128 * 4 <= payload as u128,
                     "corrupt checkpoint: doc length {len} exceeds file size"
                 );
                 let mut doc = Vec::new();
@@ -137,6 +167,8 @@ impl Checkpoint {
             }
             z
         };
+        crate::durable::verify_trailer(&mut f, payload, "checkpoint")
+            .with_context(|| path.display().to_string())?;
         Ok(Self {
             iteration,
             sampler: String::from_utf8(name)?,
@@ -197,26 +229,23 @@ impl Checkpoint {
     /// tests can mint v1 fixtures; new code should use
     /// [`Checkpoint::save`].
     pub fn save_v1(&self, path: &Path) -> Result<()> {
-        if let Some(dir) = path.parent() {
-            std::fs::create_dir_all(dir)?;
-        }
-        let mut f = BufWriter::new(std::fs::File::create(path)?);
-        f.write_all(MAGIC_V1)?;
-        write_u64(&mut f, self.iteration)?;
-        let name = self.sampler.as_bytes();
-        write_u64(&mut f, name.len() as u64)?;
-        f.write_all(name)?;
-        write_u64(&mut f, self.psi.len() as u64)?;
-        for &p in &self.psi {
-            f.write_all(&p.to_le_bytes())?;
-        }
-        write_u64(&mut f, self.z.len() as u64)?;
-        for zd in &self.z {
-            write_u64(&mut f, zd.len() as u64)?;
-            crate::corpus::io::write_u32s(&mut f, zd)?;
-        }
-        f.flush()?;
-        Ok(())
+        crate::durable::atomic_write(path, &crate::durable::CKPT_SITES, |f| {
+            f.write_all(MAGIC_V1)?;
+            write_u64(f, self.iteration)?;
+            let name = self.sampler.as_bytes();
+            write_u64(f, name.len() as u64)?;
+            f.write_all(name)?;
+            write_u64(f, self.psi.len() as u64)?;
+            for &p in &self.psi {
+                f.write_all(&p.to_le_bytes())?;
+            }
+            write_u64(f, self.z.len() as u64)?;
+            for zd in &self.z {
+                write_u64(f, zd.len() as u64)?;
+                crate::corpus::io::write_u32s(f, zd)?;
+            }
+            Ok(())
+        })
     }
 
     /// Snapshot a **file-backed** z store at the checkpoint boundary.
@@ -242,7 +271,7 @@ impl Checkpoint {
     }
 }
 
-fn write_u64(f: &mut impl Write, x: u64) -> std::io::Result<()> {
+fn write_u64<W: Write + ?Sized>(f: &mut W, x: u64) -> std::io::Result<()> {
     f.write_all(&x.to_le_bytes())
 }
 
@@ -250,6 +279,62 @@ fn read_u64(f: &mut impl Read) -> Result<u64> {
     let mut b = [0u8; 8];
     f.read_exact(&mut b)?;
     Ok(u64::from_le_bytes(b))
+}
+
+/// File name of the periodic checkpoint for `iteration`, zero-padded
+/// so lexicographic order equals numeric order.
+pub fn periodic_name(iteration: u64) -> String {
+    format!("ckpt-{iteration:010}.ckpt")
+}
+
+/// Parse the iteration back out of a [`periodic_name`]-shaped file
+/// name; `None` for anything else in the directory.
+fn periodic_iteration(name: &str) -> Option<u64> {
+    let digits = name.strip_prefix("ckpt-")?.strip_suffix(".ckpt")?;
+    if digits.is_empty() || !digits.bytes().all(|b| b.is_ascii_digit()) {
+        return None;
+    }
+    digits.parse().ok()
+}
+
+/// Scan `dir` for the **newest loadable** periodic checkpoint.
+///
+/// This is the crash-recovery entry point: leftover atomic-write temp
+/// partials (only possible if a process died mid-save) are deleted,
+/// and any candidate that fails to load — torn, truncated, or
+/// bit-flipped; the checksum trailer catches all three — is skipped
+/// with a warning so the scan falls back to the previous checkpoint
+/// in the chain. Returns `Ok(None)` for a missing or empty directory.
+pub fn latest_valid(dir: &Path) -> Result<Option<(PathBuf, Checkpoint)>> {
+    if !dir.is_dir() {
+        return Ok(None);
+    }
+    let mut candidates: Vec<(u64, PathBuf)> = Vec::new();
+    for entry in
+        std::fs::read_dir(dir).with_context(|| format!("scan {}", dir.display()))?
+    {
+        let entry = entry?;
+        let name = entry.file_name();
+        let name = name.to_string_lossy();
+        if crate::durable::is_tmp_partial(&name) {
+            let _ = std::fs::remove_file(entry.path());
+            continue;
+        }
+        if let Some(it) = periodic_iteration(&name) {
+            candidates.push((it, entry.path()));
+        }
+    }
+    candidates.sort_by(|a, b| b.0.cmp(&a.0));
+    for (_, path) in candidates {
+        match Checkpoint::load(&path) {
+            Ok(ckpt) => return Ok(Some((path, ckpt))),
+            Err(e) => eprintln!(
+                "warning: skipping unloadable checkpoint {}: {e:#}",
+                path.display()
+            ),
+        }
+    }
+    Ok(None)
 }
 
 impl super::pc::PcSampler {
@@ -288,6 +373,35 @@ impl super::pc::PcSampler {
             ckpt.to_assignments(),
         )?;
         s.set_psi(&ckpt.psi);
+        Ok(s)
+    }
+
+    /// Resume the **same chain** from a checkpoint: reconstruct the
+    /// sampler with the run's *original* `seed` and restore the
+    /// iteration counter, so the per-iteration RNG streams (keyed by
+    /// `(seed, iteration)`) continue exactly where the checkpointed
+    /// process left off. Iteration `i + 1` after a crash-resume draws
+    /// the same randomness as iteration `i + 1` of the uninterrupted
+    /// run — recovery is bit-identical. Use [`PcSampler::resume`]
+    /// instead when a *fresh* continuation stream is wanted.
+    pub fn resume_chain(
+        corpus: std::sync::Arc<Corpus>,
+        cfg: crate::config::HdpConfig,
+        threads: usize,
+        seed: u64,
+        ckpt: &Checkpoint,
+    ) -> Result<Self> {
+        ckpt.validate(&corpus)?;
+        anyhow::ensure!(
+            ckpt.psi.len() == cfg.k_max,
+            "checkpoint K* {} != cfg.k_max {}",
+            ckpt.psi.len(),
+            cfg.k_max
+        );
+        let mut s =
+            Self::with_assignments(corpus, cfg, threads, seed, ckpt.to_assignments())?;
+        s.set_psi(&ckpt.psi);
+        s.set_resume_point(ckpt.iteration);
         Ok(s)
     }
 }
@@ -417,6 +531,96 @@ mod tests {
             // retain it as a zero-length range.
             z: vec![vec![0, 1, 1, 2], vec![], vec![2, 0]],
         }
+    }
+
+    #[test]
+    fn save_appends_trailer_and_all_corruptions_are_rejected() {
+        let dir = std::env::temp_dir().join("hdp_ckpt_trailer_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let ckpt = sample_ckpt();
+        let p = dir.join("m.ckpt");
+        ckpt.save(&p).unwrap();
+        let bytes = std::fs::read(&p).unwrap();
+        let n = bytes.len();
+        // The file ends in the checksum trailer and the stored CRC
+        // matches a recomputation over the payload.
+        assert_eq!(&bytes[n - 4..], crate::durable::TRAILER_TAG);
+        let stored = u32::from_le_bytes(bytes[n - 8..n - 4].try_into().unwrap());
+        assert_eq!(stored, crate::durable::crc32(&bytes[..n - 8]));
+        let bad_p = dir.join("bad.ckpt");
+        // Every single-byte flip is rejected.
+        for i in 0..n {
+            let mut bad = bytes.clone();
+            bad[i] ^= 0x40;
+            std::fs::write(&bad_p, &bad).unwrap();
+            assert!(Checkpoint::load(&bad_p).is_err(), "flip at byte {i} accepted");
+        }
+        // Every strict prefix is rejected — including the one that
+        // cuts exactly the trailer (a payload-perfect torn write).
+        for cut in 0..n {
+            std::fs::write(&bad_p, &bytes[..cut]).unwrap();
+            assert!(Checkpoint::load(&bad_p).is_err(), "prefix {cut} accepted");
+        }
+        // Extension is rejected too.
+        let mut ext = bytes.clone();
+        ext.push(0);
+        std::fs::write(&bad_p, &ext).unwrap();
+        assert!(Checkpoint::load(&bad_p).is_err(), "extended file accepted");
+        // The v1 compat writer gets the same protection.
+        let p1 = dir.join("m1.ckpt");
+        ckpt.save_v1(&p1).unwrap();
+        let bytes1 = std::fs::read(&p1).unwrap();
+        assert_eq!(&bytes1[bytes1.len() - 4..], crate::durable::TRAILER_TAG);
+        for cut in [bytes1.len() - 1, bytes1.len() - 8, bytes1.len() / 2] {
+            std::fs::write(&bad_p, &bytes1[..cut]).unwrap();
+            assert!(Checkpoint::load(&bad_p).is_err(), "v1 prefix {cut} accepted");
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn latest_valid_picks_newest_and_skips_corrupt() {
+        let dir = std::env::temp_dir().join("hdp_ckpt_latest_test");
+        std::fs::remove_dir_all(&dir).ok();
+        // Missing directory is a clean "nothing to resume".
+        assert!(latest_valid(&dir).unwrap().is_none());
+        std::fs::create_dir_all(&dir).unwrap();
+        let mut c3 = sample_ckpt();
+        c3.iteration = 3;
+        c3.save(&dir.join(periodic_name(3))).unwrap();
+        let mut c6 = sample_ckpt();
+        c6.iteration = 6;
+        c6.save(&dir.join(periodic_name(6))).unwrap();
+        // Newest valid checkpoint wins.
+        let (p, got) = latest_valid(&dir).unwrap().unwrap();
+        assert_eq!(p.file_name().unwrap().to_str().unwrap(), periodic_name(6));
+        assert_eq!(got, c6);
+        // Tear the newest; the scan falls back to the previous one and
+        // sweeps crash-debris temp partials.
+        let bytes = std::fs::read(dir.join(periodic_name(6))).unwrap();
+        std::fs::write(dir.join(periodic_name(6)), &bytes[..bytes.len() - 3]).unwrap();
+        let tmp = dir.join(".ckpt-0000000009.ckpt.123-0.tmp");
+        std::fs::write(&tmp, b"partial").unwrap();
+        std::fs::write(dir.join("notes.txt"), b"ignored").unwrap();
+        let (_, got) = latest_valid(&dir).unwrap().unwrap();
+        assert_eq!(got, c3);
+        assert!(!tmp.exists(), "temp partial not cleaned up");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn resume_chain_restores_iteration_and_state() {
+        let c = corpus();
+        let cfg = HdpConfig { k_max: 32, ..Default::default() };
+        let mut s = PcSampler::new(c.clone(), cfg, 1, 5).unwrap();
+        for _ in 0..4 {
+            s.step().unwrap();
+        }
+        let ckpt = s.checkpoint();
+        let resumed = PcSampler::resume_chain(c.clone(), cfg, 1, 5, &ckpt).unwrap();
+        assert_eq!(Trainer::iterations_done(&resumed), 4);
+        assert_eq!(resumed.psi(), &ckpt.psi[..]);
+        assert_eq!(Trainer::assignments(&resumed), &ckpt.z[..]);
     }
 
     #[test]

@@ -70,6 +70,24 @@ pub trait Trainer {
 
     /// Iterations completed so far.
     fn iterations_done(&self) -> usize;
+
+    /// Snapshot the current state as a durable
+    /// [`checkpoint::Checkpoint`] (save with
+    /// [`checkpoint::Checkpoint::save`] — atomic and checksummed).
+    ///
+    /// The default implementation covers samplers without a learned
+    /// global topic distribution: `Ψ` is recorded as uniform over the
+    /// sampler's topic rows. Samplers that carry a real `Ψ` (the PC
+    /// family) override this with the exact resumable state.
+    fn checkpoint(&self) -> checkpoint::Checkpoint {
+        let k = self.topic_word_rows().len().max(1);
+        checkpoint::Checkpoint {
+            iteration: self.iterations_done() as u64,
+            sampler: self.name().to_string(),
+            psi: vec![1.0 / k as f64; k],
+            z: self.assignments().to_vec(),
+        }
+    }
 }
 
 #[cfg(test)]

@@ -223,6 +223,15 @@ impl PcSampler {
         self.psi.copy_from_slice(psi);
     }
 
+    /// Set the iteration counter to `iteration` completed steps —
+    /// checkpoint resume. Subsequent steps draw from the per-iteration
+    /// RNG streams `iteration + 1, iteration + 2, …` of the
+    /// construction seed, so a resumed chain continues **bit-identical**
+    /// to the uninterrupted one.
+    pub fn set_resume_point(&mut self, iteration: u64) {
+        self.iteration = iteration as usize;
+    }
+
     /// Current topic-word statistic.
     pub fn n(&self) -> &TopicWordRows {
         &self.n
@@ -467,17 +476,21 @@ impl Trainer for PcSampler {
         self.zero_mass_tokens = 0;
         self.flag_tokens = 0;
         self.sparse_work = 0;
-        let (mut pf_hits, mut pf_stalls) = (0u64, 0u64);
+        let (mut pf_hits, mut pf_stalls, mut pf_failures) = (0u64, 0u64, 0u64);
         for s in &self.scratch {
             self.zero_mass_tokens += s.out.zero_mass_tokens;
             self.flag_tokens += s.out.flag_tokens;
             self.sparse_work += s.out.sparse_work;
             pf_hits += s.out.prefetch_hits;
             pf_stalls += s.out.prefetch_stalls;
+            pf_failures += s.out.prefetch_failures;
         }
         if pf_hits + pf_stalls > 0 {
             self.timers.incr(PhaseTimers::PREFETCH_HITS, pf_hits);
             self.timers.incr(PhaseTimers::PREFETCH_STALLS, pf_stalls);
+        }
+        if pf_failures > 0 {
+            self.timers.incr(PhaseTimers::PREFETCH_FAILURES, pf_failures);
         }
         self.n = Arc::new(TopicWordRows::merge_par(
             self.cfg.k_max,
@@ -558,6 +571,12 @@ impl Trainer for PcSampler {
 
     fn iterations_done(&self) -> usize {
         self.iteration
+    }
+
+    fn checkpoint(&self) -> crate::hdp::checkpoint::Checkpoint {
+        // The inherent snapshot records the learned `Ψ` (the trait
+        // default would fabricate a uniform one).
+        PcSampler::checkpoint(self)
     }
 }
 

@@ -172,6 +172,11 @@ pub struct ZShardResult {
     /// (or load inline — each slot stripe's cold first block counts
     /// here). `hits + stalls` equals the blocks this slot swept.
     pub prefetch_stalls: u64,
+    /// Prefetched streamed sweeps: async loads that died (panicked
+    /// after exhausting their I/O retries); the sweep discarded the
+    /// back buffers and reloaded the block inline. Each failure is
+    /// also counted as a stall.
+    pub prefetch_failures: u64,
 }
 
 impl ZShardResult {
@@ -195,6 +200,7 @@ impl ZShardResult {
             sparse_work: 0,
             prefetch_hits: 0,
             prefetch_stalls: 0,
+            prefetch_failures: 0,
         }
     }
 
@@ -208,6 +214,7 @@ impl ZShardResult {
         self.sparse_work = 0;
         self.prefetch_hits = 0;
         self.prefetch_stalls = 0;
+        self.prefetch_failures = 0;
     }
 }
 
@@ -712,11 +719,13 @@ impl<'a> ZSweep<'a> {
             // are disjoint.
             let prefetched = pend.take();
             let was_hit = prefetched.as_ref().map(|(h, _)| h.is_done());
+            let mut load_ok = true;
             if let Some((mut h, _load)) = prefetched {
-                // `wait_as`: we own `slot`; the plain `wait` would
+                // Quiet join: we own `slot` (the plain `wait` would
                 // take the dispatch gate the enclosing blocking sweep
-                // dispatch holds.
-                h.wait_as(slot);
+                // dispatch holds), and a dead load must not sink the
+                // sweep — we fall back to an inline reload instead.
+                load_ok = h.wait_as_quiet(slot);
             }
             // SAFETY: slot contract as above; the only other writer
             // (the prefetch load) has been joined, so this slot's
@@ -724,9 +733,10 @@ impl<'a> ZSweep<'a> {
             let slot_scratch = unsafe { &mut *sbase.0.add(slot) };
             // 2. Materialize block `bi`: the prefetched data sits in
             // the back pair (swap it to the front), or load inline on
-            // the stripe's cold first block.
+            // the stripe's cold first block — or on a failed prefetch,
+            // whose back pair is discarded unswapped (possibly torn).
             match was_hit {
-                Some(hit) => {
+                Some(hit) if load_ok => {
                     if hit {
                         slot_scratch.out.prefetch_hits += 1;
                     } else {
@@ -735,7 +745,10 @@ impl<'a> ZSweep<'a> {
                     std::mem::swap(&mut slot_scratch.z_buf, &mut slot_scratch.z_buf2);
                     std::mem::swap(&mut slot_scratch.tok_buf, &mut slot_scratch.tok_buf2);
                 }
-                None => {
+                degraded => {
+                    if degraded.is_some() {
+                        slot_scratch.out.prefetch_failures += 1;
+                    }
                     slot_scratch.out.prefetch_stalls += 1;
                     z.load(block, ntok, &mut slot_scratch.z_buf);
                     if !resident_tokens {
@@ -755,6 +768,11 @@ impl<'a> ZSweep<'a> {
                 let tdst = SendPtr(std::ptr::addr_of_mut!(slot_scratch.tok_buf2));
                 let load: Box<dyn Fn(usize, usize) + Send + Sync + '_> =
                     Box::new(move |_s, _t| {
+                        // Injectable crash site: with the `failpoints`
+                        // feature an armed "prefetch.load" fault
+                        // retries, then panics — the quiet join above
+                        // turns that into an inline-reload degrade.
+                        crate::fault::check_or_die("prefetch.load");
                         // SAFETY: this slot's back pair is untouched by
                         // the sweep until the next stripe task joins
                         // this job (or the drain below does).
@@ -808,10 +826,12 @@ impl<'a> ZSweep<'a> {
         exec.run_tasks_scheduled(nblocks, Schedule::SlotAffine, &task);
         // On a panic-free run every handle was consumed by its stripe
         // successor; drain any leftovers (we are outside the dispatch
-        // now, so the gate-taking join is safe).
+        // now, so the gate-taking join is safe). Quietly: a dead load
+        // here prefetched data no task will ever read, and the sweep
+        // itself completed — nothing to re-raise.
         for p in pending.iter_mut() {
-            if let Some((h, _load)) = p.take() {
-                h.join();
+            if let Some((mut h, _load)) = p.take() {
+                h.wait_quiet();
             }
         }
     }
@@ -1069,7 +1089,10 @@ impl FileZ {
             use std::io::Write;
             w.flush()?;
         }
-        Ok(Self { file: PositionedFile::new(file), offsets })
+        Ok(Self {
+            file: PositionedFile::new(file, ("filez.pread", "filez.pwrite")),
+            offsets,
+        })
     }
 
     /// The document offsets (length `D + 1`).
@@ -1934,5 +1957,122 @@ mod tests {
                 assert_eq!(md.get(k), c);
             }
         }
+    }
+
+    #[cfg(feature = "failpoints")]
+    #[test]
+    fn transient_filez_read_fault_heals_via_retry() {
+        // One injected EIO on a FileZ block read must be absorbed by
+        // the positioned-I/O retry policy: the sweep completes and the
+        // chain is bit-identical to the fault-free run.
+        use crate::fault::FaultSpec;
+        use crate::par::{Schedule, WorkerPool};
+        let _g = crate::fault::serial_guard();
+        crate::fault::reset();
+        let f = frozen_state(61);
+        let root = Pcg64::new(13);
+        let tables = WordTables::build(&f.phi, &f.psi, 0.5, 1usize);
+        let sweep = frozen_sweep(&f, &tables, &root);
+        let packed = f.corpus.to_packed();
+        let blocks = Sharding::weighted(&f.corpus.doc_weights(), 3).refine(4);
+        let pool = Arc::new(WorkerPool::new(3));
+
+        // Fault-free reference over the resident nested store.
+        let (mut z_ref, mut m_ref) = (f.z0.clone(), f.m0.clone());
+        let mut scratch: Vec<ShardScratch> =
+            (0..pool.slots()).map(|_| ShardScratch::new(8)).collect();
+        sweep.run_streamed(
+            &packed,
+            &NestedZ::new(&mut z_ref),
+            &mut m_ref,
+            &blocks,
+            &*pool,
+            &mut scratch,
+            Schedule::Steal,
+        );
+
+        let dir = std::env::temp_dir().join("hdp_zstep_fault_transient");
+        let zfile = FileZ::from_nested(&dir.join("z.bin"), &f.z0).unwrap();
+        crate::fault::arm("filez.pread", FaultSpec::error_after(2, 1));
+        let mut m = f.m0.clone();
+        let mut scratch: Vec<ShardScratch> =
+            (0..pool.slots()).map(|_| ShardScratch::new(8)).collect();
+        sweep.run_streamed(
+            &packed,
+            &zfile,
+            &mut m,
+            &blocks,
+            &*pool,
+            &mut scratch,
+            Schedule::Steal,
+        );
+        assert!(crate::fault::triggered("filez.pread") >= 1, "fault never fired");
+        crate::fault::reset();
+        let z = zfile.to_nested().unwrap();
+        assert_eq!(z, z_ref, "retried read must leave the chain bit-identical");
+        for (d, (ma, mb)) in m.iter().zip(&m_ref).enumerate() {
+            assert_eq!(ma.total(), mb.total(), "m total, doc {d}");
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[cfg(feature = "failpoints")]
+    #[test]
+    fn dead_prefetch_degrades_to_inline_reload() {
+        // A persistent `prefetch.load` fault kills every async load
+        // job (panic after its retries). The sweep must degrade to
+        // inline reloads — same chain, failures accounted, pool alive.
+        use crate::fault::FaultSpec;
+        use crate::par::WorkerPool;
+        let _g = crate::fault::serial_guard();
+        crate::fault::reset();
+        let f = frozen_state(62);
+        let root = Pcg64::new(29);
+        let tables = WordTables::build(&f.phi, &f.psi, 0.5, 1usize);
+        let sweep = frozen_sweep(&f, &tables, &root);
+        let packed = f.corpus.to_packed();
+        let blocks = Sharding::weighted(&f.corpus.doc_weights(), 3).refine(4);
+        let pool = Arc::new(WorkerPool::new(3));
+
+        // Fault-free prefetched reference.
+        let (mut z_ref, mut m_ref) = (f.z0.clone(), f.m0.clone());
+        let mut scratch: Vec<ShardScratch> =
+            (0..pool.slots()).map(|_| ShardScratch::new(8)).collect();
+        sweep.run_streamed_prefetched(
+            &packed,
+            &NestedZ::new(&mut z_ref),
+            &mut m_ref,
+            &blocks,
+            &pool,
+            &mut scratch,
+        );
+
+        crate::fault::arm("prefetch.load", FaultSpec::error());
+        let (mut z, mut m) = (f.z0.clone(), f.m0.clone());
+        let mut scratch: Vec<ShardScratch> =
+            (0..pool.slots()).map(|_| ShardScratch::new(8)).collect();
+        sweep.run_streamed_prefetched(
+            &packed,
+            &NestedZ::new(&mut z),
+            &mut m,
+            &blocks,
+            &pool,
+            &mut scratch,
+        );
+        crate::fault::reset();
+        assert_eq!(z, z_ref, "degraded sweep must stay bit-identical");
+        for (d, (ma, mb)) in m.iter().zip(&m_ref).enumerate() {
+            assert_eq!(ma.total(), mb.total(), "m total, doc {d}");
+        }
+        let failures: u64 =
+            scratch.iter().map(|s| s.out.prefetch_failures).sum();
+        let hits: u64 = scratch.iter().map(|s| s.out.prefetch_hits).sum();
+        let stalls: u64 = scratch.iter().map(|s| s.out.prefetch_stalls).sum();
+        assert!(failures > 0, "no prefetch job ever died");
+        assert!(failures <= stalls, "every failure is also a stall");
+        assert_eq!(hits + stalls, blocks.len() as u64, "block accounting");
+        // The pool survived its workers' captured panics.
+        let out = crate::par::exec_map(&*pool, 8, |i| i);
+        assert_eq!(out.len(), 8);
     }
 }

@@ -286,14 +286,18 @@ impl Trainer for PcLdaSampler {
             ),
         }
         self.timers.add("z", t0.elapsed());
-        let (mut pf_hits, mut pf_stalls) = (0u64, 0u64);
+        let (mut pf_hits, mut pf_stalls, mut pf_failures) = (0u64, 0u64, 0u64);
         for s in &self.scratch {
             pf_hits += s.out.prefetch_hits;
             pf_stalls += s.out.prefetch_stalls;
+            pf_failures += s.out.prefetch_failures;
         }
         if pf_hits + pf_stalls > 0 {
             self.timers.incr(PhaseTimers::PREFETCH_HITS, pf_hits);
             self.timers.incr(PhaseTimers::PREFETCH_STALLS, pf_stalls);
+        }
+        if pf_failures > 0 {
+            self.timers.incr(PhaseTimers::PREFETCH_FAILURES, pf_failures);
         }
         let t0 = Instant::now();
         self.n = Arc::new(TopicWordRows::merge_par(
@@ -351,6 +355,15 @@ impl Trainer for PcLdaSampler {
 
     fn iterations_done(&self) -> usize {
         self.iteration
+    }
+
+    fn checkpoint(&self) -> crate::hdp::checkpoint::Checkpoint {
+        crate::hdp::checkpoint::Checkpoint {
+            iteration: self.iteration as u64,
+            sampler: "pclda".to_string(),
+            psi: self.psi.clone(),
+            z: self.assign.z.clone(),
+        }
     }
 }
 

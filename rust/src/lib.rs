@@ -28,7 +28,12 @@ pub mod config;
 pub mod coordinator;
 pub mod corpus;
 pub mod diagnostics;
+pub mod durable;
 pub mod experiments;
+/// Deterministic failpoint registry for crash/fault testing. The
+/// checks are compiled to no-ops unless the off-by-default
+/// `failpoints` feature is on; arming requires the feature.
+pub mod fault;
 pub mod hdp;
 pub mod metrics;
 pub mod par;

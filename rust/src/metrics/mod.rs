@@ -43,6 +43,11 @@ impl PhaseTimers {
     /// the blocks swept with prefetch enabled.
     pub const PREFETCH_STALLS: &'static str = "prefetch_stalls";
 
+    /// Counter name: streamed-sweep prefetch jobs that died (panicked
+    /// after exhausting their I/O retries) and were degraded to an
+    /// inline reload. Every failure is also counted as a stall.
+    pub const PREFETCH_FAILURES: &'static str = "prefetch_failures";
+
     /// Create with no phases registered.
     pub fn new() -> Self {
         Self::default()

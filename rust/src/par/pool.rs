@@ -235,8 +235,20 @@ struct Job {
     remaining: AtomicUsize,
     /// Set when any task panicked (re-raised by the waiter).
     panicked: AtomicBool,
+    /// The first panicking task's original payload + attribution,
+    /// preserved so the waiter can re-raise it instead of a generic
+    /// message (later panics in the same job are dropped).
+    panic_info: Mutex<Option<PanicInfo>>,
     done: Mutex<bool>,
     done_cv: Condvar,
+}
+
+/// What a panicked task left behind: the payload `catch_unwind`
+/// captured plus which task index raised it on which slot.
+struct PanicInfo {
+    task: usize,
+    slot: usize,
+    payload: Box<dyn std::any::Any + Send + 'static>,
 }
 
 impl Job {
@@ -254,6 +266,7 @@ impl Job {
             affine_next,
             remaining: AtomicUsize::new(ntasks),
             panicked: AtomicBool::new(false),
+            panic_info: Mutex::new(None),
             // A zero-task job is born complete (nothing will ever
             // signal it).
             done: Mutex::new(ntasks == 0),
@@ -280,13 +293,47 @@ impl Job {
         // SAFETY: `remaining > 0` (this task has not completed), so the
         // publisher/joiner is still keeping the closure alive.
         let task = unsafe { &*self.task.0 };
-        if catch_unwind(AssertUnwindSafe(|| task(slot, i))).is_err() {
+        if let Err(payload) = catch_unwind(AssertUnwindSafe(|| task(slot, i))) {
+            {
+                let mut info = self.panic_info.lock().unwrap();
+                if info.is_none() {
+                    *info = Some(PanicInfo { task: i, slot, payload });
+                }
+            }
             self.panicked.store(true, Ordering::SeqCst);
         }
         if self.remaining.fetch_sub(1, Ordering::AcqRel) == 1 {
             let mut done = self.done.lock().unwrap();
             *done = true;
             self.done_cv.notify_all();
+        }
+    }
+
+    /// Re-raise the first captured task panic on the calling thread.
+    /// String-ish payloads (`panic!` with a message — the overwhelming
+    /// majority) are enriched with the failing task/slot; any other
+    /// payload type is re-thrown **verbatim** via `resume_unwind` so a
+    /// supervisor's `downcast` logic keeps working across the pool
+    /// boundary.
+    fn resume_panic(&self) -> ! {
+        let info = self.panic_info.lock().unwrap().take();
+        match info {
+            Some(PanicInfo { task, slot, payload }) => {
+                let msg = if let Some(s) = payload.downcast_ref::<&'static str>() {
+                    Some((*s).to_string())
+                } else {
+                    payload.downcast_ref::<String>().cloned()
+                };
+                match msg {
+                    Some(m) => {
+                        panic!("worker pool task {task} (slot {slot}) panicked: {m}")
+                    }
+                    None => std::panic::resume_unwind(payload),
+                }
+            }
+            // Payload already consumed by an earlier waiter: all that
+            // is left to say is that *something* panicked.
+            None => panic!("worker pool task panicked"),
         }
     }
 
@@ -462,7 +509,7 @@ impl WorkerPool {
         job.wait_done();
         self.remove_job(&job);
         if job.panicked.load(Ordering::SeqCst) {
-            panic!("worker pool task panicked");
+            job.resume_panic();
         }
     }
 
@@ -596,22 +643,35 @@ impl JobHandle {
         self.job.remaining.load(Ordering::Acquire) == 0
     }
 
-    /// Block until the job completes, helping as slot 0. Idempotent.
+    /// Complete the join protocol: help with unclaimed tasks (as slot
+    /// 0 under the dispatch gate, or as the caller-owned `slot`), wait
+    /// for stragglers, and unlink the job. Never re-raises.
+    fn finish(&mut self, slot: Option<usize>) {
+        self.joined = true;
+        match slot {
+            None => {
+                // Slot-0 participation is exclusive (same gate as
+                // blocking dispatches); ignore poison like `dispatch`
+                // does.
+                let _gate =
+                    self.pool.dispatch_gate.lock().unwrap_or_else(|e| e.into_inner());
+                self.job.run_on(0);
+            }
+            Some(s) => self.job.run_on(s),
+        }
+        self.job.wait_done();
+        self.pool.remove_job(&self.job);
+    }
+
+    /// Block until the job completes, helping as slot 0; re-raises the
+    /// first task panic with its original payload. Idempotent.
     pub fn wait(&mut self) {
         if self.joined {
             return;
         }
-        self.joined = true;
-        {
-            // Slot-0 participation is exclusive (same gate as blocking
-            // dispatches); ignore poison like `dispatch` does.
-            let _gate = self.pool.dispatch_gate.lock().unwrap_or_else(|e| e.into_inner());
-            self.job.run_on(0);
-        }
-        self.job.wait_done();
-        self.pool.remove_job(&self.job);
+        self.finish(None);
         if self.job.panicked.load(Ordering::SeqCst) && !std::thread::panicking() {
-            panic!("worker pool task panicked");
+            self.job.resume_panic();
         }
     }
 
@@ -621,18 +681,41 @@ impl JobHandle {
     /// [`JobHandle::wait`] it does not take the slot-0 dispatch gate
     /// (which the enclosing blocking dispatch holds), so it cannot
     /// deadlock from inside a task; the caller's exclusive ownership
-    /// of `slot` upholds the slot contract instead. Idempotent.
+    /// of `slot` upholds the slot contract instead. Re-raises the
+    /// first task panic with its original payload. Idempotent.
     pub fn wait_as(&mut self, slot: usize) {
         if self.joined {
             return;
         }
-        self.joined = true;
-        self.job.run_on(slot);
-        self.job.wait_done();
-        self.pool.remove_job(&self.job);
+        self.finish(Some(slot));
         if self.job.panicked.load(Ordering::SeqCst) && !std::thread::panicking() {
-            panic!("worker pool task panicked");
+            self.job.resume_panic();
         }
+    }
+
+    /// Like [`JobHandle::wait`] but **never re-raises**: returns `true`
+    /// when every task completed cleanly, `false` when any task
+    /// panicked. For supervisors that degrade gracefully instead of
+    /// dying with the job (the streamed sweep's prefetcher reloads the
+    /// block inline on `false`). Idempotent — a later [`wait`][w] or
+    /// drop of an already-joined handle never re-raises.
+    ///
+    /// [w]: JobHandle::wait
+    pub fn wait_quiet(&mut self) -> bool {
+        if !self.joined {
+            self.finish(None);
+        }
+        !self.job.panicked.load(Ordering::SeqCst)
+    }
+
+    /// [`JobHandle::wait_as`] without the re-raise (see
+    /// [`JobHandle::wait_quiet`]): join as the caller-owned `slot`,
+    /// return whether every task completed cleanly. Idempotent.
+    pub fn wait_as_quiet(&mut self, slot: usize) -> bool {
+        if !self.joined {
+            self.finish(Some(slot));
+        }
+        !self.job.panicked.load(Ordering::SeqCst)
     }
 
     /// Join the job (consuming form of [`JobHandle::wait`]).
@@ -958,6 +1041,69 @@ mod tests {
         // Pool still usable afterwards.
         let out = exec_map(&pool, 8, |i| i);
         assert_eq!(out.len(), 8);
+    }
+
+    #[test]
+    fn panic_payload_is_preserved_with_attribution() {
+        // A `panic!("...")` in a task must re-raise on the publisher
+        // with the original message plus task/slot attribution.
+        let pool = WorkerPool::new(2);
+        let res = std::panic::catch_unwind(AssertUnwindSafe(|| {
+            (&pool).run_tasks(4, &|_s, i| {
+                if i == 2 {
+                    panic!("boom {i}");
+                }
+            });
+        }));
+        let payload = res.unwrap_err();
+        let msg = payload
+            .downcast_ref::<String>()
+            .expect("re-raised payload should be a String");
+        assert!(msg.contains("task 2"), "{msg}");
+        assert!(msg.contains("boom 2"), "{msg}");
+        // Pool still usable afterwards.
+        assert_eq!(exec_map(&pool, 4, |i| i).len(), 4);
+    }
+
+    #[test]
+    fn non_string_panic_payload_is_reraised_verbatim() {
+        // Typed payloads (panic_any) must cross the pool boundary
+        // intact so supervisor downcasts keep working.
+        #[derive(Debug, PartialEq)]
+        struct Custom(u32);
+        let pool = WorkerPool::new(2);
+        let res = std::panic::catch_unwind(AssertUnwindSafe(|| {
+            (&pool).run_tasks(3, &|_s, i| {
+                if i == 1 {
+                    std::panic::panic_any(Custom(41));
+                }
+            });
+        }));
+        let payload = res.unwrap_err();
+        assert_eq!(payload.downcast_ref::<Custom>(), Some(&Custom(41)));
+    }
+
+    #[test]
+    fn wait_quiet_reports_panic_without_raising() {
+        let pool = Arc::new(WorkerPool::new(2));
+        let mut ok = WorkerPool::submit(&pool, 4, Schedule::Steal, Box::new(|_s, _i| {}));
+        assert!(ok.wait_quiet(), "clean job reported as panicked");
+        let mut bad = WorkerPool::submit(
+            &pool,
+            4,
+            Schedule::Steal,
+            Box::new(|_s, i| {
+                if i == 0 {
+                    panic!("quiet boom");
+                }
+            }),
+        );
+        assert!(!bad.wait_quiet(), "panicked job reported as clean");
+        // Idempotent, and the later implicit drop-join must not
+        // re-raise the captured panic.
+        assert!(!bad.wait_quiet());
+        drop(bad);
+        assert_eq!(exec_map(&*pool, 8, |i| i).len(), 8);
     }
 
     #[test]

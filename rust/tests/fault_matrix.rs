@@ -1,0 +1,278 @@
+//! Deterministic fault-injection matrix (`--features failpoints`):
+//! torn-write sweeps over the atomic checkpoint pipeline, transient
+//! injected EIO healed bit-identically by the positioned-I/O retries,
+//! and crash-during-checkpoint runs whose chains stay bit-identical.
+//!
+//! Every test takes [`fault::serial_guard`] — the failpoint registry
+//! is process-global — and starts from [`fault::reset`].
+
+use hdp_sparse::config::{HdpConfig, RunConfig};
+use hdp_sparse::coordinator::{train, LoopOptions};
+use hdp_sparse::corpus::io::{write_packed, PackedCorpusFile};
+use hdp_sparse::corpus::synthetic::HdpCorpusSpec;
+use hdp_sparse::corpus::Corpus;
+use hdp_sparse::durable;
+use hdp_sparse::fault::{self, FaultSpec};
+use hdp_sparse::hdp::checkpoint::{latest_valid, Checkpoint};
+use hdp_sparse::hdp::pc::PcSampler;
+use hdp_sparse::hdp::Trainer;
+use hdp_sparse::metrics::TraceWriter;
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+fn fresh_dir(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(name);
+    std::fs::remove_dir_all(&dir).ok();
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+fn sample_ckpt(iteration: u64) -> Checkpoint {
+    Checkpoint {
+        iteration,
+        sampler: "pc-hdp".to_string(),
+        psi: vec![0.5, 0.25, 0.25],
+        z: vec![vec![0, 1, 1, 2], vec![], vec![2, 0]],
+    }
+}
+
+fn assert_no_tmp_debris(dir: &Path) {
+    for entry in std::fs::read_dir(dir).unwrap() {
+        let name = entry.unwrap().file_name();
+        let name = name.to_string_lossy().to_string();
+        assert!(!durable::is_tmp_partial(&name), "temp debris left: {name}");
+    }
+}
+
+/// The tentpole sweep: tear the checkpoint byte stream at **every**
+/// offset. Each attempt must fail with `Err`, leave the previous
+/// checkpoint at the target path bit-for-bit loadable, and clean up
+/// its temp file. Tearing exactly at the end (nothing actually cut)
+/// must succeed.
+#[test]
+fn torn_checkpoint_write_at_every_offset_fails_closed() {
+    let _g = fault::serial_guard();
+    fault::reset();
+    let dir = fresh_dir("hdp_fault_torn_sweep");
+    let path = dir.join("model.ckpt");
+    let old = sample_ckpt(3);
+    old.save(&path).unwrap();
+    let new = sample_ckpt(9);
+    // Fault-free sibling save tells us the exact byte length to sweep.
+    let reference = dir.join("reference.ckpt");
+    new.save(&reference).unwrap();
+    let n = std::fs::metadata(&reference).unwrap().len();
+    for cut in 0..n {
+        fault::arm("ckpt.write", FaultSpec::torn(cut));
+        let res = new.save(&path);
+        assert!(res.is_err(), "save survived a tear at byte {cut}/{n}");
+        assert!(
+            fault::triggered("ckpt.write") >= 1,
+            "tear at {cut} never fired"
+        );
+        fault::disarm("ckpt.write");
+        let loaded = Checkpoint::load(&path)
+            .unwrap_or_else(|e| panic!("old checkpoint lost after tear at {cut}: {e:#}"));
+        assert_eq!(loaded, old, "target mutated by failed save (tear at {cut})");
+        assert_no_tmp_debris(&dir);
+    }
+    // A "tear" past the last byte lets everything through.
+    fault::arm("ckpt.write", FaultSpec::torn(n));
+    new.save(&path).unwrap();
+    fault::reset();
+    assert_eq!(Checkpoint::load(&path).unwrap(), new);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn sync_rename_and_dirsync_faults_fail_closed() {
+    let _g = fault::serial_guard();
+    fault::reset();
+    let dir = fresh_dir("hdp_fault_pipeline_sites");
+    let path = dir.join("model.ckpt");
+    let old = sample_ckpt(3);
+    old.save(&path).unwrap();
+    let new = sample_ckpt(9);
+    // Before the rename the old file must be untouched.
+    for site in ["ckpt.write", "ckpt.sync", "ckpt.rename"] {
+        fault::arm(site, FaultSpec::error());
+        assert!(new.save(&path).is_err(), "{site}: save did not fail");
+        // `>= 1`, not `== 1`: the buffered writer's drop may retry the
+        // flush and trip a persistent write fault a second time.
+        assert!(fault::triggered(site) >= 1, "{site}: did not fire");
+        fault::disarm(site);
+        assert_eq!(Checkpoint::load(&path).unwrap(), old, "{site} corrupted target");
+        assert_no_tmp_debris(&dir);
+    }
+    // The dirsync site sits after the rename: the save still reports
+    // `Err` (durability of the rename is unconfirmed) but the target
+    // already holds the complete new checkpoint — never a torn one.
+    fault::arm("ckpt.dirsync", FaultSpec::error());
+    assert!(new.save(&path).is_err());
+    fault::reset();
+    assert_eq!(Checkpoint::load(&path).unwrap(), new);
+    assert_no_tmp_debris(&dir);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn packed_corpus_torn_write_and_transient_read_faults() {
+    let _g = fault::serial_guard();
+    fault::reset();
+    let c = Corpus {
+        docs: vec![vec![0, 0, 2, 1], vec![1], vec![], vec![2, 1, 0]],
+        vocab: vec!["alpha".into(), "beta".into(), "gamma".into()],
+    };
+    let dir = fresh_dir("hdp_fault_packed");
+    let path = dir.join("c.hdpp");
+    // A torn packed write fails closed and leaves nothing behind.
+    fault::arm("packed.write", FaultSpec::torn(25));
+    assert!(write_packed(&c.to_packed(), &path).is_err());
+    fault::disarm("packed.write");
+    assert!(!path.exists(), "torn write published a file");
+    assert_no_tmp_debris(&dir);
+    write_packed(&c.to_packed(), &path).unwrap();
+    let f = PackedCorpusFile::open(&path).unwrap();
+    let mut reference = Vec::new();
+    f.read_block(0, f.num_docs(), &mut reference).unwrap();
+    assert_eq!(reference.len() as u64, f.num_tokens());
+    // Two consecutive injected EIOs on the positioned read: the retry
+    // loop heals them and the bytes are bit-identical.
+    fault::arm("corpus.pread", FaultSpec::error_after(0, 2));
+    let mut healed = Vec::new();
+    f.read_block(0, f.num_docs(), &mut healed).unwrap();
+    assert!(fault::triggered("corpus.pread") >= 2);
+    fault::disarm("corpus.pread");
+    assert_eq!(healed, reference);
+    // A persistent fault exhausts the retries and surfaces as `Err` —
+    // no panic, and the handle stays usable afterwards.
+    fault::arm("corpus.pread", FaultSpec::error());
+    let mut buf = Vec::new();
+    assert!(f.read_block(0, f.num_docs(), &mut buf).is_err());
+    fault::disarm("corpus.pread");
+    let mut after = Vec::new();
+    f.read_block(0, f.num_docs(), &mut after).unwrap();
+    assert_eq!(after, reference);
+    fault::reset();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Seeded random faults: whatever the outcome (healed read or clean
+/// `Err`), the caller never sees wrong bytes.
+#[test]
+fn random_read_faults_never_yield_wrong_data() {
+    let _g = fault::serial_guard();
+    fault::reset();
+    let c = Corpus {
+        docs: vec![vec![0, 1, 2, 2, 1, 0], vec![2, 2], vec![0]],
+        vocab: vec!["a".into(), "b".into(), "c".into()],
+    };
+    let dir = fresh_dir("hdp_fault_random_soak");
+    let path = dir.join("c.hdpp");
+    write_packed(&c.to_packed(), &path).unwrap();
+    let f = PackedCorpusFile::open(&path).unwrap();
+    let mut reference = Vec::new();
+    f.read_block(0, f.num_docs(), &mut reference).unwrap();
+    let mut healed = 0u32;
+    for seed in 0u64..16 {
+        fault::arm("corpus.pread", FaultSpec::random_error(0.4, seed));
+        let mut buf = Vec::new();
+        match f.read_block(0, f.num_docs(), &mut buf) {
+            Ok(()) => {
+                assert_eq!(buf, reference, "seed {seed}: wrong data served");
+                healed += 1;
+            }
+            Err(_) => {} // fail-closed is an acceptable outcome
+        }
+        fault::disarm("corpus.pread");
+    }
+    // With p = 0.4 and 4 attempts per read, most seeds must heal; a
+    // zero count would mean the retry loop is not actually retrying.
+    assert!(healed > 0, "no seed ever healed through retries");
+    fault::reset();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+fn train_corpus(seed: u64) -> Arc<Corpus> {
+    let (c, _) = HdpCorpusSpec {
+        vocab: 120,
+        topics: 3,
+        gamma: 1.0,
+        alpha: 1.0,
+        topic_beta: 0.05,
+        docs: 24,
+        mean_doc_len: 16.0,
+        len_sigma: 0.3,
+        min_doc_len: 6,
+    }
+    .generate(seed);
+    Arc::new(c)
+}
+
+/// A periodic checkpoint that dies mid-save costs durability, never
+/// the chain: training continues, the failure is counted, and the
+/// final state — plus a crash-resume from the last checkpoint that
+/// *did* land — is bit-identical to the fault-free run.
+#[test]
+fn failed_checkpoint_never_perturbs_the_chain_and_resume_matches() {
+    let _g = fault::serial_guard();
+    fault::reset();
+    let c = train_corpus(31);
+    let cfg = HdpConfig { alpha: 0.5, beta: 0.05, gamma: 1.0, k_max: 24, init_topics: 1 };
+    let run = |iterations: usize, checkpoint_every: usize| RunConfig {
+        iterations,
+        threads: 1,
+        seed: 7,
+        eval_every: 5,
+        time_budget_secs: 0,
+        checkpoint_every,
+    };
+    // Fault-free reference: 10 iterations, no checkpoints.
+    let mut full = PcSampler::new(c.clone(), cfg, 1, 7).unwrap();
+    let mut trace = TraceWriter::in_memory();
+    train(&mut full, &run(10, 0), &mut trace, &LoopOptions::default()).unwrap();
+    // Checkpointing run: every 2 iterations (5 attempts), with the
+    // SECOND attempt's data sync injected to fail.
+    let dir = fresh_dir("hdp_fault_ckpt_chain");
+    let ckdir = dir.join("checkpoints");
+    let mut chain = PcSampler::new(c.clone(), cfg, 1, 7).unwrap();
+    let opts = LoopOptions {
+        checkpoint_dir: Some(ckdir.clone()),
+        ..Default::default()
+    };
+    fault::arm("ckpt.sync", FaultSpec::error_after(1, 1));
+    let mut trace = TraceWriter::in_memory();
+    let summary = train(&mut chain, &run(10, 2), &mut trace, &opts).unwrap();
+    assert_eq!(fault::triggered("ckpt.sync"), 1);
+    fault::reset();
+    assert_eq!(summary.iterations, 10);
+    assert_eq!(summary.checkpoints_written, 4);
+    assert_eq!(summary.checkpoints_failed, 1);
+    // The injected save failure changed nothing about the chain.
+    assert_eq!(Trainer::assignments(&chain), Trainer::assignments(&full));
+    assert_eq!(chain.psi(), full.psi());
+    // The iteration-4 checkpoint is the injected casualty; the scan
+    // still finds the final one and a resume of the *truncated* chain
+    // reconverges bit-identically: rerun to 6, resume from the ckpt-6
+    // snapshot, finish to 10.
+    let (_, ckpt) = latest_valid(&ckdir).unwrap().unwrap();
+    assert_eq!(ckpt.iteration, 10);
+    assert!(!ckdir.join(hdp_sparse::hdp::checkpoint::periodic_name(4)).exists());
+    let mid = Checkpoint::load(&ckdir.join(
+        hdp_sparse::hdp::checkpoint::periodic_name(6),
+    ))
+    .unwrap();
+    let mut resumed = PcSampler::resume_chain(c, cfg, 1, 7, &mid).unwrap();
+    let mut trace = TraceWriter::in_memory();
+    let summary = train(
+        &mut resumed,
+        &run(10, 0),
+        &mut trace,
+        &LoopOptions::default(),
+    )
+    .unwrap();
+    assert_eq!(summary.iterations, 10);
+    assert_eq!(Trainer::assignments(&resumed), Trainer::assignments(&full));
+    assert_eq!(resumed.psi(), full.psi());
+    std::fs::remove_dir_all(&dir).ok();
+}

@@ -1,0 +1,273 @@
+//! Crash-safety integration tests over the public API: checksummed
+//! loaders fail closed on any corruption, periodic checkpoints make a
+//! training run resumable, and a chain resumed from a durable snapshot
+//! is bit-identical to the uninterrupted one.
+//!
+//! Deterministic fault *injection* (torn writes, transient EIO) lives
+//! in `tests/fault_matrix.rs` behind the `failpoints` feature; this
+//! suite needs no feature — it corrupts files the honest way, with
+//! `std::fs`.
+
+use hdp_sparse::config::{HdpConfig, RunConfig};
+use hdp_sparse::coordinator::{train, LoopOptions};
+use hdp_sparse::corpus::io::{write_packed, PackedCorpusFile};
+use hdp_sparse::corpus::synthetic::HdpCorpusSpec;
+use hdp_sparse::corpus::Corpus;
+use hdp_sparse::hdp::checkpoint::{latest_valid, periodic_name, Checkpoint};
+use hdp_sparse::hdp::pc::PcSampler;
+use hdp_sparse::hdp::Trainer;
+use hdp_sparse::metrics::TraceWriter;
+use hdp_sparse::par::{exec_map, WorkerPool};
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+fn corpus(seed: u64) -> Arc<Corpus> {
+    let (c, _) = HdpCorpusSpec {
+        vocab: 120,
+        topics: 3,
+        gamma: 1.0,
+        alpha: 1.0,
+        topic_beta: 0.05,
+        docs: 24,
+        mean_doc_len: 16.0,
+        len_sigma: 0.3,
+        min_doc_len: 6,
+    }
+    .generate(seed);
+    Arc::new(c)
+}
+
+fn cfg() -> HdpConfig {
+    HdpConfig { alpha: 0.5, beta: 0.05, gamma: 1.0, k_max: 24, init_topics: 1 }
+}
+
+fn run_config(iterations: usize, checkpoint_every: usize) -> RunConfig {
+    RunConfig {
+        iterations,
+        threads: 1,
+        seed: 23,
+        eval_every: 4,
+        time_budget_secs: 0,
+        checkpoint_every,
+    }
+}
+
+fn fresh_dir(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(name);
+    std::fs::remove_dir_all(&dir).ok();
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// Every strict prefix and every single-byte flip of `bytes` written
+/// to `victim` must make `load` return `Err` — never panic, never a
+/// silently wrong value.
+fn assert_fails_closed(
+    bytes: &[u8],
+    victim: &Path,
+    load: &dyn Fn(&Path) -> bool,
+    what: &str,
+) {
+    for cut in 0..bytes.len() {
+        std::fs::write(victim, &bytes[..cut]).unwrap();
+        assert!(!load(victim), "{what}: prefix of {cut} bytes accepted");
+    }
+    for i in 0..bytes.len() {
+        let mut bad = bytes.to_vec();
+        bad[i] ^= 0x40;
+        std::fs::write(victim, &bad).unwrap();
+        assert!(!load(victim), "{what}: flip at byte {i} accepted");
+    }
+    let mut ext = bytes.to_vec();
+    ext.push(0);
+    std::fs::write(victim, &ext).unwrap();
+    assert!(!load(victim), "{what}: extended file accepted");
+}
+
+#[test]
+fn trained_checkpoint_rejects_every_truncation_and_bit_flip() {
+    let c = corpus(41);
+    let mut s = PcSampler::new(c, cfg(), 1, 11).unwrap();
+    for _ in 0..5 {
+        s.step().unwrap();
+    }
+    let dir = fresh_dir("hdp_robust_ckpt_sweep");
+    let good = dir.join("model.ckpt");
+    let ckpt = s.checkpoint();
+    ckpt.save(&good).unwrap();
+    assert_eq!(Checkpoint::load(&good).unwrap(), ckpt);
+    let bytes = std::fs::read(&good).unwrap();
+    let victim = dir.join("victim.ckpt");
+    assert_fails_closed(
+        &bytes,
+        &victim,
+        &|p| Checkpoint::load(p).is_ok(),
+        "checkpoint",
+    );
+    // The original, untouched file still loads after the sweep.
+    assert_eq!(Checkpoint::load(&good).unwrap(), ckpt);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn packed_corpus_rejects_every_truncation_and_bit_flip() {
+    let c = Corpus {
+        docs: vec![vec![0, 0, 2, 1], vec![1], vec![], vec![2, 1, 0]],
+        vocab: vec!["alpha".into(), "beta".into(), "gamma".into()],
+    };
+    let dir = fresh_dir("hdp_robust_packed_sweep");
+    let good = dir.join("c.hdpp");
+    write_packed(&c.to_packed(), &good).unwrap();
+    let f = PackedCorpusFile::open(&good).unwrap();
+    assert_eq!(f.num_docs(), 4);
+    assert_eq!(f.num_tokens(), 8);
+    let bytes = std::fs::read(&good).unwrap();
+    let victim = dir.join("victim.hdpp");
+    assert_fails_closed(
+        &bytes,
+        &victim,
+        &|p| PackedCorpusFile::open(p).is_ok(),
+        "packed corpus",
+    );
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn resume_chain_from_disk_is_bit_identical() {
+    let c = corpus(91);
+    let cfg = cfg();
+    // The uninterrupted reference chain: 10 steps.
+    let mut full = PcSampler::new(c.clone(), cfg, 2, 17).unwrap();
+    for _ in 0..10 {
+        full.step().unwrap();
+    }
+    // The interrupted chain: 6 steps, durable snapshot, then a resume
+    // that round-trips through the on-disk format.
+    let mut first = PcSampler::new(c.clone(), cfg, 2, 17).unwrap();
+    for _ in 0..6 {
+        first.step().unwrap();
+    }
+    let dir = fresh_dir("hdp_robust_resume_chain");
+    let path = dir.join("mid.ckpt");
+    first.checkpoint().save(&path).unwrap();
+    drop(first);
+    let loaded = Checkpoint::load(&path).unwrap();
+    assert_eq!(loaded.iteration, 6);
+    let mut resumed = PcSampler::resume_chain(c, cfg, 2, 17, &loaded).unwrap();
+    assert_eq!(Trainer::iterations_done(&resumed), 6);
+    for _ in 0..4 {
+        resumed.step().unwrap();
+    }
+    // Recovery is bit-identical, not merely statistically equivalent.
+    assert_eq!(Trainer::assignments(&resumed), Trainer::assignments(&full));
+    assert_eq!(resumed.psi(), full.psi());
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn coordinator_periodic_checkpoints_survive_crash_debris_and_resume() {
+    let c = corpus(92);
+    let cfg = cfg();
+    // Uninterrupted reference: 10 iterations through the coordinator.
+    let mut full = PcSampler::new(c.clone(), cfg, 1, 23).unwrap();
+    let mut trace = TraceWriter::in_memory();
+    train(&mut full, &run_config(10, 0), &mut trace, &LoopOptions::default())
+        .unwrap();
+    // Interrupted run: stop after 6, checkpointing every 2 iterations.
+    let dir = fresh_dir("hdp_robust_coord");
+    let ckdir = dir.join("checkpoints");
+    let mut first = PcSampler::new(c.clone(), cfg, 1, 23).unwrap();
+    let opts = LoopOptions {
+        checkpoint_dir: Some(ckdir.clone()),
+        ..Default::default()
+    };
+    let mut trace = TraceWriter::in_memory();
+    let summary =
+        train(&mut first, &run_config(6, 2), &mut trace, &opts).unwrap();
+    assert_eq!(summary.iterations, 6);
+    assert_eq!(summary.checkpoints_written, 3);
+    assert_eq!(summary.checkpoints_failed, 0);
+    for it in [2u64, 4, 6] {
+        assert!(ckdir.join(periodic_name(it)).is_file(), "missing ckpt {it}");
+    }
+    drop(first);
+    // Fake the debris a mid-save crash leaves behind: a torn "newer"
+    // checkpoint and an atomic-write temp partial.
+    let good = std::fs::read(ckdir.join(periodic_name(6))).unwrap();
+    std::fs::write(ckdir.join(periodic_name(8)), &good[..good.len() / 2]).unwrap();
+    let partial = ckdir.join(".ckpt-0000000009.ckpt.321-0.tmp");
+    std::fs::write(&partial, b"partial").unwrap();
+    // Recovery: the scan skips the torn file, sweeps the partial, and
+    // lands on the newest valid snapshot.
+    let (path, ckpt) = latest_valid(&ckdir).unwrap().unwrap();
+    assert_eq!(
+        path.file_name().unwrap().to_str().unwrap(),
+        periodic_name(6),
+        "latest_valid picked the torn checkpoint"
+    );
+    assert_eq!(ckpt.iteration, 6);
+    assert!(!partial.exists(), "temp partial not swept");
+    // Resume the chain and finish the run: the coordinator continues
+    // at iteration 7 and the result matches the uninterrupted chain
+    // exactly.
+    let mut resumed = PcSampler::resume_chain(c, cfg, 1, 23, &ckpt).unwrap();
+    let mut trace = TraceWriter::in_memory();
+    let summary = train(
+        &mut resumed,
+        &run_config(10, 0),
+        &mut trace,
+        &LoopOptions::default(),
+    )
+    .unwrap();
+    assert_eq!(summary.iterations, 10);
+    assert_eq!(
+        trace.records().first().map(|r| r.iteration),
+        Some(8),
+        "resumed trace must start past the snapshot (evals at 8, 10)"
+    );
+    assert_eq!(Trainer::assignments(&resumed), Trainer::assignments(&full));
+    assert_eq!(resumed.psi(), full.psi());
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn resuming_a_finished_chain_is_a_no_op() {
+    let c = corpus(93);
+    let mut s = PcSampler::new(c, cfg(), 1, 5).unwrap();
+    let mut trace = TraceWriter::in_memory();
+    train(&mut s, &run_config(4, 0), &mut trace, &LoopOptions::default())
+        .unwrap();
+    let before = Trainer::assignments(&s).to_vec();
+    // Asking for 4 iterations when 4 are done must run zero steps and
+    // still produce a meaningful summary.
+    let mut trace = TraceWriter::in_memory();
+    let summary =
+        train(&mut s, &run_config(4, 0), &mut trace, &LoopOptions::default())
+            .unwrap();
+    assert_eq!(summary.iterations, 4);
+    assert!(summary.final_log_likelihood.is_finite());
+    assert!(trace.records().is_empty());
+    assert_eq!(Trainer::assignments(&s), &before[..]);
+}
+
+#[test]
+fn worker_pool_panic_keeps_message_and_attribution_and_pool_survives() {
+    let pool = WorkerPool::new(2);
+    let err = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        exec_map(&pool, 16, |i| {
+            if i == 7 {
+                panic!("robustness-boom");
+            }
+            i
+        })
+    }))
+    .expect_err("panic must propagate to the dispatching thread");
+    let msg = err
+        .downcast_ref::<String>()
+        .expect("enriched payload is a String");
+    assert!(msg.contains("robustness-boom"), "original message lost: {msg}");
+    assert!(msg.contains("worker pool task"), "no attribution: {msg}");
+    // The pool is still fully usable after a panicked job.
+    let v = exec_map(&pool, 4, |i| i * 2);
+    assert_eq!(v, vec![0, 2, 4, 6]);
+}

@@ -1,0 +1,71 @@
+#!/usr/bin/env bash
+# Crash/resume smoke test for the `repro` binary:
+#
+#   1. start a training run with periodic durable checkpoints,
+#   2. kill -9 it once at least two checkpoints have landed,
+#   3. fake the debris of a mid-save crash (tear the newest checkpoint,
+#      drop an atomic-write temp partial),
+#   4. rerun with --resume and require it to pick a surviving snapshot
+#      (never "starting fresh"), sweep the partial, and finish.
+#
+# Runs anywhere with a rust toolchain: `bash scripts/crash_resume_smoke.sh`.
+set -euo pipefail
+
+ROOT="$(cd "$(dirname "${BASH_SOURCE[0]}")/.." && pwd)"
+OUT="$(mktemp -d "${TMPDIR:-/tmp}/hdp_crash_smoke.XXXXXX")"
+trap 'rm -rf "$OUT"' EXIT
+CKDIR="$OUT/checkpoints"
+
+cargo build --release --manifest-path "$ROOT/rust/Cargo.toml"
+REPRO="$ROOT/rust/target/release/repro"
+
+ITERS=600
+"$REPRO" train --corpus small --sampler pc --iterations "$ITERS" \
+  --k-max 200 --eval-every 200 --threads 2 --seed 7 \
+  --checkpoint-every 5 --out-dir "$OUT" >"$OUT/first.log" 2>&1 &
+PID=$!
+
+ckpt_count() { ls "$CKDIR"/ckpt-*.ckpt 2>/dev/null | wc -l; }
+
+# Wait for two durable checkpoints (so tearing the newest still leaves
+# one to resume from), then kill -9 mid-run.
+for _ in $(seq 1 600); do
+  if [ "$(ckpt_count)" -ge 2 ]; then break; fi
+  if ! kill -0 "$PID" 2>/dev/null; then
+    echo "training exited before writing two checkpoints:" >&2
+    cat "$OUT/first.log" >&2
+    exit 1
+  fi
+  sleep 0.1
+done
+if [ "$(ckpt_count)" -lt 2 ]; then
+  echo "timed out waiting for checkpoints" >&2
+  exit 1
+fi
+kill -9 "$PID" 2>/dev/null || true
+wait "$PID" 2>/dev/null || true
+echo "killed training with checkpoints: $(ls "$CKDIR")"
+
+# Crash debris: tear the newest checkpoint and drop a temp partial.
+NEWEST="$(ls "$CKDIR"/ckpt-*.ckpt | sort | tail -n 1)"
+SIZE="$(wc -c <"$NEWEST")"
+head -c "$((SIZE / 2))" "$NEWEST" >"$NEWEST.torn"
+mv "$NEWEST.torn" "$NEWEST"
+PARTIAL="$CKDIR/.ckpt-9999999999.ckpt.1-0.tmp"
+printf partial >"$PARTIAL"
+
+# Resume: must discard the torn file, pick the previous snapshot, and
+# run the chain to completion.
+"$REPRO" train --corpus small --sampler pc --iterations "$ITERS" \
+  --k-max 200 --eval-every 200 --threads 2 --seed 7 \
+  --checkpoint-every 5 --out-dir "$OUT" --resume | tee "$OUT/resume.log"
+
+if ! grep -q "resuming from" "$OUT/resume.log"; then
+  echo "expected to resume from a checkpoint, not start fresh" >&2
+  exit 1
+fi
+if [ -e "$PARTIAL" ]; then
+  echo "temp partial was not swept by the resume scan" >&2
+  exit 1
+fi
+echo "crash/resume smoke: OK"
