@@ -1,19 +1,31 @@
 //! Bench: Walker alias tables — build cost and O(1) draws vs linear
-//! categorical scan (the §2.5 bucket-(a) design choice).
+//! categorical scan (the §2.5 bucket-(a) design choice), with a
+//! scalar-vs-SIMD build comparison at each table size.
+//!
+//! Writes `BENCH_alias.json` with per-case throughput and the
+//! per-size simd build speedups.
 
 mod common;
 
 use hdp_sparse::alias::AliasTable;
 use hdp_sparse::benchkit::Bench;
 use hdp_sparse::rng::{dist, Pcg64};
+use hdp_sparse::simd::Kernels;
 
 fn main() {
     let mut bench = Bench::new("alias");
+    let mut counters: Vec<(String, f64)> = Vec::new();
+    let kern = Kernels::auto();
+    counters.push(("simd_accelerated".into(), f64::from(kern.is_accelerated() as u8)));
+    println!("  kernel tier: {}", kern.name());
     for &k in &[16usize, 256, 4096] {
         let mut rng = Pcg64::new(k as u64);
         let weights: Vec<f64> = (0..k).map(|_| rng.f64() + 1e-3).collect();
         bench.run(&format!("build_k{k}"), Some(k as f64), || {
             AliasTable::new(&weights)
+        });
+        bench.run(&format!("build_simd_k{k}"), Some(k as f64), || {
+            AliasTable::new_with(&weights, &kern)
         });
         let table = AliasTable::new(&weights);
         let mut r1 = Pcg64::new(1);
@@ -35,6 +47,15 @@ fn main() {
             }
             acc
         });
+        let median = |name: &str| {
+            bench.results().iter().find(|c| c.name == name).map(|c| c.median()).unwrap_or(f64::NAN)
+        };
+        counters.push((
+            format!("build_simd_speedup_k{k}"),
+            median(&format!("build_k{k}")) / median(&format!("build_simd_k{k}")),
+        ));
     }
     bench.write_csv(std::path::Path::new("results/bench_alias.csv")).ok();
+    let refs: Vec<(&str, f64)> = counters.iter().map(|(k, v)| (k.as_str(), *v)).collect();
+    bench.write_json(std::path::Path::new("BENCH_alias.json"), &refs).ok();
 }

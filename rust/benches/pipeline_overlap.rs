@@ -7,7 +7,12 @@
 //! changes. This bench measures what that buys per iteration at
 //! 1/2/4/8 threads on a synthetic corpus, and reports each mode's
 //! `PhaseTimers` overlap (sum-of-phases vs critical-path wall) so the
-//! hidden Φ work is visible, not just the wall-time delta.
+//! hidden Φ work is visible, not just the wall-time delta. At the top
+//! thread count it also runs the pipelined sampler with SIMD kernels
+//! and core pinning on, the full fast-path configuration.
+//!
+//! Writes `BENCH_pipeline_overlap.json` with per-case throughput plus
+//! per-mode phase seconds and prefetch/overlap counters.
 
 use hdp_sparse::benchkit::Bench;
 use hdp_sparse::config::HdpConfig;
@@ -19,8 +24,21 @@ use hdp_sparse::metrics::PhaseTimers;
 const THREAD_COUNTS: [usize; 4] = [1, 2, 4, 8];
 const WARMUP_STEPS: usize = 3;
 
+/// Append one sampler's phase seconds and counters under `cell/…`.
+fn record(counters: &mut Vec<(String, f64)>, cell: &str, timers: &PhaseTimers, iters: f64) {
+    counters.push((format!("{cell}/steps"), iters));
+    for (phase, secs, _) in timers.rows() {
+        counters.push((format!("{cell}/phase_s/{phase}"), secs));
+    }
+    counters.push((format!("{cell}/overlap_s"), timers.overlap_seconds()));
+    for (name, count) in timers.counter_rows() {
+        counters.push((format!("{cell}/counter/{name}"), count as f64));
+    }
+}
+
 fn main() {
     let mut bench = Bench::new("pipeline_overlap");
+    let mut counters: Vec<(String, f64)> = Vec::new();
 
     // Mid-size corpus: enough Φ/alias work per iteration for overlap to
     // matter, small enough for quick bench turnaround.
@@ -62,6 +80,13 @@ fn main() {
         let overlap = pipelined.timers.overlap_seconds();
         // Timers were reset after warm-up, so only the benched steps count.
         let iters = (pipelined.iterations_done() - WARMUP_STEPS) as f64;
+        record(
+            &mut counters,
+            &format!("barriered_t{threads}"),
+            &barriered.timers,
+            (barriered.iterations_done() - WARMUP_STEPS) as f64,
+        );
+        record(&mut counters, &format!("pipelined_t{threads}"), &pipelined.timers, iters);
         report.push((threads, wall / iters.max(1.0), overlap / iters.max(1.0), {
             let median = |name: &str| {
                 bench
@@ -75,6 +100,33 @@ fn main() {
                 / median(&format!("pipelined_t{threads}"))
         }));
     }
+
+    // Full fast path: pipelined + SIMD kernels + pinned workers at the
+    // top thread count. Bit-identical chain; schedule/kernels only.
+    let top = *THREAD_COUNTS.last().unwrap();
+    let mut fast = PcSampler::new(corpus.clone(), cfg, top, 7).unwrap();
+    fast.set_simd(true);
+    let pinned = fast.set_pinning(true);
+    for _ in 0..WARMUP_STEPS {
+        fast.step().unwrap();
+    }
+    let steps0 = fast.iterations_done();
+    fast.timers = PhaseTimers::new();
+    let cell = format!("pipelined_simd_pin_t{top}");
+    bench.run(&cell, Some(tokens), || fast.step().unwrap());
+    record(&mut counters, &cell, &fast.timers, (fast.iterations_done() - steps0) as f64);
+    counters.push((format!("{cell}/simd_accelerated"), f64::from(fast.simd_active() as u8)));
+    counters.push((format!("{cell}/pinned"), f64::from(pinned as u8)));
+    let median = |name: &str| {
+        bench.results().iter().find(|c| c.name == name).map(|c| c.median()).unwrap_or(f64::NAN)
+    };
+    let fast_speedup = median(&format!("barriered_t{top}")) / median(&cell);
+    counters.push(("speedup_fastpath_vs_barriered".into(), fast_speedup));
+    println!(
+        "  simd+pin pipelined vs barriered at t{top}: {fast_speedup:.2}x (tier {})",
+        fast.kernel_tier()
+    );
+    fast.set_pinning(false);
 
     println!("\nthreads  wall/iter  overlap/iter  barriered/pipelined");
     let mut pass = true;
@@ -101,5 +153,9 @@ fn main() {
 
     bench
         .write_csv(std::path::Path::new("results/bench_pipeline_overlap.csv"))
+        .ok();
+    let refs: Vec<(&str, f64)> = counters.iter().map(|(k, v)| (k.as_str(), *v)).collect();
+    bench
+        .write_json(std::path::Path::new("BENCH_pipeline_overlap.json"), &refs)
         .ok();
 }

@@ -110,6 +110,7 @@ fn main() {
             tables: &tables,
             alpha: ALPHA,
             k_max: K_MAX,
+            kernels: Default::default(),
             seed_root: &root,
             iteration: scoped.iter,
         };
@@ -146,6 +147,7 @@ fn main() {
             tables: &tables,
             alpha: ALPHA,
             k_max: K_MAX,
+            kernels: Default::default(),
             seed_root: &root,
             iteration: pooled.iter,
         };

@@ -87,6 +87,7 @@ fn main() {
             tables: &tables,
             alpha: ALPHA,
             k_max: K_MAX,
+            kernels: Default::default(),
             seed_root: &root,
             iteration: iter.get(),
         }

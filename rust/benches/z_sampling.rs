@@ -1,17 +1,23 @@
 //! Bench: the doubly sparse z sweep (the hot path of Algorithm 2) vs a
 //! dense-enumeration sweep — the core ablation behind eq. (29) and the
-//! headline throughput of Table 2.
+//! headline throughput of Table 2 — plus the SIMD-kernel × core-pinning
+//! matrix for the multi-threaded sweep.
+//!
+//! Writes `BENCH_z_sampling.json` (per-case timing/throughput plus each
+//! cell's phase seconds and kernel counters) next to the CSV.
 
 mod common;
 
 use hdp_sparse::benchkit::Bench;
 use hdp_sparse::hdp::pc::PcSampler;
 use hdp_sparse::hdp::{exact::ExactSampler, Trainer};
+use hdp_sparse::metrics::PhaseTimers;
 
 fn main() {
     let corpus = common::bench_corpus();
     let tokens = corpus.num_tokens() as f64;
     let mut bench = Bench::new("z_sampling");
+    let mut counters: Vec<(String, f64)> = Vec::new();
 
     // Warm the PC sampler into a structured state first so the bench
     // measures the equilibrium sparsity pattern, not the init.
@@ -27,6 +33,56 @@ fn main() {
         pc.mean_sparse_work(),
         pc.diagnostics().active_topics
     );
+    counters.push(("mean_sparse_work".into(), pc.mean_sparse_work()));
+
+    // SIMD × pinning matrix at the acceptance thread count. The chain
+    // is bit-identical across cells (kernels are element-exact and
+    // pinning only moves threads), so the cells measure pure schedule
+    // and kernel cost.
+    let threads: usize = std::env::var("BENCH_THREADS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(8);
+    for (simd, pin) in [(false, false), (true, false), (false, true), (true, true)] {
+        let cell = format!(
+            "pc_t{threads}_simd_{}_pin_{}",
+            if simd { "on" } else { "off" },
+            if pin { "on" } else { "off" }
+        );
+        let mut s = PcSampler::new(corpus.clone(), common::paper_cfg(500), threads, 1).unwrap();
+        s.set_simd(simd);
+        let pinned = s.set_pinning(pin);
+        if pin && !pinned {
+            println!("  note: pinning unavailable (EPERM or no affinity); {cell} runs unpinned");
+        }
+        for _ in 0..10 {
+            s.step().unwrap();
+        }
+        let steps0 = s.iterations_done();
+        s.timers = PhaseTimers::new();
+        bench.run(&cell, Some(tokens), || s.step().unwrap());
+        let steps = (s.iterations_done() - steps0) as f64;
+        counters.push((format!("{cell}/steps"), steps));
+        counters.push((format!("{cell}/simd_accelerated"), f64::from(s.simd_active() as u8)));
+        counters.push((format!("{cell}/pinned"), f64::from(pinned as u8)));
+        for (phase, secs, _) in s.timers.rows() {
+            counters.push((format!("{cell}/phase_s/{phase}"), secs));
+        }
+        for (name, count) in s.timers.counter_rows() {
+            counters.push((format!("{cell}/counter/{name}"), count as f64));
+        }
+        if simd && pin {
+            println!("  kernel tier in simd+pin cell: {}", s.kernel_tier());
+        }
+        s.set_pinning(false);
+    }
+    let median = |results: &[hdp_sparse::benchkit::CaseResult], name: &str| {
+        results.iter().find(|c| c.name == name).map(|c| c.median()).unwrap_or(f64::NAN)
+    };
+    let base = median(bench.results(), &format!("pc_t{threads}_simd_off_pin_off"));
+    let best = median(bench.results(), &format!("pc_t{threads}_simd_on_pin_on"));
+    counters.push(("speedup_simd_pin_vs_scalar".into(), base / best));
+    println!("  simd+pin speedup over scalar unpinned at t{threads}: {:.2}x", base / best);
 
     // Dense oracle at matched truncation on a slice of the corpus
     // (dense is O(N·K*); run it on a 10% subsample and scale).
@@ -45,5 +101,9 @@ fn main() {
 
     bench
         .write_csv(std::path::Path::new("results/bench_z_sampling.csv"))
+        .ok();
+    let refs: Vec<(&str, f64)> = counters.iter().map(|(k, v)| (k.as_str(), *v)).collect();
+    bench
+        .write_json(std::path::Path::new("BENCH_z_sampling.json"), &refs)
         .ok();
 }

@@ -15,6 +15,7 @@
 //! topic ids.
 
 use crate::rng::Pcg64;
+use crate::simd::Kernels;
 
 /// Dense Walker alias table over outcomes `0..n`, built with Vose's
 /// O(n) construction. Stores the total input mass so callers can mix
@@ -36,6 +37,16 @@ impl AliasTable {
     /// all-zero input in debug builds; in release the table degenerates
     /// to always returning slot 0.
     pub fn new(weights: &[f64]) -> Self {
+        Self::new_with(weights, &Kernels::scalar())
+    }
+
+    /// [`AliasTable::new`] with an explicit kernel set: the slot
+    /// rescaling and the small/large partition run through `kernels`
+    /// (both bit-exact vs scalar — elementwise multiply and `< 1.0`
+    /// compare; see [`crate::simd`]'s policy), so the table is
+    /// bit-identical however it was built. The Vose pairing walk is
+    /// inherently serial and stays scalar.
+    pub fn new_with(weights: &[f64], kernels: &Kernels) -> Self {
         let n = weights.len();
         debug_assert!(n > 0, "alias table needs at least one outcome");
         debug_assert!(n <= u32::MAX as usize);
@@ -48,16 +59,11 @@ impl AliasTable {
         let mut alias: Vec<u32> = (0..n as u32).collect();
         // Vose's algorithm with two stacks.
         let scale = n as f64 / total;
-        let mut scaled: Vec<f64> = weights.iter().map(|&w| w * scale).collect();
+        let mut scaled: Vec<f64> = weights.to_vec();
+        (kernels.scale_f64)(&mut scaled, scale);
         let mut small: Vec<u32> = Vec::with_capacity(n);
         let mut large: Vec<u32> = Vec::with_capacity(n);
-        for (i, &s) in scaled.iter().enumerate() {
-            if s < 1.0 {
-                small.push(i as u32);
-            } else {
-                large.push(i as u32);
-            }
-        }
+        (kernels.partition_lt1)(&scaled, &mut small, &mut large);
         while let (Some(&s), Some(&l)) = (small.last(), large.last()) {
             small.pop();
             // p(s) fills the remainder of slot s from l.
@@ -120,6 +126,13 @@ impl SparseAlias {
     pub fn new(support: Vec<u32>, weights: &[f64]) -> Self {
         debug_assert_eq!(support.len(), weights.len());
         Self { table: AliasTable::new(weights), support }
+    }
+
+    /// [`SparseAlias::new`] with an explicit kernel set (bit-identical
+    /// result; see [`AliasTable::new_with`]).
+    pub fn new_with(support: Vec<u32>, weights: &[f64], kernels: &Kernels) -> Self {
+        debug_assert_eq!(support.len(), weights.len());
+        Self { table: AliasTable::new_with(weights, kernels), support }
     }
 
     /// Total unnormalized mass.
@@ -225,6 +238,20 @@ mod tests {
         assert_eq!(counts.len(), 3);
         assert!((counts[&17] as f64 / 100_000.0 - 0.5).abs() < 0.01);
         assert!(counts.keys().all(|k| support.contains(k)));
+    }
+
+    /// Whatever kernel tier `auto()` resolves to, the table it builds
+    /// must be bit-identical to the scalar-built one (the rescale and
+    /// partition kernels are bit-exact by policy, and the pairing walk
+    /// is shared).
+    #[test]
+    fn kernel_built_table_is_bit_identical() {
+        let weights: Vec<f64> = (1..=257).map(|i| ((i * 37) % 101) as f64 * 0.13).collect();
+        let a = AliasTable::new(&weights);
+        let b = AliasTable::new_with(&weights, &Kernels::auto());
+        assert_eq!(a.prob, b.prob);
+        assert_eq!(a.alias, b.alias);
+        assert_eq!(a.total.to_bits(), b.total.to_bits());
     }
 
     #[test]

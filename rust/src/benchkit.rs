@@ -80,6 +80,34 @@ pub fn fmt_time(secs: f64) -> String {
     }
 }
 
+/// JSON string literal (escapes quotes, backslashes, and control chars).
+fn json_str(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    out.push('"');
+    for ch in s.chars() {
+        match ch {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+    out
+}
+
+/// JSON number token; NaN/∞ have no JSON spelling, so emit `null`.
+fn json_num(x: f64) -> String {
+    if x.is_finite() {
+        format!("{x:.9}")
+    } else {
+        "null".into()
+    }
+}
+
 /// Benchmark group runner.
 pub struct Bench {
     group: String,
@@ -182,6 +210,59 @@ impl Bench {
         &self.results
     }
 
+    /// Write a machine-readable JSON report (hand-rolled — no serde in
+    /// this environment): the group, every case's timing stats and
+    /// throughput, and caller-supplied counters (phase seconds,
+    /// prefetch/overlap/kernel counts, speedup ratios …). Non-finite
+    /// values serialize as `null` so the file stays valid JSON.
+    ///
+    /// The bench targets write these as `BENCH_<group>.json` in the
+    /// working directory, one file per bench, so perf gates can diff
+    /// them across commits.
+    pub fn write_json(
+        &self,
+        path: &std::path::Path,
+        counters: &[(&str, f64)],
+    ) -> anyhow::Result<()> {
+        use std::io::Write;
+        if let Some(dir) = path.parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir)?;
+            }
+        }
+        let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+        writeln!(f, "{{")?;
+        writeln!(f, "  \"group\": {},", json_str(&self.group))?;
+        writeln!(f, "  \"samples_per_case\": {},", self.samples)?;
+        writeln!(f, "  \"cases\": [")?;
+        for (i, c) in self.results.iter().enumerate() {
+            let comma = if i + 1 < self.results.len() { "," } else { "" };
+            writeln!(f, "    {{")?;
+            writeln!(f, "      \"name\": {},", json_str(&c.name))?;
+            writeln!(f, "      \"median_s\": {},", json_num(c.median()))?;
+            writeln!(f, "      \"mean_s\": {},", json_num(c.mean()))?;
+            writeln!(f, "      \"sd_s\": {},", json_num(c.stddev()))?;
+            writeln!(f, "      \"min_s\": {},", json_num(c.min()))?;
+            writeln!(
+                f,
+                "      \"items_per_s\": {},",
+                c.throughput().map(json_num).unwrap_or_else(|| "null".into())
+            )?;
+            writeln!(f, "      \"spawns_per_call\": {},", json_num(c.spawns_per_call))?;
+            writeln!(f, "      \"allocs_per_call\": {}", json_num(c.allocs_per_call))?;
+            writeln!(f, "    }}{comma}")?;
+        }
+        writeln!(f, "  ],")?;
+        writeln!(f, "  \"counters\": {{")?;
+        for (i, (k, v)) in counters.iter().enumerate() {
+            let comma = if i + 1 < counters.len() { "," } else { "" };
+            writeln!(f, "    {}: {}{comma}", json_str(k), json_num(*v))?;
+        }
+        writeln!(f, "  }}")?;
+        writeln!(f, "}}")?;
+        Ok(())
+    }
+
     /// Write a CSV summary
     /// (`name,median_s,mean_s,sd_s,min_s,items_per_s,spawns_per_call,allocs_per_call`).
     pub fn write_csv(&self, path: &std::path::Path) -> anyhow::Result<()> {
@@ -238,6 +319,52 @@ mod tests {
         assert!(fmt_time(5e-6).contains("µs"));
         assert!(fmt_time(5e-3).contains("ms"));
         assert!(fmt_time(5.0).contains("s"));
+    }
+
+    #[test]
+    fn write_json_emits_valid_structure() {
+        let mut b = Bench {
+            group: "grp\"x".into(),
+            samples: 2,
+            min_batch_time: Duration::from_millis(1),
+            results: Vec::new(),
+        };
+        b.results.push(CaseResult {
+            name: "case-a".into(),
+            samples: vec![1.0, 2.0],
+            items_per_call: Some(10.0),
+            spawns_per_call: 0.5,
+            allocs_per_call: 0.0,
+        });
+        b.results.push(CaseResult {
+            name: "case-b".into(),
+            samples: vec![3.0, 4.0],
+            items_per_call: None,
+            spawns_per_call: 0.0,
+            allocs_per_call: f64::NAN,
+        });
+        let dir = std::env::temp_dir().join(format!("benchkit_json_{}", std::process::id()));
+        let path = dir.join("BENCH_test.json");
+        b.write_json(&path, &[("tokens_per_sec", 123.0), ("overlap_steps", 4.0)])
+            .unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        std::fs::remove_dir_all(&dir).ok();
+        // Structure and escaping.
+        assert!(text.starts_with("{\n"));
+        assert!(text.trim_end().ends_with('}'));
+        assert!(text.contains("\"group\": \"grp\\\"x\""));
+        assert!(text.contains("\"name\": \"case-a\""));
+        assert!(text.contains("\"median_s\": 1.500000000"));
+        // Missing throughput and non-finite numbers become null.
+        assert!(text.contains("\"items_per_s\": null"));
+        assert!(text.contains("\"allocs_per_call\": null"));
+        assert!(text.contains("\"tokens_per_sec\": 123.000000000"));
+        assert!(text.contains("\"overlap_steps\": 4.000000000"));
+        // Balanced braces/brackets (cheap well-formedness check, no
+        // JSON parser in this environment).
+        let opens = text.matches('{').count() + text.matches('[').count();
+        let closes = text.matches('}').count() + text.matches(']').count();
+        assert_eq!(opens, closes);
     }
 
     #[test]

@@ -56,6 +56,7 @@ use crate::diagnostics::loglik;
 use crate::metrics::PhaseTimers;
 use crate::par::{self, Schedule, Sharding, WorkerPool};
 use crate::rng::Pcg64;
+use crate::simd::Kernels;
 use crate::sparse::{DocCountHist, MergeScratch, TopicWordAcc, TopicWordRows};
 use std::sync::Arc;
 
@@ -122,6 +123,13 @@ pub struct PcSampler {
     stream_prefetch: bool,
     /// Double-buffer slot for the in-flight Φ job.
     phi_pipe: phi::PhiPipeline,
+    /// Kernel set for the hot loops (scalar unless
+    /// [`PcSampler::set_simd`] engaged an accelerated tier). Chains are
+    /// bit-identical under every tier.
+    kernels: Kernels,
+    /// Whether worker core pinning is engaged (resolved, not
+    /// requested: false when the OS denied `sched_setaffinity`).
+    pinning: bool,
 }
 
 impl PcSampler {
@@ -207,6 +215,8 @@ impl PcSampler {
             block_plan: None,
             stream_prefetch: false,
             phi_pipe: phi::PhiPipeline::new(0x0f1),
+            kernels: Kernels::scalar(),
+            pinning: false,
         })
     }
 
@@ -293,6 +303,72 @@ impl PcSampler {
         self.slot_affine
     }
 
+    /// Engage (or drop) the SIMD kernel set for the z/Φ/alias hot
+    /// loops. `true` resolves the widest tier this build + CPU
+    /// supports ([`Kernels::auto`]); with the `simd` cargo feature off
+    /// that is still the scalar set. Chains are **bit-identical**
+    /// under every tier (see [`crate::simd`]), so this may be flipped
+    /// mid-chain.
+    pub fn set_simd(&mut self, on: bool) {
+        self.kernels = if on { Kernels::auto() } else { Kernels::scalar() };
+        self.phi_pipe.set_kernels(self.kernels);
+    }
+
+    /// Whether an accelerated (non-scalar) kernel tier is active.
+    pub fn simd_active(&self) -> bool {
+        self.kernels.is_accelerated()
+    }
+
+    /// Name of the active kernel tier (`"scalar"`, `"sse2"`,
+    /// `"avx2"`).
+    pub fn kernel_tier(&self) -> &'static str {
+        self.kernels.name()
+    }
+
+    /// Request (or release) worker core pinning: each pool worker is
+    /// pinned to one CPU of the process affinity mask (slot-major, so
+    /// the [`Schedule::SlotAffine`] z schedule lines shards up with
+    /// cores), and the per-slot z scratch is reallocated **on the
+    /// pinned workers** so first-touch places its pages on the
+    /// worker's NUMA node. Returns the resolved state: `false` when
+    /// the OS denied `sched_setaffinity` (containers) — the sampler
+    /// degrades gracefully and keeps running unpinned. Chains are
+    /// bit-identical with pinning on or off.
+    pub fn set_pinning(&mut self, on: bool) -> bool {
+        self.pinning = self.pool.set_pinning(on);
+        if self.pinning {
+            self.first_touch_scratch();
+        }
+        self.pinning
+    }
+
+    /// Whether worker core pinning is engaged (resolved, not
+    /// requested).
+    pub fn pinning(&self) -> bool {
+        self.pinning
+    }
+
+    /// Reallocate the per-slot z scratch inside a slot-affine pool job
+    /// so each slot's buffers are first-touched (and their pages
+    /// placed) on the worker that will use them every sweep.
+    fn first_touch_scratch(&mut self) {
+        let slots = self.pool.slots();
+        let plan = self.block_plan.as_ref().unwrap_or(&self.doc_plan);
+        let weights = self.corpus.doc_weights();
+        let pair_hint = zstep::plan_pair_hint(plan, &weights, slots);
+        let k_max = self.cfg.k_max;
+        let slot_plan = Sharding::even(slots, slots);
+        // Pool slot_bound == slots (one unit scratch per slot).
+        let mut unit: Vec<()> = vec![(); slots];
+        self.scratch = par::exec_shards_with_sched(
+            &*self.pool,
+            &slot_plan,
+            &mut unit,
+            Schedule::SlotAffine,
+            |_, _, _| zstep::ShardScratch::with_pair_hint(k_max, pair_hint),
+        );
+    }
+
     /// The packed CSR arena the sweeps run on.
     pub fn packed(&self) -> &PackedCorpus {
         &self.packed
@@ -364,6 +440,12 @@ impl PcSampler {
     /// never resize).
     fn rebuild_stream_state(&mut self) {
         self.block_plan = self.stream_block_docs.map(|b| self.doc_plan.refine(b));
+        if self.pinning {
+            // Keep the first-touch placement: rebuild on the pinned
+            // workers, not the caller.
+            self.first_touch_scratch();
+            return;
+        }
         let plan = self.block_plan.as_ref().unwrap_or(&self.doc_plan);
         let weights = self.corpus.doc_weights();
         let pair_hint = zstep::plan_pair_hint(plan, &weights, self.pool.slots());
@@ -411,14 +493,19 @@ impl Trainer for PcSampler {
         // 2. Bucket-(a) alias tables over (Φ_t, Ψ_{t-1}), rebuilt in
         // place (buffers recycled across iterations).
         let t0 = Instant::now();
-        self.tables.build_into(
+        self.tables.build_into_with(
             &phi,
             &self.psi,
             self.cfg.alpha,
             &*self.pool,
             &mut self.tables_scratch,
+            &self.kernels,
         );
         self.timers.add("alias", t0.elapsed());
+        if self.kernels.is_accelerated() {
+            self.timers.incr(PhaseTimers::KERNEL_ALIAS_ELEMS, phi.nnz() as u64);
+            self.timers.incr(PhaseTimers::KERNEL_PHI_ELEMS, phi.nnz() as u64);
+        }
         // 3. z sweep, parallel over document shards, accumulating into
         // the persistent per-slot scratch.
         let sweep = zstep::ZSweep {
@@ -429,6 +516,7 @@ impl Trainer for PcSampler {
             k_max: self.cfg.k_max,
             seed_root: &root,
             iteration: iter,
+            kernels: self.kernels,
         };
         let schedule =
             if self.slot_affine { Schedule::SlotAffine } else { Schedule::Steal };
@@ -477,6 +565,7 @@ impl Trainer for PcSampler {
         self.flag_tokens = 0;
         self.sparse_work = 0;
         let (mut pf_hits, mut pf_stalls, mut pf_failures) = (0u64, 0u64, 0u64);
+        let (mut kern_gather, mut kern_scan) = (0u64, 0u64);
         for s in &self.scratch {
             self.zero_mass_tokens += s.out.zero_mass_tokens;
             self.flag_tokens += s.out.flag_tokens;
@@ -484,6 +573,8 @@ impl Trainer for PcSampler {
             pf_hits += s.out.prefetch_hits;
             pf_stalls += s.out.prefetch_stalls;
             pf_failures += s.out.prefetch_failures;
+            kern_gather += s.out.kern_gather_elems;
+            kern_scan += s.out.kern_scan_tokens;
         }
         if pf_hits + pf_stalls > 0 {
             self.timers.incr(PhaseTimers::PREFETCH_HITS, pf_hits);
@@ -491,6 +582,10 @@ impl Trainer for PcSampler {
         }
         if pf_failures > 0 {
             self.timers.incr(PhaseTimers::PREFETCH_FAILURES, pf_failures);
+        }
+        if kern_gather + kern_scan > 0 {
+            self.timers.incr(PhaseTimers::KERNEL_GATHER_ELEMS, kern_gather);
+            self.timers.incr(PhaseTimers::KERNEL_SCAN_TOKENS, kern_scan);
         }
         self.n = Arc::new(TopicWordRows::merge_par(
             self.cfg.k_max,
@@ -898,6 +993,48 @@ mod tests {
     fn s_consistency(s: &PcSampler, corpus: &Arc<Corpus>) {
         s.assign.check_consistency(corpus).unwrap();
         assert_eq!(s.n().total(), corpus.num_tokens());
+    }
+
+    #[test]
+    fn simd_and_pinning_chains_bit_identical() {
+        // Sampler-level kernel/pinning invariance: every cell of
+        // simd {off,on} × pinning {off,on} must be bit-identical to
+        // the scalar unpinned reference (the full matrix against the
+        // sequential reference lives in tests/statistical.rs).
+        // Pinning may degrade to off when the OS denies
+        // sched_setaffinity — that is exactly the graceful path the
+        // test covers.
+        let corpus = tiny_corpus(11);
+        let run = |simd: bool, pin: bool| {
+            let mut s = PcSampler::new(corpus.clone(), cfg(), 3, 77).unwrap();
+            s.set_simd(simd);
+            assert_eq!(s.simd_active(), s.kernel_tier() != "scalar");
+            if pin {
+                let engaged = s.set_pinning(true);
+                assert_eq!(engaged, s.pinning());
+            }
+            for _ in 0..4 {
+                s.step().unwrap();
+            }
+            if simd && s.simd_active() {
+                // Accelerated tiers must actually be exercised and
+                // accounted.
+                assert!(
+                    s.timers.counter(PhaseTimers::KERNEL_ALIAS_ELEMS) > 0,
+                    "alias kernel counter untouched"
+                );
+            }
+            if !simd {
+                assert_eq!(s.timers.counter(PhaseTimers::KERNEL_GATHER_ELEMS), 0);
+                assert_eq!(s.timers.counter(PhaseTimers::KERNEL_SCAN_TOKENS), 0);
+            }
+            let _ = s.set_pinning(false);
+            (s.assignments().to_vec(), s.l().to_vec(), s.psi().to_vec())
+        };
+        let reference = run(false, false);
+        for &(simd, pin) in &[(true, false), (false, true), (true, true)] {
+            assert_eq!(run(simd, pin), reference, "simd={simd} pin={pin}");
+        }
     }
 
     #[test]

@@ -12,6 +12,7 @@
 
 use crate::par;
 use crate::rng::{dist, Pcg64};
+use crate::simd::Kernels;
 use crate::sparse::{PhiMatrix, TopicWordRows};
 
 /// Sample one PPU row: integer counts `ϕ_{k,v} ~ Pois(β + n_{k,v})`,
@@ -71,6 +72,21 @@ pub fn sample_ppu_row_dense(
     beta: f64,
     vocab: usize,
 ) -> Vec<(u32, u32)> {
+    sample_ppu_row_dense_with(rng, n_row, beta, vocab, &Kernels::scalar())
+}
+
+/// [`sample_ppu_row_dense`] with an explicit kernel set: the Poisson
+/// draws are inherently serial (RNG stream), but the nonzero
+/// compaction of the dense row runs through
+/// `kernels.compact_nonzero_u32` — an order-preserving integer kernel,
+/// so the output is bit-identical across tiers.
+pub fn sample_ppu_row_dense_with(
+    rng: &mut Pcg64,
+    n_row: &[(u32, u32)],
+    beta: f64,
+    vocab: usize,
+    kernels: &Kernels,
+) -> Vec<(u32, u32)> {
     let mut dense = vec![0u32; vocab];
     let mut idx = 0usize;
     for v in 0..vocab as u32 {
@@ -83,12 +99,9 @@ pub fn sample_ppu_row_dense(
         };
         dense[v as usize] = dist::poisson(rng, beta + c as f64) as u32;
     }
-    dense
-        .into_iter()
-        .enumerate()
-        .filter(|&(_, c)| c > 0)
-        .map(|(v, c)| (v as u32, c))
-        .collect()
+    let mut out = Vec::new();
+    (kernels.compact_nonzero_u32)(&dense, &mut out);
+    out
 }
 
 /// Sample the whole `Φ` in parallel over topics (one RNG stream per
@@ -102,12 +115,27 @@ pub fn sample_phi(
     vocab: usize,
     exec: impl par::Executor,
 ) -> PhiMatrix {
+    sample_phi_with(root, n, beta, vocab, exec, &Kernels::scalar())
+}
+
+/// [`sample_phi`] with an explicit kernel set: the row draws are
+/// serial per topic (RNG streams), the normalization into the
+/// [`PhiMatrix`] runs through the kernels (bit-identical across tiers;
+/// see [`PhiMatrix::from_count_rows_with`]).
+pub fn sample_phi_with(
+    root: &Pcg64,
+    n: &TopicWordRows,
+    beta: f64,
+    vocab: usize,
+    exec: impl par::Executor,
+    kernels: &Kernels,
+) -> PhiMatrix {
     let k_max = n.num_topics();
     let rows: Vec<Vec<(u32, u32)>> = par::exec_map(exec, k_max, |k| {
         let mut rng = root.stream(0x9900_0000 | k as u64);
         sample_ppu_row(&mut rng, n.row(k), beta, vocab)
     });
-    PhiMatrix::from_count_rows(vocab, &rows)
+    PhiMatrix::from_count_rows_with(vocab, &rows, kernels)
 }
 
 /// An in-flight asynchronous `Φ` sampling job (the pipelined sampler's
@@ -116,6 +144,9 @@ pub fn sample_phi(
 pub struct PhiJob {
     rows: crate::par::MapJob<Vec<(u32, u32)>>,
     vocab: usize,
+    /// Kernel set for the join-time normalization (bit-identical across
+    /// tiers, so the async/blocking equivalence is unaffected).
+    kernels: Kernels,
     /// Nanoseconds of worker CPU time spent sampling rows, accumulated
     /// across tasks — lets the sampler attribute overlapped Φ work to
     /// its `phi` phase timer even though it ran off the critical path.
@@ -131,7 +162,7 @@ impl PhiJob {
         let spent = std::time::Duration::from_nanos(
             self.nanos.load(std::sync::atomic::Ordering::Relaxed),
         );
-        (PhiMatrix::from_count_rows(self.vocab, &rows), spent)
+        (PhiMatrix::from_count_rows_with(self.vocab, &rows, &self.kernels), spent)
     }
 }
 
@@ -148,6 +179,19 @@ pub fn submit_phi(
     beta: f64,
     vocab: usize,
 ) -> PhiJob {
+    submit_phi_with(pool, root, n, beta, vocab, Kernels::scalar())
+}
+
+/// [`submit_phi`] with an explicit kernel set for the join-time
+/// normalization.
+pub fn submit_phi_with(
+    pool: &std::sync::Arc<crate::par::WorkerPool>,
+    root: Pcg64,
+    n: std::sync::Arc<TopicWordRows>,
+    beta: f64,
+    vocab: usize,
+    kernels: Kernels,
+) -> PhiJob {
     use std::sync::atomic::{AtomicU64, Ordering};
     let k_max = n.num_topics();
     let nanos = std::sync::Arc::new(AtomicU64::new(0));
@@ -159,7 +203,7 @@ pub fn submit_phi(
         nanos_task.fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
         row
     });
-    PhiJob { rows, vocab, nanos }
+    PhiJob { rows, vocab, kernels, nanos }
 }
 
 /// Double-buffer slot for the pipelined samplers: holds the `Φ` job
@@ -173,12 +217,23 @@ pub struct PhiPipeline {
     /// XOR tag of the per-iteration Φ phase stream (PC: `0x0f1`,
     /// PcLDA: `0x1f1`).
     stream_tag: u64,
+    /// Kernel set used by both the async and the synchronous path (the
+    /// Φ draws themselves are serial; only the normalization runs
+    /// through it — bit-identical across tiers).
+    kernels: Kernels,
 }
 
 impl PhiPipeline {
     /// Empty pipeline with the sampler's phase-stream tag.
     pub fn new(stream_tag: u64) -> Self {
-        Self { pending: None, stream_tag }
+        Self { pending: None, stream_tag, kernels: Kernels::scalar() }
+    }
+
+    /// Switch the kernel set used for future `Φ` assemblies. A job
+    /// already in flight keeps the set it was submitted with — both
+    /// produce the same bits, so the swap point is unobservable.
+    pub fn set_kernels(&mut self, kernels: Kernels) {
+        self.kernels = kernels;
     }
 
     /// Produce `Φ` for iteration `iter`: join the prebuilt job when one
@@ -206,7 +261,17 @@ impl PhiPipeline {
                 // sample in place from the same streams.
                 drop(stale);
                 let phase_root = self.phase_root(iter, root);
-                (sample_phi(&phase_root, n, beta, vocab, &**pool), None)
+                (
+                    sample_phi_with(
+                        &phase_root,
+                        n,
+                        beta,
+                        vocab,
+                        &**pool,
+                        &self.kernels,
+                    ),
+                    None,
+                )
             }
         }
     }
@@ -225,7 +290,14 @@ impl PhiPipeline {
         let phase_root = self.phase_root(next_iter, root);
         self.pending = Some((
             next_iter,
-            submit_phi(pool, phase_root, std::sync::Arc::clone(n), beta, vocab),
+            submit_phi_with(
+                pool,
+                phase_root,
+                std::sync::Arc::clone(n),
+                beta,
+                vocab,
+                self.kernels,
+            ),
         ));
     }
 
@@ -322,6 +394,22 @@ mod tests {
         mean0 /= reps as f64;
         let want = (beta + 40.0) / (vocab as f64 * beta + 100.0);
         assert!((mean0 - want).abs() < 0.01, "{mean0} vs {want}");
+    }
+
+    /// The kernel-compacted dense row must equal the scalar one bit for
+    /// bit, whatever tier `auto()` resolves to (same RNG stream — the
+    /// draws are identical, only the compaction differs).
+    #[test]
+    fn dense_row_kernel_compaction_identical() {
+        let n_row = vec![(2u32, 4u32), (7, 9), (40, 1)];
+        for seed in 0..8 {
+            let mut r1 = Pcg64::new(21 + seed);
+            let mut r2 = Pcg64::new(21 + seed);
+            let a = sample_ppu_row_dense(&mut r1, &n_row, 0.2, 64);
+            let b =
+                sample_ppu_row_dense_with(&mut r2, &n_row, 0.2, 64, &Kernels::auto());
+            assert_eq!(a, b, "seed {seed}");
+        }
     }
 
     #[test]

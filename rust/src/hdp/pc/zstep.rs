@@ -22,6 +22,7 @@ use crate::corpus::{DocAccess, PackedCorpus};
 use crate::par::pool::SendPtr;
 use crate::par::{self, Executor, JobHandle, Schedule, Shard, Sharding, WorkerPool};
 use crate::rng::Pcg64;
+use crate::simd::Kernels;
 use crate::sparse::{DocCountHist, DocTopics, PhiMatrix, TopicWordAcc};
 use std::marker::PhantomData;
 use std::sync::Arc;
@@ -98,6 +99,27 @@ impl WordTables {
         exec: E,
         scratch: &mut WordTablesScratch,
     ) {
+        self.build_into_with(phi, psi, alpha, exec, scratch, &Kernels::scalar())
+    }
+
+    /// [`WordTables::build_into`] with an explicit kernel set. With an
+    /// accelerated tier the per-word weight vector `φ_{k,v}·α·Ψ_k` is
+    /// built by a SIMD gather and the alias construction runs through
+    /// the kernel table; the result is **bit-identical** to the scalar
+    /// build (the gather keeps the scalar per-element operation order,
+    /// the table total is the same left-to-right sum inside
+    /// [`SparseAlias`], and the reassociated `sum_f64` is used only
+    /// for the zero-mass degeneracy check, where any summation order
+    /// of nonnegative terms agrees on `> 0`).
+    pub fn build_into_with<E: par::Executor + Copy>(
+        &mut self,
+        phi: &PhiMatrix,
+        psi: &[f64],
+        alpha: f64,
+        exec: E,
+        scratch: &mut WordTablesScratch,
+        kernels: &Kernels,
+    ) {
         let vocab = phi.vocab();
         if self.tables.len() != vocab {
             crate::par::stats::note_scratch_alloc();
@@ -120,18 +142,33 @@ impl WordTables {
                 // `v` is owned by this task.
                 let slot_t = unsafe { &mut *tbase.0.add(v) };
                 let slot_m = unsafe { &mut *mbase.0.add(v) };
-                weights.clear();
-                let mut total = 0.0f64;
-                for (&k, &p) in topics.iter().zip(probs) {
-                    let w = p * alpha * psi[k as usize];
-                    weights.push(w);
-                    total += w;
+                let total;
+                if kernels.is_accelerated() {
+                    // Gathered build: w[i] = probs[i]·α·Ψ[topics[i]],
+                    // same left-associated multiply per element as the
+                    // scalar loop. `total` only gates the degeneracy
+                    // branch below, so the reassociated SIMD sum is
+                    // fine: nonnegative terms agree on `> 0` in any
+                    // summation order.
+                    (kernels.gather_mul_f64)(topics, probs, alpha, psi, weights);
+                    weights.truncate(topics.len());
+                    total = (kernels.sum_f64)(weights);
+                } else {
+                    weights.clear();
+                    let mut t = 0.0f64;
+                    for (&k, &p) in topics.iter().zip(probs) {
+                        let w = p * alpha * psi[k as usize];
+                        weights.push(w);
+                        t += w;
+                    }
+                    total = t;
                 }
                 if topics.is_empty() || total <= 0.0 {
                     *slot_t = None;
                     *slot_m = 0.0;
                 } else {
-                    let alias = SparseAlias::new(topics.to_vec(), weights);
+                    let alias =
+                        SparseAlias::new_with(topics.to_vec(), weights, kernels);
                     *slot_m = alias.total();
                     *slot_t = Some(alias);
                 }
@@ -177,6 +214,12 @@ pub struct ZShardResult {
     /// back buffers and reloaded the block inline. Each failure is
     /// also counted as a stall.
     pub prefetch_failures: u64,
+    /// Elements fed through the SIMD gather kernel in the dense
+    /// bucket-(b) branch (0 when the sweep runs the scalar kernel set).
+    pub kern_gather_elems: u64,
+    /// Tokens whose bucket-(b) selection scan used the SIMD
+    /// `find_first_gt` kernel (0 under the scalar kernel set).
+    pub kern_scan_tokens: u64,
 }
 
 impl ZShardResult {
@@ -201,6 +244,8 @@ impl ZShardResult {
             prefetch_hits: 0,
             prefetch_stalls: 0,
             prefetch_failures: 0,
+            kern_gather_elems: 0,
+            kern_scan_tokens: 0,
         }
     }
 
@@ -215,6 +260,8 @@ impl ZShardResult {
         self.prefetch_hits = 0;
         self.prefetch_stalls = 0;
         self.prefetch_failures = 0;
+        self.kern_gather_elems = 0;
+        self.kern_scan_tokens = 0;
     }
 }
 
@@ -229,8 +276,15 @@ pub struct ZScratch {
     entries: Vec<u32>,
     /// Membership mark for `entries` (reset via `entries` at doc end).
     in_list: Vec<bool>,
-    /// bucket-(b) partials `(topic, cumulative weight)`.
-    partials: Vec<(u32, f64)>,
+    /// bucket-(b) partial topics (parallel to `partial_cums`). Sized to
+    /// `k_max` once; per token only the first `used` entries are live —
+    /// the stale tail is never read and never re-zeroed.
+    partial_ks: Vec<u32>,
+    /// bucket-(b) cumulative weights (parallel to `partial_ks`).
+    partial_cums: Vec<f64>,
+    /// Gathered `φ_{k,v}·m_{d,k}` weights for the dense bucket-(b)
+    /// branch under an accelerated kernel set (unused in scalar mode).
+    dense_w: Vec<f64>,
 }
 
 impl ZScratch {
@@ -241,7 +295,9 @@ impl ZScratch {
             mdense: vec![0; k_max],
             entries: Vec::with_capacity(64),
             in_list: vec![false; k_max],
-            partials: Vec::with_capacity(64),
+            partial_ks: vec![0; k_max],
+            partial_cums: vec![0.0; k_max],
+            dense_w: Vec::new(),
         }
     }
 
@@ -254,8 +310,12 @@ impl ZScratch {
             self.mdense.resize(k_max, 0);
             self.in_list.resize(k_max, false);
         }
+        if self.partial_ks.len() < k_max {
+            crate::par::stats::note_scratch_alloc();
+            self.partial_ks.resize(k_max, 0);
+            self.partial_cums.resize(k_max, 0.0);
+        }
         self.entries.clear();
-        self.partials.clear();
     }
 }
 
@@ -347,6 +407,11 @@ pub struct ZSweep<'a> {
     /// Root RNG; per-document streams derive from it and the iteration.
     pub seed_root: &'a Pcg64,
     pub iteration: u64,
+    /// Kernel set for the per-token hot loops. [`Kernels::scalar`] is
+    /// the reference path; an accelerated set changes *how* the same
+    /// arithmetic is evaluated, never *what* — the chain is
+    /// bit-identical either way (see [`crate::simd`]'s policy).
+    pub kernels: Kernels,
 }
 
 impl<'a> ZSweep<'a> {
@@ -365,48 +430,88 @@ impl<'a> ZSweep<'a> {
             .seed_root
             .stream(self.iteration.rotate_left(32) ^ 0x2000_0000)
             .stream(doc_id as u64);
+        let accel = self.kernels.is_accelerated();
+        // Hoist the per-token bounds checks: every topic id this doc
+        // touches is < k_max, so slice the dense workspaces to exactly
+        // k_max once per document instead of checking against the
+        // (possibly larger, never-shrunk) Vec lengths per token. The
+        // partials buffers are written by index up to `used` ≤ k_max and
+        // never re-zeroed — the stale tail is dead by construction.
+        let ZScratch { mdense, entries, in_list, partial_ks, partial_cums, dense_w } =
+            scratch;
+        let mdense = &mut mdense[..self.k_max];
+        let in_list = &mut in_list[..self.k_max];
+        let partial_ks = &mut partial_ks[..self.k_max];
+        let partial_cums = &mut partial_cums[..self.k_max];
         // Load the per-doc scratch from md (touch only its entries).
         // `live` tracks the current nnz of m_d for the min-sparsity
         // branch; `entries` may keep stale zero-count topics (skipped
         // during iteration, compacted at doc end).
         let mut live = md.nnz();
         for (k, c) in md.iter() {
-            scratch.mdense[k as usize] = c;
-            scratch.in_list[k as usize] = true;
-            scratch.entries.push(k);
+            mdense[k as usize] = c;
+            in_list[k as usize] = true;
+            entries.push(k);
         }
         for (&v, z) in doc.iter().zip(zd.iter_mut()) {
             let kold = *z;
             // Remove the token (the −i in m^{-i}) — O(1).
-            let cold = &mut scratch.mdense[kold as usize];
+            let cold = &mut mdense[kold as usize];
             *cold -= 1;
             if *cold == 0 {
                 live -= 1;
             }
             // Bucket (b): iterate the sparser side.
             let (col_topics, col_probs) = self.phi.col(v);
-            scratch.partials.clear();
+            let mut used = 0usize;
             let mut s_b = 0.0f64;
             if live <= col_topics.len() {
                 out.sparse_work += live as u64;
-                for &k in scratch.entries.iter() {
-                    let c = scratch.mdense[k as usize];
+                for &k in entries.iter() {
+                    let c = mdense[k as usize];
                     if c == 0 {
                         continue; // stale entry
                     }
                     // manual binary search over the hoisted column
                     if let Ok(idx) = col_topics.binary_search(&k) {
                         s_b += col_probs[idx] * c as f64;
-                        scratch.partials.push((k, s_b));
+                        partial_ks[used] = k;
+                        partial_cums[used] = s_b;
+                        used += 1;
                     }
                 }
             } else {
                 out.sparse_work += col_topics.len() as u64;
-                for (&k, &p) in col_topics.iter().zip(col_probs) {
-                    let c = scratch.mdense[k as usize];
-                    if c > 0 {
-                        s_b += p * c as f64;
-                        scratch.partials.push((k, s_b));
+                if accel {
+                    // Gathered dense branch: w[i] = φ_{k_i,v}·m_{d,k_i}
+                    // with the scalar's exact per-element multiply, then
+                    // a serial cumulative compaction. `w > 0.0` keeps a
+                    // superset-equivalent partials list vs the scalar
+                    // `c > 0` test: a zero-weight partial adds +0.0 to
+                    // `s_b` (bit-identical cumsum) and can never be the
+                    // first cum > u, so dropping it never changes the
+                    // drawn topic.
+                    (self.kernels.gather_mul_u32)(
+                        col_topics, col_probs, mdense, dense_w,
+                    );
+                    out.kern_gather_elems += col_topics.len() as u64;
+                    for (i, &w) in dense_w[..col_topics.len()].iter().enumerate() {
+                        if w > 0.0 {
+                            s_b += w;
+                            partial_ks[used] = col_topics[i];
+                            partial_cums[used] = s_b;
+                            used += 1;
+                        }
+                    }
+                } else {
+                    for (&k, &p) in col_topics.iter().zip(col_probs) {
+                        let c = mdense[k as usize];
+                        if c > 0 {
+                            s_b += p * c as f64;
+                            partial_ks[used] = k;
+                            partial_cums[used] = s_b;
+                            used += 1;
+                        }
                     }
                 }
             }
@@ -421,27 +526,40 @@ impl<'a> ZSweep<'a> {
             } else {
                 let u = rng.f64() * total;
                 if u < s_b {
-                    // walk the partials (short vector, linear is fastest)
-                    let mut pick = scratch.partials.len() - 1;
-                    for (idx, &(_, cum)) in scratch.partials.iter().enumerate() {
-                        if u < cum {
-                            pick = idx;
-                            break;
+                    let pick = if accel {
+                        // SIMD scan for the first cumulative > u; `u <
+                        // s_b = partial_cums[used-1]` guarantees a hit,
+                        // the `min` only guards the float-edge where it
+                        // would not.
+                        out.kern_scan_tokens += 1;
+                        (self.kernels.find_first_gt)(&partial_cums[..used], u)
+                            .min(used - 1)
+                    } else {
+                        // walk the partials (short vector, linear is
+                        // fastest)
+                        let mut pick = used - 1;
+                        for (idx, &cum) in partial_cums[..used].iter().enumerate()
+                        {
+                            if u < cum {
+                                pick = idx;
+                                break;
+                            }
                         }
-                    }
-                    scratch.partials[pick].0
+                        pick
+                    };
+                    partial_ks[pick]
                 } else {
                     self.tables.sample(v, &mut rng)
                 }
             };
             *z = knew;
             // Add the token — O(1) amortized.
-            let cnew = &mut scratch.mdense[knew as usize];
+            let cnew = &mut mdense[knew as usize];
             if *cnew == 0 {
                 live += 1;
-                if !scratch.in_list[knew as usize] {
-                    scratch.in_list[knew as usize] = true;
-                    scratch.entries.push(knew);
+                if !in_list[knew as usize] {
+                    in_list[knew as usize] = true;
+                    entries.push(knew);
                 }
             }
             *cnew += 1;
@@ -452,15 +570,15 @@ impl<'a> ZSweep<'a> {
         }
         // Compact the scratch back into md and reset it.
         md.clear();
-        for &k in scratch.entries.iter() {
-            let c = scratch.mdense[k as usize];
+        for &k in entries.iter() {
+            let c = mdense[k as usize];
             if c > 0 {
                 md.set(k, c);
             }
-            scratch.mdense[k as usize] = 0;
-            scratch.in_list[k as usize] = false;
+            mdense[k as usize] = 0;
+            in_list[k as usize] = false;
         }
-        scratch.entries.clear();
+        entries.clear();
         out.hist.record_doc(md.entries());
     }
 
@@ -1238,6 +1356,7 @@ mod tests {
                 k_max: 4,
                 seed_root: &root,
                 iteration: 3,
+                kernels: Kernels::scalar(),
             };
             let mut z = vec![vec![0u32, 1, 0]];
             let mut m: Vec<DocTopics> =
@@ -1304,6 +1423,7 @@ mod tests {
             k_max: 8,
             seed_root: &root,
             iteration: 1,
+            kernels: Kernels::scalar(),
         };
         let mut m: Vec<DocTopics> =
             z.iter().map(|zd| zd.iter().copied().collect()).collect();
@@ -1367,6 +1487,7 @@ mod tests {
                 k_max: 8,
                 seed_root: &root,
                 iteration,
+                kernels: Kernels::scalar(),
             };
             let (mut z_scoped, mut m_scoped) = (z0.clone(), m0.clone());
             let results =
@@ -1483,6 +1604,7 @@ mod tests {
             k_max: 8,
             seed_root: root,
             iteration: 1,
+            kernels: Kernels::scalar(),
         }
     }
 
@@ -1865,6 +1987,7 @@ mod tests {
             k_max: 8,
             seed_root: &root,
             iteration: 1,
+            kernels: Kernels::scalar(),
         };
         let m0: Vec<DocTopics> =
             z0.iter().map(|zd| zd.iter().copied().collect()).collect();
@@ -1935,6 +2058,7 @@ mod tests {
             k_max: 6,
             seed_root: &root,
             iteration: 2,
+            kernels: Kernels::scalar(),
         };
         let results =
             sweep.run(&corpus.docs, &mut z, &mut m, &Sharding::even(25, 3));
@@ -1956,6 +2080,81 @@ mod tests {
             for (k, c) in rebuilt.iter() {
                 assert_eq!(md.get(k), c);
             }
+        }
+    }
+
+    /// Whatever tier `auto()` resolves to, a kernel-driven sweep (and
+    /// the kernel-built alias tables it draws from) must leave z, m,
+    /// and the accumulated n bit-identical to the scalar sweep. The
+    /// fixture drives both bucket-(b) branches: single-topic m_d init
+    /// (dense columns win) relaxing toward mixed docs over sweeps.
+    #[test]
+    fn kernel_sweep_is_bit_identical_to_scalar() {
+        use crate::corpus::synthetic::HdpCorpusSpec;
+        let (corpus, _) = HdpCorpusSpec {
+            vocab: 60,
+            topics: 4,
+            gamma: 1.0,
+            alpha: 1.0,
+            topic_beta: 0.1,
+            docs: 20,
+            mean_doc_len: 25.0,
+            len_sigma: 0.3,
+            min_doc_len: 5,
+        }
+        .generate(17);
+        let mut rng = Pcg64::new(3);
+        let z0: Vec<Vec<u32>> = corpus
+            .docs
+            .iter()
+            .map(|d| d.iter().map(|_| rng.below(6) as u32).collect())
+            .collect();
+        let m0: Vec<DocTopics> =
+            z0.iter().map(|zd| zd.iter().copied().collect()).collect();
+        let mut acc = TopicWordAcc::with_capacity(256);
+        for (doc, zd) in corpus.docs.iter().zip(&z0) {
+            for (&v, &k) in doc.iter().zip(zd) {
+                acc.add(k, v, 1);
+            }
+        }
+        let n = TopicWordRows::merge_from(6, &mut [acc]);
+        let root = Pcg64::new(19);
+        let phi = super::super::phi::sample_phi(&root, &n, 0.05, 60, 1usize);
+        let psi = [0.35, 0.25, 0.15, 0.1, 0.1, 0.05];
+        let run = |kernels: Kernels| {
+            let mut tables = WordTables::empty();
+            let mut tscratch = WordTablesScratch::new();
+            tables.build_into_with(&phi, &psi, 0.5, 1usize, &mut tscratch, &kernels);
+            let sweep = ZSweep {
+                phi: &phi,
+                psi: &psi,
+                tables: &tables,
+                alpha: 0.5,
+                k_max: 6,
+                seed_root: &root,
+                iteration: 4,
+                kernels,
+            };
+            let (mut z, mut m) = (z0.clone(), m0.clone());
+            let results =
+                sweep.run(&corpus.docs, &mut z, &mut m, &Sharding::even(20, 2));
+            let counters: Vec<(u64, u64)> = results
+                .iter()
+                .map(|r| (r.kern_gather_elems, r.kern_scan_tokens))
+                .collect();
+            (z, m, counters)
+        };
+        let (z_s, m_s, c_s) = run(Kernels::scalar());
+        let auto = Kernels::auto();
+        let (z_a, m_a, c_a) = run(auto);
+        assert_eq!(z_a, z_s, "kernel sweep diverged from scalar");
+        for (a, b) in m_a.iter().zip(&m_s) {
+            assert_eq!(a.entries(), b.entries());
+        }
+        assert!(c_s.iter().all(|&(g, t)| g == 0 && t == 0), "scalar counted kernels");
+        if auto.is_accelerated() {
+            let gathered: u64 = c_a.iter().map(|&(g, _)| g).sum();
+            assert!(gathered > 0, "accelerated sweep never hit the gather kernel");
         }
     }
 

@@ -14,8 +14,9 @@
 use crate::corpus::{Corpus, PackedCorpus};
 use crate::diagnostics::loglik;
 use crate::metrics::PhaseTimers;
-use crate::par::{Schedule, Sharding, WorkerPool};
+use crate::par::{self, Schedule, Sharding, WorkerPool};
 use crate::rng::Pcg64;
+use crate::simd::Kernels;
 use crate::sparse::{MergeScratch, TopicWordAcc, TopicWordRows};
 use std::sync::Arc;
 
@@ -61,6 +62,11 @@ pub struct PcLdaSampler {
     stream_prefetch: bool,
     /// Double-buffer slot for the in-flight Φ job.
     phi_pipe: phi::PhiPipeline,
+    /// Kernel set for the hot loops (see
+    /// [`super::pc::PcSampler::set_simd`]).
+    kernels: Kernels,
+    /// Resolved worker core pinning state.
+    pinning: bool,
 }
 
 impl PcLdaSampler {
@@ -118,6 +124,8 @@ impl PcLdaSampler {
             block_plan: None,
             stream_prefetch: false,
             phi_pipe: phi::PhiPipeline::new(0x1f1),
+            kernels: Kernels::scalar(),
+            pinning: false,
         })
     }
 
@@ -177,6 +185,57 @@ impl PcLdaSampler {
         self.slot_affine = slot_affine;
     }
 
+    /// Engage (or drop) the SIMD kernel set for the hot loops —
+    /// bit-identical chains under every tier (see
+    /// [`super::pc::PcSampler::set_simd`]).
+    pub fn set_simd(&mut self, on: bool) {
+        self.kernels = if on { Kernels::auto() } else { Kernels::scalar() };
+        self.phi_pipe.set_kernels(self.kernels);
+    }
+
+    /// Whether an accelerated (non-scalar) kernel tier is active.
+    pub fn simd_active(&self) -> bool {
+        self.kernels.is_accelerated()
+    }
+
+    /// Request (or release) worker core pinning with first-touch
+    /// scratch placement (see [`super::pc::PcSampler::set_pinning`]).
+    /// Returns the resolved state — `false` when the OS denied
+    /// `sched_setaffinity`.
+    pub fn set_pinning(&mut self, on: bool) -> bool {
+        self.pinning = self.pool.set_pinning(on);
+        if self.pinning {
+            self.first_touch_scratch();
+        }
+        self.pinning
+    }
+
+    /// Whether worker core pinning is engaged.
+    pub fn pinning(&self) -> bool {
+        self.pinning
+    }
+
+    /// Reallocate the per-slot z scratch on the pinned workers
+    /// (slot-affine job, one task per slot) so first-touch places its
+    /// pages on each worker's NUMA node.
+    fn first_touch_scratch(&mut self) {
+        let slots = self.pool.slots();
+        let plan = self.block_plan.as_ref().unwrap_or(&self.doc_plan);
+        let weights = self.corpus.doc_weights();
+        let pair_hint = zstep::plan_pair_hint(plan, &weights, slots);
+        let k = self.k;
+        let slot_plan = Sharding::even(slots, slots);
+        // Pool slot_bound == slots (one unit scratch per slot).
+        let mut unit: Vec<()> = vec![(); slots];
+        self.scratch = par::exec_shards_with_sched(
+            &*self.pool,
+            &slot_plan,
+            &mut unit,
+            Schedule::SlotAffine,
+            |_, _, _| zstep::ShardScratch::with_pair_hint(k, pair_hint),
+        );
+    }
+
     /// Enable/disable the streamed z sweep (blocks of at most
     /// `block_docs` documents through per-slot buffers; `None` =
     /// resident). Chains are bit-identical under every setting — see
@@ -184,6 +243,11 @@ impl PcLdaSampler {
     pub fn set_streaming(&mut self, block_docs: Option<usize>) {
         self.stream_block_docs = block_docs.map(|b| b.max(1));
         self.block_plan = self.stream_block_docs.map(|b| self.doc_plan.refine(b));
+        if self.pinning {
+            // Keep the first-touch placement across plan swaps.
+            self.first_touch_scratch();
+            return;
+        }
         let plan = self.block_plan.as_ref().unwrap_or(&self.doc_plan);
         let weights = self.corpus.doc_weights();
         let pair_hint = zstep::plan_pair_hint(plan, &weights, self.pool.slots());
@@ -237,14 +301,19 @@ impl Trainer for PcLdaSampler {
         }
         let t0 = Instant::now();
         // α·Ψ_k = α/K — the LDA symmetric document prior.
-        self.tables.build_into(
+        self.tables.build_into_with(
             &phi_m,
             &self.psi,
             self.alpha,
             &*self.pool,
             &mut self.tables_scratch,
+            &self.kernels,
         );
         self.timers.add("alias", t0.elapsed());
+        if self.kernels.is_accelerated() {
+            self.timers.incr(PhaseTimers::KERNEL_ALIAS_ELEMS, phi_m.nnz() as u64);
+            self.timers.incr(PhaseTimers::KERNEL_PHI_ELEMS, phi_m.nnz() as u64);
+        }
         let sweep = zstep::ZSweep {
             phi: &phi_m,
             psi: &self.psi,
@@ -253,6 +322,7 @@ impl Trainer for PcLdaSampler {
             k_max: self.k,
             seed_root: &root,
             iteration: iter,
+            kernels: self.kernels,
         };
         let schedule =
             if self.slot_affine { Schedule::SlotAffine } else { Schedule::Steal };
@@ -287,10 +357,13 @@ impl Trainer for PcLdaSampler {
         }
         self.timers.add("z", t0.elapsed());
         let (mut pf_hits, mut pf_stalls, mut pf_failures) = (0u64, 0u64, 0u64);
+        let (mut kern_gather, mut kern_scan) = (0u64, 0u64);
         for s in &self.scratch {
             pf_hits += s.out.prefetch_hits;
             pf_stalls += s.out.prefetch_stalls;
             pf_failures += s.out.prefetch_failures;
+            kern_gather += s.out.kern_gather_elems;
+            kern_scan += s.out.kern_scan_tokens;
         }
         if pf_hits + pf_stalls > 0 {
             self.timers.incr(PhaseTimers::PREFETCH_HITS, pf_hits);
@@ -298,6 +371,10 @@ impl Trainer for PcLdaSampler {
         }
         if pf_failures > 0 {
             self.timers.incr(PhaseTimers::PREFETCH_FAILURES, pf_failures);
+        }
+        if kern_gather + kern_scan > 0 {
+            self.timers.incr(PhaseTimers::KERNEL_GATHER_ELEMS, kern_gather);
+            self.timers.incr(PhaseTimers::KERNEL_SCAN_TOKENS, kern_scan);
         }
         let t0 = Instant::now();
         self.n = Arc::new(TopicWordRows::merge_par(
@@ -434,6 +511,32 @@ mod tests {
             assert_eq!(pip.assignments(), seq.assignments(), "iter={it}");
             let (ds, dp) = (seq.diagnostics(), pip.diagnostics());
             assert_eq!(dp.log_likelihood.to_bits(), ds.log_likelihood.to_bits());
+        }
+    }
+
+    #[test]
+    fn simd_and_pinning_chains_bit_identical() {
+        // Kernel/pinning invariance for the LDA baseline: every
+        // simd × pinning cell bit-identical to the scalar unpinned
+        // chain (pinning may resolve to off under EPERM — the
+        // graceful-degradation path).
+        let corpus = tiny();
+        let run = |simd: bool, pin: bool| {
+            let mut s = PcLdaSampler::new(corpus.clone(), 8, 0.1, 0.05, 3, 29).unwrap();
+            s.set_simd(simd);
+            if pin {
+                let engaged = s.set_pinning(true);
+                assert_eq!(engaged, s.pinning());
+            }
+            for _ in 0..3 {
+                s.step().unwrap();
+            }
+            let _ = s.set_pinning(false);
+            s.assignments().to_vec()
+        };
+        let reference = run(false, false);
+        for &(simd, pin) in &[(true, false), (false, true), (true, true)] {
+            assert_eq!(run(simd, pin), reference, "simd={simd} pin={pin}");
         }
     }
 

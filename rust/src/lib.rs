@@ -44,4 +44,9 @@ pub mod rng;
 #[cfg(feature = "xla")]
 pub mod runtime;
 pub mod serve;
+/// Runtime-dispatched SIMD kernels for the dense hot loops (scalar
+/// reference tier always present; x86_64 AVX2/SSE2 tiers behind the
+/// off-by-default `simd` feature). See the module docs for the
+/// dispatch ladder and the bit-exactness policy.
+pub mod simd;
 pub mod sparse;

@@ -48,6 +48,22 @@ impl PhaseTimers {
     /// inline reload. Every failure is also counted as a stall.
     pub const PREFETCH_FAILURES: &'static str = "prefetch_failures";
 
+    /// Counter name: elements fed through the SIMD gather kernel in
+    /// the dense bucket-(b) z branch (0 under the scalar kernel set).
+    pub const KERNEL_GATHER_ELEMS: &'static str = "kern_gather_elems";
+
+    /// Counter name: tokens whose bucket-(b) selection scan ran the
+    /// SIMD `find_first_gt` kernel.
+    pub const KERNEL_SCAN_TOKENS: &'static str = "kern_scan_tokens";
+
+    /// Counter name: Φ nonzeros pushed through the kernel-accelerated
+    /// alias builds (weight gather + rescale + Vose partition).
+    pub const KERNEL_ALIAS_ELEMS: &'static str = "kern_alias_elems";
+
+    /// Counter name: Φ nonzeros normalized through the kernel
+    /// `scale_f64` path when assembling the matrix.
+    pub const KERNEL_PHI_ELEMS: &'static str = "kern_phi_elems";
+
     /// Create with no phases registered.
     pub fn new() -> Self {
         Self::default()

@@ -1,0 +1,187 @@
+//! Vendored CPU-affinity bindings (no crates).
+//!
+//! The pool's NUMA story is *pin + first-touch*: each worker thread is
+//! pinned to one CPU ([`pin_current_thread`]), and the per-slot scratch
+//! it owns is allocated/initialized **on that thread** afterwards, so
+//! Linux's default first-touch page placement lands the pages on the
+//! worker's node. Combined with [`Schedule::SlotAffine`] (shard `i` →
+//! slot `i % slots` every sweep) a slot's working set stays node-local
+//! across iterations. `sched_setaffinity(2)` is declared here directly
+//! against the libc that `std` already links — no `libc` crate.
+//!
+//! Everything degrades gracefully: in containers/sandboxes that deny
+//! `sched_setaffinity` the functions return `Err` (typically `EPERM`)
+//! and callers fall back to unpinned operation; on non-Linux targets
+//! they return [`std::io::ErrorKind::Unsupported`]. Tests skip, not
+//! fail, on either.
+//!
+//! [`Schedule::SlotAffine`]: crate::par::Schedule::SlotAffine
+
+use std::io;
+
+/// Fixed-size CPU mask: 1024 CPUs, matching glibc's `cpu_set_t`.
+pub const CPU_SET_WORDS: usize = 16;
+
+/// A `cpu_set_t`-compatible bitmask (bit `c` of word `c / 64` = CPU c).
+pub type CpuSet = [u64; CPU_SET_WORDS];
+
+#[cfg(target_os = "linux")]
+extern "C" {
+    // glibc/musl wrappers; pid 0 = the calling thread.
+    fn sched_setaffinity(pid: i32, cpusetsize: usize, mask: *const u64) -> i32;
+    fn sched_getaffinity(pid: i32, cpusetsize: usize, mask: *mut u64) -> i32;
+}
+
+/// An empty CPU set.
+pub fn empty_set() -> CpuSet {
+    [0u64; CPU_SET_WORDS]
+}
+
+/// Set bit `cpu` in `set` (ignored beyond the 1024-CPU mask).
+pub fn set_cpu(set: &mut CpuSet, cpu: usize) {
+    if cpu < CPU_SET_WORDS * 64 {
+        set[cpu / 64] |= 1u64 << (cpu % 64);
+    }
+}
+
+/// The CPUs present in `set`, ascending.
+pub fn cpus_in(set: &CpuSet) -> Vec<usize> {
+    let mut out = Vec::new();
+    for (w, &bits) in set.iter().enumerate() {
+        let mut b = bits;
+        while b != 0 {
+            let t = b.trailing_zeros() as usize;
+            out.push(w * 64 + t);
+            b &= b - 1;
+        }
+    }
+    out
+}
+
+/// Restrict the calling thread to the CPUs in `set`.
+#[cfg(target_os = "linux")]
+pub fn set_current_affinity(set: &CpuSet) -> io::Result<()> {
+    // SAFETY: `set` is a valid, live [u64; 16] = 128 bytes, the size we
+    // pass; pid 0 addresses only the calling thread.
+    let rc = unsafe {
+        sched_setaffinity(0, std::mem::size_of::<CpuSet>(), set.as_ptr())
+    };
+    if rc == 0 {
+        Ok(())
+    } else {
+        Err(io::Error::last_os_error())
+    }
+}
+
+#[cfg(not(target_os = "linux"))]
+pub fn set_current_affinity(_set: &CpuSet) -> io::Result<()> {
+    Err(io::Error::new(
+        io::ErrorKind::Unsupported,
+        "sched_setaffinity: not linux",
+    ))
+}
+
+/// The calling thread's current affinity mask.
+#[cfg(target_os = "linux")]
+pub fn current_affinity() -> io::Result<CpuSet> {
+    let mut set = empty_set();
+    // SAFETY: `set` is a valid, writable 128-byte buffer; pid 0
+    // addresses only the calling thread.
+    let rc = unsafe {
+        sched_getaffinity(0, std::mem::size_of::<CpuSet>(), set.as_mut_ptr())
+    };
+    if rc == 0 {
+        Ok(set)
+    } else {
+        Err(io::Error::last_os_error())
+    }
+}
+
+#[cfg(not(target_os = "linux"))]
+pub fn current_affinity() -> io::Result<CpuSet> {
+    Err(io::Error::new(
+        io::ErrorKind::Unsupported,
+        "sched_getaffinity: not linux",
+    ))
+}
+
+/// Pin the calling thread to a single CPU.
+pub fn pin_current_thread(cpu: usize) -> io::Result<()> {
+    let mut set = empty_set();
+    set_cpu(&mut set, cpu);
+    set_current_affinity(&set)
+}
+
+/// The CPUs this process may run on, ascending — the topology the pool
+/// lines its `SlotAffine` slot→CPU map up with. Honors cgroup/taskset
+/// restrictions (it reads the *allowed* mask, not the machine size);
+/// falls back to `0..available_parallelism()` where the syscall is
+/// unavailable.
+pub fn available_cpus() -> Vec<usize> {
+    match current_affinity() {
+        Ok(set) => {
+            let cpus = cpus_in(&set);
+            if !cpus.is_empty() {
+                return cpus;
+            }
+            fallback_cpus()
+        }
+        Err(_) => fallback_cpus(),
+    }
+}
+
+fn fallback_cpus() -> Vec<usize> {
+    let n = std::thread::available_parallelism().map_or(1, |p| p.get());
+    (0..n).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cpu_set_bit_roundtrip() {
+        let mut set = empty_set();
+        for c in [0usize, 1, 63, 64, 65, 127, 1000, 1023] {
+            set_cpu(&mut set, c);
+        }
+        set_cpu(&mut set, 5000); // out of mask range: ignored
+        assert_eq!(cpus_in(&set), vec![0, 1, 63, 64, 65, 127, 1000, 1023]);
+    }
+
+    #[test]
+    fn available_cpus_nonempty_and_sorted() {
+        let cpus = available_cpus();
+        assert!(!cpus.is_empty());
+        assert!(cpus.windows(2).all(|w| w[0] < w[1]));
+    }
+
+    /// Pin to the first allowed CPU and restore. Containers may deny
+    /// `sched_setaffinity` entirely — skip (don't fail) on any error,
+    /// per the graceful-degradation contract.
+    #[test]
+    fn pin_and_restore_smoke() {
+        let baseline = match current_affinity() {
+            Ok(b) => b,
+            Err(e) => {
+                eprintln!("skipping pin smoke test: getaffinity: {e}");
+                return;
+            }
+        };
+        let cpus = cpus_in(&baseline);
+        let target = match cpus.first() {
+            Some(&c) => c,
+            None => return,
+        };
+        match pin_current_thread(target) {
+            Ok(()) => {
+                let now = current_affinity().expect("getaffinity after pin");
+                assert_eq!(cpus_in(&now), vec![target]);
+                set_current_affinity(&baseline).expect("restore affinity");
+            }
+            Err(e) => {
+                eprintln!("skipping pin smoke test: setaffinity denied: {e}");
+            }
+        }
+    }
+}

@@ -22,6 +22,7 @@
 //! can balance by *token count* rather than document count, which is the
 //! load-balancing fix the paper inherits from Magnusson et al. (2018).
 
+pub mod affinity;
 pub mod pool;
 
 pub use pool::{

@@ -1,0 +1,430 @@
+//! Vendored SIMD kernels for the z/Φ/alias hot loops — no crates, just
+//! `core::arch` intrinsics behind a runtime-dispatched function table.
+//!
+//! # The dispatch ladder
+//!
+//! [`Kernels::auto`] resolves, once, to the widest tier the running CPU
+//! supports and the build enables:
+//!
+//! 1. **AVX2** (x86_64, `simd` feature, `avx2` detected at runtime):
+//!    256-bit lanes, hardware gathers for the bucket-(b) dense scan and
+//!    the bucket-(a) `Ψ` weight build.
+//! 2. **SSE2** (x86_64, `simd` feature): 128-bit lanes for the f64
+//!    elementwise/compare kernels; gathers fall back to scalar.
+//! 3. **Scalar** (everything else, and always when the `simd` cargo
+//!    feature is off): plain loops, bit-for-bit the pre-SIMD code.
+//!
+//! The table is a struct of plain `fn` pointers, so call sites pay one
+//! predictable indirect call per *kernel invocation* (amortized over a
+//! whole column/row/table), never per element, and the sampler can
+//! carry a `Kernels` by value ([`Kernels`] is `Copy`).
+//!
+//! # Bit-exactness policy
+//!
+//! Chains must stay reproducible, so every kernel that can influence
+//! the sampler chain is **bit-exact** with respect to its scalar
+//! version:
+//!
+//! * integer and compare kernels ([`Kernels::partition_lt1`],
+//!   [`Kernels::find_first_gt`], [`Kernels::compact_nonzero_u32`])
+//!   evaluate the identical per-element predicate and preserve first
+//!   match/order semantics — results are bit-identical;
+//! * elementwise float kernels ([`Kernels::scale_f64`],
+//!   [`Kernels::gather_mul_u32`], [`Kernels::gather_mul_f64`]) perform
+//!   the same IEEE-754 operation on the same operands per element — no
+//!   reassociation — so they too are bit-identical;
+//! * the one reassociating reduction, [`Kernels::sum_f64`], uses
+//!   multi-lane accumulators and may differ from left-to-right
+//!   summation by ≈ 1 ulp per accumulation step (relative error
+//!   `O(n·ε)`, tiny in practice for the nonnegative weight vectors it
+//!   sees). It is therefore only used where the result cannot change
+//!   the chain: the `total > 0` degeneracy *test* in the alias build
+//!   (nonnegative terms sum to exactly 0.0 in any order, and a positive
+//!   sum stays positive under any reassociation) and bench/diagnostic
+//!   aggregation. Chain-visible totals (e.g. the stored alias mass)
+//!   keep the scalar left-to-right sum.
+//!
+//! Net effect: with the `simd` feature off the binary contains only the
+//! scalar loops (bit-exactness runs); with it on, chains are *still*
+//! bit-identical by construction, and the property tests in this module
+//! enforce it per kernel.
+//!
+//! # Adding a kernel
+//!
+//! 1. Write the scalar version as a plain `fn` here and add a field to
+//!    [`Kernels`] (plus the [`Kernels::scalar`] entry).
+//! 2. Add the x86_64 implementations in `x86.rs`: a private
+//!    `#[target_feature(enable = "...")] unsafe fn` body plus a safe
+//!    wrapper, and register the wrapper in `x86::avx2()` /
+//!    `x86::sse2()` (reuse the scalar `fn` for tiers that lack the
+//!    needed instructions).
+//! 3. State the kernel's exactness class (bit-identical vs documented
+//!    tolerance) in its doc comment, and extend the scalar-vs-auto
+//!    property tests below accordingly.
+
+#[cfg(all(feature = "simd", target_arch = "x86_64"))]
+mod x86;
+
+/// Runtime-dispatched kernel table. Obtain via [`Kernels::scalar`] (the
+/// reference implementations) or [`Kernels::auto`] (the widest
+/// supported tier); see the module docs for the dispatch ladder and the
+/// bit-exactness policy of each field.
+#[derive(Clone, Copy, Debug)]
+pub struct Kernels {
+    name: &'static str,
+    /// Multi-lane f64 reduction: `Σ xs`. The only reassociating kernel
+    /// — see the module's bit-exactness policy for where it may be
+    /// used. Scalar tier is exact left-to-right summation.
+    pub sum_f64: fn(&[f64]) -> f64,
+    /// In-place elementwise scale: `xs[i] *= c`. Bit-identical across
+    /// tiers (same IEEE multiply per element).
+    pub scale_f64: fn(&mut [f64], f64),
+    /// Bucket-(b) dense scan: `out[i] = probs[i] * counts[idx[i]] as
+    /// f64` for `i < idx.len()`, growing `out` as needed (the tail
+    /// beyond `idx.len()` is left stale — callers slice). Bit-identical
+    /// across tiers. Panics if any index is out of range; count values
+    /// must be `< 2^31` (they are per-document token counts).
+    pub gather_mul_u32: fn(&[u32], &[f64], &[u32], &mut Vec<f64>),
+    /// Bucket-(a) weight build: `out[i] = (probs[i] * scale) *
+    /// src[idx[i]]` for `i < idx.len()`, growing `out` as needed (stale
+    /// tail, as above). Bit-identical across tiers. Panics if any index
+    /// is out of range.
+    pub gather_mul_f64: fn(&[u32], &[f64], f64, &[f64], &mut Vec<f64>),
+    /// Vose partition: clears then fills `small`/`large` with the
+    /// indices `i` where `xs[i] < 1.0` / `!(xs[i] < 1.0)`, in order.
+    /// Compare kernel — bit-identical across tiers.
+    pub partition_lt1: fn(&[f64], &mut Vec<u32>, &mut Vec<u32>),
+    /// First index `i` with `xs[i] > t`, or `xs.len()` when none (the
+    /// cumulative-weight search). Compare kernel — bit-identical across
+    /// tiers (NaN compares false, as in the scalar loop).
+    pub find_first_gt: fn(&[f64], f64) -> usize,
+    /// Clears then fills `out` with `(i, xs[i])` for every `xs[i] > 0`,
+    /// in order (the dense Φ-row compaction). Integer kernel —
+    /// bit-identical across tiers.
+    pub compact_nonzero_u32: fn(&[u32], &mut Vec<(u32, u32)>),
+}
+
+impl Kernels {
+    /// The scalar reference tier: plain loops, bit-for-bit the pre-SIMD
+    /// hot-path code. Always available; the tier every other tier is
+    /// tested against.
+    pub const fn scalar() -> Self {
+        Self {
+            name: "scalar",
+            sum_f64: sum_f64_scalar,
+            scale_f64: scale_f64_scalar,
+            gather_mul_u32: gather_mul_u32_scalar,
+            gather_mul_f64: gather_mul_f64_scalar,
+            partition_lt1: partition_lt1_scalar,
+            find_first_gt: find_first_gt_scalar,
+            compact_nonzero_u32: compact_nonzero_u32_scalar,
+        }
+    }
+
+    /// The widest tier this build + CPU supports (see the module docs'
+    /// dispatch ladder). With the `simd` cargo feature off this is
+    /// always [`Kernels::scalar`] — the bit-exactness build.
+    pub fn auto() -> Self {
+        #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+        {
+            if std::arch::is_x86_64_feature_detected!("avx2") {
+                return x86::avx2();
+            }
+            if std::arch::is_x86_64_feature_detected!("sse2") {
+                return x86::sse2();
+            }
+        }
+        Self::scalar()
+    }
+
+    /// Tier name: `"scalar"`, `"sse2"`, or `"avx2"`.
+    pub fn name(&self) -> &'static str {
+        self.name
+    }
+
+    /// True when any non-scalar tier resolved (i.e. SIMD is compiled
+    /// in, enabled, and supported by this CPU).
+    pub fn is_accelerated(&self) -> bool {
+        self.name != "scalar"
+    }
+
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    fn named(name: &'static str) -> Self {
+        Self { name, ..Self::scalar() }
+    }
+}
+
+impl Default for Kernels {
+    fn default() -> Self {
+        Self::scalar()
+    }
+}
+
+/// Grow `out` to at least `n` elements without touching the prefix (new
+/// space is zeroed only once; reuse across calls never re-zeroes the
+/// used length — the kernels overwrite `[..n]` and callers ignore the
+/// stale tail).
+#[inline]
+pub(crate) fn ensure_f64_buf(out: &mut Vec<f64>, n: usize) {
+    if out.len() < n {
+        out.resize(n, 0.0);
+    }
+}
+
+fn sum_f64_scalar(xs: &[f64]) -> f64 {
+    xs.iter().sum()
+}
+
+fn scale_f64_scalar(xs: &mut [f64], c: f64) {
+    for x in xs.iter_mut() {
+        *x *= c;
+    }
+}
+
+fn gather_mul_u32_scalar(idx: &[u32], probs: &[f64], counts: &[u32], out: &mut Vec<f64>) {
+    assert_eq!(idx.len(), probs.len());
+    ensure_f64_buf(out, idx.len());
+    let out = &mut out[..idx.len()];
+    for ((o, &k), &p) in out.iter_mut().zip(idx).zip(probs) {
+        *o = p * counts[k as usize] as f64;
+    }
+}
+
+fn gather_mul_f64_scalar(
+    idx: &[u32],
+    probs: &[f64],
+    scale: f64,
+    src: &[f64],
+    out: &mut Vec<f64>,
+) {
+    assert_eq!(idx.len(), probs.len());
+    ensure_f64_buf(out, idx.len());
+    let out = &mut out[..idx.len()];
+    for ((o, &k), &p) in out.iter_mut().zip(idx).zip(probs) {
+        *o = p * scale * src[k as usize];
+    }
+}
+
+fn partition_lt1_scalar(xs: &[f64], small: &mut Vec<u32>, large: &mut Vec<u32>) {
+    small.clear();
+    large.clear();
+    for (i, &x) in xs.iter().enumerate() {
+        if x < 1.0 {
+            small.push(i as u32);
+        } else {
+            large.push(i as u32);
+        }
+    }
+}
+
+fn find_first_gt_scalar(xs: &[f64], t: f64) -> usize {
+    xs.iter().position(|&x| x > t).unwrap_or(xs.len())
+}
+
+fn compact_nonzero_u32_scalar(xs: &[u32], out: &mut Vec<(u32, u32)>) {
+    out.clear();
+    for (i, &c) in xs.iter().enumerate() {
+        if c > 0 {
+            out.push((i as u32, c));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg64;
+
+    /// Drive every length class a lane loop can mishandle: empty,
+    /// sub-lane, exact multiples of both lane widths, and ragged tails.
+    const LENS: &[usize] = &[0, 1, 2, 3, 4, 5, 7, 8, 9, 15, 16, 17, 31, 64, 100, 257];
+
+    fn rand_f64s(rng: &mut Pcg64, n: usize) -> Vec<f64> {
+        (0..n).map(|_| rng.f64() * 3.0).collect()
+    }
+
+    /// scalar-vs-auto: the reassociating f64 reduction must agree
+    /// within the documented `O(n·ε)` bound (≈ 1 ulp per accumulation
+    /// step); on the scalar tier it is bit-identical by definition.
+    #[test]
+    fn sum_f64_within_documented_tolerance() {
+        let auto = Kernels::auto();
+        let mut rng = Pcg64::new(11);
+        for &n in LENS {
+            let xs = rand_f64s(&mut rng, n);
+            let a = (Kernels::scalar().sum_f64)(&xs);
+            let b = (auto.sum_f64)(&xs);
+            let tol = 2.0 * (n.max(1) as f64) * f64::EPSILON * a.abs().max(1.0);
+            assert!((a - b).abs() <= tol, "n={n}: {a} vs {b} (tol {tol})");
+            if !auto.is_accelerated() {
+                assert_eq!(a.to_bits(), b.to_bits(), "n={n}");
+            }
+        }
+        // All-zero input sums to exactly 0.0 in every tier — the
+        // property the alias degeneracy check relies on.
+        assert_eq!((auto.sum_f64)(&[0.0; 13]).to_bits(), 0.0f64.to_bits());
+        assert_eq!((auto.sum_f64)(&[]).to_bits(), 0.0f64.to_bits());
+    }
+
+    /// scalar-vs-auto: elementwise kernels are bit-identical.
+    #[test]
+    fn scale_f64_bit_identical() {
+        let auto = Kernels::auto();
+        let mut rng = Pcg64::new(12);
+        for &n in LENS {
+            let xs = rand_f64s(&mut rng, n);
+            let c = 0.1 + rng.f64();
+            let mut a = xs.clone();
+            let mut b = xs.clone();
+            (Kernels::scalar().scale_f64)(&mut a, c);
+            (auto.scale_f64)(&mut b, c);
+            let a_bits: Vec<u64> = a.iter().map(|x| x.to_bits()).collect();
+            let b_bits: Vec<u64> = b.iter().map(|x| x.to_bits()).collect();
+            assert_eq!(a_bits, b_bits, "n={n} tier={}", auto.name());
+        }
+    }
+
+    /// scalar-vs-auto: the gather kernels are bit-identical (same IEEE
+    /// multiply per element, gathers change only how operands load).
+    #[test]
+    fn gather_kernels_bit_identical() {
+        let auto = Kernels::auto();
+        let mut rng = Pcg64::new(13);
+        for &n in LENS {
+            let k_max = 40usize;
+            let idx: Vec<u32> = (0..n).map(|_| rng.below(k_max as u64) as u32).collect();
+            let probs = rand_f64s(&mut rng, n);
+            let counts: Vec<u32> =
+                (0..k_max).map(|_| rng.below(1000) as u32).collect();
+            let src = rand_f64s(&mut rng, k_max);
+            let scale = 0.5 + rng.f64();
+
+            let (mut a, mut b) = (vec![7.0; 3], vec![7.0; 3]);
+            (Kernels::scalar().gather_mul_u32)(&idx, &probs, &counts, &mut a);
+            (auto.gather_mul_u32)(&idx, &probs, &counts, &mut b);
+            let a_bits: Vec<u64> = a[..n].iter().map(|x| x.to_bits()).collect();
+            let b_bits: Vec<u64> = b[..n].iter().map(|x| x.to_bits()).collect();
+            assert_eq!(a_bits, b_bits, "gather_mul_u32 n={n}");
+
+            let (mut a, mut b) = (Vec::new(), Vec::new());
+            (Kernels::scalar().gather_mul_f64)(&idx, &probs, scale, &src, &mut a);
+            (auto.gather_mul_f64)(&idx, &probs, scale, &src, &mut b);
+            let a_bits: Vec<u64> = a[..n].iter().map(|x| x.to_bits()).collect();
+            let b_bits: Vec<u64> = b[..n].iter().map(|x| x.to_bits()).collect();
+            assert_eq!(a_bits, b_bits, "gather_mul_f64 n={n}");
+        }
+    }
+
+    /// Reused gather output buffers keep their stale tail (no
+    /// re-zeroing beyond the used length) while the prefix is exact.
+    #[test]
+    fn gather_reuses_buffer_without_rezeroing() {
+        let auto = Kernels::auto();
+        let mut out = vec![0.0; 8];
+        (auto.gather_mul_u32)(&[0, 1], &[2.0, 3.0], &[5, 7], &mut out);
+        assert_eq!(&out[..2], &[10.0, 21.0]);
+        assert_eq!(out.len(), 8, "shrinking would force re-zeroing later");
+        let cap = out.capacity();
+        (auto.gather_mul_u32)(&[1], &[1.0], &[5, 7], &mut out);
+        assert_eq!(out[0], 7.0);
+        assert_eq!(out.capacity(), cap, "reuse must not reallocate");
+    }
+
+    #[test]
+    #[should_panic]
+    fn gather_rejects_out_of_range_index() {
+        let auto = Kernels::auto();
+        let mut out = Vec::new();
+        (auto.gather_mul_u32)(&[3], &[1.0], &[1, 2, 3], &mut out);
+    }
+
+    /// scalar-vs-auto: compare/integer kernels are bit-identical.
+    #[test]
+    fn partition_lt1_bit_identical() {
+        let auto = Kernels::auto();
+        let mut rng = Pcg64::new(14);
+        for &n in LENS {
+            // Cluster around 1.0 so both branches are exercised, and
+            // include the boundary value itself.
+            let mut xs: Vec<f64> = (0..n).map(|_| 0.5 + rng.f64()).collect();
+            if n > 2 {
+                xs[n / 2] = 1.0;
+            }
+            let (mut s1, mut l1) = (vec![9u32], vec![9u32]);
+            let (mut s2, mut l2) = (Vec::new(), Vec::new());
+            (Kernels::scalar().partition_lt1)(&xs, &mut s1, &mut l1);
+            (auto.partition_lt1)(&xs, &mut s2, &mut l2);
+            assert_eq!(s1, s2, "small n={n}");
+            assert_eq!(l1, l2, "large n={n}");
+            assert_eq!(s1.len() + l1.len(), n);
+        }
+    }
+
+    #[test]
+    fn find_first_gt_bit_identical() {
+        let auto = Kernels::auto();
+        let mut rng = Pcg64::new(15);
+        for &n in LENS {
+            // Cumulative (nondecreasing) inputs, like the partials scan.
+            let mut cum = 0.0f64;
+            let xs: Vec<f64> = (0..n)
+                .map(|_| {
+                    cum += rng.f64();
+                    cum
+                })
+                .collect();
+            for trial in 0..20 {
+                let t = match trial {
+                    0 => -1.0,        // first element wins
+                    1 => cum + 1.0,   // no element wins -> len
+                    _ => rng.f64() * cum.max(1.0),
+                };
+                let a = (Kernels::scalar().find_first_gt)(&xs, t);
+                let b = (auto.find_first_gt)(&xs, t);
+                assert_eq!(a, b, "n={n} t={t}");
+                assert!(a <= n);
+            }
+        }
+        // Exact-boundary semantics: strictly greater, not >=.
+        assert_eq!((auto.find_first_gt)(&[1.0, 2.0], 1.0), 1);
+        assert_eq!((auto.find_first_gt)(&[1.0, 2.0], 2.0), 2);
+        // NaN threshold / elements compare false everywhere.
+        assert_eq!((auto.find_first_gt)(&[1.0, 2.0], f64::NAN), 2);
+        assert_eq!((auto.find_first_gt)(&[f64::NAN, 2.0], 1.0), 1);
+    }
+
+    #[test]
+    fn compact_nonzero_bit_identical() {
+        let auto = Kernels::auto();
+        let mut rng = Pcg64::new(16);
+        for &n in LENS {
+            // Mostly zeros, like an integer Φ row.
+            let xs: Vec<u32> = (0..n)
+                .map(|_| if rng.below(4) == 0 { rng.below(50) as u32 + 1 } else { 0 })
+                .collect();
+            let mut a = vec![(1u32, 1u32)];
+            let mut b = Vec::new();
+            (Kernels::scalar().compact_nonzero_u32)(&xs, &mut a);
+            (auto.compact_nonzero_u32)(&xs, &mut b);
+            assert_eq!(a, b, "n={n}");
+            assert!(a.iter().all(|&(i, c)| c > 0 && xs[i as usize] == c));
+        }
+    }
+
+    #[test]
+    fn tier_reporting_is_consistent() {
+        let scalar = Kernels::scalar();
+        assert_eq!(scalar.name(), "scalar");
+        assert!(!scalar.is_accelerated());
+        assert!(!Kernels::default().is_accelerated());
+        let auto = Kernels::auto();
+        if cfg!(not(feature = "simd")) {
+            assert_eq!(
+                auto.name(),
+                "scalar",
+                "simd feature off must resolve to the scalar tier"
+            );
+        }
+        assert_eq!(auto.is_accelerated(), auto.name() != "scalar");
+    }
+}

@@ -1,0 +1,459 @@
+//! x86_64 kernel tiers (AVX2 and SSE2) for the [`super::Kernels`]
+//! table. Compiled only with the `simd` cargo feature on x86_64; the
+//! constructors here are called by [`super::Kernels::auto`] **after**
+//! runtime feature detection, which is what makes the safe wrappers
+//! sound (see the SAFETY notes on each).
+//!
+//! Every `#[target_feature]` body keeps the scalar operation order per
+//! element (see the module bit-exactness policy): lanes change how
+//! operands load and store, never which IEEE operation combines them —
+//! except `sum_f64`, the documented multi-accumulator reduction.
+
+use super::{ensure_f64_buf, Kernels};
+use core::arch::x86_64::*;
+
+/// AVX2 tier. Caller contract: `avx2` was detected at runtime.
+pub(super) fn avx2() -> Kernels {
+    debug_assert!(std::arch::is_x86_64_feature_detected!("avx2"));
+    Kernels {
+        sum_f64: sum_f64_avx2,
+        scale_f64: scale_f64_avx2,
+        gather_mul_u32: gather_mul_u32_avx2,
+        gather_mul_f64: gather_mul_f64_avx2,
+        partition_lt1: partition_lt1_avx2,
+        find_first_gt: find_first_gt_avx2,
+        compact_nonzero_u32: compact_nonzero_u32_avx2,
+        ..Kernels::named("avx2")
+    }
+}
+
+/// SSE2 tier: 128-bit f64 kernels; the gather/compact kernels (which
+/// need AVX2 instructions to beat scalar) stay scalar. Caller contract:
+/// `sse2` was detected at runtime (guaranteed on x86_64, but the ladder
+/// checks anyway).
+pub(super) fn sse2() -> Kernels {
+    debug_assert!(std::arch::is_x86_64_feature_detected!("sse2"));
+    Kernels {
+        sum_f64: sum_f64_sse2,
+        scale_f64: scale_f64_sse2,
+        partition_lt1: partition_lt1_sse2,
+        find_first_gt: find_first_gt_sse2,
+        ..Kernels::named("sse2")
+    }
+}
+
+// ---------------------------------------------------------------- AVX2
+
+fn sum_f64_avx2(xs: &[f64]) -> f64 {
+    // SAFETY: table constructed only after `avx2` runtime detection.
+    unsafe { sum_f64_avx2_impl(xs) }
+}
+
+#[target_feature(enable = "avx2")]
+unsafe fn sum_f64_avx2_impl(xs: &[f64]) -> f64 {
+    let n = xs.len();
+    let p = xs.as_ptr();
+    let mut acc = _mm256_setzero_pd();
+    let mut i = 0usize;
+    while i + 4 <= n {
+        acc = _mm256_add_pd(acc, _mm256_loadu_pd(p.add(i)));
+        i += 4;
+    }
+    let lo = _mm256_castpd256_pd128(acc);
+    let hi = _mm256_extractf128_pd::<1>(acc);
+    let s2 = _mm_add_pd(lo, hi);
+    let s1 = _mm_add_pd(s2, _mm_unpackhi_pd(s2, s2));
+    let mut s = _mm_cvtsd_f64(s1);
+    while i < n {
+        s += *p.add(i);
+        i += 1;
+    }
+    s
+}
+
+fn scale_f64_avx2(xs: &mut [f64], c: f64) {
+    // SAFETY: table constructed only after `avx2` runtime detection.
+    unsafe { scale_f64_avx2_impl(xs, c) }
+}
+
+#[target_feature(enable = "avx2")]
+unsafe fn scale_f64_avx2_impl(xs: &mut [f64], c: f64) {
+    let n = xs.len();
+    let p = xs.as_mut_ptr();
+    let cv = _mm256_set1_pd(c);
+    let mut i = 0usize;
+    while i + 4 <= n {
+        _mm256_storeu_pd(p.add(i), _mm256_mul_pd(_mm256_loadu_pd(p.add(i)), cv));
+        i += 4;
+    }
+    while i < n {
+        *p.add(i) *= c;
+        i += 1;
+    }
+}
+
+/// Max over `idx` (0 for an empty slice) — the one-pass range check
+/// that makes the safe gather wrappers sound.
+#[target_feature(enable = "avx2")]
+unsafe fn max_u32_avx2(idx: &[u32]) -> u32 {
+    let n = idx.len();
+    let p = idx.as_ptr();
+    let mut maxv = _mm256_setzero_si256();
+    let mut i = 0usize;
+    while i + 8 <= n {
+        maxv = _mm256_max_epu32(maxv, _mm256_loadu_si256(p.add(i) as *const __m256i));
+        i += 8;
+    }
+    let mut tmp = [0u32; 8];
+    _mm256_storeu_si256(tmp.as_mut_ptr() as *mut __m256i, maxv);
+    let mut mx = tmp.iter().copied().max().unwrap_or(0);
+    while i < n {
+        mx = mx.max(*p.add(i));
+        i += 1;
+    }
+    mx
+}
+
+fn gather_mul_u32_avx2(idx: &[u32], probs: &[f64], counts: &[u32], out: &mut Vec<f64>) {
+    assert_eq!(idx.len(), probs.len());
+    // i32 gather offsets: the table itself must sit below 2^31 entries.
+    assert!(counts.len() < (1usize << 31));
+    ensure_f64_buf(out, idx.len());
+    // SAFETY: table constructed only after `avx2` runtime detection;
+    // the impl validates every index before gathering.
+    unsafe { gather_mul_u32_avx2_impl(idx, probs, counts, &mut out[..idx.len()]) }
+}
+
+#[target_feature(enable = "avx2")]
+unsafe fn gather_mul_u32_avx2_impl(idx: &[u32], probs: &[f64], counts: &[u32], out: &mut [f64]) {
+    let n = idx.len();
+    if n == 0 {
+        return;
+    }
+    assert!(
+        (max_u32_avx2(idx) as usize) < counts.len(),
+        "gather index out of range"
+    );
+    let ip = idx.as_ptr();
+    let pp = probs.as_ptr();
+    let op = out.as_mut_ptr();
+    let base = counts.as_ptr() as *const i32;
+    let mut i = 0usize;
+    while i + 8 <= n {
+        let iv = _mm256_loadu_si256(ip.add(i) as *const __m256i);
+        // 8 × u32 counts; values are per-document token counts < 2^31,
+        // so the signed i32 → f64 conversion below is exact.
+        let cv = _mm256_i32gather_epi32::<4>(base, iv);
+        let flo = _mm256_cvtepi32_pd(_mm256_castsi256_si128(cv));
+        let fhi = _mm256_cvtepi32_pd(_mm256_extracti128_si256::<1>(cv));
+        let r0 = _mm256_mul_pd(_mm256_loadu_pd(pp.add(i)), flo);
+        let r1 = _mm256_mul_pd(_mm256_loadu_pd(pp.add(i + 4)), fhi);
+        _mm256_storeu_pd(op.add(i), r0);
+        _mm256_storeu_pd(op.add(i + 4), r1);
+        i += 8;
+    }
+    while i < n {
+        let k = *ip.add(i) as usize;
+        *op.add(i) = *pp.add(i) * *counts.get_unchecked(k) as f64;
+        i += 1;
+    }
+}
+
+fn gather_mul_f64_avx2(idx: &[u32], probs: &[f64], scale: f64, src: &[f64], out: &mut Vec<f64>) {
+    assert_eq!(idx.len(), probs.len());
+    assert!(src.len() < (1usize << 31));
+    ensure_f64_buf(out, idx.len());
+    // SAFETY: table constructed only after `avx2` runtime detection;
+    // the impl validates every index before gathering.
+    unsafe { gather_mul_f64_avx2_impl(idx, probs, scale, src, &mut out[..idx.len()]) }
+}
+
+#[target_feature(enable = "avx2")]
+unsafe fn gather_mul_f64_avx2_impl(
+    idx: &[u32],
+    probs: &[f64],
+    scale: f64,
+    src: &[f64],
+    out: &mut [f64],
+) {
+    let n = idx.len();
+    if n == 0 {
+        return;
+    }
+    assert!(
+        (max_u32_avx2(idx) as usize) < src.len(),
+        "gather index out of range"
+    );
+    let ip = idx.as_ptr();
+    let pp = probs.as_ptr();
+    let op = out.as_mut_ptr();
+    let sv = _mm256_set1_pd(scale);
+    let mut i = 0usize;
+    while i + 4 <= n {
+        let iv = _mm_loadu_si128(ip.add(i) as *const __m128i);
+        let g = _mm256_i32gather_pd::<8>(src.as_ptr(), iv);
+        let pv = _mm256_mul_pd(_mm256_loadu_pd(pp.add(i)), sv);
+        _mm256_storeu_pd(op.add(i), _mm256_mul_pd(pv, g));
+        i += 4;
+    }
+    while i < n {
+        let k = *ip.add(i) as usize;
+        *op.add(i) = *pp.add(i) * scale * *src.get_unchecked(k);
+        i += 1;
+    }
+}
+
+fn partition_lt1_avx2(xs: &[f64], small: &mut Vec<u32>, large: &mut Vec<u32>) {
+    small.clear();
+    large.clear();
+    small.reserve(xs.len());
+    large.reserve(xs.len());
+    // SAFETY: table constructed only after `avx2` runtime detection.
+    unsafe { partition_lt1_avx2_impl(xs, small, large) }
+}
+
+#[target_feature(enable = "avx2")]
+unsafe fn partition_lt1_avx2_impl(xs: &[f64], small: &mut Vec<u32>, large: &mut Vec<u32>) {
+    let n = xs.len();
+    let p = xs.as_ptr();
+    let one = _mm256_set1_pd(1.0);
+    let mut i = 0usize;
+    while i + 4 <= n {
+        let m = _mm256_movemask_pd(_mm256_cmp_pd::<_CMP_LT_OQ>(_mm256_loadu_pd(p.add(i)), one))
+            as u32;
+        for j in 0..4u32 {
+            let at = i as u32 + j;
+            if m & (1 << j) != 0 {
+                small.push(at);
+            } else {
+                large.push(at);
+            }
+        }
+        i += 4;
+    }
+    while i < n {
+        if *p.add(i) < 1.0 {
+            small.push(i as u32);
+        } else {
+            large.push(i as u32);
+        }
+        i += 1;
+    }
+}
+
+fn find_first_gt_avx2(xs: &[f64], t: f64) -> usize {
+    // SAFETY: table constructed only after `avx2` runtime detection.
+    unsafe { find_first_gt_avx2_impl(xs, t) }
+}
+
+#[target_feature(enable = "avx2")]
+unsafe fn find_first_gt_avx2_impl(xs: &[f64], t: f64) -> usize {
+    let n = xs.len();
+    let p = xs.as_ptr();
+    let tv = _mm256_set1_pd(t);
+    let mut i = 0usize;
+    while i + 4 <= n {
+        let m = _mm256_movemask_pd(_mm256_cmp_pd::<_CMP_GT_OQ>(_mm256_loadu_pd(p.add(i)), tv));
+        if m != 0 {
+            return i + m.trailing_zeros() as usize;
+        }
+        i += 4;
+    }
+    while i < n {
+        if *p.add(i) > t {
+            return i;
+        }
+        i += 1;
+    }
+    n
+}
+
+fn compact_nonzero_u32_avx2(xs: &[u32], out: &mut Vec<(u32, u32)>) {
+    out.clear();
+    // SAFETY: table constructed only after `avx2` runtime detection.
+    unsafe { compact_nonzero_u32_avx2_impl(xs, out) }
+}
+
+#[target_feature(enable = "avx2")]
+unsafe fn compact_nonzero_u32_avx2_impl(xs: &[u32], out: &mut Vec<(u32, u32)>) {
+    let n = xs.len();
+    let p = xs.as_ptr();
+    let zero = _mm256_setzero_si256();
+    let mut i = 0usize;
+    while i + 8 <= n {
+        let v = _mm256_loadu_si256(p.add(i) as *const __m256i);
+        // movemask bit j = sign bit of lane j of the all-ones compare
+        // result, i.e. "lane j is zero".
+        let zmask = _mm256_movemask_ps(_mm256_castsi256_ps(_mm256_cmpeq_epi32(v, zero))) as u32;
+        let nz = !zmask & 0xff;
+        if nz != 0 {
+            let mut tmp = [0u32; 8];
+            _mm256_storeu_si256(tmp.as_mut_ptr() as *mut __m256i, v);
+            for j in 0..8usize {
+                if nz & (1 << j) != 0 {
+                    out.push(((i + j) as u32, tmp[j]));
+                }
+            }
+        }
+        i += 8;
+    }
+    while i < n {
+        let c = *p.add(i);
+        if c > 0 {
+            out.push((i as u32, c));
+        }
+        i += 1;
+    }
+}
+
+// ---------------------------------------------------------------- SSE2
+
+fn sum_f64_sse2(xs: &[f64]) -> f64 {
+    // SAFETY: table constructed only after `sse2` runtime detection.
+    unsafe { sum_f64_sse2_impl(xs) }
+}
+
+#[target_feature(enable = "sse2")]
+unsafe fn sum_f64_sse2_impl(xs: &[f64]) -> f64 {
+    let n = xs.len();
+    let p = xs.as_ptr();
+    let mut acc = _mm_setzero_pd();
+    let mut i = 0usize;
+    while i + 2 <= n {
+        acc = _mm_add_pd(acc, _mm_loadu_pd(p.add(i)));
+        i += 2;
+    }
+    let s1 = _mm_add_pd(acc, _mm_unpackhi_pd(acc, acc));
+    let mut s = _mm_cvtsd_f64(s1);
+    while i < n {
+        s += *p.add(i);
+        i += 1;
+    }
+    s
+}
+
+fn scale_f64_sse2(xs: &mut [f64], c: f64) {
+    // SAFETY: table constructed only after `sse2` runtime detection.
+    unsafe { scale_f64_sse2_impl(xs, c) }
+}
+
+#[target_feature(enable = "sse2")]
+unsafe fn scale_f64_sse2_impl(xs: &mut [f64], c: f64) {
+    let n = xs.len();
+    let p = xs.as_mut_ptr();
+    let cv = _mm_set1_pd(c);
+    let mut i = 0usize;
+    while i + 2 <= n {
+        _mm_storeu_pd(p.add(i), _mm_mul_pd(_mm_loadu_pd(p.add(i)), cv));
+        i += 2;
+    }
+    while i < n {
+        *p.add(i) *= c;
+        i += 1;
+    }
+}
+
+fn partition_lt1_sse2(xs: &[f64], small: &mut Vec<u32>, large: &mut Vec<u32>) {
+    small.clear();
+    large.clear();
+    small.reserve(xs.len());
+    large.reserve(xs.len());
+    // SAFETY: table constructed only after `sse2` runtime detection.
+    unsafe { partition_lt1_sse2_impl(xs, small, large) }
+}
+
+#[target_feature(enable = "sse2")]
+unsafe fn partition_lt1_sse2_impl(xs: &[f64], small: &mut Vec<u32>, large: &mut Vec<u32>) {
+    let n = xs.len();
+    let p = xs.as_ptr();
+    let one = _mm_set1_pd(1.0);
+    let mut i = 0usize;
+    while i + 2 <= n {
+        let m = _mm_movemask_pd(_mm_cmplt_pd(_mm_loadu_pd(p.add(i)), one)) as u32;
+        for j in 0..2u32 {
+            let at = i as u32 + j;
+            if m & (1 << j) != 0 {
+                small.push(at);
+            } else {
+                large.push(at);
+            }
+        }
+        i += 2;
+    }
+    while i < n {
+        if *p.add(i) < 1.0 {
+            small.push(i as u32);
+        } else {
+            large.push(i as u32);
+        }
+        i += 1;
+    }
+}
+
+fn find_first_gt_sse2(xs: &[f64], t: f64) -> usize {
+    // SAFETY: table constructed only after `sse2` runtime detection.
+    unsafe { find_first_gt_sse2_impl(xs, t) }
+}
+
+#[target_feature(enable = "sse2")]
+unsafe fn find_first_gt_sse2_impl(xs: &[f64], t: f64) -> usize {
+    let n = xs.len();
+    let p = xs.as_ptr();
+    let tv = _mm_set1_pd(t);
+    let mut i = 0usize;
+    while i + 2 <= n {
+        let m = _mm_movemask_pd(_mm_cmpgt_pd(_mm_loadu_pd(p.add(i)), tv));
+        if m != 0 {
+            return i + m.trailing_zeros() as usize;
+        }
+        i += 2;
+    }
+    while i < n {
+        if *p.add(i) > t {
+            return i;
+        }
+        i += 1;
+    }
+    n
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Every tier this CPU supports must agree bit-for-bit with scalar
+    /// on the compare/elementwise kernels (the module-level tests cover
+    /// `auto()`; this pins the tiers individually, so an AVX2 machine
+    /// still exercises the SSE2 code).
+    #[test]
+    fn each_supported_tier_matches_scalar() {
+        let mut tiers = Vec::new();
+        if std::arch::is_x86_64_feature_detected!("avx2") {
+            tiers.push(avx2());
+        }
+        if std::arch::is_x86_64_feature_detected!("sse2") {
+            tiers.push(sse2());
+        }
+        let scalar = Kernels::scalar();
+        let xs: Vec<f64> = (0..37).map(|i| 0.03 * i as f64).collect();
+        for tier in tiers {
+            for t in [-1.0, 0.0, 0.5, 0.09, 1.07, 100.0] {
+                assert_eq!(
+                    (tier.find_first_gt)(&xs, t),
+                    (scalar.find_first_gt)(&xs, t),
+                    "tier={} t={t}",
+                    tier.name()
+                );
+            }
+            let (mut s1, mut l1) = (Vec::new(), Vec::new());
+            let (mut s2, mut l2) = (Vec::new(), Vec::new());
+            (scalar.partition_lt1)(&xs, &mut s1, &mut l1);
+            (tier.partition_lt1)(&xs, &mut s2, &mut l2);
+            assert_eq!((s1, l1), (s2, l2), "tier={}", tier.name());
+            let (mut a, mut b) = (xs.clone(), xs.clone());
+            (scalar.scale_f64)(&mut a, 1.7);
+            (tier.scale_f64)(&mut b, 1.7);
+            assert_eq!(a, b, "tier={}", tier.name());
+        }
+    }
+}

@@ -12,6 +12,8 @@
 //!   needs `φ_{k,v}` for the topics in `m_d` (binary search in the
 //!   column) or a merge over the column, whichever side is sparser.
 
+use crate::simd::Kernels;
+
 /// Sparse `K × V` probability matrix with row and column views.
 #[derive(Clone, Debug)]
 pub struct PhiMatrix {
@@ -31,10 +33,23 @@ impl PhiMatrix {
     /// `count / row_sum`. Rows with zero total stay empty (a dead topic
     /// has no word distribution — callers must not score against it).
     pub fn from_count_rows(vocab: usize, count_rows: &[Vec<(u32, u32)>]) -> Self {
+        Self::from_count_rows_with(vocab, count_rows, &Kernels::scalar())
+    }
+
+    /// [`PhiMatrix::from_count_rows`] with an explicit kernel set: the
+    /// row normalization (`count * (1/total)` per nonzero) runs through
+    /// `kernels.scale_f64` — the same elementwise multiply, so the
+    /// matrix is bit-identical across tiers.
+    pub fn from_count_rows_with(
+        vocab: usize,
+        count_rows: &[Vec<(u32, u32)>],
+        kernels: &Kernels,
+    ) -> Self {
         let num_topics = count_rows.len();
         let mut rows: Vec<Vec<(u32, f64)>> = Vec::with_capacity(num_topics);
         let mut col_counts = vec![0usize; vocab + 1];
         let mut nnz = 0usize;
+        let mut vals: Vec<f64> = Vec::new();
         for row in count_rows {
             let total: u64 = row.iter().map(|&(_, c)| c as u64).sum();
             if total == 0 {
@@ -42,8 +57,14 @@ impl PhiMatrix {
                 continue;
             }
             let inv = 1.0 / total as f64;
-            let prow: Vec<(u32, f64)> =
-                row.iter().map(|&(v, c)| (v, c as f64 * inv)).collect();
+            vals.clear();
+            vals.extend(row.iter().map(|&(_, c)| c as f64));
+            (kernels.scale_f64)(&mut vals, inv);
+            let prow: Vec<(u32, f64)> = row
+                .iter()
+                .zip(&vals)
+                .map(|(&(v, _), &p)| (v, p))
+                .collect();
             for &(v, _) in &prow {
                 debug_assert!((v as usize) < vocab);
                 col_counts[v as usize + 1] += 1;
@@ -233,5 +254,31 @@ mod tests {
         assert_eq!(phi.nnz(), 4);
         assert_eq!(phi.num_topics(), 3);
         assert_eq!(phi.vocab(), 5);
+    }
+
+    /// Kernel-built normalization must be bit-identical to scalar,
+    /// whatever tier `auto()` resolves to.
+    #[test]
+    fn kernel_built_matrix_is_bit_identical() {
+        let rows: Vec<Vec<(u32, u32)>> = (0..9)
+            .map(|k| {
+                (0..(k * 3 + 1) as u32)
+                    .map(|v| (v * 2, (v * 7 + k as u32) % 13))
+                    .collect()
+            })
+            .collect();
+        let a = PhiMatrix::from_count_rows(64, &rows);
+        let b = PhiMatrix::from_count_rows_with(64, &rows, &Kernels::auto());
+        assert_eq!(a.col_ptr, b.col_ptr);
+        assert_eq!(a.col_topics, b.col_topics);
+        let bits = |xs: &[f64]| xs.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+        assert_eq!(bits(&a.col_probs), bits(&b.col_probs));
+        for k in 0..a.num_topics() {
+            assert_eq!(a.row(k).len(), b.row(k).len());
+            for (x, y) in a.row(k).iter().zip(b.row(k)) {
+                assert_eq!(x.0, y.0);
+                assert_eq!(x.1.to_bits(), y.1.to_bits());
+            }
+        }
     }
 }

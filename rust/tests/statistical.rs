@@ -87,6 +87,12 @@ fn pc_and_exact_agree_across_seeds() {
 /// more than the blocks-in-flight bound of hot z. With prefetch on,
 /// every block of every sweep must be accounted exactly once in the
 /// `prefetch_hits`/`prefetch_stalls` counters.
+///
+/// The SIMD-kernel and core-pinning axes ride along: the vectorized
+/// kernels are element-exact against the scalar path and pinning only
+/// moves threads, so simd {off, on} × pinning {off, on} must also
+/// leave the chain bit-identical (exercised on representative cells;
+/// the full blocks matrix stays on the scalar unpinned path).
 #[test]
 fn streamed_and_resident_chains_are_bit_identical() {
     let (c, _) = HdpCorpusSpec {
@@ -114,9 +120,14 @@ fn streamed_and_resident_chains_are_bit_identical() {
         Stream { docs: usize, prefetch: bool },
     }
 
-    let run = |threads: usize, pipelined: bool, blocks: Blocks| {
+    let run = |threads: usize, pipelined: bool, blocks: Blocks, simd: bool, pin: bool| {
         let mut s = PcSampler::new(c.clone(), cfg, threads, 616).unwrap();
         s.set_pipelined(pipelined);
+        s.set_simd(simd);
+        // Best-effort: degrades to unpinned when the kernel denies
+        // affinity (EPERM under some sandboxes) — chain is unaffected
+        // either way, which is exactly what this test certifies.
+        let _ = s.set_pinning(pin);
         // A token-weighted plan gives uneven shards, hence uneven
         // blocks after refinement.
         s.set_doc_plan(Sharding::weighted(&c.doc_weights(), threads));
@@ -162,10 +173,12 @@ fn streamed_and_resident_chains_are_bit_identical() {
         } else {
             assert_eq!(hot, 0, "resident sweep must not touch block buffers");
         }
-        (s.assignments().to_vec(), s.l().to_vec(), s.psi().to_vec())
+        let out = (s.assignments().to_vec(), s.l().to_vec(), s.psi().to_vec());
+        s.set_pinning(false);
+        out
     };
 
-    let (z_ref, l_ref, psi_ref) = run(1, false, Blocks::Resident);
+    let (z_ref, l_ref, psi_ref) = run(1, false, Blocks::Resident, false, false);
     for &threads in &[1usize, 2, 7] {
         for &pipelined in &[false, true] {
             for &blocks in &[
@@ -180,8 +193,27 @@ fn streamed_and_resident_chains_are_bit_identical() {
                 Blocks::Stream { docs: usize::MAX, prefetch: false },
                 Blocks::Stream { docs: usize::MAX, prefetch: true },
             ] {
-                let (z, l, psi) = run(threads, pipelined, blocks);
+                let (z, l, psi) = run(threads, pipelined, blocks, false, false);
                 let tag = format!("threads={threads} pipelined={pipelined} blocks={blocks:?}");
+                assert_eq!(z, z_ref, "z diverged: {tag}");
+                assert_eq!(l, l_ref, "l diverged: {tag}");
+                assert_eq!(psi, psi_ref, "psi diverged: {tag}");
+            }
+        }
+    }
+
+    // simd × pinning cells on a pooled pipelined sampler, resident and
+    // streamed+prefetched. (With the crate built without the `simd`
+    // feature the on-cells dispatch to scalar and this degenerates to a
+    // re-run of the baseline — still a valid, if weaker, check.)
+    for &simd in &[false, true] {
+        for &pin in &[false, true] {
+            for &blocks in &[
+                Blocks::Resident,
+                Blocks::Stream { docs: 5, prefetch: true },
+            ] {
+                let (z, l, psi) = run(2, true, blocks, simd, pin);
+                let tag = format!("simd={simd} pin={pin} blocks={blocks:?}");
                 assert_eq!(z, z_ref, "z diverged: {tag}");
                 assert_eq!(l, l_ref, "l diverged: {tag}");
                 assert_eq!(psi, psi_ref, "psi diverged: {tag}");

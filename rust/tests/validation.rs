@@ -163,6 +163,7 @@ fn z_draw_chi2_vs_dense_enumeration() {
             k_max: 8,
             seed_root: &root,
             iteration: 1,
+            kernels: Default::default(),
         };
         let mut z = vec![vec![1u32, 3, 5]];
         let mut m: Vec<DocTopics> = vec![z[0].iter().copied().collect()];
