@@ -113,6 +113,7 @@ fn main() {
             kernels: Default::default(),
             seed_root: &root,
             iteration: scoped.iter,
+            ppu: None,
         };
         let results = sweep.run(&corpus.docs, &mut scoped.z, &mut scoped.m, &plan);
         let mut accs = Vec::with_capacity(results.len());
@@ -150,6 +151,7 @@ fn main() {
             kernels: Default::default(),
             seed_root: &root,
             iteration: pooled.iter,
+            ppu: None,
         };
         sweep.run_with_scratch(
             &corpus.docs,

@@ -90,6 +90,7 @@ fn main() {
             kernels: Default::default(),
             seed_root: &root,
             iteration: iter.get(),
+            ppu: None,
         }
     };
 

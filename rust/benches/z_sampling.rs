@@ -84,6 +84,51 @@ fn main() {
     counters.push(("speedup_simd_pin_vs_scalar".into(), base / best));
     println!("  simd+pin speedup over scalar unpinned at t{threads}: {:.2}x", base / best);
 
+    // Pólya-urn MH fast path vs the exact kernel at the same thread
+    // count, scalar and SIMD tiers. The PPU chain is a different
+    // (approximate) kernel, so it warms its own sampler; the exact
+    // reference is the scalar unpinned matrix cell above. Per-phase
+    // seconds ride along in the JSON so the z-only comparison is
+    // recoverable next to the whole-iteration tokens/s columns.
+    for simd in [false, true] {
+        let cell = format!("pc_t{threads}_ppu_simd_{}", if simd { "on" } else { "off" });
+        let mut s = PcSampler::new(corpus.clone(), common::paper_cfg(500), threads, 1).unwrap();
+        s.set_ppu(true);
+        s.set_simd(simd);
+        for _ in 0..10 {
+            s.step().unwrap();
+        }
+        let steps0 = s.iterations_done();
+        s.timers = PhaseTimers::new();
+        bench.run(&cell, Some(tokens), || s.step().unwrap());
+        let steps = (s.iterations_done() - steps0) as f64;
+        counters.push((format!("{cell}/steps"), steps));
+        let swept = s.timers.counter("ppu_tokens") as f64;
+        counters.push((format!("{cell}/counter/ppu_tokens"), swept));
+        counters.push((
+            format!("{cell}/ppu_doc_accept_rate"),
+            s.timers.counter("ppu_doc_accepts") as f64 / swept.max(1.0),
+        ));
+        counters.push((
+            format!("{cell}/ppu_word_accept_rate"),
+            s.timers.counter("ppu_word_accepts") as f64 / swept.max(1.0),
+        ));
+        for (phase, secs, _) in s.timers.rows() {
+            counters.push((format!("{cell}/phase_s/{phase}"), secs));
+        }
+    }
+    let exact_s = median(bench.results(), &format!("pc_t{threads}_simd_off_pin_off"));
+    let ppu_s = median(bench.results(), &format!("pc_t{threads}_ppu_simd_off"));
+    counters.push(("exact_tokens_per_s".into(), tokens / exact_s));
+    counters.push(("ppu_tokens_per_s".into(), tokens / ppu_s));
+    counters.push(("speedup_ppu_vs_exact".into(), exact_s / ppu_s));
+    println!(
+        "  iteration tokens/s at t{threads}: exact {:.0}, ppu {:.0} ({:.2}x)",
+        tokens / exact_s,
+        tokens / ppu_s,
+        exact_s / ppu_s
+    );
+
     // Dense oracle at matched truncation on a slice of the corpus
     // (dense is O(N·K*); run it on a 10% subsample and scale).
     let sub = std::sync::Arc::new(hdp_sparse::corpus::Corpus {

@@ -171,7 +171,14 @@ pub fn document_completion<C: DocAccess + ?Sized>(
         score_completion(held, phi, psi, alpha, &m, denom, &mut acc);
     }
     HeldoutResult {
-        perplexity: (-acc.log_p / acc.scored.max(1) as f64).exp(),
+        // Zero scored tokens (empty doc set / all docs too short) has
+        // no defined perplexity: NaN, not a silently "perfect"
+        // exp(0) = 1.0. Callers report "no tokens" on a NaN.
+        perplexity: if acc.scored == 0 {
+            f64::NAN
+        } else {
+            (-acc.log_p / acc.scored as f64).exp()
+        },
         tokens: acc.scored,
         skipped: acc.skipped,
     }
@@ -232,6 +239,26 @@ mod tests {
         assert_eq!(a.perplexity.to_bits(), b.perplexity.to_bits());
         assert_eq!(a.tokens, b.tokens);
         assert_eq!(a.skipped, b.skipped);
+    }
+
+    #[test]
+    fn empty_heldout_set_scores_nan_not_one() {
+        // Regression: an empty doc-id list, or one whose documents are
+        // all too short to split (< 2 tokens), scores zero tokens —
+        // the perplexity must be NaN, never the silently "perfect"
+        // exp(0) = 1.0 the old `max(1)` denominator produced.
+        let phi = PhiMatrix::from_count_rows(4, &[vec![(0u32, 3u32), (2, 1)]]);
+        let psi = [1.0f64];
+        let c = crate::corpus::Corpus {
+            docs: vec![vec![0u32], vec![], vec![1]],
+            vocab: (0..4).map(|v| format!("w{v}")).collect(),
+        };
+        for ids in [&[][..], &[0usize, 1, 2][..]] {
+            let r = document_completion(&c, ids, &phi, &psi, 0.5, 3, 42);
+            assert!(r.perplexity.is_nan(), "ids {ids:?}: {}", r.perplexity);
+            assert_eq!(r.tokens, 0);
+            assert_eq!(r.skipped, 0);
+        }
     }
 
     #[test]

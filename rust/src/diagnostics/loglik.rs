@@ -132,6 +132,10 @@ pub fn dense_phi_loglik(n: &[Vec<f64>], phi: &[Vec<f64>]) -> f64 {
 
 /// Per-document held-out perplexity given point estimates `Φ̂`, `θ̂`
 /// (used by the eval examples): `exp(−Σ log p(w) / N)`.
+///
+/// An empty held-out set (`N = 0`) has no defined perplexity and
+/// returns `f64::NAN` — never a silently "perfect" `exp(0) = 1.0`.
+/// Callers should report "no tokens" on a NaN.
 pub fn perplexity(docs: &[Vec<u32>], phi: &[Vec<f64>], theta: &[Vec<f64>]) -> f64 {
     let mut ll = 0.0f64;
     let mut n = 0u64;
@@ -145,7 +149,10 @@ pub fn perplexity(docs: &[Vec<u32>], phi: &[Vec<f64>], theta: &[Vec<f64>]) -> f6
             n += 1;
         }
     }
-    (-ll / n.max(1) as f64).exp()
+    if n == 0 {
+        return f64::NAN;
+    }
+    (-ll / n as f64).exp()
 }
 
 #[cfg(test)]
@@ -253,5 +260,17 @@ mod tests {
         let theta = vec![vec![0.5, 0.5]];
         let p = perplexity(&docs, &phi, &theta);
         assert!((p - 4.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn perplexity_of_empty_heldout_set_is_nan() {
+        // Regression: zero scored tokens used to yield exp(-0/1) = 1.0
+        // — a silently "perfect" score for an empty evaluation. It must
+        // be NaN (undefined), for no documents and for all-empty docs.
+        let phi = vec![vec![0.25; 4]; 2];
+        assert!(perplexity(&[], &phi, &[]).is_nan());
+        let docs = vec![Vec::new(), Vec::new()];
+        let theta = vec![vec![0.5, 0.5]; 2];
+        assert!(perplexity(&docs, &phi, &theta).is_nan());
     }
 }

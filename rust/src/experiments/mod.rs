@@ -103,6 +103,7 @@ pub fn cmd_train(args: &Args) -> anyhow::Result<()> {
     let resume = args.flag("resume");
     let save_path = args.value("save").map(PathBuf::from);
     let heldout_frac: f64 = args.get_or("heldout", 0.0)?;
+    let ppu = args.flag("ppu");
     args.finish()?;
     anyhow::ensure!(
         (0.0..0.9).contains(&heldout_frac),
@@ -143,6 +144,13 @@ pub fn cmd_train(args: &Args) -> anyhow::Result<()> {
     } else {
         make_sampler(&sampler, corpus.clone(), cfg, run.threads, run.seed)?
     };
+    if ppu {
+        anyhow::ensure!(
+            t.try_set_ppu(true),
+            "--ppu: sampler `{sampler}` does not support the Pólya-urn z sweep"
+        );
+        println!("Pólya-urn z sweep engaged (approximate fast path)");
+    }
     let tag = format!("train_{corpus_name}_{sampler}");
     let mut trace = TraceWriter::to_file(&out_dir.join(format!("{tag}.csv")))?;
     let opts = LoopOptions {
@@ -204,13 +212,24 @@ pub fn cmd_train(args: &Args) -> anyhow::Result<()> {
         let r = heldout::document_completion(
             corpus, &test, &phi, &psi, cfg.alpha, 5, run.seed,
         );
-        println!(
-            "held-out doc-completion perplexity ({} docs, {} tokens, {} skipped): {:.1}",
-            test.len(),
-            r.tokens,
-            r.skipped,
-            r.perplexity
-        );
+        if r.perplexity.is_nan() {
+            // Zero scored tokens: no perplexity exists (see
+            // `document_completion`) — say so instead of printing a
+            // fake perfect score.
+            println!(
+                "held-out doc-completion: no tokens scored ({} docs, {} skipped) — perplexity undefined",
+                test.len(),
+                r.skipped,
+            );
+        } else {
+            println!(
+                "held-out doc-completion perplexity ({} docs, {} tokens, {} skipped): {:.1}",
+                test.len(),
+                r.tokens,
+                r.skipped,
+                r.perplexity
+            );
+        }
     }
     Ok(())
 }

@@ -71,6 +71,16 @@ pub trait Trainer {
     /// Iterations completed so far.
     fn iterations_done(&self) -> usize;
 
+    /// Request the Pólya-urn MH z-sweep fast path (see
+    /// [`pc::zstep`]'s module docs). Returns `true` when the sampler
+    /// supports and applied the request; the default implementation
+    /// declines (`false`) so callers (e.g. `repro train --ppu`) can
+    /// report an unsupported sampler instead of silently running the
+    /// exact kernel.
+    fn try_set_ppu(&mut self, _on: bool) -> bool {
+        false
+    }
+
     /// Snapshot the current state as a durable
     /// [`checkpoint::Checkpoint`] (save with
     /// [`checkpoint::Checkpoint::save`] — atomic and checksummed).

@@ -130,6 +130,9 @@ pub struct PcSampler {
     /// Whether worker core pinning is engaged (resolved, not
     /// requested: false when the OS denied `sched_setaffinity`).
     pinning: bool,
+    /// Run the z sweep with the Pólya-urn MH fast path instead of the
+    /// exact doubly-sparse kernel (see [`zstep`]'s module docs).
+    ppu: bool,
 }
 
 impl PcSampler {
@@ -217,6 +220,7 @@ impl PcSampler {
             phi_pipe: phi::PhiPipeline::new(0x0f1),
             kernels: Kernels::scalar(),
             pinning: false,
+            ppu: false,
         })
     }
 
@@ -348,6 +352,22 @@ impl PcSampler {
         self.pinning
     }
 
+    /// Enable/disable the Pólya-urn MH z sweep (default off — the
+    /// exact doubly-sparse kernel). The PPU chain targets the same
+    /// conditionals but takes a different (still valid, still
+    /// deterministic-per-seed) trajectory, so flipping this changes
+    /// the chain — unlike every other knob on this sampler it is
+    /// **not** bit-identical to the default. See [`zstep`]'s module
+    /// docs for the approximation and its validation.
+    pub fn set_ppu(&mut self, on: bool) {
+        self.ppu = on;
+    }
+
+    /// Whether the Pólya-urn fast path is engaged.
+    pub fn ppu(&self) -> bool {
+        self.ppu
+    }
+
     /// Reallocate the per-slot z scratch inside a slot-affine pool job
     /// so each slot's buffers are first-touched (and their pages
     /// placed) on the worker that will use them every sweep.
@@ -465,6 +485,11 @@ impl Trainer for PcSampler {
         "pc-hdp"
     }
 
+    fn try_set_ppu(&mut self, on: bool) -> bool {
+        self.set_ppu(on);
+        true
+    }
+
     fn step(&mut self) -> anyhow::Result<()> {
         use std::time::Instant;
         let step_t0 = Instant::now();
@@ -507,7 +532,13 @@ impl Trainer for PcSampler {
             self.timers.incr(PhaseTimers::KERNEL_PHI_ELEMS, phi.nnz() as u64);
         }
         // 3. z sweep, parallel over document shards, accumulating into
-        // the persistent per-slot scratch.
+        // the persistent per-slot scratch. PPU mode additionally needs
+        // the dense Ψ alias for the doc proposal's global side — built
+        // inline (O(k_max), trivially cheap next to the sweep; keeping
+        // it off the pool preserves the per-iteration job accounting).
+        let psi_alias = self
+            .ppu
+            .then(|| crate::alias::AliasTable::new_with(&self.psi, &self.kernels));
         let sweep = zstep::ZSweep {
             phi: &phi,
             psi: &self.psi,
@@ -517,6 +548,7 @@ impl Trainer for PcSampler {
             seed_root: &root,
             iteration: iter,
             kernels: self.kernels,
+            ppu: psi_alias.as_ref(),
         };
         let schedule =
             if self.slot_affine { Schedule::SlotAffine } else { Schedule::Steal };
@@ -566,6 +598,7 @@ impl Trainer for PcSampler {
         self.sparse_work = 0;
         let (mut pf_hits, mut pf_stalls, mut pf_failures) = (0u64, 0u64, 0u64);
         let (mut kern_gather, mut kern_scan) = (0u64, 0u64);
+        let (mut ppu_tokens, mut ppu_doc, mut ppu_word) = (0u64, 0u64, 0u64);
         for s in &self.scratch {
             self.zero_mass_tokens += s.out.zero_mass_tokens;
             self.flag_tokens += s.out.flag_tokens;
@@ -575,6 +608,14 @@ impl Trainer for PcSampler {
             pf_failures += s.out.prefetch_failures;
             kern_gather += s.out.kern_gather_elems;
             kern_scan += s.out.kern_scan_tokens;
+            ppu_tokens += s.out.ppu_tokens;
+            ppu_doc += s.out.ppu_doc_accepts;
+            ppu_word += s.out.ppu_word_accepts;
+        }
+        if ppu_tokens > 0 {
+            self.timers.incr(PhaseTimers::PPU_TOKENS, ppu_tokens);
+            self.timers.incr(PhaseTimers::PPU_DOC_ACCEPTS, ppu_doc);
+            self.timers.incr(PhaseTimers::PPU_WORD_ACCEPTS, ppu_word);
         }
         if pf_hits + pf_stalls > 0 {
             self.timers.incr(PhaseTimers::PREFETCH_HITS, pf_hits);

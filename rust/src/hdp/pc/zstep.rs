@@ -15,6 +15,48 @@
 //! alias tables are exact and documents are embarrassingly parallel.
 //! Each document owns an RNG stream keyed by (iteration, doc id): the
 //! chain is bit-identical under any shard layout or thread count.
+//!
+//! # Pólya-urn approximate fast path (`ZSweep::ppu`)
+//!
+//! Opt-in alternative z kernel (Terenin, Magnusson, Jonsson & Draper,
+//! *Pólya Urn LDA*): instead of materializing the exact per-token
+//! bucket-(b) partial sums, each token takes two
+//! Metropolis–Hastings sub-steps with cheap *cycled proposals* against
+//! the same target `π(k) ∝ φ_{k,v}·(α·Ψ_k + m^{-i}_{d,k})`:
+//!
+//! * **doc proposal** `q_d(k) ∝ m_{d,k} + α·Ψ_k` — drawn in O(1) by
+//!   the Pólya-urn trick: with probability `len_d / (len_d + α·|Ψ|)`
+//!   read the assignment of a uniformly random token of the document
+//!   (the document's own z vector *is* the urn — no per-doc table
+//!   build), else draw from a per-iteration dense `Ψ` alias table;
+//! * **word proposal** `q_w(k) ∝ φ_{k,v}·α·Ψ_k` — the existing
+//!   bucket-(a) per-word alias table, also O(1). Topic birth flows
+//!   through this proposal (the β-noise support of the sampled `Φ`).
+//!
+//! Each proposal is accepted with the standard MH ratio
+//! `min(1, π(k')q(k)/π(k)q(k'))`, so the sweep is a *valid* MCMC
+//! kernel for the *exact* conditional — the approximation is in
+//! mixing (a token may keep a stale topic for an iteration), not in
+//! the stationary distribution. Per-token cost drops from
+//! `O(min(K^m_d, K^Φ_v))` to O(1) draws plus at most two binary
+//! searches for `φ` lookups.
+//!
+//! **Deviation from the exact sweep:** the drawn topics differ
+//! per-token (different RNG consumption, MH rejections), so a PPU
+//! chain is *not* bit-comparable to the exact chain. It is still
+//! fully deterministic for a fixed seed — all randomness flows
+//! through the same per-(iteration, doc) streams — so PPU chains are
+//! bit-identical across thread counts, schedules, streaming,
+//! prefetch, pipelining, and SIMD tiers, exactly like exact chains.
+//!
+//! **Validation:** `tests/statistical.rs` holds PPU to the exact
+//! chain's stationary behaviour — joint log-likelihood and active
+//! topic counts within tolerance across seeds, held-out
+//! document-completion perplexity within a relative band, and pooled
+//! χ²/L1 agreement of the recovered topic-size profiles — plus the
+//! bit-identity invariance matrix *within* the PPU chain. The
+//! speed side is the exact-vs-PPU tokens/sec columns in
+//! `benches/z_sampling.rs` (`BENCH_z_sampling.json`).
 
 use crate::alias::SparseAlias;
 use crate::corpus::io::{PackedCorpusFile, PositionedFile};
@@ -182,10 +224,21 @@ impl WordTables {
         self.masses[v as usize]
     }
 
-    /// Draw a topic from bucket (a) for word `v`.
+    /// Draw a topic from bucket (a) for word `v`, or `None` when the
+    /// word's column is empty / zero-mass (vocabulary id never observed
+    /// under this `Φ`, or all its support topics have `Ψ_k = 0`).
+    ///
+    /// Callers on the z hot path and the serving fold-in reach this
+    /// through a float edge: with `q_a = 0` and `s_b > 0`,
+    /// `rng.f64() * s_b` can round up to exactly `s_b`, sending the
+    /// draw to bucket (a) even though it has no mass. A zero-mass
+    /// column must yield a *defined* fallback (the last bucket-(b)
+    /// partial / the old assignment), never a panic — a serving
+    /// request hitting an unseen vocabulary id must not take down a
+    /// pool slot.
     #[inline]
-    pub fn sample(&self, v: u32, rng: &mut Pcg64) -> u32 {
-        self.tables[v as usize].as_ref().expect("empty column").sample(rng)
+    pub fn try_sample(&self, v: u32, rng: &mut Pcg64) -> Option<u32> {
+        self.tables[v as usize].as_ref().map(|t| t.sample(rng))
     }
 }
 
@@ -220,6 +273,13 @@ pub struct ZShardResult {
     /// Tokens whose bucket-(b) selection scan used the SIMD
     /// `find_first_gt` kernel (0 under the scalar kernel set).
     pub kern_scan_tokens: u64,
+    /// Tokens resampled by the Pólya-urn MH fast path (0 for exact
+    /// sweeps).
+    pub ppu_tokens: u64,
+    /// PPU doc-proposal MH moves accepted (urn / `Ψ`-alias side).
+    pub ppu_doc_accepts: u64,
+    /// PPU word-proposal MH moves accepted (bucket-(a) alias side).
+    pub ppu_word_accepts: u64,
 }
 
 impl ZShardResult {
@@ -246,6 +306,9 @@ impl ZShardResult {
             prefetch_failures: 0,
             kern_gather_elems: 0,
             kern_scan_tokens: 0,
+            ppu_tokens: 0,
+            ppu_doc_accepts: 0,
+            ppu_word_accepts: 0,
         }
     }
 
@@ -262,6 +325,9 @@ impl ZShardResult {
         self.prefetch_failures = 0;
         self.kern_gather_elems = 0;
         self.kern_scan_tokens = 0;
+        self.ppu_tokens = 0;
+        self.ppu_doc_accepts = 0;
+        self.ppu_word_accepts = 0;
     }
 }
 
@@ -412,6 +478,11 @@ pub struct ZSweep<'a> {
     /// arithmetic is evaluated, never *what* — the chain is
     /// bit-identical either way (see [`crate::simd`]'s policy).
     pub kernels: Kernels,
+    /// `Some` engages the Pólya-urn MH fast path (see the module
+    /// docs): the per-iteration dense `Ψ` alias backing the global
+    /// side of the doc proposal. `None` runs the exact doubly-sparse
+    /// kernel. The two modes produce *different* (both valid) chains.
+    pub ppu: Option<&'a crate::alias::AliasTable>,
 }
 
 impl<'a> ZSweep<'a> {
@@ -426,6 +497,9 @@ impl<'a> ZSweep<'a> {
         scratch: &mut ZScratch,
         out: &mut ZShardResult,
     ) {
+        if let Some(psi_alias) = self.ppu {
+            return self.resample_doc_ppu(doc_id, doc, zd, md, scratch, out, psi_alias);
+        }
         let mut rng = self
             .seed_root
             .stream(self.iteration.rotate_left(32) ^ 0x2000_0000)
@@ -549,7 +623,15 @@ impl<'a> ZSweep<'a> {
                     };
                     partial_ks[pick]
                 } else {
-                    self.tables.sample(v, &mut rng)
+                    // `u ≥ s_b` can hold with `q_a = 0` on a float
+                    // edge (`rng.f64()·s_b` rounding up to `s_b`), in
+                    // which case the word has no bucket-(a) table —
+                    // fall back to the last bucket-(b) partial (the
+                    // draw the un-rounded `u` would have produced;
+                    // `total > 0 ∧ q_a = 0 ⇒ used ≥ 1`).
+                    self.tables
+                        .try_sample(v, &mut rng)
+                        .unwrap_or_else(|| partial_ks[used - 1])
                 }
             };
             *z = knew;
@@ -565,6 +647,157 @@ impl<'a> ZSweep<'a> {
             *cnew += 1;
             out.n_acc.add(knew, v, 1);
             if knew as usize == self.k_max - 1 {
+                out.flag_tokens += 1;
+            }
+        }
+        // Compact the scratch back into md and reset it.
+        md.clear();
+        for &k in entries.iter() {
+            let c = mdense[k as usize];
+            if c > 0 {
+                md.set(k, c);
+            }
+            mdense[k as usize] = 0;
+            in_list[k as usize] = false;
+        }
+        entries.clear();
+        out.hist.record_doc(md.entries());
+    }
+
+    /// Pólya-urn MH resample of one document (see the module docs):
+    /// two cycled-proposal MH sub-steps per token against the exact
+    /// conditional `π(k) ∝ φ_{k,v}·(α·Ψ_k + m^{-i}_{d,k})` — a doc
+    /// proposal drawn from the document's own `z` vector (the urn)
+    /// or the dense `Ψ` alias, then a word proposal from the
+    /// bucket-(a) table. O(1) draws + ≤ 2 binary `φ` lookups per
+    /// token instead of the exact partial-sum walk.
+    #[allow(clippy::too_many_arguments)]
+    fn resample_doc_ppu(
+        &self,
+        doc_id: usize,
+        doc: &[u32],
+        zd: &mut [u32],
+        md: &mut DocTopics,
+        scratch: &mut ZScratch,
+        out: &mut ZShardResult,
+        psi_alias: &crate::alias::AliasTable,
+    ) {
+        let mut rng = self
+            .seed_root
+            .stream(self.iteration.rotate_left(32) ^ 0x2000_0000)
+            .stream(doc_id as u64);
+        let ZScratch { mdense, entries, in_list, .. } = scratch;
+        let mdense = &mut mdense[..self.k_max];
+        let in_list = &mut in_list[..self.k_max];
+        for (k, c) in md.iter() {
+            mdense[k as usize] = c;
+            in_list[k as usize] = true;
+            entries.push(k);
+        }
+        let len_d = doc.len() as f64;
+        // Global side of the doc proposal: mass α·|Ψ| (the alias holds
+        // the raw Ψ weights, which need not sum to exactly 1).
+        let psi_mass = self.alpha * psi_alias.total();
+        let alpha = self.alpha;
+        for i in 0..doc.len() {
+            let v = doc[i];
+            let kold = zd[i] as usize;
+            // Remove the token (the −i in m^{-i}) — O(1).
+            mdense[kold] -= 1;
+            let q_a = self.tables.mass(v);
+            let knew = if q_a <= 0.0 {
+                // Word v absent from every topic's integer Φ: π ≡ 0,
+                // the conditional is degenerate — keep the old
+                // assignment (same contract as the exact kernel).
+                out.zero_mass_tokens += 1;
+                kold
+            } else {
+                out.ppu_tokens += 1;
+                let (col_topics, col_probs) = self.phi.col(v);
+                let phi_at = |k: u32| match col_topics.binary_search(&k) {
+                    Ok(ix) => col_probs[ix],
+                    Err(_) => 0.0,
+                };
+                let mut cur = kold;
+                let mut phi_cur = phi_at(kold as u32);
+                out.sparse_work += 1;
+                // MH sub-step 1 — doc proposal q_d(k) ∝ m_k + α·Ψ_k.
+                // The urn: `mdense` excludes the current token but
+                // `zd[i]` still holds `kold`, so a uniformly random
+                // zd entry is distributed exactly ∝ mdense + e_kold.
+                let u = rng.f64() * (len_d + psi_mass);
+                let kprop = if u < len_d {
+                    zd[u as usize] as usize
+                } else {
+                    psi_alias.sample(&mut rng)
+                };
+                if kprop != cur {
+                    let phi_prop = phi_at(kprop as u32);
+                    out.sparse_work += 1;
+                    let pi_prop = phi_prop
+                        * (alpha * self.psi[kprop] + mdense[kprop] as f64);
+                    let pi_cur = phi_cur * (alpha * self.psi[cur] + mdense[cur] as f64);
+                    // Proposal masses match the urn (current token
+                    // included): +1 on the old topic.
+                    let q_cur = mdense[cur] as f64
+                        + (cur == kold) as u64 as f64
+                        + alpha * self.psi[cur];
+                    let q_prop = mdense[kprop] as f64
+                        + (kprop == kold) as u64 as f64
+                        + alpha * self.psi[kprop];
+                    // A proposed topic always has q_prop > 0, so the
+                    // cross-multiplied test is exact; π(cur) = 0 means
+                    // the chain cannot stay put — accept any π > 0.
+                    let accept = if pi_cur <= 0.0 {
+                        pi_prop > 0.0
+                    } else {
+                        rng.f64() * (pi_cur * q_prop) < pi_prop * q_cur
+                    };
+                    if accept {
+                        cur = kprop;
+                        phi_cur = phi_prop;
+                        out.ppu_doc_accepts += 1;
+                    }
+                }
+                // MH sub-step 2 — word proposal q_w(k) ∝ φ_{k,v}·α·Ψ_k
+                // (the bucket-(a) alias; q_a > 0 ⇒ the table exists,
+                // the defensive fallback keeps `cur`). The φ factors
+                // cancel in the ratio; a drawn topic always has
+                // φ·Ψ > 0, so π(cur) = 0 accepts unconditionally.
+                if let Some(kw) = self.tables.try_sample(v, &mut rng) {
+                    let kw = kw as usize;
+                    if kw != cur {
+                        let pi_cur = phi_cur
+                            * (alpha * self.psi[cur] + mdense[cur] as f64);
+                        let accept = if pi_cur <= 0.0 {
+                            true
+                        } else {
+                            let num = (alpha * self.psi[kw]
+                                + mdense[kw] as f64)
+                                * (alpha * self.psi[cur]);
+                            let den = (alpha * self.psi[cur]
+                                + mdense[cur] as f64)
+                                * (alpha * self.psi[kw]);
+                            rng.f64() * den < num
+                        };
+                        if accept {
+                            cur = kw;
+                            out.ppu_word_accepts += 1;
+                        }
+                    }
+                }
+                cur
+            };
+            zd[i] = knew as u32;
+            // Add the token back — O(1) amortized.
+            let cnew = &mut mdense[knew];
+            if *cnew == 0 && !in_list[knew] {
+                in_list[knew] = true;
+                entries.push(knew as u32);
+            }
+            *cnew += 1;
+            out.n_acc.add(knew as u32, v, 1);
+            if knew == self.k_max - 1 {
                 out.flag_tokens += 1;
             }
         }
@@ -1357,6 +1590,7 @@ mod tests {
                 seed_root: &root,
                 iteration: 3,
                 kernels: Kernels::scalar(),
+                ppu: None,
             };
             let mut z = vec![vec![0u32, 1, 0]];
             let mut m: Vec<DocTopics> =
@@ -1424,6 +1658,7 @@ mod tests {
             seed_root: &root,
             iteration: 1,
             kernels: Kernels::scalar(),
+            ppu: None,
         };
         let mut m: Vec<DocTopics> =
             z.iter().map(|zd| zd.iter().copied().collect()).collect();
@@ -1488,6 +1723,7 @@ mod tests {
                 seed_root: &root,
                 iteration,
                 kernels: Kernels::scalar(),
+                ppu: None,
             };
             let (mut z_scoped, mut m_scoped) = (z0.clone(), m0.clone());
             let results =
@@ -1605,6 +1841,7 @@ mod tests {
             seed_root: root,
             iteration: 1,
             kernels: Kernels::scalar(),
+            ppu: None,
         }
     }
 
@@ -1988,6 +2225,7 @@ mod tests {
             seed_root: &root,
             iteration: 1,
             kernels: Kernels::scalar(),
+            ppu: None,
         };
         let m0: Vec<DocTopics> =
             z0.iter().map(|zd| zd.iter().copied().collect()).collect();
@@ -2059,6 +2297,7 @@ mod tests {
             seed_root: &root,
             iteration: 2,
             kernels: Kernels::scalar(),
+            ppu: None,
         };
         let results =
             sweep.run(&corpus.docs, &mut z, &mut m, &Sharding::even(25, 3));
@@ -2134,6 +2373,7 @@ mod tests {
                 seed_root: &root,
                 iteration: 4,
                 kernels,
+                ppu: None,
             };
             let (mut z, mut m) = (z0.clone(), m0.clone());
             let results =
@@ -2273,5 +2513,119 @@ mod tests {
         // The pool survived its workers' captured panics.
         let out = crate::par::exec_map(&*pool, 8, |i| i);
         assert_eq!(out.len(), 8);
+    }
+
+    #[test]
+    fn try_sample_is_none_only_for_zero_mass_columns() {
+        // `None` marks the two degenerate columns — a vocabulary id
+        // never observed under Φ, and a word whose entire support has
+        // Ψ_k = 0 — the float-edge / serving fallback cases that used
+        // to panic. Live columns always draw from their support.
+        // small_phi support: word 0 ∈ {0, 2}, word 1 ∈ {0, 1},
+        // word 2 ∈ {1}; extend the vocab so word 3 is never observed.
+        let phi = PhiMatrix::from_count_rows(
+            4,
+            &[vec![(0, 5), (1, 5)], vec![(1, 2), (2, 8)], vec![(0, 1)], vec![]],
+        );
+        let psi = [0.5, 0.0, 0.3, 0.2];
+        let t = WordTables::build(&phi, &psi, 0.8, 1usize);
+        let mut rng = Pcg64::new(5);
+        assert!(t.try_sample(3, &mut rng).is_none(), "unseen vocabulary id");
+        assert_eq!(t.mass(3), 0.0);
+        assert!(t.try_sample(2, &mut rng).is_none(), "Ψ of word 2's only topic is 0");
+        assert_eq!(t.mass(2), 0.0);
+        for _ in 0..200 {
+            let k = t.try_sample(0, &mut rng).expect("live column");
+            assert!(k == 0 || k == 2, "word 0 support");
+            let k = t.try_sample(1, &mut rng).expect("word 1 keeps topic 0");
+            assert_eq!(k, 0, "topic 1's Ψ weight is zero, never drawn");
+        }
+    }
+
+    #[test]
+    fn zero_mass_word_keeps_assignment_in_both_kernels() {
+        // A word absent from every topic's integer Φ has a degenerate
+        // conditional: both the exact and the Pólya-urn kernel must
+        // keep the old assignment and count the token — never panic.
+        let phi = PhiMatrix::from_count_rows(
+            4,
+            &[vec![(0, 5), (1, 5)], vec![(1, 2), (2, 8)], vec![(0, 1)], vec![]],
+        );
+        let psi = [0.4, 0.3, 0.2, 0.1];
+        let tables = WordTables::build(&phi, &psi, 0.9, 1usize);
+        let root = Pcg64::new(11);
+        let psi_alias = crate::alias::AliasTable::new(&psi);
+        let docs = vec![vec![3u32, 1, 3]];
+        for ppu in [None, Some(&psi_alias)] {
+            let sweep = ZSweep {
+                phi: &phi,
+                psi: &psi,
+                tables: &tables,
+                alpha: 0.9,
+                k_max: 4,
+                seed_root: &root,
+                iteration: 2,
+                kernels: Kernels::scalar(),
+                ppu,
+            };
+            let mut z = vec![vec![2u32, 0, 1]];
+            let mut m: Vec<DocTopics> = vec![z[0].iter().copied().collect()];
+            let r = sweep.run(&docs, &mut z, &mut m, &Sharding::even(1, 1));
+            assert_eq!(z[0][0], 2, "token 0 keeps its topic");
+            assert_eq!(z[0][2], 1, "token 2 keeps its topic");
+            let zm: u64 = r.iter().map(|s| s.zero_mass_tokens).sum();
+            assert_eq!(zm, 2, "both degenerate tokens counted");
+        }
+    }
+
+    #[test]
+    fn ppu_sweep_is_deterministic_and_conserves_tokens() {
+        // Determinism (per-document RNG streams) and conservation: a
+        // PPU sweep must account every token exactly once — resampled
+        // through the MH kernel or kept as degenerate — and rebuild n
+        // and m to the same totals as the exact kernel would.
+        let f = frozen_state(73);
+        let root = Pcg64::new(91);
+        let tables = WordTables::build(&f.phi, &f.psi, 0.5, 1usize);
+        let psi_alias = crate::alias::AliasTable::new(&f.psi);
+        let mut sweep = frozen_sweep(&f, &tables, &root);
+        sweep.ppu = Some(&psi_alias);
+        let total_tokens: u64 = f.corpus.docs.iter().map(|d| d.len() as u64).sum();
+        let run = || {
+            let (mut z, mut m) = (f.z0.clone(), f.m0.clone());
+            let r = sweep.run(
+                &f.corpus.docs,
+                &mut z,
+                &mut m,
+                &Sharding::even(f.corpus.num_docs(), 3),
+            );
+            (z, m, r)
+        };
+        let (z1, m1, r1) = run();
+        let (z2, _, _) = run();
+        assert_eq!(z1, z2, "ppu sweep must be deterministic for a fixed seed");
+        let ppu: u64 = r1.iter().map(|s| s.ppu_tokens).sum();
+        let zm: u64 = r1.iter().map(|s| s.zero_mass_tokens).sum();
+        assert_eq!(ppu + zm, total_tokens, "every token ppu-swept xor degenerate");
+        let da: u64 = r1.iter().map(|s| s.ppu_doc_accepts).sum();
+        let wa: u64 = r1.iter().map(|s| s.ppu_word_accepts).sum();
+        assert!(da > 0 && wa > 0, "both MH proposals must accept sometimes");
+        assert!(da <= ppu && wa <= ppu, "at most one accept per sub-step");
+        // n conservation: merged topic-word counts hold one entry per
+        // token; m mirrors each document's new z.
+        let mut accs: Vec<TopicWordAcc> = r1.into_iter().map(|r| r.n_acc).collect();
+        let n = TopicWordRows::merge_from(8, &mut accs);
+        let total_n: u64 = (0..8).map(|k| n.row_total(k)).sum();
+        assert_eq!(total_n, total_tokens);
+        for (d, (zd, md)) in z1.iter().zip(&m1).enumerate() {
+            assert_eq!(md.total() as usize, zd.len(), "m total, doc {d}");
+            let mut dense = [0u64; 8];
+            for &k in zd {
+                dense[k as usize] += 1;
+            }
+            for (k, c) in md.iter() {
+                assert_eq!(c as u64, dense[k as usize], "m[{k}], doc {d}");
+            }
+        }
     }
 }

@@ -67,6 +67,9 @@ pub struct PcLdaSampler {
     kernels: Kernels,
     /// Resolved worker core pinning state.
     pinning: bool,
+    /// Pólya-urn MH z sweep instead of the exact kernel (see
+    /// [`super::pc::zstep`]'s module docs).
+    ppu: bool,
 }
 
 impl PcLdaSampler {
@@ -126,6 +129,7 @@ impl PcLdaSampler {
             phi_pipe: phi::PhiPipeline::new(0x1f1),
             kernels: Kernels::scalar(),
             pinning: false,
+            ppu: false,
         })
     }
 
@@ -215,6 +219,17 @@ impl PcLdaSampler {
         self.pinning
     }
 
+    /// Enable/disable the Pólya-urn MH z sweep (default off; changes
+    /// the chain — see [`super::pc::PcSampler::set_ppu`]).
+    pub fn set_ppu(&mut self, on: bool) {
+        self.ppu = on;
+    }
+
+    /// Whether the Pólya-urn fast path is engaged.
+    pub fn ppu(&self) -> bool {
+        self.ppu
+    }
+
     /// Reallocate the per-slot z scratch on the pinned workers
     /// (slot-affine job, one task per slot) so first-touch places its
     /// pages on each worker's NUMA node.
@@ -280,6 +295,11 @@ impl Trainer for PcLdaSampler {
         "pclda"
     }
 
+    fn try_set_ppu(&mut self, on: bool) -> bool {
+        self.set_ppu(on);
+        true
+    }
+
     fn step(&mut self) -> anyhow::Result<()> {
         use std::time::Instant;
         let step_t0 = Instant::now();
@@ -314,6 +334,11 @@ impl Trainer for PcLdaSampler {
             self.timers.incr(PhaseTimers::KERNEL_ALIAS_ELEMS, phi_m.nnz() as u64);
             self.timers.incr(PhaseTimers::KERNEL_PHI_ELEMS, phi_m.nnz() as u64);
         }
+        // PPU mode: dense Ψ alias (here uniform — the LDA prior) for
+        // the doc proposal's global side, built inline off the pool.
+        let psi_alias = self
+            .ppu
+            .then(|| crate::alias::AliasTable::new_with(&self.psi, &self.kernels));
         let sweep = zstep::ZSweep {
             phi: &phi_m,
             psi: &self.psi,
@@ -323,6 +348,7 @@ impl Trainer for PcLdaSampler {
             seed_root: &root,
             iteration: iter,
             kernels: self.kernels,
+            ppu: psi_alias.as_ref(),
         };
         let schedule =
             if self.slot_affine { Schedule::SlotAffine } else { Schedule::Steal };
@@ -358,12 +384,21 @@ impl Trainer for PcLdaSampler {
         self.timers.add("z", t0.elapsed());
         let (mut pf_hits, mut pf_stalls, mut pf_failures) = (0u64, 0u64, 0u64);
         let (mut kern_gather, mut kern_scan) = (0u64, 0u64);
+        let (mut ppu_tokens, mut ppu_doc, mut ppu_word) = (0u64, 0u64, 0u64);
         for s in &self.scratch {
             pf_hits += s.out.prefetch_hits;
             pf_stalls += s.out.prefetch_stalls;
             pf_failures += s.out.prefetch_failures;
             kern_gather += s.out.kern_gather_elems;
             kern_scan += s.out.kern_scan_tokens;
+            ppu_tokens += s.out.ppu_tokens;
+            ppu_doc += s.out.ppu_doc_accepts;
+            ppu_word += s.out.ppu_word_accepts;
+        }
+        if ppu_tokens > 0 {
+            self.timers.incr(PhaseTimers::PPU_TOKENS, ppu_tokens);
+            self.timers.incr(PhaseTimers::PPU_DOC_ACCEPTS, ppu_doc);
+            self.timers.incr(PhaseTimers::PPU_WORD_ACCEPTS, ppu_word);
         }
         if pf_hits + pf_stalls > 0 {
             self.timers.incr(PhaseTimers::PREFETCH_HITS, pf_hits);

@@ -22,7 +22,7 @@ USAGE:
                  [--threads N] [--seed N] [--alpha F] [--beta F] [--gamma F]
                  [--k-max N] [--eval-every N] [--time-budget SECS] [--out-dir DIR]
                  [--save CKPT] [--heldout FRAC] [--checkpoint-every N]
-                 [--checkpoint-dir DIR] [--resume]
+                 [--checkpoint-dir DIR] [--resume] [--ppu]
   repro exp      <table2|fig1-small|fig1-neurips|fig1-pubmed|topics|all>
                  [--scale F] [--threads N] [--seed N] [--out-dir DIR] [--quick]
                  [--corpus NAME] [--all]           (topics only)

@@ -64,6 +64,19 @@ impl PhaseTimers {
     /// `scale_f64` path when assembling the matrix.
     pub const KERNEL_PHI_ELEMS: &'static str = "kern_phi_elems";
 
+    /// Counter name: tokens resampled by the Pólya-urn MH z fast path
+    /// (0 for exact sweeps).
+    pub const PPU_TOKENS: &'static str = "ppu_tokens";
+
+    /// Counter name: PPU doc-proposal MH moves accepted (urn /
+    /// `Ψ`-alias side). `ppu_doc_accepts / ppu_tokens` is the doc-side
+    /// acceptance rate.
+    pub const PPU_DOC_ACCEPTS: &'static str = "ppu_doc_accepts";
+
+    /// Counter name: PPU word-proposal MH moves accepted (bucket-(a)
+    /// alias side).
+    pub const PPU_WORD_ACCEPTS: &'static str = "ppu_word_accepts";
+
     /// Create with no phases registered.
     pub fn new() -> Self {
         Self::default()

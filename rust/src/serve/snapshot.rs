@@ -334,16 +334,23 @@ impl ModelSnapshot {
                 } else {
                     let u = rng.f64() * total;
                     if u < s_b {
-                        // rng.f64() < 1 ⇒ when q_a == 0 this branch is
-                        // always taken, so `tables.sample` is never
-                        // reached for a word with an empty column.
                         partials
                             .iter()
                             .find(|&&(_, cum)| u < cum)
                             .map(|&(k, _)| k)
                             .unwrap_or(partials.last().unwrap().0)
                     } else {
-                        self.tables.sample(v, rng)
+                        // `u ≥ s_b` can hold even when q_a == 0: the
+                        // rounding in `rng.f64()·s_b` can land exactly
+                        // on `s_b`. A zero-mass column has no alias
+                        // table — fall back to the last bucket-(b)
+                        // partial (`total > 0 ∧ q_a = 0 ⇒ s_b > 0`),
+                        // or keep the old topic; a serving request
+                        // must never panic a pool slot over an unseen
+                        // vocabulary id.
+                        self.tables.try_sample(v, rng).unwrap_or_else(|| {
+                            partials.last().map(|&(k, _)| k).unwrap_or(kold as u32)
+                        })
                     }
                 };
                 z[i] = knew;

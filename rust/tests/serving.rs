@@ -287,6 +287,48 @@ fn checkpoint_freeze_matches_live() {
     }
 }
 
+/// Requests carrying vocabulary ids the model never observed (empty Φ
+/// columns — routine in production traffic) must be answered in every
+/// mode, not panic: the zero-mass column draw has a defined fallback.
+/// A panicking request used to take down a worker-pool slot, so the
+/// pool must still serve normal batches afterwards.
+#[test]
+fn unseen_vocabulary_ids_are_served_not_panicked() {
+    let base = corpus();
+    // Extend the vocabulary without emitting the new ids in any
+    // document: ids 180..=183 have empty Φ columns after training.
+    let mut ext = (*base).clone();
+    for i in 0..4 {
+        ext.vocab.push(format!("unseen{i}"));
+    }
+    let c = Arc::new(ext);
+    let s = trained(&c, 2, 29);
+    let server = Server::new(s.pool_handle(), ModelSnapshot::from_pc(&s, 800));
+    let unseen: Vec<u32> = (180..184).collect();
+    for mode in
+        [InferMode::Mixture, InferMode::SparseMixture, InferMode::Completion]
+    {
+        // One request of nothing but unseen ids, one mixing them into
+        // a real document.
+        let mut mixed = c.docs[0].clone();
+        mixed.extend(&unseen);
+        let reqs = vec![
+            InferRequest { id: 1, tokens: unseen.clone(), seed: 902, passes: 3, mode },
+            InferRequest { id: 2, tokens: mixed, seed: 903, passes: 3, mode },
+        ];
+        let resps = server.serve_batch(&reqs);
+        assert_eq!(resps.len(), 2);
+        assert_eq!(resps[0].tokens_scored, 0, "{mode:?}: nothing scorable");
+        assert!(resps[0].tokens_skipped > 0, "{mode:?}: unseen ids skipped");
+        assert!(resps[1].tokens_scored > 0, "{mode:?}: real tokens still score");
+        // And reproducible, like any other request.
+        assert_same(&resps[1], &server.serve_one(&reqs[1]), "unseen-mixed replay");
+    }
+    // The pool survived: a normal batch still runs end to end.
+    let reqs = requests(&c, 8, InferMode::SparseMixture);
+    assert_eq!(server.serve_batch(&reqs).len(), 8);
+}
+
 /// Interleaving serving with training must leave the training chain
 /// bit-identical to an undisturbed twin: request RNG streams are
 /// derived per (request, generation), never borrowed from the chain.

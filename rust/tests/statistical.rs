@@ -399,9 +399,14 @@ fn server_matches_document_completion() {
         );
         assert_eq!(resp.tokens_scored, direct.tokens, "doc {d}: scored");
         assert_eq!(resp.tokens_skipped, direct.skipped, "doc {d}: skipped");
-        let resp_ppx = (-resp.log_likelihood
-            / resp.tokens_scored.max(1) as f64)
-            .exp();
+        // Mirror `document_completion`'s empty-set contract: zero
+        // scored tokens has no defined perplexity (NaN), never a
+        // silently "perfect" exp(0) = 1.0.
+        let resp_ppx = if resp.tokens_scored == 0 {
+            f64::NAN
+        } else {
+            (-resp.log_likelihood / resp.tokens_scored as f64).exp()
+        };
         assert_eq!(
             resp_ppx.to_bits(),
             direct.perplexity.to_bits(),
@@ -475,4 +480,205 @@ fn sparse_and_dense_fold_in_agree() {
     assert!(l1 < 0.25, "pooled L1 {l1:.3} (dense {dense:?} sparse {sparse:?})");
     let bound = 200.0 * (df as f64 + 1.0);
     assert!(chi2 < bound, "chi2 {chi2:.1} over {df} topics (bound {bound:.0})");
+}
+
+/// The Pólya-urn MH z sweep (`PcSampler::set_ppu`) is a different —
+/// but still valid — MCMC kernel for the same per-token conditional,
+/// so its *stationary* behaviour must agree with the exact chain
+/// across seeds even though the trajectories diverge: joint
+/// log-likelihood and active-topic means within tolerance, held-out
+/// document-completion perplexity within a relative band, and pooled
+/// sorted topic-size profiles close in L1/χ².
+#[test]
+fn ppu_and_exact_chains_agree_across_seeds() {
+    use hdp_sparse::diagnostics::heldout;
+    use hdp_sparse::serve::ModelSnapshot;
+    let (c, _) = HdpCorpusSpec {
+        vocab: 100,
+        topics: 3,
+        gamma: 1.5,
+        alpha: 1.5,
+        topic_beta: 0.05,
+        docs: 40,
+        mean_doc_len: 25.0,
+        len_sigma: 0.3,
+        min_doc_len: 8,
+    }
+    .generate(2021);
+    let c = Arc::new(c);
+    let cfg = HdpConfig { alpha: 0.5, beta: 0.1, gamma: 1.0, k_max: 16, init_topics: 1 };
+    let (burn, keep) = (200usize, 40usize);
+    let (_, test) = heldout::train_test_split(c.num_docs(), 0.3, 5150);
+
+    let mut lls = [Vec::new(), Vec::new()];
+    let mut topics = [Vec::new(), Vec::new()];
+    let mut ppx = [Vec::new(), Vec::new()];
+    // Pooled (over seeds) sorted topic-size profiles, one per kernel:
+    // topic identities aren't aligned across chains, the *profile* is
+    // the comparable statistic.
+    let mut profiles = [vec![0u64; cfg.k_max], vec![0u64; cfg.k_max]];
+    for seed in [21u64, 22, 23] {
+        for (which, use_ppu) in [(0usize, false), (1usize, true)] {
+            let mut s = PcSampler::new(c.clone(), cfg, 2, seed).unwrap();
+            s.set_ppu(use_ppu);
+            assert_eq!(s.ppu(), use_ppu);
+            for _ in 0..burn {
+                s.step().unwrap();
+            }
+            for _ in 0..keep {
+                s.step().unwrap();
+                let d = s.diagnostics();
+                lls[which].push(d.log_likelihood);
+                topics[which].push(d.active_topics as f64);
+            }
+            if use_ppu {
+                // The fast path must actually have run (and its MH
+                // moves must both fire), not silently fall back to
+                // the exact kernel.
+                assert!(s.timers.counter("ppu_tokens") > 0, "seed {seed}: ppu ran");
+                assert!(
+                    s.timers.counter("ppu_doc_accepts") > 0
+                        && s.timers.counter("ppu_word_accepts") > 0,
+                    "seed {seed}: both MH proposals must accept sometimes"
+                );
+            } else {
+                assert_eq!(s.timers.counter("ppu_tokens"), 0);
+            }
+            // Held-out document-completion perplexity against the
+            // frozen final state.
+            let snap = ModelSnapshot::from_pc(&s, 77);
+            let r = heldout::document_completion(
+                &*c,
+                &test,
+                snap.phi(),
+                snap.psi(),
+                snap.alpha(),
+                3,
+                9090,
+            );
+            assert!(r.tokens > 0, "held-out split must score tokens");
+            ppx[which].push(r.perplexity);
+            let mut sizes = vec![0u64; cfg.k_max];
+            for zd in s.assignments() {
+                for &k in zd {
+                    sizes[k as usize] += 1;
+                }
+            }
+            sizes.sort_unstable_by(|a, b| b.cmp(a));
+            for (p, sz) in profiles[which].iter_mut().zip(&sizes) {
+                *p += sz;
+            }
+        }
+    }
+    let (me, mp) = (mean(&lls[0]), mean(&lls[1]));
+    let rel = (mp - me).abs() / me.abs();
+    assert!(rel < 0.05, "stationary joint log-lik: exact {me:.1} vs ppu {mp:.1} (rel {rel:.3})");
+    let (te, tp) = (mean(&topics[0]), mean(&topics[1]));
+    assert!((tp - te).abs() < 8.0, "stationary active-topic count: exact {te:.1} vs ppu {tp:.1}");
+    let (pe, pp) = (mean(&ppx[0]), mean(&ppx[1]));
+    let prel = (pp - pe).abs() / pe;
+    assert!(
+        prel < 0.15,
+        "held-out doc-completion perplexity: exact {pe:.1} vs ppu {pp:.1} (rel {prel:.3})"
+    );
+    // Pooled profile agreement: L1 over the normalized sorted
+    // topic-size distributions + a two-sample χ²-style statistic.
+    let se = profiles[0].iter().sum::<u64>() as f64;
+    let sp = profiles[1].iter().sum::<u64>() as f64;
+    assert_eq!(se, sp, "both chains assign every token every sweep");
+    let mut l1 = 0.0f64;
+    let mut chi2 = 0.0f64;
+    let mut df = 0usize;
+    for (&a, &b) in profiles[0].iter().zip(&profiles[1]) {
+        l1 += (a as f64 / se - b as f64 / sp).abs();
+        if a + b > 0 {
+            let (af, bf) = (a as f64, b as f64);
+            chi2 += (af - bf).powi(2) / (af + bf);
+            df += 1;
+        }
+    }
+    assert!(
+        l1 < 0.25,
+        "pooled topic-size L1 {l1:.3} (exact {:?} ppu {:?})",
+        profiles[0],
+        profiles[1]
+    );
+    let bound = 200.0 * (df as f64 + 1.0);
+    assert!(chi2 < bound, "profile chi2 {chi2:.1} over {df} bins (bound {bound:.0})");
+}
+
+/// The PPU chain diverges from the exact chain, but it must be just as
+/// *deterministic*: for a fixed seed the z/l/Ψ state after any number
+/// of sweeps is bit-identical across thread counts, pipelining,
+/// streaming (with and without prefetch), and the SIMD kernel tiers —
+/// all randomness flows through the same per-(iteration, doc) streams.
+/// It must also differ from the exact chain (the fast path actually
+/// engaged).
+#[test]
+fn ppu_chain_is_bit_identical_across_drivers() {
+    let (c, _) = HdpCorpusSpec {
+        vocab: 180,
+        topics: 5,
+        gamma: 2.0,
+        alpha: 1.2,
+        topic_beta: 0.05,
+        docs: 58,
+        mean_doc_len: 26.0,
+        len_sigma: 0.4,
+        min_doc_len: 6,
+    }
+    .generate(4141);
+    let c = Arc::new(c);
+    let cfg = HdpConfig { alpha: 0.5, beta: 0.05, gamma: 1.0, k_max: 24, init_topics: 1 };
+    let steps = 4usize;
+
+    #[derive(Clone, Copy, Debug)]
+    enum Blocks {
+        Resident,
+        Stream { docs: usize, prefetch: bool },
+    }
+
+    let run = |ppu: bool, threads: usize, pipelined: bool, blocks: Blocks, simd: bool| {
+        let mut s = PcSampler::new(c.clone(), cfg, threads, 616).unwrap();
+        s.set_ppu(ppu);
+        s.set_pipelined(pipelined);
+        s.set_simd(simd);
+        s.set_doc_plan(Sharding::weighted(&c.doc_weights(), threads));
+        if let Blocks::Stream { docs, prefetch } = blocks {
+            s.set_streaming(Some(docs));
+            s.set_stream_prefetch(prefetch);
+        }
+        for _ in 0..steps {
+            s.step().unwrap();
+        }
+        (s.assignments().to_vec(), s.l().to_vec(), s.psi().to_vec())
+    };
+
+    let (z_ref, l_ref, psi_ref) = run(true, 1, false, Blocks::Resident, false);
+    let (z_exact, ..) = run(false, 1, false, Blocks::Resident, false);
+    assert_ne!(z_ref, z_exact, "ppu chain must actually diverge from the exact kernel");
+    for &threads in &[1usize, 2, 7] {
+        for &pipelined in &[false, true] {
+            for &blocks in &[
+                Blocks::Resident,
+                Blocks::Stream { docs: 1, prefetch: false },
+                Blocks::Stream { docs: 5, prefetch: true },
+                Blocks::Stream { docs: usize::MAX, prefetch: false },
+            ] {
+                let (z, l, psi) = run(true, threads, pipelined, blocks, false);
+                let tag = format!("threads={threads} pipelined={pipelined} blocks={blocks:?}");
+                assert_eq!(z, z_ref, "ppu z diverged: {tag}");
+                assert_eq!(l, l_ref, "ppu l diverged: {tag}");
+                assert_eq!(psi, psi_ref, "ppu psi diverged: {tag}");
+            }
+        }
+    }
+    // SIMD axis (dispatches to scalar without the `simd` feature —
+    // still a valid, if weaker, re-run of a matrix cell).
+    for &blocks in &[Blocks::Resident, Blocks::Stream { docs: 5, prefetch: true }] {
+        let (z, l, psi) = run(true, 2, true, blocks, true);
+        assert_eq!(z, z_ref, "ppu z diverged under simd: {blocks:?}");
+        assert_eq!(l, l_ref, "ppu l diverged under simd: {blocks:?}");
+        assert_eq!(psi, psi_ref, "ppu psi diverged under simd: {blocks:?}");
+    }
 }

@@ -164,6 +164,7 @@ fn z_draw_chi2_vs_dense_enumeration() {
             seed_root: &root,
             iteration: 1,
             kernels: Default::default(),
+            ppu: None,
         };
         let mut z = vec![vec![1u32, 3, 5]];
         let mut m: Vec<DocTopics> = vec![z[0].iter().copied().collect()];

@@ -1,0 +1,93 @@
+#!/usr/bin/env bash
+# Bench smoke: run the z-sampling bench on a reduced matrix (small
+# thread count, minimal benchkit sampling) and validate the
+# BENCH_z_sampling.json it emits — well-formed JSON, the expected cases
+# (exact SIMD×pin matrix plus the Pólya-urn fast-path cells), and the
+# exact-vs-PPU throughput columns. Minutes of wall clock, not a perf
+# run: CI uses it (non-gating) to catch bench bit-rot and schema drift,
+# never to publish numbers.
+#
+# Runs anywhere with a rust toolchain: `bash scripts/bench_smoke.sh`.
+set -euo pipefail
+
+ROOT="$(cd "$(dirname "${BASH_SOURCE[0]}")/.." && pwd)"
+
+export BENCH_THREADS="${BENCH_THREADS:-2}"
+export BENCHKIT_SAMPLES="${BENCHKIT_SAMPLES:-3}"
+export BENCHKIT_BATCH_MS="${BENCHKIT_BATCH_MS:-50}"
+
+cargo bench --bench z_sampling --manifest-path "$ROOT/rust/Cargo.toml"
+
+# Bench binaries run with CWD = the package root, so the JSON lands
+# next to the manifest.
+JSON="$ROOT/rust/BENCH_z_sampling.json"
+if [ ! -f "$JSON" ]; then
+  echo "bench did not write $JSON" >&2
+  exit 1
+fi
+
+if command -v python3 >/dev/null 2>&1; then
+  python3 - "$JSON" "$BENCH_THREADS" <<'EOF'
+import json
+import sys
+
+path, threads = sys.argv[1], sys.argv[2]
+with open(path) as f:
+    doc = json.load(f)
+
+assert doc["group"] == "z_sampling", doc.get("group")
+cases = {c["name"]: c for c in doc["cases"]}
+want_cases = [
+    "pc_doubly_sparse_iteration",
+    f"pc_t{threads}_simd_off_pin_off",
+    f"pc_t{threads}_simd_on_pin_on",
+    f"pc_t{threads}_ppu_simd_off",
+    f"pc_t{threads}_ppu_simd_on",
+    "dense_enumeration_iteration_10pct",
+]
+for name in want_cases:
+    assert name in cases, f"missing case {name}: have {sorted(cases)}"
+    case = cases[name]
+    for key in ("median_s", "mean_s", "sd_s", "min_s", "items_per_s"):
+        assert key in case, f"{name}: missing {key}"
+    assert case["median_s"] > 0, f"{name}: non-positive median"
+    assert case["items_per_s"] > 0, f"{name}: non-positive throughput"
+
+counters = doc["counters"]
+for key in (
+    "exact_tokens_per_s",
+    "ppu_tokens_per_s",
+    "speedup_ppu_vs_exact",
+    f"pc_t{threads}_ppu_simd_off/counter/ppu_tokens",
+    f"pc_t{threads}_ppu_simd_off/ppu_doc_accept_rate",
+    f"pc_t{threads}_ppu_simd_off/ppu_word_accept_rate",
+):
+    assert key in counters, f"missing counter {key}"
+    assert counters[key] > 0, f"non-positive counter {key}"
+print(
+    f"schema OK: {len(cases)} cases; "
+    f"exact {counters['exact_tokens_per_s']:.0f} tok/s, "
+    f"ppu {counters['ppu_tokens_per_s']:.0f} tok/s "
+    f"({counters['speedup_ppu_vs_exact']:.2f}x)"
+)
+EOF
+else
+  # Shell fallback: the load-bearing names plus balanced braces.
+  for pat in '"group": "z_sampling"' \
+             '"name": "pc_doubly_sparse_iteration"' \
+             "\"name\": \"pc_t${BENCH_THREADS}_ppu_simd_off\"" \
+             '"exact_tokens_per_s"' \
+             '"ppu_tokens_per_s"' \
+             '"speedup_ppu_vs_exact"'; do
+    grep -qF "$pat" "$JSON" || { echo "missing $pat in $JSON" >&2; exit 1; }
+  done
+  opens="$(grep -o '[{[]' "$JSON" | wc -l)"
+  closes="$(grep -o '[]}]' "$JSON" | wc -l)"
+  if [ "$opens" -ne "$closes" ]; then
+    echo "unbalanced braces/brackets in $JSON" >&2
+    exit 1
+  fi
+  echo "schema OK (shell fallback): $JSON"
+fi
+
+echo "bench smoke: OK"
