@@ -250,6 +250,42 @@ fn main() {
         );
     }
 
+    // --- resident-memory cells ---------------------------------------
+    // Same accounting as `PcSampler::resident_state_bytes`: token
+    // storage + z storage, per-`Vec` headers included for the nested
+    // layout. The packed-only file cell keeps only the two offset
+    // tables resident (tokens and z both on disk).
+    let nested_corpus_bytes: u64 =
+        corpus.docs.iter().map(|d| 4 * d.len() as u64 + 24).sum::<u64>() + 24;
+    let nested_z_bytes: u64 =
+        z0.iter().map(|zd| 4 * zd.len() as u64 + 24).sum::<u64>() + 24;
+    let resident_nested = nested_corpus_bytes + nested_z_bytes;
+    let arena = packed.arena_bytes();
+    let packed_only_arena = arena + 4 * packed.num_tokens() + 24;
+    let offsets_resident = 8 * (packed.num_docs() as u64 + 1) + 24;
+    let packed_only_filez = 2 * offsets_resident;
+    let reduction = |cell: u64| 100.0 * (1.0 - cell as f64 / resident_nested as f64);
+    println!(
+        "\nresident bytes: nested {} | packed-only arena {} ({:.1}% less) | packed-only filez {} ({:.1}% less)",
+        resident_nested,
+        packed_only_arena,
+        reduction(packed_only_arena),
+        packed_only_filez,
+        reduction(packed_only_filez),
+    );
+
+    bench
+        .write_json(
+            std::path::Path::new("BENCH_stream_ingest.json"),
+            &[
+                ("resident_bytes_nested", resident_nested as f64),
+                ("resident_bytes_packed_only_arena", packed_only_arena as f64),
+                ("resident_bytes_packed_only_filez", packed_only_filez as f64),
+                ("arena_bytes", arena as f64),
+                ("filez_reduction_vs_nested_pct", reduction(packed_only_filez)),
+            ],
+        )
+        .ok();
     bench
         .write_csv(std::path::Path::new("results/bench_stream_ingest.csv"))
         .ok();

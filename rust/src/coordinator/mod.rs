@@ -70,7 +70,7 @@ pub fn train(
     opts: &LoopOptions,
 ) -> anyhow::Result<TrainSummary> {
     let start = Instant::now();
-    let tokens = trainer.corpus().num_tokens();
+    let tokens = trainer.docs().num_tokens();
     let start_iter = trainer.iterations_done();
     let mut completed = start_iter;
     let mut last_rec: Option<IterRecord> = None;

@@ -88,6 +88,34 @@
 //! file-backed z arena ([`crate::hdp::pc::zstep::FileZ`]) stores raw
 //! little-endian u32s at `doc_offsets[d]·4` with no header and honors
 //! the same contract for both reads and writes.
+//!
+//! ## Memory-mapping contract
+//!
+//! [`PackedCorpusFile::open_mmap`] serves token blocks from a
+//! read-only `MAP_SHARED` mapping instead of `pread` when the platform
+//! allows it. The format was laid out for this:
+//!
+//! * the mapping starts at byte 0 of the file, so it is page-aligned;
+//! * `doc_offsets` starts at byte 40 (8-aligned) and occupies
+//!   `(D+1)·8` bytes, so the token section starts at
+//!   `40 + (D+1)·8` — always a multiple of 8, hence 4-aligned within
+//!   the page-aligned mapping: the token bytes may be reinterpreted as
+//!   a `&[u32]` in place with no copy and no alignment fixup;
+//! * integers are little-endian, so the in-place reinterpret is
+//!   value-correct only on little-endian targets — big-endian hosts
+//!   fall back to the positioned-read path (which byte-swaps);
+//! * the mapping covers exactly the header + offsets + token sections
+//!   (never the vocab tail), and that length is validated against the
+//!   file size at open, so no access can fault past EOF;
+//! * the file is written once and never mutated in place (see the
+//!   positioned-I/O contract), so a shared mapping can never observe a
+//!   torn update.
+//!
+//! The binding is vendored (direct `mmap`/`munmap` externs against the
+//! libc the std binary already links — no new dependency), linux-only,
+//! and **always optional**: any mapping failure (`EINVAL`, `ENOMEM`,
+//! an unsupported platform, a big-endian host) degrades silently to
+//! the positioned-read path, which serves bit-identical tokens.
 
 use super::{Corpus, PackedCorpus};
 use std::io::{BufRead, BufWriter, Read, Write};
@@ -628,6 +656,113 @@ impl PositionedFile {
     }
 }
 
+#[cfg(target_os = "linux")]
+mod mmap_sys {
+    // Vendored binding against the libc std already links (the
+    // [`crate::par::affinity`] idiom) — no new dependency. `*mut u8`
+    // is ABI-compatible with `void *`; `off_t` is i64 on 64-bit linux.
+    extern "C" {
+        pub fn mmap(
+            addr: *mut u8,
+            len: usize,
+            prot: i32,
+            flags: i32,
+            fd: i32,
+            offset: i64,
+        ) -> *mut u8;
+        pub fn munmap(addr: *mut u8, len: usize) -> i32;
+    }
+    pub const PROT_READ: i32 = 1;
+    pub const MAP_SHARED: i32 = 1;
+}
+
+/// A read-only `MAP_SHARED` memory mapping of the leading `len` bytes
+/// of a file (the mapping survives the file descriptor it was created
+/// from). Linux-only; everywhere else [`Mmap::map`] returns
+/// `ErrorKind::Unsupported` and callers fall back to positioned reads.
+pub(crate) struct Mmap {
+    #[cfg_attr(not(target_os = "linux"), allow(dead_code))]
+    ptr: std::ptr::NonNull<u8>,
+    len: usize,
+}
+
+// SAFETY: the mapping is PROT_READ over a file this crate never
+// mutates in place (positioned-I/O contract): shared references from
+// any thread observe immutable bytes.
+unsafe impl Send for Mmap {}
+unsafe impl Sync for Mmap {}
+
+impl Mmap {
+    /// Map the first `len` bytes of `file` read-only. `len` must be
+    /// nonzero and no larger than the file (touching mapped pages past
+    /// EOF is a hardware fault, not an `Err`) — callers validate the
+    /// length against the file size first.
+    #[cfg(target_os = "linux")]
+    pub(crate) fn map(file: &std::fs::File, len: u64) -> std::io::Result<Self> {
+        use std::os::unix::io::AsRawFd;
+        if len == 0 {
+            // mmap(len = 0) is EINVAL; make the failure deterministic.
+            return Err(std::io::Error::new(
+                std::io::ErrorKind::InvalidInput,
+                "empty mapping",
+            ));
+        }
+        let len = usize::try_from(len).map_err(|_| {
+            std::io::Error::new(std::io::ErrorKind::InvalidInput, "mapping too large")
+        })?;
+        // SAFETY: a fresh PROT_READ/MAP_SHARED mapping of an open fd;
+        // the kernel validates the fd and length, and MAP_FAILED is
+        // checked below.
+        let ptr = unsafe {
+            mmap_sys::mmap(
+                std::ptr::null_mut(),
+                len,
+                mmap_sys::PROT_READ,
+                mmap_sys::MAP_SHARED,
+                file.as_raw_fd(),
+                0,
+            )
+        };
+        if ptr as usize == usize::MAX {
+            return Err(std::io::Error::last_os_error());
+        }
+        match std::ptr::NonNull::new(ptr) {
+            Some(ptr) => Ok(Self { ptr, len }),
+            None => Err(std::io::Error::new(
+                std::io::ErrorKind::Other,
+                "mmap returned null",
+            )),
+        }
+    }
+
+    /// Unsupported platform: callers fall back to positioned reads.
+    #[cfg(not(target_os = "linux"))]
+    pub(crate) fn map(_file: &std::fs::File, _len: u64) -> std::io::Result<Self> {
+        Err(std::io::Error::new(
+            std::io::ErrorKind::Unsupported,
+            "mmap is only vendored on linux",
+        ))
+    }
+
+    /// The mapped bytes.
+    pub(crate) fn as_slice(&self) -> &[u8] {
+        // SAFETY: `ptr` is a live PROT_READ mapping of exactly `len`
+        // bytes (unmapped only in Drop, which requires `&mut self`).
+        unsafe { std::slice::from_raw_parts(self.ptr.as_ptr(), self.len) }
+    }
+}
+
+impl Drop for Mmap {
+    fn drop(&mut self) {
+        #[cfg(target_os = "linux")]
+        // SAFETY: `ptr`/`len` are exactly the values mmap returned;
+        // the mapping is unmapped once, here.
+        unsafe {
+            mmap_sys::munmap(self.ptr.as_ptr(), self.len);
+        }
+    }
+}
+
 /// An opened packed corpus served **out of core**: only the header and
 /// `doc_offsets` are resident (8 bytes per document); token blocks are
 /// read on demand with [`PackedCorpusFile::read_block`]. This is the
@@ -644,6 +779,11 @@ pub struct PackedCorpusFile {
     file: PositionedFile,
     doc_offsets: Vec<u64>,
     vocab_entries: u64,
+    /// Read-only mapping of header + offsets + token sections (see the
+    /// memory-mapping contract in the module docs). `None` when opened
+    /// with [`PackedCorpusFile::open`] or when mapping is unavailable;
+    /// block reads then go through positioned reads.
+    map: Option<Mmap>,
 }
 
 impl PackedCorpusFile {
@@ -688,7 +828,59 @@ impl PackedCorpusFile {
             file: PositionedFile::new(file, ("corpus.pread", "corpus.pwrite")),
             doc_offsets,
             vocab_entries: v,
+            map: None,
         })
+    }
+
+    /// [`PackedCorpusFile::open`] plus a best-effort read-only
+    /// `MAP_SHARED` mapping of the token section (module docs:
+    /// memory-mapping contract). Validation — header, offsets,
+    /// checksum — is identical to `open`; only the block-serving
+    /// mechanism changes. Mapping failures of any kind (`EINVAL`,
+    /// `ENOMEM`, non-linux platforms, big-endian hosts) are **not**
+    /// errors: the file opens in positioned-read mode instead, which
+    /// serves bit-identical tokens. Check [`PackedCorpusFile::mmap_active`]
+    /// to see which mode is live.
+    pub fn open_mmap(path: &Path) -> anyhow::Result<Self> {
+        let mut s = Self::open(path)?;
+        // The in-place &[u32] reinterpret is value-correct only on
+        // little-endian targets; big-endian hosts keep the pread path
+        // (which byte-swaps).
+        if cfg!(target_endian = "little") {
+            if let Ok(file) = std::fs::File::open(path) {
+                let file_len = file.metadata().map(|m| m.len()).unwrap_or(0);
+                let map_len = PACKED_HEADER_BYTES
+                    + s.doc_offsets.len() as u64 * 8
+                    + s.num_tokens() * 4;
+                // `open` validated this, but never map past EOF: a
+                // short file would fault on access, not Err.
+                if map_len <= file_len {
+                    s.map = Mmap::map(&file, map_len).ok();
+                }
+            }
+        }
+        Ok(s)
+    }
+
+    /// True when token blocks are served from a memory mapping
+    /// (zero-copy) rather than positioned reads.
+    pub fn mmap_active(&self) -> bool {
+        self.map.is_some()
+    }
+
+    /// The mapped token arena as an in-place `&[u32]`, when mapped.
+    pub(crate) fn mapped_tokens(&self) -> Option<&[u32]> {
+        let map = self.map.as_ref()?;
+        let off = (PACKED_HEADER_BYTES + self.doc_offsets.len() as u64 * 8) as usize;
+        let n = self.num_tokens() as usize;
+        let bytes = &map.as_slice()[off..off + n * 4];
+        // SAFETY: `off` is a multiple of 8 inside a page-aligned
+        // mapping, so the pointer is u32-aligned; the range holds
+        // exactly `n` initialized little-endian u32s and the mapping
+        // (borrowed here) is immutable for its lifetime. Mapping is
+        // only established on little-endian targets (`open_mmap`), so
+        // the reinterpret is value-correct.
+        Some(unsafe { std::slice::from_raw_parts(bytes.as_ptr().cast::<u32>(), n) })
     }
 
     /// Number of documents `D`.
@@ -728,6 +920,11 @@ impl PackedCorpusFile {
         );
         let t0 = self.doc_offsets[start_doc];
         let t1 = self.doc_offsets[end_doc];
+        if let Some(tokens) = self.mapped_tokens() {
+            buf.clear();
+            buf.extend_from_slice(&tokens[t0 as usize..t1 as usize]);
+            return Ok(());
+        }
         let byte0 = PACKED_HEADER_BYTES + self.doc_offsets.len() as u64 * 8 + t0 * 4;
         self.file.read_u32s_at(byte0, (t1 - t0) as usize, buf)?;
         Ok(())
@@ -1000,6 +1197,95 @@ mod tests {
             }
         }
         assert!(f.read_block(0, c.num_docs() + 1, &mut buf).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn mmap_blocks_match_pread_exactly() {
+        // The mapped reader and the positioned reader must serve
+        // byte-identical blocks — that equality is what makes the
+        // mmap × pread invariance cells of the statistical matrix
+        // trivially true at the token level.
+        let dir = std::env::temp_dir().join("hdp_packed_test_mmap");
+        let path = dir.join("c.hdpp");
+        let c = sample().to_packed();
+        write_packed(&c, &path).unwrap();
+        let pread = PackedCorpusFile::open(&path).unwrap();
+        let mapped = PackedCorpusFile::open_mmap(&path).unwrap();
+        assert!(!pread.mmap_active());
+        #[cfg(target_os = "linux")]
+        assert!(
+            mapped.mmap_active(),
+            "mmap must engage on linux little-endian hosts"
+        );
+        assert_eq!(mapped.doc_offsets(), pread.doc_offsets());
+        let (mut a, mut b) = (Vec::new(), Vec::new());
+        for start in 0..=c.num_docs() {
+            for end in start..=c.num_docs() {
+                pread.read_block(start, end, &mut a).unwrap();
+                mapped.read_block(start, end, &mut b).unwrap();
+                assert_eq!(a, b, "block {start}..{end}");
+                assert_eq!(&a[..], &c.tokens()[c.token_range(start, end)]);
+            }
+        }
+        if let Some(tokens) = mapped.mapped_tokens() {
+            assert_eq!(tokens, c.tokens());
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn open_mmap_rejects_truncation_and_corruption() {
+        // open_mmap runs the full open-time validation: truncated or
+        // bit-flipped files fail closed before any mapping exists.
+        let dir = std::env::temp_dir().join("hdp_packed_test_mmap_bad");
+        let path = dir.join("c.hdpp");
+        write_packed(&sample().to_packed(), &path).unwrap();
+        let good = std::fs::read(&path).unwrap();
+        let bad = dir.join("bad.hdpp");
+        for cut in [0, 8, 39, 40, good.len() / 2, good.len() - 1] {
+            std::fs::write(&bad, &good[..cut]).unwrap();
+            assert!(PackedCorpusFile::open_mmap(&bad).is_err(), "prefix {cut}");
+        }
+        let mut flip = good.clone();
+        flip[good.len() / 2] ^= 0x10;
+        std::fs::write(&bad, &flip).unwrap();
+        assert!(PackedCorpusFile::open_mmap(&bad).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn mmap_short_and_empty_maps_fail_or_fall_back() {
+        // Mmap::map itself: zero-length mappings are a deterministic
+        // Err (not EINVAL roulette), and a mapping is never longer
+        // than the validated sections, so no access can fault past
+        // EOF. On non-linux platforms map() is Unsupported and
+        // open_mmap silently stays in positioned-read mode.
+        let dir = std::env::temp_dir().join("hdp_packed_test_mmap_short");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("f.bin");
+        std::fs::write(&p, [0u8; 64]).unwrap();
+        let f = std::fs::File::open(&p).unwrap();
+        assert!(Mmap::map(&f, 0).is_err(), "empty mapping must be Err");
+        match Mmap::map(&f, 64) {
+            Ok(m) => {
+                assert_eq!(m.as_slice().len(), 64);
+                assert!(m.as_slice().iter().all(|&b| b == 0));
+            }
+            Err(e) => {
+                // Acceptable only where the binding is absent.
+                assert_eq!(e.kind(), std::io::ErrorKind::Unsupported, "{e}");
+            }
+        }
+        // An empty packed corpus still opens via open_mmap; its token
+        // section is empty so block reads are trivially correct in
+        // either mode.
+        let path = dir.join("empty.hdpp");
+        write_packed(&PackedCorpus::default(), &path).unwrap();
+        let f = PackedCorpusFile::open_mmap(&path).unwrap();
+        let mut buf = vec![7u32];
+        f.read_block(0, 0, &mut buf).unwrap();
+        assert!(buf.is_empty());
         std::fs::remove_dir_all(&dir).ok();
     }
 

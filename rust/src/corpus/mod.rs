@@ -178,6 +178,67 @@ impl<T: DocAccess + Send> DocAccess for std::sync::Arc<T> {
     }
 }
 
+/// Whole-corpus statistics and vocabulary on top of [`DocAccess`] —
+/// the trait-object view the [`crate::hdp::Trainer`] API exposes, so
+/// training, diagnostics, and serving consume a corpus without caring
+/// whether it is the nested interchange [`Corpus`] or the packed arena
+/// [`PackedCorpus`]. The packed-only training path
+/// ([`crate::hdp::pc::PcSampler::from_packed`]) never materializes a
+/// nested `Corpus` at all; everything downstream sees `&dyn CorpusView`.
+pub trait CorpusView: DocAccess {
+    /// Total token count `N`.
+    fn num_tokens(&self) -> u64;
+    /// Vocabulary size `V`.
+    fn vocab_size(&self) -> usize;
+    /// Word strings, indexed by word id (may be empty for vocabless
+    /// arenas).
+    fn vocab(&self) -> &[String];
+    /// Longest document length `max_d N_d`.
+    fn max_doc_len(&self) -> usize {
+        (0..DocAccess::num_docs(self)).map(|d| self.doc(d).len()).max().unwrap_or(0)
+    }
+    /// Per-document lengths as weights for load-balanced sharding.
+    fn doc_weights(&self) -> Vec<u64> {
+        (0..DocAccess::num_docs(self)).map(|d| self.doc(d).len() as u64).collect()
+    }
+}
+
+impl CorpusView for Corpus {
+    fn num_tokens(&self) -> u64 {
+        Corpus::num_tokens(self)
+    }
+    fn vocab_size(&self) -> usize {
+        Corpus::vocab_size(self)
+    }
+    fn vocab(&self) -> &[String] {
+        &self.vocab
+    }
+    fn max_doc_len(&self) -> usize {
+        Corpus::max_doc_len(self)
+    }
+    fn doc_weights(&self) -> Vec<u64> {
+        Corpus::doc_weights(self)
+    }
+}
+
+impl CorpusView for PackedCorpus {
+    fn num_tokens(&self) -> u64 {
+        PackedCorpus::num_tokens(self)
+    }
+    fn vocab_size(&self) -> usize {
+        PackedCorpus::vocab_size(self)
+    }
+    fn vocab(&self) -> &[String] {
+        &self.vocab
+    }
+    fn max_doc_len(&self) -> usize {
+        PackedCorpus::max_doc_len(self)
+    }
+    fn doc_weights(&self) -> Vec<u64> {
+        PackedCorpus::doc_weights(self)
+    }
+}
+
 /// A bag-of-words corpus in packed CSR layout: one flat token arena
 /// plus per-document offsets.
 ///
@@ -290,6 +351,14 @@ impl PackedCorpus {
             }
         }
         Ok(())
+    }
+
+    /// Resident bytes of the arena itself: the flat token vector plus
+    /// the `(D+1)` doc offsets (vocab strings excluded — they are
+    /// shared by every layout). This is the denominator of the
+    /// memory-accounting counters ([`crate::metrics::PhaseTimers`]).
+    pub fn arena_bytes(&self) -> u64 {
+        self.tokens.len() as u64 * 4 + self.doc_offsets.len() as u64 * 8
     }
 
     /// One-line summary (Table-2 style).

@@ -1,7 +1,7 @@
 //! Topic summaries: top words, the paper's quantile tables
 //! (Appendices C–F / Fig 2), and UMass coherence.
 
-use crate::corpus::Corpus;
+use crate::corpus::{CorpusView, DocAccess};
 
 /// One summarized topic.
 #[derive(Clone, Debug)]
@@ -17,9 +17,9 @@ pub struct TopicSummary {
 /// Extract per-topic top-`w` words from sparse topic-word rows,
 /// restricted to topics with at least `min_tokens` tokens, sorted by
 /// token count descending (the paper ranks topics this way).
-pub fn top_words(
+pub fn top_words<C: CorpusView + ?Sized>(
     rows: &[Vec<(u32, u32)>],
-    corpus: &Corpus,
+    corpus: &C,
     w: usize,
     min_tokens: u64,
 ) -> Vec<TopicSummary> {
@@ -34,7 +34,7 @@ pub fn top_words(
         let top = sorted
             .iter()
             .take(w)
-            .map(|&(v, _)| corpus.vocab[v as usize].clone())
+            .map(|&(v, _)| corpus.vocab()[v as usize].clone())
             .collect();
         out.push(TopicSummary { topic: k, tokens, top_words: top });
     }
@@ -107,14 +107,15 @@ pub fn render_quantile_table(groups: &[(f64, Vec<TopicSummary>)]) -> String {
 /// `Σ_{i<j} log[(D(w_i, w_j) + 1) / D(w_j)]` over document
 /// co-occurrence counts. The paper (§4) notes this score is strongly
 /// K-dependent; it is reported for completeness.
-pub fn umass_coherence(corpus: &Corpus, word_ids: &[u32]) -> f64 {
+pub fn umass_coherence<C: DocAccess + ?Sized>(corpus: &C, word_ids: &[u32]) -> f64 {
     // Document frequency and co-document frequency over the top words.
     let set: Vec<u32> = word_ids.to_vec();
     let idx_of = |w: u32| set.iter().position(|&x| x == w);
     let mut df = vec![0u64; set.len()];
     let mut codf = vec![vec![0u64; set.len()]; set.len()];
     let mut present = vec![false; set.len()];
-    for doc in &corpus.docs {
+    for d in 0..corpus.num_docs() {
+        let doc = corpus.doc(d);
         present.fill(false);
         for &w in doc {
             if let Some(i) = idx_of(w) {
@@ -147,6 +148,7 @@ pub fn umass_coherence(corpus: &Corpus, word_ids: &[u32]) -> f64 {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::corpus::Corpus;
 
     fn corpus() -> Corpus {
         Corpus {

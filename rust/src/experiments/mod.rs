@@ -104,45 +104,110 @@ pub fn cmd_train(args: &Args) -> anyhow::Result<()> {
     let save_path = args.value("save").map(PathBuf::from);
     let heldout_frac: f64 = args.get_or("heldout", 0.0)?;
     let ppu = args.flag("ppu");
+    let packed_only = args.flag("packed-only");
+    let z_file = args.value("z-file").map(PathBuf::from);
     args.finish()?;
     anyhow::ensure!(
         (0.0..0.9).contains(&heldout_frac),
         "--heldout must be in [0, 0.9)"
     );
-    let corpus = Arc::new(registry::load(&corpus_name, run.seed)?);
+    anyhow::ensure!(
+        !packed_only || sampler == "pc",
+        "--packed-only supports the pc sampler only (got `{sampler}`)"
+    );
+    anyhow::ensure!(
+        z_file.is_none() || packed_only,
+        "--z-file requires --packed-only"
+    );
     // --resume: pick the newest loadable checkpoint (partial/corrupt
     // files are skipped with a warning) and continue the SAME chain —
     // the resumed run is bit-identical to an uninterrupted one.
-    let mut t: Box<dyn Trainer> = if resume {
-        anyhow::ensure!(
-            sampler == "pc",
-            "--resume currently supports the pc sampler only (got `{sampler}`)"
+    let mut t: Box<dyn Trainer> = if packed_only {
+        // Packed-only: build the flat token arena, drop the nested
+        // corpus before the first sweep, and keep z in the flat arena
+        // (or the spill file) for the whole run. Bit-identical to the
+        // resident path — layout never touches the chain.
+        let nested = registry::load(&corpus_name, run.seed)?;
+        let packed = Arc::new(nested.to_packed());
+        drop(nested);
+        let s = if resume {
+            match crate::hdp::checkpoint::latest_valid(&ckpt_dir)? {
+                Some((path, ckpt)) => {
+                    println!(
+                        "resuming from {} (iteration {})",
+                        path.display(),
+                        ckpt.iteration
+                    );
+                    PcSampler::resume_chain_packed(
+                        packed,
+                        cfg,
+                        run.threads,
+                        run.seed,
+                        &ckpt,
+                        z_file.as_deref(),
+                    )?
+                }
+                None => {
+                    println!(
+                        "no usable checkpoint under {}; starting fresh",
+                        ckpt_dir.display()
+                    );
+                    let mut s =
+                        PcSampler::from_packed(packed, cfg, run.threads, run.seed)?;
+                    if let Some(p) = &z_file {
+                        s.move_z_to_file(p)?;
+                    }
+                    s
+                }
+            }
+        } else {
+            let mut s = PcSampler::from_packed(packed, cfg, run.threads, run.seed)?;
+            if let Some(p) = &z_file {
+                s.move_z_to_file(p)?;
+            }
+            s
+        };
+        println!(
+            "packed-only: z store `{}`, resident state {} B (arena {} B + z {} B)",
+            s.z_mode(),
+            s.resident_state_bytes(),
+            s.arena_bytes(),
+            s.z_bytes()
         );
-        match crate::hdp::checkpoint::latest_valid(&ckpt_dir)? {
-            Some((path, ckpt)) => {
-                println!(
-                    "resuming from {} (iteration {})",
-                    path.display(),
-                    ckpt.iteration
-                );
-                Box::new(PcSampler::resume_chain(
-                    corpus.clone(),
-                    cfg,
-                    run.threads,
-                    run.seed,
-                    &ckpt,
-                )?)
-            }
-            None => {
-                println!(
-                    "no usable checkpoint under {}; starting fresh",
-                    ckpt_dir.display()
-                );
-                make_sampler(&sampler, corpus.clone(), cfg, run.threads, run.seed)?
-            }
-        }
+        Box::new(s)
     } else {
-        make_sampler(&sampler, corpus.clone(), cfg, run.threads, run.seed)?
+        let corpus = Arc::new(registry::load(&corpus_name, run.seed)?);
+        if resume {
+            anyhow::ensure!(
+                sampler == "pc",
+                "--resume currently supports the pc sampler only (got `{sampler}`)"
+            );
+            match crate::hdp::checkpoint::latest_valid(&ckpt_dir)? {
+                Some((path, ckpt)) => {
+                    println!(
+                        "resuming from {} (iteration {})",
+                        path.display(),
+                        ckpt.iteration
+                    );
+                    Box::new(PcSampler::resume_chain(
+                        corpus.clone(),
+                        cfg,
+                        run.threads,
+                        run.seed,
+                        &ckpt,
+                    )?)
+                }
+                None => {
+                    println!(
+                        "no usable checkpoint under {}; starting fresh",
+                        ckpt_dir.display()
+                    );
+                    make_sampler(&sampler, corpus, cfg, run.threads, run.seed)?
+                }
+            }
+        } else {
+            make_sampler(&sampler, corpus, cfg, run.threads, run.seed)?
+        }
     };
     if ppu {
         anyhow::ensure!(
@@ -194,7 +259,7 @@ pub fn cmd_train(args: &Args) -> anyhow::Result<()> {
         use crate::diagnostics::heldout;
         use crate::hdp::pc::phi::sample_phi;
         use crate::sparse::{TopicWordAcc, TopicWordRows};
-        let corpus = t.corpus();
+        let corpus = t.docs();
         let rows = t.topic_word_rows();
         let k = rows.len();
         let mut acc = TopicWordAcc::with_capacity(corpus.num_tokens() as usize / 2 + 16);
@@ -280,7 +345,7 @@ pub fn cmd_eval_xla(args: &Args) -> anyhow::Result<()> {
         &root,
         s.n(),
         cfg.beta,
-        s.corpus().vocab_size(),
+        Trainer::docs(&s).vocab_size(),
         1usize,
     );
     let sparse = phi_loglik_sparse(s.n(), &phi);

@@ -46,7 +46,7 @@ pub fn run(ctx: &ExpContext) -> anyhow::Result<()> {
             &format!("table2_{name}"),
             ctx.verbose,
         )?;
-        let c = t.corpus();
+        let c = t.docs();
         // Extrapolate the paper's full workload (its N × its iterations)
         // at our measured tokens/s and its thread count relative to ours.
         let paper = entry.paper.unwrap();

@@ -34,7 +34,7 @@ pub fn run(ctx: &ExpContext, corpus: &str, all_topics: bool) -> anyhow::Result<(
         ctx.verbose,
     )?;
     let rows = t.topic_word_rows();
-    let summaries = topics::top_words(&rows, t.corpus(), 8, 100);
+    let summaries = topics::top_words(&rows, t.docs(), 8, 100);
     let text = if all_topics {
         // Fig 2 / Appendix F style: all topics with >= 8 distinct words.
         let mut s = String::new();
@@ -67,10 +67,10 @@ pub fn run(ctx: &ExpContext, corpus: &str, all_topics: bool) -> anyhow::Result<(
                         .top_words
                         .iter()
                         .filter_map(|w| {
-                            t.corpus().vocab.iter().position(|x| x == w).map(|i| i as u32)
+                            t.docs().vocab().iter().position(|x| x == w).map(|i| i as u32)
                         })
                         .collect();
-                    topics::umass_coherence(t.corpus(), &ids)
+                    topics::umass_coherence(t.docs(), &ids)
                 })
                 .sum::<f64>()
                 / group.len() as f64;

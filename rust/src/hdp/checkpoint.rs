@@ -39,7 +39,8 @@
 //! ([`crate::fault`]); there is no retry anywhere on this path — a
 //! failed save surfaces as `Err` with the old file intact.
 
-use crate::corpus::Corpus;
+use crate::corpus::DocAccess;
+use crate::hdp::ZView;
 use crate::sparse::{DocTopics, TopicWordAcc, TopicWordRows};
 use anyhow::{Context, Result};
 use std::io::{BufReader, Read, Write};
@@ -49,6 +50,12 @@ const MAGIC: &[u8; 8] = b"HDPCKPT2";
 const MAGIC_V1: &[u8; 8] = b"HDPCKPT1";
 
 /// A serializable snapshot of a trained topic-model state.
+///
+/// The assignments are held **packed** — one flat `z` arena plus
+/// `(D+1)` doc offsets, mirroring the on-disk v2 layout — so loading a
+/// v2 file is a straight read into the final representation and a
+/// packed-only resume ([`crate::hdp::pc::PcSampler::resume_chain_packed`])
+/// never inflates nested `Vec<Vec<u32>>` state.
 #[derive(Clone, Debug, PartialEq)]
 pub struct Checkpoint {
     /// Iterations completed when the snapshot was taken.
@@ -57,14 +64,64 @@ pub struct Checkpoint {
     pub sampler: String,
     /// Global topic distribution (length = K* for the PC sampler).
     pub psi: Vec<f64>,
-    /// Topic assignments per document.
-    pub z: Vec<Vec<u32>>,
+    /// Flat topic assignments, packed in document order.
+    pub z: Vec<u32>,
+    /// Doc offsets into `z` (length `D + 1`, starting at 0).
+    pub z_offsets: Vec<u64>,
 }
 
 impl Checkpoint {
+    /// Build from any sampler's assignments view (nested views are
+    /// packed here, once, at snapshot time).
+    pub fn from_z_view(
+        iteration: u64,
+        sampler: &str,
+        psi: Vec<f64>,
+        z: &ZView<'_>,
+    ) -> Self {
+        let (z, z_offsets) = z.to_packed();
+        Self { iteration, sampler: sampler.to_string(), psi, z, z_offsets }
+    }
+
+    /// Build from nested per-document assignments (tests, the v1
+    /// loader, and nested-sampler callers).
+    pub fn from_nested_z(
+        iteration: u64,
+        sampler: &str,
+        psi: Vec<f64>,
+        z: &[Vec<u32>],
+    ) -> Self {
+        Self::from_z_view(iteration, sampler, psi, &ZView::Nested(z))
+    }
+
+    /// Number of documents covered by the snapshot.
+    pub fn num_docs(&self) -> usize {
+        self.z_offsets.len().saturating_sub(1)
+    }
+
+    /// Assignments of document `d`.
+    pub fn doc_z(&self, d: usize) -> &[u32] {
+        &self.z[self.z_offsets[d] as usize..self.z_offsets[d + 1] as usize]
+    }
+
+    /// The assignments as a borrowed [`ZView`].
+    pub fn z_view(&self) -> ZView<'_> {
+        ZView::Packed {
+            z: std::borrow::Cow::Borrowed(&self.z),
+            offsets: std::borrow::Cow::Borrowed(&self.z_offsets),
+        }
+    }
+
+    /// Nested copy of the assignments (tests and nested-sampler
+    /// resume; the packed-only path never calls this).
+    pub fn z_nested(&self) -> Vec<Vec<u32>> {
+        self.z_view().to_nested()
+    }
+
     /// Write to `path` (parent directories created) — atomically and
     /// with the checksum trailer (module docs). The z section is the
-    /// packed CSR layout (offsets + flat arena).
+    /// packed CSR layout (offsets + flat arena), written straight from
+    /// the in-memory packed form.
     pub fn save(&self, path: &Path) -> Result<()> {
         crate::durable::atomic_write(path, &crate::durable::CKPT_SITES, |f| {
             f.write_all(MAGIC)?;
@@ -76,16 +133,11 @@ impl Checkpoint {
             for &p in &self.psi {
                 f.write_all(&p.to_le_bytes())?;
             }
-            write_u64(f, self.z.len() as u64)?;
-            let mut off = 0u64;
-            write_u64(f, 0)?;
-            for zd in &self.z {
-                off += zd.len() as u64;
+            write_u64(f, self.num_docs() as u64)?;
+            for &off in &self.z_offsets {
                 write_u64(f, off)?;
             }
-            for zd in &self.z {
-                crate::corpus::io::write_u32s(f, zd)?;
-            }
+            crate::corpus::io::write_u32s(f, &self.z)?;
             Ok(())
         })
     }
@@ -130,8 +182,10 @@ impl Checkpoint {
             docs as u128 * 8 <= payload as u128,
             "corrupt checkpoint: doc count {docs} exceeds file size"
         );
-        let z = if v2 {
-            // Packed layout: (D+1) offsets then the flat arena.
+        let (z, z_offsets) = if v2 {
+            // Packed layout: (D+1) offsets then the flat arena — read
+            // straight into the final representation, no per-document
+            // inflation.
             let mut offsets = Vec::with_capacity(docs + 1);
             for _ in 0..=docs {
                 offsets.push(read_u64(&mut f)?);
@@ -148,24 +202,24 @@ impl Checkpoint {
                 *offsets.last().unwrap() as usize,
                 &mut flat,
             )?;
-            offsets
-                .windows(2)
-                .map(|w| flat[w[0] as usize..w[1] as usize].to_vec())
-                .collect()
+            (flat, offsets)
         } else {
-            // Legacy per-document layout.
-            let mut z: Vec<Vec<u32>> = Vec::with_capacity(docs);
+            // Legacy per-document layout, packed on the fly.
+            let mut flat: Vec<u32> = Vec::new();
+            let mut offsets = Vec::with_capacity(docs + 1);
+            offsets.push(0u64);
+            let mut doc = Vec::new();
             for _ in 0..docs {
                 let len = read_u64(&mut f)? as usize;
                 anyhow::ensure!(
                     len as u128 * 4 <= payload as u128,
                     "corrupt checkpoint: doc length {len} exceeds file size"
                 );
-                let mut doc = Vec::new();
                 crate::corpus::io::read_u32s_into(&mut f, len, &mut doc)?;
-                z.push(doc);
+                flat.extend_from_slice(&doc);
+                offsets.push(flat.len() as u64);
             }
-            z
+            (flat, offsets)
         };
         crate::durable::verify_trailer(&mut f, payload, "checkpoint")
             .with_context(|| path.display().to_string())?;
@@ -174,21 +228,28 @@ impl Checkpoint {
             sampler: String::from_utf8(name)?,
             psi,
             z,
+            z_offsets,
         })
     }
 
     /// Validate the snapshot against a corpus (doc/token alignment and
-    /// topic ids inside `psi`'s range).
-    pub fn validate(&self, corpus: &Corpus) -> Result<()> {
+    /// topic ids inside `psi`'s range). Accepts any [`DocAccess`]
+    /// layout — the packed-only path validates against the arena
+    /// without a nested corpus.
+    pub fn validate<C: DocAccess + ?Sized>(&self, corpus: &C) -> Result<()> {
         anyhow::ensure!(
-            self.z.len() == corpus.num_docs(),
+            self.num_docs() == corpus.num_docs(),
             "checkpoint docs {} != corpus docs {}",
-            self.z.len(),
+            self.num_docs(),
             corpus.num_docs()
         );
         let k = self.psi.len() as u32;
-        for (d, (zd, doc)) in self.z.iter().zip(&corpus.docs).enumerate() {
-            anyhow::ensure!(zd.len() == doc.len(), "doc {d}: token count mismatch");
+        for d in 0..self.num_docs() {
+            let zd = self.doc_z(d);
+            anyhow::ensure!(
+                zd.len() == corpus.doc(d).len(),
+                "doc {d}: token count mismatch"
+            );
             for &t in zd {
                 anyhow::ensure!(t < k, "doc {d}: topic {t} out of range {k}");
             }
@@ -196,11 +257,15 @@ impl Checkpoint {
         Ok(())
     }
 
-    /// Rebuild the `Assignments` (z + m) for resuming a sampler.
+    /// Rebuild the `Assignments` (nested z + m) for resuming a
+    /// nested-layout sampler. The packed-only resume path
+    /// ([`crate::hdp::pc::PcSampler::resume_chain_packed`]) bypasses
+    /// this entirely.
     pub fn to_assignments(&self) -> super::state::Assignments {
+        let z: Vec<Vec<u32>> = self.z_nested();
         let m: Vec<DocTopics> =
-            self.z.iter().map(|zd| zd.iter().copied().collect()).collect();
-        super::state::Assignments { z: self.z.clone(), m }
+            z.iter().map(|zd| zd.iter().copied().collect()).collect();
+        super::state::Assignments { z, m }
     }
 
     /// Rebuild the merged topic-word statistic `n` from the stored
@@ -210,13 +275,15 @@ impl Checkpoint {
     /// which is what lets a snapshot frozen from a checkpoint
     /// ([`crate::serve::ModelSnapshot::from_checkpoint`]) predict
     /// bit-identically to one frozen off the live chain.
-    pub fn topic_word_rows(&self, corpus: &Corpus) -> Result<TopicWordRows> {
+    pub fn topic_word_rows<C: DocAccess + ?Sized>(
+        &self,
+        corpus: &C,
+    ) -> Result<TopicWordRows> {
         self.validate(corpus)?;
         let k = self.psi.len();
-        let mut acc =
-            TopicWordAcc::with_capacity(corpus.num_tokens() as usize / 2 + 16);
-        for (doc, zd) in corpus.docs.iter().zip(&self.z) {
-            for (&v, &kk) in doc.iter().zip(zd) {
+        let mut acc = TopicWordAcc::with_capacity(self.z.len() / 2 + 16);
+        for d in 0..self.num_docs() {
+            for (&v, &kk) in corpus.doc(d).iter().zip(self.doc_z(d)) {
                 acc.add(kk, v, 1);
             }
         }
@@ -239,8 +306,9 @@ impl Checkpoint {
             for &p in &self.psi {
                 f.write_all(&p.to_le_bytes())?;
             }
-            write_u64(f, self.z.len() as u64)?;
-            for zd in &self.z {
+            write_u64(f, self.num_docs() as u64)?;
+            for d in 0..self.num_docs() {
+                let zd = self.doc_z(d);
                 write_u64(f, zd.len() as u64)?;
                 crate::corpus::io::write_u32s(f, zd)?;
             }
@@ -254,7 +322,8 @@ impl Checkpoint {
     /// the OS page cache, so this syncs the store once
     /// ([`crate::hdp::pc::zstep::FileZ::sync`], `fdatasync`) before
     /// reading the assignments back for the snapshot — one sync per
-    /// checkpoint instead of one per block.
+    /// checkpoint instead of one per block. The read lands directly in
+    /// the packed form; no nested vectors are materialized.
     pub fn from_filez(
         iteration: u64,
         sampler: &str,
@@ -266,7 +335,8 @@ impl Checkpoint {
             iteration,
             sampler: sampler.to_string(),
             psi: psi.to_vec(),
-            z: z.to_nested()?,
+            z: z.to_flat()?,
+            z_offsets: z.offsets().to_vec(),
         })
     }
 }
@@ -338,21 +408,25 @@ pub fn latest_valid(dir: &Path) -> Result<Option<(PathBuf, Checkpoint)>> {
 }
 
 impl super::pc::PcSampler {
-    /// Snapshot the current state.
+    /// Snapshot the current state. File-backed z stores are synced at
+    /// this boundary (their blocks only reach the page cache during
+    /// sweeps); the snapshot itself is read through [`ZView`] in the
+    /// sampler's own layout — no nested inflation on the packed path.
     pub fn checkpoint(&self) -> Checkpoint {
-        Checkpoint {
-            iteration: crate::hdp::Trainer::iterations_done(self) as u64,
-            sampler: "pc-hdp".to_string(),
-            psi: self.psi().to_vec(),
-            z: crate::hdp::Trainer::assignments(self).to_vec(),
-        }
+        self.sync_z_store();
+        Checkpoint::from_z_view(
+            crate::hdp::Trainer::iterations_done(self) as u64,
+            "pc-hdp",
+            self.psi().to_vec(),
+            &crate::hdp::Trainer::z_view(self),
+        )
     }
 
     /// Resume from a snapshot: rebuilds `m`/`n` and reuses the stored
     /// `Ψ` implicitly through the next `l`/`Ψ` step (the chain is a
     /// valid continuation of the checkpointed posterior state).
     pub fn resume(
-        corpus: std::sync::Arc<Corpus>,
+        corpus: std::sync::Arc<crate::corpus::Corpus>,
         cfg: crate::config::HdpConfig,
         threads: usize,
         seed: u64,
@@ -385,13 +459,13 @@ impl super::pc::PcSampler {
     /// run — recovery is bit-identical. Use [`PcSampler::resume`]
     /// instead when a *fresh* continuation stream is wanted.
     pub fn resume_chain(
-        corpus: std::sync::Arc<Corpus>,
+        corpus: std::sync::Arc<crate::corpus::Corpus>,
         cfg: crate::config::HdpConfig,
         threads: usize,
         seed: u64,
         ckpt: &Checkpoint,
     ) -> Result<Self> {
-        ckpt.validate(&corpus)?;
+        ckpt.validate(&*corpus)?;
         anyhow::ensure!(
             ckpt.psi.len() == cfg.k_max,
             "checkpoint K* {} != cfg.k_max {}",
@@ -404,6 +478,38 @@ impl super::pc::PcSampler {
         s.set_resume_point(ckpt.iteration);
         Ok(s)
     }
+
+    /// [`PcSampler::resume_chain`] for the **packed-only** path: the
+    /// checkpoint's flat z lands straight in the sampler's arena store
+    /// (or, with `z_file`, a file-backed
+    /// [`crate::hdp::pc::zstep::FileZ`] store) — no nested corpus and
+    /// no nested z are ever materialized. The recovered chain is
+    /// bit-identical to the uninterrupted one, and to a nested
+    /// [`PcSampler::resume_chain`] of the same checkpoint.
+    pub fn resume_chain_packed(
+        packed: std::sync::Arc<crate::corpus::PackedCorpus>,
+        cfg: crate::config::HdpConfig,
+        threads: usize,
+        seed: u64,
+        ckpt: &Checkpoint,
+        z_file: Option<&Path>,
+    ) -> Result<Self> {
+        ckpt.validate(&*packed)?;
+        anyhow::ensure!(
+            ckpt.psi.len() == cfg.k_max,
+            "checkpoint K* {} != cfg.k_max {}",
+            ckpt.psi.len(),
+            cfg.k_max
+        );
+        let mut s =
+            Self::from_packed_with_z(packed, cfg, threads, seed, ckpt.z.clone())?;
+        if let Some(path) = z_file {
+            s.move_z_to_file(path)?;
+        }
+        s.set_psi(&ckpt.psi);
+        s.set_resume_point(ckpt.iteration);
+        Ok(s)
+    }
 }
 
 #[cfg(test)]
@@ -411,6 +517,7 @@ mod tests {
     use super::*;
     use crate::config::HdpConfig;
     use crate::corpus::synthetic::HdpCorpusSpec;
+    use crate::corpus::Corpus;
     use crate::hdp::pc::PcSampler;
     use crate::hdp::Trainer;
     use std::sync::Arc;
@@ -461,7 +568,7 @@ mod tests {
         let mut resumed = PcSampler::resume(c.clone(), cfg, 2, 99, &ckpt).unwrap();
         // The resumed state reproduces the checkpoint exactly...
         assert_eq!(resumed.psi(), &ckpt.psi[..]);
-        assert_eq!(Trainer::assignments(&resumed), &ckpt.z[..]);
+        assert_eq!(resumed.z_nested(), ckpt.z_nested());
         let d0 = resumed.diagnostics();
         assert!((d0.log_likelihood - ll_before).abs() < 1e-6);
         // ...and keeps training sanely.
@@ -505,7 +612,11 @@ mod tests {
         let zfile = FileZ::from_nested(&dir.join("z.bin"), &z).unwrap();
         let ckpt =
             Checkpoint::from_filez(7, "pc-hdp", &[0.5, 0.25, 0.25], &zfile).unwrap();
-        assert_eq!(ckpt.z, z);
+        // The snapshot lands directly in the packed layout...
+        assert_eq!(ckpt.z, vec![0, 1, 1, 2, 2, 0]);
+        assert_eq!(ckpt.z_offsets, vec![0, 4, 4, 6]);
+        // ...and round-trips to the nested shape (empty doc retained).
+        assert_eq!(ckpt.z_nested(), z);
         assert_eq!(ckpt.iteration, 7);
         let path = dir.join("model.ckpt");
         ckpt.save(&path).unwrap();
@@ -523,14 +634,14 @@ mod tests {
     }
 
     fn sample_ckpt() -> Checkpoint {
-        Checkpoint {
-            iteration: 12,
-            sampler: "pc-hdp".to_string(),
-            psi: vec![0.5, 0.25, 0.25],
-            // Includes an empty document — the packed layout must
-            // retain it as a zero-length range.
-            z: vec![vec![0, 1, 1, 2], vec![], vec![2, 0]],
-        }
+        // Includes an empty document — the packed layout must retain
+        // it as a zero-length range.
+        Checkpoint::from_nested_z(
+            12,
+            "pc-hdp",
+            vec![0.5, 0.25, 0.25],
+            &[vec![0, 1, 1, 2], vec![], vec![2, 0]],
+        )
     }
 
     #[test]
@@ -620,7 +731,51 @@ mod tests {
         let resumed = PcSampler::resume_chain(c.clone(), cfg, 1, 5, &ckpt).unwrap();
         assert_eq!(Trainer::iterations_done(&resumed), 4);
         assert_eq!(resumed.psi(), &ckpt.psi[..]);
-        assert_eq!(Trainer::assignments(&resumed), &ckpt.z[..]);
+        assert_eq!(resumed.z_nested(), ckpt.z_nested());
+    }
+
+    #[test]
+    fn resume_chain_packed_is_bit_identical_to_nested() {
+        // The packed-only resume (arena and file-backed z) must
+        // continue the exact chain the nested resume continues.
+        let c = corpus();
+        let cfg = HdpConfig { k_max: 32, ..Default::default() };
+        let mut s = PcSampler::new(c.clone(), cfg, 2, 11).unwrap();
+        for _ in 0..4 {
+            s.step().unwrap();
+        }
+        let ckpt = s.checkpoint();
+        let packed = Arc::new(c.to_packed());
+        let mut nested = PcSampler::resume_chain(c.clone(), cfg, 2, 11, &ckpt).unwrap();
+        let mut arena =
+            PcSampler::resume_chain_packed(packed.clone(), cfg, 2, 11, &ckpt, None)
+                .unwrap();
+        let dir = std::env::temp_dir().join("hdp_ckpt_packed_resume_test");
+        let mut filed = PcSampler::resume_chain_packed(
+            packed,
+            cfg,
+            2,
+            11,
+            &ckpt,
+            Some(&dir.join("z.bin")),
+        )
+        .unwrap();
+        assert_eq!(arena.z_mode(), "arena");
+        assert_eq!(filed.z_mode(), "file");
+        for _ in 0..3 {
+            nested.step().unwrap();
+            arena.step().unwrap();
+            filed.step().unwrap();
+        }
+        assert_eq!(nested.z_nested(), arena.z_nested());
+        assert_eq!(nested.z_nested(), filed.z_nested());
+        assert_eq!(nested.psi(), arena.psi());
+        assert_eq!(nested.psi(), filed.psi());
+        assert_eq!(
+            nested.diagnostics().log_likelihood.to_bits(),
+            arena.diagnostics().log_likelihood.to_bits()
+        );
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

@@ -24,7 +24,7 @@ use crate::sparse::DocCountHist;
 
 use super::pc::lstep;
 use super::state::Assignments;
-use super::{DiagSnapshot, Trainer};
+use super::{DiagSnapshot, Trainer, ZView};
 
 /// The direct-assignment sampler.
 pub struct DaSampler {
@@ -192,6 +192,13 @@ impl DaSampler {
     }
 }
 
+impl DaSampler {
+    /// Nested view of the assignments (tests).
+    pub fn assignments(&self) -> &[Vec<u32>] {
+        &self.assign.z
+    }
+}
+
 impl Trainer for DaSampler {
     fn name(&self) -> &'static str {
         "da-hdp"
@@ -227,8 +234,8 @@ impl Trainer for DaSampler {
         }
     }
 
-    fn assignments(&self) -> &[Vec<u32>] {
-        &self.assign.z
+    fn z_view(&self) -> ZView<'_> {
+        ZView::Nested(&self.assign.z)
     }
 
     fn topic_word_rows(&self) -> Vec<Vec<(u32, u32)>> {
@@ -244,8 +251,8 @@ impl Trainer for DaSampler {
             .collect()
     }
 
-    fn corpus(&self) -> &Corpus {
-        &self.corpus
+    fn docs(&self) -> &dyn crate::corpus::CorpusView {
+        &*self.corpus
     }
 
     fn iterations_done(&self) -> usize {

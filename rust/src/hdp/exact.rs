@@ -22,7 +22,7 @@ use crate::sparse::DocTopics;
 
 use super::pc::psi::sample_psi;
 use super::state::Assignments;
-use super::{DiagSnapshot, Trainer};
+use super::{DiagSnapshot, Trainer, ZView};
 
 /// The dense Algorithm-1 sampler.
 pub struct ExactSampler {
@@ -145,6 +145,13 @@ impl ExactSampler {
     }
 }
 
+impl ExactSampler {
+    /// Nested view of the assignments (tests).
+    pub fn assignments(&self) -> &[Vec<u32>] {
+        &self.assign.z
+    }
+}
+
 impl Trainer for ExactSampler {
     fn name(&self) -> &'static str {
         "exact-hdp"
@@ -184,8 +191,8 @@ impl Trainer for ExactSampler {
         }
     }
 
-    fn assignments(&self) -> &[Vec<u32>] {
-        &self.assign.z
+    fn z_view(&self) -> ZView<'_> {
+        ZView::Nested(&self.assign.z)
     }
 
     fn topic_word_rows(&self) -> Vec<Vec<(u32, u32)>> {
@@ -201,8 +208,8 @@ impl Trainer for ExactSampler {
             .collect()
     }
 
-    fn corpus(&self) -> &Corpus {
-        &self.corpus
+    fn docs(&self) -> &dyn crate::corpus::CorpusView {
+        &*self.corpus
     }
 
     fn iterations_done(&self) -> usize {

@@ -27,7 +27,92 @@ pub mod pclda;
 pub mod ssm;
 pub mod state;
 
-use crate::corpus::Corpus;
+use crate::corpus::CorpusView;
+
+/// Borrowed view of a sampler's topic assignments, in whichever layout
+/// the sampler actually keeps them — the `Trainer` API's replacement
+/// for the old `assignments() -> &[Vec<u32>]` accessor that forced
+/// every sampler to hold a resident nested `z`.
+///
+/// * [`ZView::Nested`] — per-document vectors (the reference samplers'
+///   internal layout).
+/// * [`ZView::Packed`] — one flat CSR arena plus `(D+1)` doc offsets
+///   (the packed-only training path). The arena is a [`Cow`] so
+///   resident arenas borrow and out-of-core stores
+///   ([`pc::zstep::FileZ`]) can hand back an owned read without ever
+///   materializing nested per-document vectors.
+///
+/// [`Cow`]: std::borrow::Cow
+pub enum ZView<'a> {
+    /// `z[d][i]` = topic of token `i` in document `d`.
+    Nested(&'a [Vec<u32>]),
+    /// Flat z arena + CSR doc offsets (layout of
+    /// [`crate::corpus::PackedCorpus`] and checkpoint v2).
+    Packed {
+        /// The flat assignments, packed in document order.
+        z: std::borrow::Cow<'a, [u32]>,
+        /// Doc offsets into `z`, length `D + 1`, starting at 0.
+        offsets: std::borrow::Cow<'a, [u64]>,
+    },
+}
+
+impl ZView<'_> {
+    /// Number of documents `D`.
+    pub fn num_docs(&self) -> usize {
+        match self {
+            ZView::Nested(z) => z.len(),
+            ZView::Packed { offsets, .. } => offsets.len().saturating_sub(1),
+        }
+    }
+
+    /// Total assigned tokens.
+    pub fn num_tokens(&self) -> u64 {
+        match self {
+            ZView::Nested(z) => z.iter().map(|d| d.len() as u64).sum(),
+            ZView::Packed { z, .. } => z.len() as u64,
+        }
+    }
+
+    /// Assignments of document `d`.
+    pub fn doc(&self, d: usize) -> &[u32] {
+        match self {
+            ZView::Nested(z) => &z[d],
+            ZView::Packed { z, offsets } => {
+                &z[offsets[d] as usize..offsets[d + 1] as usize]
+            }
+        }
+    }
+
+    /// Per-document iterator over the assignments, in document order.
+    pub fn iter_docs(&self) -> impl Iterator<Item = &[u32]> + '_ {
+        (0..self.num_docs()).map(move |d| self.doc(d))
+    }
+
+    /// Materialize nested per-document vectors (tests and the nested
+    /// resume path — the packed-only path never calls this).
+    pub fn to_nested(&self) -> Vec<Vec<u32>> {
+        self.iter_docs().map(<[u32]>::to_vec).collect()
+    }
+
+    /// Materialize the packed form: `(flat z, doc offsets)`.
+    pub fn to_packed(&self) -> (Vec<u32>, Vec<u64>) {
+        match self {
+            ZView::Nested(z) => {
+                let mut offsets = Vec::with_capacity(z.len() + 1);
+                let mut off = 0u64;
+                offsets.push(0);
+                let mut flat = Vec::new();
+                for zd in z.iter() {
+                    off += zd.len() as u64;
+                    offsets.push(off);
+                    flat.extend_from_slice(zd);
+                }
+                (flat, offsets)
+            }
+            ZView::Packed { z, offsets } => (z.to_vec(), offsets.to_vec()),
+        }
+    }
+}
 
 /// Per-iteration diagnostic snapshot (the quantities of the paper's
 /// Fig 1 traces).
@@ -58,15 +143,20 @@ pub trait Trainer {
     /// Compute the diagnostic snapshot for the current state.
     fn diagnostics(&self) -> DiagSnapshot;
 
-    /// Topic assignments view: `z[d][i]` topic of token `i` in doc `d`.
-    fn assignments(&self) -> &[Vec<u32>];
+    /// Topic assignments, in the sampler's own layout ([`ZView`]).
+    /// Nested samplers borrow their per-document vectors; packed-only
+    /// samplers hand out the flat CSR arena (or an owned read of the
+    /// file-backed store) — no caller forces a nested materialization.
+    fn z_view(&self) -> ZView<'_>;
 
     /// Sparse topic-word counts: sorted `(word, count)` rows per topic.
     /// Row indices are sampler-internal topic ids.
     fn topic_word_rows(&self) -> Vec<Vec<(u32, u32)>>;
 
-    /// The corpus being trained on.
-    fn corpus(&self) -> &Corpus;
+    /// The corpus being trained on, as a layout-agnostic view. The
+    /// packed-only samplers return the packed arena; the reference
+    /// samplers return their nested corpus.
+    fn docs(&self) -> &dyn CorpusView;
 
     /// Iterations completed so far.
     fn iterations_done(&self) -> usize;
@@ -91,12 +181,12 @@ pub trait Trainer {
     /// family) override this with the exact resumable state.
     fn checkpoint(&self) -> checkpoint::Checkpoint {
         let k = self.topic_word_rows().len().max(1);
-        checkpoint::Checkpoint {
-            iteration: self.iterations_done() as u64,
-            sampler: self.name().to_string(),
-            psi: vec![1.0 / k as f64; k],
-            z: self.assignments().to_vec(),
-        }
+        checkpoint::Checkpoint::from_z_view(
+            self.iterations_done() as u64,
+            self.name(),
+            vec![1.0 / k as f64; k],
+            &self.z_view(),
+        )
     }
 }
 

@@ -51,32 +51,58 @@ pub mod psi;
 pub mod zstep;
 
 use crate::config::HdpConfig;
+use crate::corpus::io::PackedCorpusFile;
 use crate::corpus::{Corpus, PackedCorpus};
 use crate::diagnostics::loglik;
 use crate::metrics::PhaseTimers;
 use crate::par::{self, Schedule, Sharding, WorkerPool};
 use crate::rng::Pcg64;
 use crate::simd::Kernels;
-use crate::sparse::{DocCountHist, MergeScratch, TopicWordAcc, TopicWordRows};
+use crate::sparse::{DocCountHist, DocTopics, MergeScratch, TopicWordAcc, TopicWordRows};
+use std::borrow::Cow;
 use std::sync::Arc;
 
 use super::state::Assignments;
-use super::{DiagSnapshot, Trainer};
+use super::{DiagSnapshot, Trainer, ZView};
+
+/// Where a [`PcSampler`]'s topic assignments live. The chain is
+/// **bit-identical** under every layout (per-document RNG streams) —
+/// this is purely a residency choice.
+pub(crate) enum SamplerZ {
+    /// Per-document vectors — the layout [`PcSampler::new`] /
+    /// [`PcSampler::with_assignments`] start in (+24 B/doc of `Vec`
+    /// headers next to the packed token arena).
+    Nested(Vec<Vec<u32>>),
+    /// One flat arena over the packed corpus's CSR doc offsets — the
+    /// packed-only layout ([`PcSampler::from_packed`]): z costs exactly
+    /// 4 B/token and no per-document allocation exists.
+    Arena(Vec<u32>),
+    /// File-backed arena ([`zstep::FileZ`]) — fully out-of-core: only
+    /// the `(D + 1)` offsets stay resident.
+    File(zstep::FileZ),
+}
 
 /// The Algorithm-2 sampler.
 pub struct PcSampler {
-    corpus: Arc<Corpus>,
-    /// Packed CSR twin of `corpus`: the token arena every z sweep reads
-    /// (contiguous per-document slices; contiguous blocks for the
-    /// streamed path). The nested form stays for the `Trainer` API, so
-    /// tokens are currently held twice (+4 B/token); retiring the
-    /// nested copy behind `DocAccess` is the "out-of-core sampler
-    /// state" ROADMAP follow-on.
+    /// The packed CSR corpus: **the only corpus representation the
+    /// sampler holds**. Every sweep reads its token arena (contiguous
+    /// per-document slices; contiguous blocks for the streamed path)
+    /// and the `Trainer` API serves document/vocab views straight from
+    /// it — no nested `Corpus` twin.
     packed: Arc<PackedCorpus>,
     cfg: HdpConfig,
     threads: usize,
     root: Pcg64,
-    assign: Assignments,
+    /// Topic assignments, in whichever layout ([`SamplerZ`]) this
+    /// sampler was built with.
+    z: SamplerZ,
+    /// Per-document sparse topic counts `m` (always resident — they
+    /// gate every doc's conditional and are `O(topics-per-doc)`).
+    m: Vec<DocTopics>,
+    /// Optional out-of-core token source: when set, packed-only sweeps
+    /// read token blocks from the file (mmap or positioned reads)
+    /// instead of the resident arena.
+    token_file: Option<Arc<PackedCorpusFile>>,
     /// Global topic distribution over `k_max` topics (last = flag K*).
     psi: Vec<f64>,
     /// Topic-word statistic, rebuilt each iteration. Shared with the
@@ -144,6 +170,8 @@ impl PcSampler {
     }
 
     /// Create from explicit initial assignments (tests, warm starts).
+    /// The nested corpus is packed and dropped on the way in — the
+    /// sampler itself never holds it.
     pub fn with_assignments(
         corpus: Arc<Corpus>,
         cfg: HdpConfig,
@@ -151,21 +179,104 @@ impl PcSampler {
         seed: u64,
         assign: Assignments,
     ) -> anyhow::Result<Self> {
+        let packed = Arc::new(corpus.to_packed());
+        drop(corpus);
+        let Assignments { z, m } = assign;
+        Self::init(packed, SamplerZ::Nested(z), m, cfg, threads, seed)
+    }
+
+    /// **Packed-only** construction with single-topic initialization:
+    /// z lives in a flat arena ([`SamplerZ::Arena`]) for the whole run
+    /// and no nested `Corpus` or nested z is ever materialized. The
+    /// chain is bit-identical to [`PcSampler::new`] on the nested form
+    /// of the same corpus.
+    pub fn from_packed(
+        packed: Arc<PackedCorpus>,
+        cfg: HdpConfig,
+        threads: usize,
+        seed: u64,
+    ) -> anyhow::Result<Self> {
+        let z = vec![0u32; packed.num_tokens() as usize];
+        let m = (0..packed.num_docs())
+            .map(|d| {
+                let mut md = DocTopics::with_capacity(4);
+                for _ in 0..packed.doc_len(d) {
+                    md.inc(0);
+                }
+                md
+            })
+            .collect();
+        Self::init(packed, SamplerZ::Arena(z), m, cfg, threads, seed)
+    }
+
+    /// Packed-only construction from an explicit flat z arena in the
+    /// corpus's CSR layout (checkpoint resume: v2 stores exactly this
+    /// shape, so resume never inflates nested state). `m` is rebuilt
+    /// from the arena.
+    pub fn from_packed_with_z(
+        packed: Arc<PackedCorpus>,
+        cfg: HdpConfig,
+        threads: usize,
+        seed: u64,
+        z: Vec<u32>,
+    ) -> anyhow::Result<Self> {
+        anyhow::ensure!(
+            z.len() as u64 == packed.num_tokens(),
+            "z arena len {} != corpus tokens {}",
+            z.len(),
+            packed.num_tokens()
+        );
+        let m = packed
+            .doc_offsets()
+            .windows(2)
+            .map(|w| z[w[0] as usize..w[1] as usize].iter().copied().collect::<DocTopics>())
+            .collect();
+        Self::init(packed, SamplerZ::Arena(z), m, cfg, threads, seed)
+    }
+
+    /// Shared constructor: every layout funnels through here, so the
+    /// initial `n`/`l`/`Ψ` (and all downstream randomness) are
+    /// layout-independent.
+    fn init(
+        packed: Arc<PackedCorpus>,
+        z: SamplerZ,
+        m: Vec<DocTopics>,
+        cfg: HdpConfig,
+        threads: usize,
+        seed: u64,
+    ) -> anyhow::Result<Self> {
         cfg.validate()?;
         let root = Pcg64::with_stream(seed, 0x8d9);
-        // n from the initial assignments.
-        let mut acc = TopicWordAcc::with_capacity(corpus.num_tokens() as usize / 2 + 16);
-        for (doc, zd) in corpus.docs.iter().zip(&assign.z) {
-            for (&v, &k) in doc.iter().zip(zd) {
-                acc.add(k, v, 1);
+        // n from the initial assignments — token order is document
+        // order under every layout, so the accumulation sequence (and
+        // hence `n`) is bit-identical across layouts.
+        let mut acc = TopicWordAcc::with_capacity(packed.num_tokens() as usize / 2 + 16);
+        match &z {
+            SamplerZ::Nested(zs) => {
+                for (d, zd) in zs.iter().enumerate() {
+                    for (&v, &k) in packed.doc(d).iter().zip(zd) {
+                        acc.add(k, v, 1);
+                    }
+                }
+            }
+            SamplerZ::Arena(flat) => {
+                for (&v, &k) in packed.tokens().iter().zip(flat) {
+                    acc.add(k, v, 1);
+                }
+            }
+            SamplerZ::File(f) => {
+                let flat = f.to_flat()?;
+                for (&v, &k) in packed.tokens().iter().zip(&flat) {
+                    acc.add(k, v, 1);
+                }
             }
         }
         let n = Arc::new(TopicWordRows::merge_from(cfg.k_max, &mut [acc]));
         // Initial Ψ: condition on l implied by "every document drew its
         // topics from Ψ at least once".
         let mut hist = DocCountHist::new(cfg.k_max);
-        for m in &assign.m {
-            hist.record_doc(m.entries());
+        for md in &m {
+            hist.record_doc(md.entries());
         }
         hist.finish();
         let mut l = vec![0u64; cfg.k_max];
@@ -175,10 +286,9 @@ impl PcSampler {
         let mut psi = vec![0.0; cfg.k_max];
         let mut rng = root.stream(0x7051);
         psi::sample_psi(&mut rng, &l, cfg.gamma, &mut psi);
-        let weights = corpus.doc_weights();
+        let weights = packed.doc_weights();
         let doc_plan = Sharding::weighted(&weights, threads);
         let pool = Arc::new(WorkerPool::new(threads));
-        let packed = Arc::new(corpus.to_packed());
         // One scratch per pool slot — the pool's slot bound is
         // independent of the shard plan, so no resizing on plan swaps.
         // The accumulator hint comes from the plan's affine stripe
@@ -191,12 +301,13 @@ impl PcSampler {
             .map(|_| zstep::ShardScratch::with_pair_hint(cfg.k_max, pair_hint))
             .collect();
         Ok(Self {
-            corpus,
             packed,
             cfg,
             threads,
             root,
-            assign,
+            z,
+            m,
+            token_file: None,
             psi,
             n,
             l,
@@ -374,7 +485,7 @@ impl PcSampler {
     fn first_touch_scratch(&mut self) {
         let slots = self.pool.slots();
         let plan = self.block_plan.as_ref().unwrap_or(&self.doc_plan);
-        let weights = self.corpus.doc_weights();
+        let weights = self.packed.doc_weights();
         let pair_hint = zstep::plan_pair_hint(plan, &weights, slots);
         let k_max = self.cfg.k_max;
         let slot_plan = Sharding::even(slots, slots);
@@ -404,7 +515,7 @@ impl PcSampler {
             assert_eq!(s.start, next, "plan must be contiguous from 0");
             next = s.end;
         }
-        assert_eq!(next, self.corpus.num_docs(), "plan must cover all documents");
+        assert_eq!(next, self.packed.num_docs(), "plan must cover all documents");
         self.doc_plan = plan;
         self.rebuild_stream_state();
     }
@@ -467,7 +578,7 @@ impl PcSampler {
             return;
         }
         let plan = self.block_plan.as_ref().unwrap_or(&self.doc_plan);
-        let weights = self.corpus.doc_weights();
+        let weights = self.packed.doc_weights();
         let pair_hint = zstep::plan_pair_hint(plan, &weights, self.pool.slots());
         self.scratch = (0..self.pool.slots())
             .map(|_| zstep::ShardScratch::with_pair_hint(self.cfg.k_max, pair_hint))
@@ -476,7 +587,156 @@ impl PcSampler {
 
     /// Mean per-token sparse work of the last iteration (eq. 29 audit).
     pub fn mean_sparse_work(&self) -> f64 {
-        self.sparse_work as f64 / self.corpus.num_tokens().max(1) as f64
+        self.sparse_work as f64 / self.packed.num_tokens().max(1) as f64
+    }
+
+    /// Which z layout is active: `"nested"`, `"arena"`, or `"file"`.
+    pub fn z_mode(&self) -> &'static str {
+        match &self.z {
+            SamplerZ::Nested(_) => "nested",
+            SamplerZ::Arena(_) => "arena",
+            SamplerZ::File(_) => "file",
+        }
+    }
+
+    /// Move the z store into a file-backed arena at `path`
+    /// ([`SamplerZ::File`]) — the fully out-of-core mode: only the
+    /// `(D + 1)` offsets stay resident. Safe at any step boundary; the
+    /// chain continues bit-identical.
+    pub fn move_z_to_file(&mut self, path: &std::path::Path) -> anyhow::Result<()> {
+        let offsets = self.packed.doc_offsets();
+        let f = match &self.z {
+            SamplerZ::Nested(zs) => {
+                let mut flat = Vec::with_capacity(self.packed.num_tokens() as usize);
+                for zd in zs {
+                    flat.extend_from_slice(zd);
+                }
+                zstep::FileZ::from_flat(path, &flat, offsets)?
+            }
+            SamplerZ::Arena(flat) => zstep::FileZ::from_flat(path, flat, offsets)?,
+            SamplerZ::File(old) => zstep::FileZ::from_flat(path, &old.to_flat()?, offsets)?,
+        };
+        self.z = SamplerZ::File(f);
+        Ok(())
+    }
+
+    /// Flush a file-backed z store to stable storage (`fdatasync`) —
+    /// the checkpoint-boundary durability point. No-op for resident
+    /// layouts.
+    pub fn sync_z_store(&self) {
+        if let SamplerZ::File(f) = &self.z {
+            f.sync().expect("z store sync");
+        }
+    }
+
+    /// Attach (or detach) an out-of-core token source: packed-only
+    /// sweeps then read token blocks from the file — zero-copy when it
+    /// is mmap-backed, positioned reads otherwise — instead of the
+    /// resident arena. The file must describe the same corpus
+    /// (identical doc offsets). Nested-layout resident sweeps ignore
+    /// it. Chains are bit-identical with or without a token file.
+    pub fn set_token_file(&mut self, file: Option<Arc<PackedCorpusFile>>) {
+        if let Some(f) = &file {
+            assert_eq!(
+                f.doc_offsets(),
+                self.packed.doc_offsets(),
+                "token file / corpus layout mismatch"
+            );
+        }
+        self.token_file = file;
+    }
+
+    /// Whether an out-of-core token source is attached.
+    pub fn token_file_active(&self) -> bool {
+        self.token_file.is_some()
+    }
+
+    /// Bytes held by the packed token arena + CSR offsets.
+    pub fn arena_bytes(&self) -> u64 {
+        self.packed.arena_bytes()
+    }
+
+    /// Resident bytes of the z store: per-document `Vec` headers
+    /// included for the nested layout; the file layout holds only the
+    /// `(D + 1)` offsets.
+    pub fn z_bytes(&self) -> u64 {
+        match &self.z {
+            SamplerZ::Nested(zs) => {
+                zs.iter().map(|zd| 4 * zd.len() as u64 + 24).sum::<u64>() + 24
+            }
+            SamplerZ::Arena(flat) => 4 * flat.len() as u64 + 24,
+            SamplerZ::File(f) => 8 * f.offsets().len() as u64 + 24,
+        }
+    }
+
+    /// Resident sampler-state bytes: token arena + z store. Per-slot
+    /// scratch and stream buffers are accounted separately
+    /// ([`PcSampler::stream_buf_bytes`]).
+    pub fn resident_state_bytes(&self) -> u64 {
+        self.arena_bytes() + self.z_bytes()
+    }
+
+    /// Nested copy of the assignments (tests and reporting — the
+    /// packed-only training path never calls this).
+    pub fn z_nested(&self) -> Vec<Vec<u32>> {
+        Trainer::z_view(self).to_nested()
+    }
+
+    /// Check the z/m/corpus consistency invariant (tests / debug).
+    pub fn check_consistency(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(self.m.len() == self.packed.num_docs(), "m/doc count mismatch");
+        let view = Trainer::z_view(self);
+        anyhow::ensure!(
+            view.num_docs() == self.packed.num_docs(),
+            "z/doc count mismatch"
+        );
+        for d in 0..self.packed.num_docs() {
+            let zd = view.doc(d);
+            anyhow::ensure!(
+                zd.len() == self.packed.doc_len(d),
+                "doc {d}: token count mismatch"
+            );
+            let rebuilt: DocTopics = zd.iter().copied().collect();
+            let md = &self.m[d];
+            anyhow::ensure!(rebuilt.total() == md.total(), "doc {d}: m total mismatch");
+            for (k, c) in rebuilt.iter() {
+                anyhow::ensure!(
+                    md.get(k) == c,
+                    "doc {d}: m[{k}] = {} but z implies {c}",
+                    md.get(k)
+                );
+            }
+        }
+        Ok(())
+    }
+}
+
+/// One streamed z sweep over an arbitrary token source — the shared
+/// dispatch of the packed-only (arena/file) layouts, which always run
+/// the streaming machinery (over the document plan when no block plan
+/// is set; bit-identical either way).
+#[allow(clippy::too_many_arguments)]
+fn run_packed_sweep<S: zstep::ZStore + ?Sized>(
+    sweep: &zstep::ZSweep<'_>,
+    token_file: Option<&PackedCorpusFile>,
+    packed: &PackedCorpus,
+    store: &S,
+    m: &mut [DocTopics],
+    blocks: &Sharding,
+    prefetch: bool,
+    pool: &Arc<WorkerPool>,
+    scratch: &mut [zstep::ShardScratch],
+    schedule: Schedule,
+) {
+    match token_file {
+        Some(tf) if prefetch => {
+            sweep.run_streamed_prefetched(tf, store, m, blocks, pool, scratch)
+        }
+        Some(tf) => sweep.run_streamed(tf, store, m, blocks, &**pool, scratch, schedule),
+        None if prefetch => {
+            sweep.run_streamed_prefetched(packed, store, m, blocks, pool, scratch)
+        }
+        None => sweep.run_streamed(packed, store, m, blocks, &**pool, scratch, schedule),
     }
 }
 
@@ -494,7 +754,7 @@ impl Trainer for PcSampler {
         use std::time::Instant;
         let step_t0 = Instant::now();
         let iter = self.iteration as u64 + 1;
-        let vocab = self.corpus.vocab_size();
+        let vocab = self.packed.vocab_size();
         let root = self.root.clone();
         let spawns0 = par::stats::thread_spawns();
         let jobs0 = self.pool.jobs_run();
@@ -553,36 +813,67 @@ impl Trainer for PcSampler {
         let schedule =
             if self.slot_affine { Schedule::SlotAffine } else { Schedule::Steal };
         let t0 = Instant::now();
-        match &self.block_plan {
-            // Streamed + prefetched: block t+1's I/O cooks on the pool
-            // while block t sweeps. Bit-identical to every other form
-            // (per-document RNG streams).
-            Some(blocks) if self.stream_prefetch => sweep.run_streamed_prefetched(
-                &*self.packed,
-                &zstep::NestedZ::new(&mut self.assign.z),
-                &mut self.assign.m,
-                blocks,
+        match &mut self.z {
+            SamplerZ::Nested(zs) => match &self.block_plan {
+                // Streamed + prefetched: block t+1's I/O cooks on the
+                // pool while block t sweeps. Bit-identical to every
+                // other form (per-document RNG streams).
+                Some(blocks) if self.stream_prefetch => sweep.run_streamed_prefetched(
+                    &*self.packed,
+                    &zstep::NestedZ::new(zs),
+                    &mut self.m,
+                    blocks,
+                    &self.pool,
+                    &mut self.scratch,
+                ),
+                // Streamed: block-refined plan, per-slot hot z buffers
+                // over the resident assignments. Bit-identical to the
+                // resident sweep (per-document RNG streams).
+                Some(blocks) => sweep.run_streamed(
+                    &*self.packed,
+                    &zstep::NestedZ::new(zs),
+                    &mut self.m,
+                    blocks,
+                    &*self.pool,
+                    &mut self.scratch,
+                    schedule,
+                ),
+                None => sweep.run_with_scratch_sched(
+                    &*self.packed,
+                    zs,
+                    &mut self.m,
+                    &self.doc_plan,
+                    &*self.pool,
+                    &mut self.scratch,
+                    schedule,
+                ),
+            },
+            // Packed-only layouts always run the streaming machinery —
+            // over the block plan when streaming is on, otherwise over
+            // the document plan itself (its shards are contiguous and
+            // cover 0..D, so it is a valid block plan). Bit-identical
+            // to the resident nested sweep.
+            SamplerZ::Arena(flat) => run_packed_sweep(
+                &sweep,
+                self.token_file.as_deref(),
+                &self.packed,
+                &zstep::ArenaZ::new(flat, self.packed.doc_offsets()),
+                &mut self.m,
+                self.block_plan.as_ref().unwrap_or(&self.doc_plan),
+                self.stream_prefetch,
                 &self.pool,
-                &mut self.scratch,
-            ),
-            // Streamed: block-refined plan, per-slot hot z buffers over
-            // the resident assignments. Bit-identical to the resident
-            // sweep (per-document RNG streams).
-            Some(blocks) => sweep.run_streamed(
-                &*self.packed,
-                &zstep::NestedZ::new(&mut self.assign.z),
-                &mut self.assign.m,
-                blocks,
-                &*self.pool,
                 &mut self.scratch,
                 schedule,
             ),
-            None => sweep.run_with_scratch_sched(
-                &*self.packed,
-                &mut self.assign.z,
-                &mut self.assign.m,
-                &self.doc_plan,
-                &*self.pool,
+            SamplerZ::File(f) => run_packed_sweep(
+                &sweep,
+                self.token_file.as_deref(),
+                &self.packed,
+                f,
+                &mut self.m,
+                self.block_plan.as_ref().unwrap_or(&self.doc_plan),
+                self.stream_prefetch,
+                &self.pool,
                 &mut self.scratch,
                 schedule,
             ),
@@ -665,6 +956,11 @@ impl Trainer for PcSampler {
         self.timers.incr("thread_spawns", par::stats::thread_spawns() - spawns0);
         self.timers.incr("pool_jobs", self.pool.jobs_run() - jobs0);
         self.timers.incr("scratch_allocs", par::stats::scratch_allocs() - allocs0);
+        // Residency gauges (set, not accumulated — the z store can
+        // change layout mid-run via `move_z_to_file`).
+        self.timers.set(PhaseTimers::RESIDENT_BYTES, self.resident_state_bytes());
+        self.timers.set(PhaseTimers::ARENA_BYTES, self.arena_bytes());
+        self.timers.set(PhaseTimers::Z_BYTES, self.z_bytes());
         self.iteration += 1;
         Ok(())
     }
@@ -672,15 +968,30 @@ impl Trainer for PcSampler {
     fn diagnostics(&self) -> DiagSnapshot {
         let rows: Vec<Vec<(u32, u32)>> =
             (0..self.cfg.k_max).map(|k| self.n.row(k).to_vec()).collect();
-        let ll = loglik::joint_loglik(
-            &rows,
-            &self.assign.z,
-            &self.psi,
-            self.cfg.alpha,
-            self.cfg.beta,
-            self.corpus.vocab_size(),
-            &*self.pool,
-        );
+        // word + CRP terms, scored in the z store's own layout —
+        // `crp_loglik_packed` is bit-identical to the nested
+        // `crp_loglik` (same sharding plan, same accumulation order).
+        let wl = loglik::word_loglik(&rows, self.cfg.beta, self.packed.vocab_size());
+        let crp = match &self.z {
+            SamplerZ::Nested(zs) => {
+                loglik::crp_loglik(zs, &self.psi, self.cfg.alpha, &*self.pool)
+            }
+            SamplerZ::Arena(flat) => loglik::crp_loglik_packed(
+                flat,
+                self.packed.doc_offsets(),
+                &self.psi,
+                self.cfg.alpha,
+                &*self.pool,
+            ),
+            SamplerZ::File(f) => loglik::crp_loglik_packed(
+                &f.to_flat().expect("z store read"),
+                f.offsets(),
+                &self.psi,
+                self.cfg.alpha,
+                &*self.pool,
+            ),
+        };
+        let ll = wl + crp;
         let mut tokens_per_topic: Vec<u64> =
             self.n.row_totals().iter().copied().filter(|&t| t > 0).collect();
         tokens_per_topic.sort_unstable_by(|a, b| b.cmp(a));
@@ -693,16 +1004,26 @@ impl Trainer for PcSampler {
         }
     }
 
-    fn assignments(&self) -> &[Vec<u32>] {
-        &self.assign.z
+    fn z_view(&self) -> ZView<'_> {
+        match &self.z {
+            SamplerZ::Nested(zs) => ZView::Nested(zs),
+            SamplerZ::Arena(flat) => ZView::Packed {
+                z: Cow::Borrowed(flat),
+                offsets: Cow::Borrowed(self.packed.doc_offsets()),
+            },
+            SamplerZ::File(f) => ZView::Packed {
+                z: Cow::Owned(f.to_flat().expect("z store read")),
+                offsets: Cow::Borrowed(f.offsets()),
+            },
+        }
     }
 
     fn topic_word_rows(&self) -> Vec<Vec<(u32, u32)>> {
         (0..self.cfg.k_max).map(|k| self.n.row(k).to_vec()).collect()
     }
 
-    fn corpus(&self) -> &Corpus {
-        &self.corpus
+    fn docs(&self) -> &dyn crate::corpus::CorpusView {
+        &*self.packed
     }
 
     fn iterations_done(&self) -> usize {
@@ -749,7 +1070,7 @@ mod tests {
         for _ in 0..5 {
             s.step().unwrap();
             assert_eq!(s.n().total(), total, "token conservation");
-            s.assign.check_consistency(&corpus).unwrap();
+            s.check_consistency().unwrap();
             let psum: f64 = s.psi().iter().sum();
             assert!((psum - 1.0).abs() < 1e-9);
         }
@@ -815,7 +1136,7 @@ mod tests {
             for _ in 0..4 {
                 s.step().unwrap();
             }
-            (s.assignments().to_vec(), s.l().to_vec(), s.psi().to_vec())
+            (s.z_nested(), s.l().to_vec(), s.psi().to_vec())
         };
         let (z_ref, l_ref, psi_ref) = run(1, false, false, false);
         for &threads in &[1usize, 2, 3, 7] {
@@ -857,7 +1178,7 @@ mod tests {
                     ds.log_likelihood.to_bits(),
                     "threads={threads} iter={it}"
                 );
-                assert_eq!(pip.assignments(), seq.assignments(), "iter={it}");
+                assert_eq!(pip.z_nested(), seq.z_nested(), "iter={it}");
                 assert_eq!(pip.l(), seq.l(), "iter={it}");
                 assert_eq!(pip.psi(), seq.psi(), "iter={it}");
             }
@@ -877,7 +1198,7 @@ mod tests {
             a.set_pipelined(it % 2 == 0); // flip every step
             a.step().unwrap();
             b.step().unwrap();
-            assert_eq!(a.assignments(), b.assignments(), "iter={it}");
+            assert_eq!(a.z_nested(), b.z_nested(), "iter={it}");
             assert_eq!(a.psi(), b.psi(), "iter={it}");
         }
     }
@@ -981,12 +1302,12 @@ mod tests {
             resident.step().unwrap();
             streamed.step().unwrap();
             prefetched.step().unwrap();
-            assert_eq!(streamed.assignments(), resident.assignments(), "iter={it}");
+            assert_eq!(streamed.z_nested(), resident.z_nested(), "iter={it}");
             assert_eq!(streamed.l(), resident.l(), "iter={it}");
             assert_eq!(streamed.psi(), resident.psi(), "iter={it}");
             assert_eq!(
-                prefetched.assignments(),
-                resident.assignments(),
+                prefetched.z_nested(),
+                resident.z_nested(),
                 "prefetched iter={it}"
             );
             assert_eq!(prefetched.psi(), resident.psi(), "prefetched iter={it}");
@@ -1025,14 +1346,14 @@ mod tests {
         for it in 0..2 {
             resident.step().unwrap();
             streamed.step().unwrap();
-            assert_eq!(streamed.assignments(), resident.assignments(), "post-flip iter={it}");
+            assert_eq!(streamed.z_nested(), resident.z_nested(), "post-flip iter={it}");
             assert_eq!(streamed.psi(), resident.psi(), "post-flip iter={it}");
         }
         s_consistency(&streamed, &corpus);
     }
 
     fn s_consistency(s: &PcSampler, corpus: &Arc<Corpus>) {
-        s.assign.check_consistency(corpus).unwrap();
+        s.check_consistency().unwrap();
         assert_eq!(s.n().total(), corpus.num_tokens());
     }
 
@@ -1070,12 +1391,84 @@ mod tests {
                 assert_eq!(s.timers.counter(PhaseTimers::KERNEL_SCAN_TOKENS), 0);
             }
             let _ = s.set_pinning(false);
-            (s.assignments().to_vec(), s.l().to_vec(), s.psi().to_vec())
+            (s.z_nested(), s.l().to_vec(), s.psi().to_vec())
         };
         let reference = run(false, false);
         for &(simd, pin) in &[(true, false), (false, true), (true, true)] {
             assert_eq!(run(simd, pin), reference, "simd={simd} pin={pin}");
         }
+    }
+
+    #[test]
+    fn packed_only_chain_matches_nested() {
+        // Arena- and file-backed packed-only samplers (no nested
+        // corpus, no nested z — ISSUE 10's tentpole) must be
+        // bit-identical to the nested reference, diagnostics included,
+        // and must actually retire the duplicated residency.
+        let corpus = tiny_corpus(12);
+        let packed = Arc::new(corpus.to_packed());
+        let mut nested = PcSampler::new(corpus.clone(), cfg(), 3, 33).unwrap();
+        assert_eq!(nested.z_mode(), "nested");
+        let mut arena = PcSampler::from_packed(packed.clone(), cfg(), 3, 33).unwrap();
+        assert_eq!(arena.z_mode(), "arena");
+        let dir = std::env::temp_dir().join("hdp_pc_packed_only_test");
+        let mut filed = PcSampler::from_packed(packed.clone(), cfg(), 3, 33).unwrap();
+        filed.move_z_to_file(&dir.join("z.bin")).unwrap();
+        assert_eq!(filed.z_mode(), "file");
+        for it in 0..4 {
+            nested.step().unwrap();
+            arena.step().unwrap();
+            filed.step().unwrap();
+            assert_eq!(arena.z_nested(), nested.z_nested(), "arena iter={it}");
+            assert_eq!(filed.z_nested(), nested.z_nested(), "file iter={it}");
+            assert_eq!(arena.l(), nested.l(), "arena iter={it}");
+            assert_eq!(arena.psi(), nested.psi(), "arena iter={it}");
+            assert_eq!(filed.psi(), nested.psi(), "file iter={it}");
+            let (dn, da, df) =
+                (nested.diagnostics(), arena.diagnostics(), filed.diagnostics());
+            assert_eq!(
+                da.log_likelihood.to_bits(),
+                dn.log_likelihood.to_bits(),
+                "arena loglik iter={it}"
+            );
+            assert_eq!(
+                df.log_likelihood.to_bits(),
+                dn.log_likelihood.to_bits(),
+                "file loglik iter={it}"
+            );
+        }
+        arena.check_consistency().unwrap();
+        filed.check_consistency().unwrap();
+        // The arena layout retires the nested-z duplication; the file
+        // layout retires the resident z arena too.
+        assert!(arena.resident_state_bytes() < nested.resident_state_bytes());
+        assert!(filed.resident_state_bytes() < arena.resident_state_bytes());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn packed_only_streaming_and_prefetch_match() {
+        // The packed-only layouts compose with the streaming/prefetch
+        // knobs: every combination stays on the reference chain.
+        let corpus = tiny_corpus(13);
+        let packed = Arc::new(corpus.to_packed());
+        let mut reference = PcSampler::new(corpus.clone(), cfg(), 2, 44).unwrap();
+        let mut streamed = PcSampler::from_packed(packed.clone(), cfg(), 2, 44).unwrap();
+        streamed.set_streaming(Some(4));
+        let mut prefetched = PcSampler::from_packed(packed, cfg(), 2, 44).unwrap();
+        prefetched.set_streaming(Some(4));
+        prefetched.set_stream_prefetch(true);
+        for it in 0..3 {
+            reference.step().unwrap();
+            streamed.step().unwrap();
+            prefetched.step().unwrap();
+            assert_eq!(streamed.z_nested(), reference.z_nested(), "iter={it}");
+            assert_eq!(prefetched.z_nested(), reference.z_nested(), "pf iter={it}");
+            assert_eq!(streamed.psi(), reference.psi(), "iter={it}");
+            assert_eq!(prefetched.psi(), reference.psi(), "pf iter={it}");
+        }
+        streamed.check_consistency().unwrap();
+        prefetched.check_consistency().unwrap();
     }
 
     #[test]

@@ -1271,12 +1271,24 @@ impl TokenBlocks for PackedCorpusFile {
     }
 
     fn with_block(&self, docs: Shard, buf: &mut Vec<u32>, f: &mut dyn FnMut(&[u32])) {
+        // A memory-mapped file serves the block zero-copy straight
+        // from the mapping (same bytes pread would return — the chain
+        // is identical either way).
+        if let Some(tokens) = self.mapped_tokens() {
+            let t0 = self.doc_offsets()[docs.start] as usize;
+            let t1 = self.doc_offsets()[docs.end] as usize;
+            f(&tokens[t0..t1]);
+            return;
+        }
         self.read_block_into(docs, buf);
         f(buf)
     }
 
     fn resident(&self) -> bool {
-        false
+        // Mapped files behave like resident arenas: the prefetcher
+        // must not double-buffer what the page cache already serves
+        // in place.
+        self.mmap_active()
     }
 
     fn read_block_into(&self, docs: Shard, buf: &mut Vec<u32>) {
@@ -1462,14 +1474,61 @@ impl FileZ {
     /// Read the whole store back as nested assignments (tests and
     /// checkpointing).
     pub fn to_nested(&self) -> anyhow::Result<Vec<Vec<u32>>> {
-        let mut flat = Vec::new();
-        self.file
-            .read_u32s_at(0, *self.offsets.last().unwrap() as usize, &mut flat)?;
+        let flat = self.to_flat()?;
         Ok(self
             .offsets
             .windows(2)
             .map(|w| flat[w[0] as usize..w[1] as usize].to_vec())
             .collect())
+    }
+
+    /// Read the whole store back as one flat arena in document order —
+    /// the packed-only checkpoint/diagnostics read, pairs with
+    /// [`FileZ::offsets`].
+    pub fn to_flat(&self) -> anyhow::Result<Vec<u32>> {
+        let mut flat = Vec::new();
+        self.file
+            .read_u32s_at(0, *self.offsets.last().unwrap() as usize, &mut flat)?;
+        Ok(flat)
+    }
+
+    /// Create (truncating) at `path` from a flat arena + CSR offsets —
+    /// the packed-only spill path: no nested `Vec<Vec<u32>>` is ever
+    /// built.
+    pub fn from_flat(
+        path: &std::path::Path,
+        z: &[u32],
+        offsets: &[u64],
+    ) -> anyhow::Result<Self> {
+        anyhow::ensure!(
+            !offsets.is_empty() && offsets[0] == 0,
+            "z offsets must start at 0"
+        );
+        anyhow::ensure!(
+            *offsets.last().unwrap() as usize == z.len(),
+            "z offsets end {} != arena len {}",
+            offsets.last().unwrap(),
+            z.len()
+        );
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let file = std::fs::OpenOptions::new()
+            .read(true)
+            .write(true)
+            .create(true)
+            .truncate(true)
+            .open(path)?;
+        {
+            let mut w = std::io::BufWriter::new(&file);
+            crate::corpus::io::write_u32s(&mut w, z)?;
+            use std::io::Write;
+            w.flush()?;
+        }
+        Ok(Self {
+            file: PositionedFile::new(file, ("filez.pread", "filez.pwrite")),
+            offsets: offsets.to_vec(),
+        })
     }
 }
 

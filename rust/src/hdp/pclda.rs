@@ -22,12 +22,13 @@ use std::sync::Arc;
 
 use super::pc::{phi, zstep};
 use super::state::Assignments;
-use super::{DiagSnapshot, Trainer};
+use super::{DiagSnapshot, Trainer, ZView};
 
 /// The fixed-K Pólya urn LDA sampler.
 pub struct PcLdaSampler {
-    corpus: Arc<Corpus>,
-    /// Packed CSR twin of `corpus` (the arena the z sweeps read).
+    /// The packed CSR corpus — the only corpus representation held
+    /// (the nested form is packed and dropped at construction); z stays
+    /// nested internally and is served through [`ZView::Nested`].
     packed: Arc<PackedCorpus>,
     /// Number of topics K.
     k: usize,
@@ -97,13 +98,13 @@ impl PcLdaSampler {
         let doc_plan = Sharding::weighted(&weights, threads);
         let pool = Arc::new(WorkerPool::new(threads));
         let packed = Arc::new(corpus.to_packed());
+        drop(corpus);
         // Plan-derived accumulator pre-size (see `zstep::plan_pair_hint`).
         let pair_hint = zstep::plan_pair_hint(&doc_plan, &weights, pool.slots());
         let scratch = (0..pool.slots())
             .map(|_| zstep::ShardScratch::with_pair_hint(k, pair_hint))
             .collect();
         Ok(Self {
-            corpus,
             packed,
             k,
             alpha,
@@ -236,7 +237,7 @@ impl PcLdaSampler {
     fn first_touch_scratch(&mut self) {
         let slots = self.pool.slots();
         let plan = self.block_plan.as_ref().unwrap_or(&self.doc_plan);
-        let weights = self.corpus.doc_weights();
+        let weights = self.packed.doc_weights();
         let pair_hint = zstep::plan_pair_hint(plan, &weights, slots);
         let k = self.k;
         let slot_plan = Sharding::even(slots, slots);
@@ -264,11 +265,16 @@ impl PcLdaSampler {
             return;
         }
         let plan = self.block_plan.as_ref().unwrap_or(&self.doc_plan);
-        let weights = self.corpus.doc_weights();
+        let weights = self.packed.doc_weights();
         let pair_hint = zstep::plan_pair_hint(plan, &weights, self.pool.slots());
         self.scratch = (0..self.pool.slots())
             .map(|_| zstep::ShardScratch::with_pair_hint(self.k, pair_hint))
             .collect();
+    }
+
+    /// Nested view of the assignments (tests).
+    pub fn assignments(&self) -> &[Vec<u32>] {
+        &self.assign.z
     }
 
     /// Streamed-mode block size (documents), if streaming is enabled.
@@ -304,7 +310,7 @@ impl Trainer for PcLdaSampler {
         use std::time::Instant;
         let step_t0 = Instant::now();
         let iter = self.iteration as u64 + 1;
-        let vocab = self.corpus.vocab_size();
+        let vocab = self.packed.vocab_size();
         let root = self.root.clone();
         // Φ: join the prebuilt job (submitted by the previous step,
         // overlapping its merge tail and any between-step diagnostics)
@@ -438,7 +444,7 @@ impl Trainer for PcLdaSampler {
             &self.psi,
             self.alpha,
             self.beta,
-            self.corpus.vocab_size(),
+            self.packed.vocab_size(),
             &*self.pool,
         );
         let mut tokens_per_topic: Vec<u64> =
@@ -453,16 +459,16 @@ impl Trainer for PcLdaSampler {
         }
     }
 
-    fn assignments(&self) -> &[Vec<u32>] {
-        &self.assign.z
+    fn z_view(&self) -> ZView<'_> {
+        ZView::Nested(&self.assign.z)
     }
 
     fn topic_word_rows(&self) -> Vec<Vec<(u32, u32)>> {
         (0..self.k).map(|k| self.n.row(k).to_vec()).collect()
     }
 
-    fn corpus(&self) -> &Corpus {
-        &self.corpus
+    fn docs(&self) -> &dyn crate::corpus::CorpusView {
+        &*self.packed
     }
 
     fn iterations_done(&self) -> usize {
@@ -470,12 +476,12 @@ impl Trainer for PcLdaSampler {
     }
 
     fn checkpoint(&self) -> crate::hdp::checkpoint::Checkpoint {
-        crate::hdp::checkpoint::Checkpoint {
-            iteration: self.iteration as u64,
-            sampler: "pclda".to_string(),
-            psi: self.psi.clone(),
-            z: self.assign.z.clone(),
-        }
+        crate::hdp::checkpoint::Checkpoint::from_nested_z(
+            self.iteration as u64,
+            "pclda",
+            self.psi.clone(),
+            &self.assign.z,
+        )
     }
 }
 

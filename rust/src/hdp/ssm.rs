@@ -29,7 +29,7 @@ use crate::sparse::DocCountHist;
 
 use super::pc::lstep;
 use super::state::Assignments;
-use super::{DiagSnapshot, Trainer};
+use super::{DiagSnapshot, Trainer, ZView};
 
 /// The simplified subcluster split-merge sampler.
 pub struct SsmSampler {
@@ -430,6 +430,13 @@ impl SsmSampler {
     }
 }
 
+impl SsmSampler {
+    /// Nested view of the assignments (tests).
+    pub fn assignments(&self) -> &[Vec<u32>] {
+        &self.assign.z
+    }
+}
+
 impl Trainer for SsmSampler {
     fn name(&self) -> &'static str {
         "ssm-hdp"
@@ -467,8 +474,8 @@ impl Trainer for SsmSampler {
         }
     }
 
-    fn assignments(&self) -> &[Vec<u32>] {
-        &self.assign.z
+    fn z_view(&self) -> ZView<'_> {
+        ZView::Nested(&self.assign.z)
     }
 
     fn topic_word_rows(&self) -> Vec<Vec<(u32, u32)>> {
@@ -484,8 +491,8 @@ impl Trainer for SsmSampler {
             .collect()
     }
 
-    fn corpus(&self) -> &Corpus {
-        &self.corpus
+    fn docs(&self) -> &dyn crate::corpus::CorpusView {
+        &*self.corpus
     }
 
     fn iterations_done(&self) -> usize {

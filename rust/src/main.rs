@@ -23,6 +23,7 @@ USAGE:
                  [--k-max N] [--eval-every N] [--time-budget SECS] [--out-dir DIR]
                  [--save CKPT] [--heldout FRAC] [--checkpoint-every N]
                  [--checkpoint-dir DIR] [--resume] [--ppu]
+                 [--packed-only] [--z-file PATH]
   repro exp      <table2|fig1-small|fig1-neurips|fig1-pubmed|topics|all>
                  [--scale F] [--threads N] [--seed N] [--out-dir DIR] [--quick]
                  [--corpus NAME] [--all]           (topics only)
@@ -35,6 +36,15 @@ USAGE:
 
 Registered corpora: tiny, small, ap, cgcbib, neurips, pubmed (synthetic
 analogs; set HDP_CORPUS_DIR to use real UCI bag-of-words files).
+
+Packed-only training (pc sampler): --packed-only keeps the corpus in the
+flat token arena and z in a flat arena for the whole run — no nested
+Vec<Vec<u32>> state is ever materialized; --z-file PATH additionally
+spills z to a file-backed store so only the doc offsets stay resident.
+Both are bit-identical to the resident run at the same seed. Samplers
+expose the corpus through the Trainer view API (`docs()` -> &dyn
+CorpusView, `z_view()` -> ZView) — nested access exists only for tests
+and reference samplers.
 ";
 
 fn main() {

@@ -77,6 +77,20 @@ impl PhaseTimers {
     /// alias side).
     pub const PPU_WORD_ACCEPTS: &'static str = "ppu_word_accepts";
 
+    /// Gauge name: total resident sampler-state bytes — token arena +
+    /// doc offsets + the z store in its live layout. Set (not
+    /// accumulated) via [`PhaseTimers::set`].
+    pub const RESIDENT_BYTES: &'static str = "resident_bytes";
+
+    /// Gauge name: packed token-arena bytes (tokens + doc offsets) —
+    /// the corpus side of [`PhaseTimers::RESIDENT_BYTES`].
+    pub const ARENA_BYTES: &'static str = "arena_bytes";
+
+    /// Gauge name: z-store resident bytes in the sampler's live layout
+    /// (nested `Vec<Vec<u32>>` headers + payloads, a flat arena, or
+    /// just the offsets of a file-backed store).
+    pub const Z_BYTES: &'static str = "z_bytes";
+
     /// Create with no phases registered.
     pub fn new() -> Self {
         Self::default()
@@ -153,6 +167,21 @@ impl PhaseTimers {
             }
         }
         self.counters.push((counter, delta));
+    }
+
+    /// Set the named counter to an absolute value — gauge semantics,
+    /// last write wins. For measurements (byte footprints) where
+    /// accumulating samples would be meaningless. Gauges share the
+    /// counter namespace; [`PhaseTimers::merge`] *adds* counters, so
+    /// set gauges after any merging.
+    pub fn set(&mut self, counter: &'static str, value: u64) {
+        for c in self.counters.iter_mut() {
+            if c.0 == counter {
+                c.1 = value;
+                return;
+            }
+        }
+        self.counters.push((counter, value));
     }
 
     /// Accumulated value of a counter (0 when unknown).
@@ -394,6 +423,21 @@ mod tests {
         assert_eq!(t.counter("prefetch_hits"), 10);
         assert_eq!(t.counter("prefetch_stalls"), 3);
         assert!(t.summary().contains("prefetch_hits"));
+    }
+
+    #[test]
+    fn gauges_overwrite_instead_of_accumulating() {
+        let mut t = PhaseTimers::new();
+        t.set(PhaseTimers::RESIDENT_BYTES, 1000);
+        t.set(PhaseTimers::RESIDENT_BYTES, 800);
+        assert_eq!(t.counter("resident_bytes"), 800);
+        t.set(PhaseTimers::ARENA_BYTES, 600);
+        t.set(PhaseTimers::Z_BYTES, 200);
+        assert_eq!(
+            t.counter_rows(),
+            vec![("resident_bytes", 800), ("arena_bytes", 600), ("z_bytes", 200)]
+        );
+        assert!(t.summary().contains("resident_bytes"));
     }
 
     #[test]

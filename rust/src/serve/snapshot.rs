@@ -99,7 +99,7 @@ impl ModelSnapshot {
             s.psi(),
             cfg.alpha,
             cfg.beta,
-            Trainer::corpus(s).vocab_size(),
+            Trainer::docs(s).vocab_size(),
             Trainer::iterations_done(s) as u64,
             "pc-hdp",
             phi_seed,
@@ -114,7 +114,7 @@ impl ModelSnapshot {
             s.psi(),
             s.alpha(),
             s.beta(),
-            Trainer::corpus(s).vocab_size(),
+            Trainer::docs(s).vocab_size(),
             Trainer::iterations_done(s) as u64,
             "pclda",
             phi_seed,
@@ -123,20 +123,26 @@ impl ModelSnapshot {
     }
 
     /// Rebuild a snapshot from a saved [`Checkpoint`] plus the corpus
-    /// it was trained on. The topic-word counts recovered from `z` are
-    /// canonical (identical to the live sampler's merged rows), so a
-    /// checkpoint round trip freezes to bit-identical state as
-    /// [`ModelSnapshot::from_pc`] on the live sampler — given the same
-    /// `phi_seed`. `alpha`/`beta` are not stored in checkpoints and
-    /// must be supplied by the caller.
-    pub fn from_checkpoint<E: par::Executor + Copy>(
+    /// it was trained on — any [`crate::corpus::CorpusView`] layout,
+    /// nested or packed, so the packed-only serving path never
+    /// materializes a nested corpus. The topic-word counts recovered
+    /// from `z` are canonical (identical to the live sampler's merged
+    /// rows), so a checkpoint round trip freezes to bit-identical
+    /// state as [`ModelSnapshot::from_pc`] on the live sampler — given
+    /// the same `phi_seed`. `alpha`/`beta` are not stored in
+    /// checkpoints and must be supplied by the caller.
+    pub fn from_checkpoint<C, E>(
         ckpt: &Checkpoint,
-        corpus: &crate::corpus::Corpus,
+        corpus: &C,
         alpha: f64,
         beta: f64,
         phi_seed: u64,
         exec: E,
-    ) -> anyhow::Result<Self> {
+    ) -> anyhow::Result<Self>
+    where
+        C: crate::corpus::CorpusView + ?Sized,
+        E: par::Executor + Copy,
+    {
         let n = ckpt.topic_word_rows(corpus)?;
         Ok(Self::freeze(
             &n,
@@ -413,7 +419,7 @@ mod tests {
         s.step().unwrap();
         twin.step().unwrap();
         assert_eq!(s.psi(), twin.psi());
-        assert_eq!(Trainer::assignments(&s), Trainer::assignments(&twin));
+        assert_eq!(s.z_nested(), twin.z_nested());
     }
 
     #[test]

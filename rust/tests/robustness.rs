@@ -159,7 +159,7 @@ fn resume_chain_from_disk_is_bit_identical() {
         resumed.step().unwrap();
     }
     // Recovery is bit-identical, not merely statistically equivalent.
-    assert_eq!(Trainer::assignments(&resumed), Trainer::assignments(&full));
+    assert_eq!(resumed.z_nested(), full.z_nested());
     assert_eq!(resumed.psi(), full.psi());
     std::fs::remove_dir_all(&dir).ok();
 }
@@ -225,7 +225,7 @@ fn coordinator_periodic_checkpoints_survive_crash_debris_and_resume() {
         Some(8),
         "resumed trace must start past the snapshot (evals at 8, 10)"
     );
-    assert_eq!(Trainer::assignments(&resumed), Trainer::assignments(&full));
+    assert_eq!(resumed.z_nested(), full.z_nested());
     assert_eq!(resumed.psi(), full.psi());
     std::fs::remove_dir_all(&dir).ok();
 }
@@ -237,7 +237,7 @@ fn resuming_a_finished_chain_is_a_no_op() {
     let mut trace = TraceWriter::in_memory();
     train(&mut s, &run_config(4, 0), &mut trace, &LoopOptions::default())
         .unwrap();
-    let before = Trainer::assignments(&s).to_vec();
+    let before = s.z_nested();
     // Asking for 4 iterations when 4 are done must run zero steps and
     // still produce a meaningful summary.
     let mut trace = TraceWriter::in_memory();
@@ -247,7 +247,7 @@ fn resuming_a_finished_chain_is_a_no_op() {
     assert_eq!(summary.iterations, 4);
     assert!(summary.final_log_likelihood.is_finite());
     assert!(trace.records().is_empty());
-    assert_eq!(Trainer::assignments(&s), &before[..]);
+    assert_eq!(s.z_nested(), before);
 }
 
 #[test]

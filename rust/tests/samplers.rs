@@ -56,10 +56,13 @@ fn check_invariants(t: &dyn Trainer, expected_tokens: u64) {
         .flat_map(|r| r.iter().map(|&(_, c)| c as u64))
         .sum();
     assert_eq!(total_n, expected_tokens, "{}: n totals", t.name());
-    // rebuild n from z and compare exactly
+    // rebuild n from z and compare exactly (through the view API — the
+    // packed-only samplers have no nested state to borrow)
     let mut rebuilt = std::collections::HashMap::new();
-    for (doc, zd) in t.corpus().docs.iter().zip(t.assignments()) {
-        for (&v, &k) in doc.iter().zip(zd) {
+    let docs = t.docs();
+    let z = t.z_view();
+    for d in 0..docs.num_docs() {
+        for (&v, k) in docs.doc(d).iter().zip(z.doc(d).iter().copied()) {
             *rebuilt.entry((k, v)).or_insert(0u32) += 1;
         }
     }

@@ -263,12 +263,12 @@ fn checkpoint_freeze_matches_live() {
         lda.step().unwrap();
     }
     let lda_live = ModelSnapshot::from_pclda(&lda, 600);
-    let lda_ckpt = Checkpoint {
-        iteration: lda.iterations_done() as u64,
-        sampler: "pclda".to_string(),
-        psi: lda.psi().to_vec(),
-        z: lda.assignments().to_vec(),
-    };
+    let lda_ckpt = Checkpoint::from_nested_z(
+        lda.iterations_done() as u64,
+        "pclda",
+        lda.psi().to_vec(),
+        lda.assignments(),
+    );
     let lda_rebuilt = ModelSnapshot::from_checkpoint(
         &lda_ckpt,
         &c,
@@ -358,11 +358,7 @@ fn serving_never_perturbs_training() {
     for (x, y) in a.psi().iter().zip(b.psi()) {
         assert_eq!(x.to_bits(), y.to_bits(), "psi diverged");
     }
-    assert_eq!(
-        Trainer::assignments(&a),
-        Trainer::assignments(&b),
-        "z diverged"
-    );
+    assert_eq!(a.z_nested(), b.z_nested(), "z diverged");
     for k in 0..cfg().k_max {
         assert_eq!(a.n().row(k), b.n().row(k), "n row {k} diverged");
     }

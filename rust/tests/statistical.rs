@@ -173,7 +173,7 @@ fn streamed_and_resident_chains_are_bit_identical() {
         } else {
             assert_eq!(hot, 0, "resident sweep must not touch block buffers");
         }
-        let out = (s.assignments().to_vec(), s.l().to_vec(), s.psi().to_vec());
+        let out = (s.z_nested(), s.l().to_vec(), s.psi().to_vec());
         s.set_pinning(false);
         out
     };
@@ -249,6 +249,124 @@ fn packed_corpus_file_roundtrip_preserves_docs() {
     let nested: Corpus = reread.to_nested();
     assert_eq!(nested.docs, c.docs);
     assert_eq!(nested.vocab, c.vocab);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// The packed-only cells of the invariance matrix: chains with no
+/// nested corpus or z resident — z in the flat arena
+/// ([`PcSampler::from_packed`]) or spilled to the file-backed store,
+/// token blocks from the resident arena or from the `.hdpp` file
+/// opened with positioned reads (pread) or the mmap binding — must be
+/// bit-identical to the nested-resident reference, across threads ×
+/// pipelining × streaming/prefetch. Layout is a pure representation
+/// choice; the chain never sees it.
+#[test]
+fn packed_only_chains_match_resident_across_mmap_and_pread() {
+    use hdp_sparse::corpus::io::{write_packed, PackedCorpusFile};
+    let (c, _) = HdpCorpusSpec {
+        vocab: 180,
+        topics: 5,
+        gamma: 2.0,
+        alpha: 1.2,
+        topic_beta: 0.05,
+        docs: 58,
+        mean_doc_len: 26.0,
+        len_sigma: 0.4,
+        min_doc_len: 6,
+    }
+    .generate(4040);
+    let c = Arc::new(c);
+    let cfg = HdpConfig { alpha: 0.5, beta: 0.05, gamma: 1.0, k_max: 24, init_topics: 1 };
+    let steps = 4usize;
+    let packed = Arc::new(c.to_packed());
+    let dir = std::env::temp_dir().join("hdp_statistical_packed_only");
+    std::fs::remove_dir_all(&dir).ok();
+    std::fs::create_dir_all(&dir).unwrap();
+    let cpath = dir.join("c.hdpp");
+    write_packed(&packed, &cpath).unwrap();
+    // What the nested layouts would have kept resident — every
+    // packed-only cell must sit strictly below it.
+    let nested_corpus_bytes: u64 =
+        c.docs.iter().map(|d| 4 * d.len() as u64 + 24).sum::<u64>() + 24;
+    let nested_state_bytes = 2 * nested_corpus_bytes;
+
+    // Nested-resident reference chain (same seed, same config).
+    let (z_ref, l_ref, psi_ref) = {
+        let mut s = PcSampler::new(c.clone(), cfg, 2, 616).unwrap();
+        assert_eq!(s.z_mode(), "nested");
+        for _ in 0..steps {
+            s.step().unwrap();
+        }
+        (s.z_nested(), s.l().to_vec(), s.psi().to_vec())
+    };
+
+    #[derive(Clone, Copy, Debug)]
+    enum Tok {
+        Resident,
+        Pread,
+        Mmap,
+    }
+    let mut cell = 0usize;
+    for &threads in &[1usize, 3] {
+        for &pipelined in &[false, true] {
+            for &zfile in &[false, true] {
+                for &tok in &[Tok::Resident, Tok::Pread, Tok::Mmap] {
+                    for &stream in &[None, Some(5usize)] {
+                        cell += 1;
+                        let mut s =
+                            PcSampler::from_packed(packed.clone(), cfg, threads, 616)
+                                .unwrap();
+                        assert_eq!(s.z_mode(), "arena");
+                        s.set_pipelined(pipelined);
+                        if zfile {
+                            s.move_z_to_file(&dir.join(format!("z{cell}.bin")))
+                                .unwrap();
+                            assert_eq!(s.z_mode(), "file");
+                        }
+                        match tok {
+                            Tok::Resident => {}
+                            Tok::Pread => {
+                                let f = PackedCorpusFile::open(&cpath).unwrap();
+                                assert!(!f.mmap_active(), "open() must not map");
+                                s.set_token_file(Some(Arc::new(f)));
+                            }
+                            Tok::Mmap => {
+                                // On non-linux (or a failed map) this
+                                // silently falls back to pread — the
+                                // chain must not care either way.
+                                let f = PackedCorpusFile::open_mmap(&cpath).unwrap();
+                                s.set_token_file(Some(Arc::new(f)));
+                            }
+                        }
+                        if let Some(docs) = stream {
+                            s.set_streaming(Some(docs));
+                            s.set_stream_prefetch(true);
+                        }
+                        for _ in 0..steps {
+                            s.step().unwrap();
+                        }
+                        let tag = format!(
+                            "threads={threads} pipelined={pipelined} zfile={zfile} tok={tok:?} stream={stream:?}"
+                        );
+                        assert_eq!(s.z_nested(), z_ref, "z diverged: {tag}");
+                        assert_eq!(s.l(), &l_ref[..], "l diverged: {tag}");
+                        assert_eq!(s.psi(), &psi_ref[..], "psi diverged: {tag}");
+                        // The tentpole residency claim: the z store
+                        // never inflated back to nested, and the cell's
+                        // resident state sits below what nested
+                        // corpus + nested z would have held.
+                        assert_eq!(s.z_mode(), if zfile { "file" } else { "arena" });
+                        assert!(
+                            s.resident_state_bytes() < nested_state_bytes,
+                            "{tag}: resident {} B >= nested {} B",
+                            s.resident_state_bytes(),
+                            nested_state_bytes
+                        );
+                    }
+                }
+            }
+        }
+    }
     std::fs::remove_dir_all(&dir).ok();
 }
 
@@ -559,8 +677,8 @@ fn ppu_and_exact_chains_agree_across_seeds() {
             assert!(r.tokens > 0, "held-out split must score tokens");
             ppx[which].push(r.perplexity);
             let mut sizes = vec![0u64; cfg.k_max];
-            for zd in s.assignments() {
-                for &k in zd {
+            for zd in s.z_nested() {
+                for k in zd {
                     sizes[k as usize] += 1;
                 }
             }
@@ -651,7 +769,7 @@ fn ppu_chain_is_bit_identical_across_drivers() {
         for _ in 0..steps {
             s.step().unwrap();
         }
-        (s.assignments().to_vec(), s.l().to_vec(), s.psi().to_vec())
+        (s.z_nested(), s.l().to_vec(), s.psi().to_vec())
     };
 
     let (z_ref, l_ref, psi_ref) = run(true, 1, false, Blocks::Resident, false);

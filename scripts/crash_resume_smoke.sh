@@ -9,6 +9,10 @@
 #      (never "starting fresh"), sweep the partial, and finish.
 #
 # Runs anywhere with a rust toolchain: `bash scripts/crash_resume_smoke.sh`.
+# Set PACKED_ONLY=1 for the out-of-core leg: both runs train with
+# --packed-only and z spilled to a file-backed store, so the kill lands
+# while z lives on disk and the resume must rebuild straight into the
+# packed layout (no nested state on either side of the crash).
 set -euo pipefail
 
 ROOT="$(cd "$(dirname "${BASH_SOURCE[0]}")/.." && pwd)"
@@ -19,10 +23,17 @@ CKDIR="$OUT/checkpoints"
 cargo build --release --manifest-path "$ROOT/rust/Cargo.toml"
 REPRO="$ROOT/rust/target/release/repro"
 
+MODE_FLAGS=()
+if [ "${PACKED_ONLY:-0}" = "1" ]; then
+  MODE_FLAGS=(--packed-only --z-file "$OUT/z.bin")
+  echo "packed-only leg: z file-backed at $OUT/z.bin"
+fi
+
 ITERS=600
 "$REPRO" train --corpus small --sampler pc --iterations "$ITERS" \
   --k-max 200 --eval-every 200 --threads 2 --seed 7 \
-  --checkpoint-every 5 --out-dir "$OUT" >"$OUT/first.log" 2>&1 &
+  --checkpoint-every 5 --out-dir "$OUT" "${MODE_FLAGS[@]+"${MODE_FLAGS[@]}"}" \
+  >"$OUT/first.log" 2>&1 &
 PID=$!
 
 ckpt_count() { ls "$CKDIR"/ckpt-*.ckpt 2>/dev/null | wc -l; }
@@ -58,8 +69,14 @@ printf partial >"$PARTIAL"
 # run the chain to completion.
 "$REPRO" train --corpus small --sampler pc --iterations "$ITERS" \
   --k-max 200 --eval-every 200 --threads 2 --seed 7 \
-  --checkpoint-every 5 --out-dir "$OUT" --resume | tee "$OUT/resume.log"
+  --checkpoint-every 5 --out-dir "$OUT" --resume \
+  "${MODE_FLAGS[@]+"${MODE_FLAGS[@]}"}" | tee "$OUT/resume.log"
 
+if [ "${PACKED_ONLY:-0}" = "1" ] \
+  && ! grep -q 'packed-only: z store `file`' "$OUT/resume.log"; then
+  echo "packed-only resume did not land in the file-backed z store" >&2
+  exit 1
+fi
 if ! grep -q "resuming from" "$OUT/resume.log"; then
   echo "expected to resume from a checkpoint, not start fresh" >&2
   exit 1

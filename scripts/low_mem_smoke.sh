@@ -1,0 +1,90 @@
+#!/usr/bin/env bash
+# Low-memory smoke test for packed-only training:
+#
+#   1. calibrate: run `repro train --packed-only --z-file` (z spilled to
+#      disk, tokens in the flat arena, no nested corpus or z ever
+#      materialized) and record its peak virtual memory from
+#      /proc/<pid>/status VmPeak,
+#   2. re-run the SAME packed-only configuration under `ulimit -v` set
+#      to that peak plus a small allocator margin — it must complete,
+#   3. run the resident (nested-corpus construction) configuration
+#      under the SAME budget — it must die on allocation failure,
+#      because its nested z + construction transient sit well above the
+#      packed-only footprint.
+#
+# This is the executable form of the residency claim: the packed-arena
+# sampler state fits where the nested representation does not, and the
+# chains are bit-identical anyway (tests/statistical.rs).
+#
+# Runs anywhere with a rust toolchain: `bash scripts/low_mem_smoke.sh`.
+set -euo pipefail
+
+ROOT="$(cd "$(dirname "${BASH_SOURCE[0]}")/.." && pwd)"
+OUT="$(mktemp -d "${TMPDIR:-/tmp}/hdp_low_mem_smoke.XXXXXX")"
+trap 'rm -rf "$OUT"' EXIT
+export HDP_CACHE_DIR="$OUT/cache"
+
+cargo build --release --manifest-path "$ROOT/rust/Cargo.toml"
+REPRO="$ROOT/rust/target/release/repro"
+
+# The pubmed synthetic analog (~41k docs) is the largest registered
+# corpus — big enough that sampler-state bytes dominate the process
+# baseline. eval-every exceeds iterations so the run never materializes
+# any diagnostic state beyond the training path itself.
+COMMON=(--corpus pubmed --sampler pc --iterations 5 --k-max 100
+  --eval-every 1000 --threads 1 --seed 7 --out-dir "$OUT")
+
+# Run a command in the background and poll its VmPeak (a kernel
+# high-water mark, monotone — the last read before exit is the max).
+peak_vm_kb() {
+  "$@" >/dev/null 2>&1 &
+  local pid=$! peak=0 v
+  while kill -0 "$pid" 2>/dev/null; do
+    v="$(awk '/^VmPeak:/ {print $2}' "/proc/$pid/status" 2>/dev/null || true)"
+    if [ -n "${v:-}" ] && [ "$v" -gt "$peak" ]; then peak=$v; fi
+    sleep 0.02
+  done
+  wait "$pid"
+  echo "$peak"
+}
+
+# Warm the corpus cache outside any limit (generation cost is identical
+# for both modes and not what this test measures).
+"$REPRO" corpus --name pubmed --seed 7 >/dev/null
+
+echo "calibrating packed-only peak VM..."
+PACKED_PEAK_KB="$(peak_vm_kb "$REPRO" train "${COMMON[@]}" \
+  --packed-only --z-file "$OUT/z.bin")" \
+  || { echo "calibration run failed" >&2; exit 1; }
+if [ "$PACKED_PEAK_KB" -le 0 ]; then
+  echo "could not sample VmPeak (run too fast?); not a pass" >&2
+  exit 1
+fi
+BUDGET_KB=$((PACKED_PEAK_KB + 8192))
+echo "packed-only peak ${PACKED_PEAK_KB} KB -> budget ${BUDGET_KB} KB"
+
+# Packed-only under the budget: must complete.
+if ! (
+  ulimit -v "$BUDGET_KB"
+  exec "$REPRO" train "${COMMON[@]}" --packed-only --z-file "$OUT/z2.bin"
+) >"$OUT/packed.log" 2>&1; then
+  echo "packed-only run died under its own budget:" >&2
+  tail -n 20 "$OUT/packed.log" >&2
+  exit 1
+fi
+grep -q 'packed-only: z store `file`' "$OUT/packed.log"
+echo "packed-only + FileZ completed under ${BUDGET_KB} KB"
+
+# Resident under the same budget: must OOM (nested z + the nested
+# construction transient exceed the packed-only footprint by far more
+# than the margin).
+if (
+  ulimit -v "$BUDGET_KB"
+  exec "$REPRO" train "${COMMON[@]}"
+) >"$OUT/resident.log" 2>&1; then
+  echo "resident run unexpectedly fit in the packed-only budget" >&2
+  tail -n 20 "$OUT/resident.log" >&2
+  exit 1
+fi
+echo "resident run OOMed under the same budget (expected)"
+echo "low-mem smoke: OK"
